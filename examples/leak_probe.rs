@@ -1,0 +1,62 @@
+//! Dev tool: RSS probe for the PJRT execute hot path (not part of the demo
+//! suite). Usage: cargo run --release --example leak_probe [n] [mode]
+use helene::data::batcher::Batch;
+use helene::runtime::{lit_f32, ModelRunner, Runtime};
+
+fn rss_kb() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .unwrap()
+        .lines()
+        .find(|l| l.starts_with("VmRSS"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let mode = std::env::args().nth(2).unwrap_or_else(|| "loss".into());
+    std::env::set_var("HELENE_REF_ATTN", "1");
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let runner = ModelRunner::new(&rt, "cls-small", "ft")?;
+    let params = runner.load_init_params()?;
+    let d = runner.spec.dims.clone();
+    let batch = Batch {
+        tokens: vec![1; d.batch * d.max_seq],
+        labels: vec![0; d.batch],
+        batch: d.batch,
+        seq: d.max_seq,
+    };
+    let before = rss_kb();
+    for i in 0..n {
+        match mode.as_str() {
+            "loss" => {
+                let _ = runner.loss(&params, &batch)?;
+            }
+            "buf" => {
+                let exe = rt.executable(&runner.spec.entrypoint("loss_ref")?.file)?;
+                let mut owned = Vec::new();
+                for (p, arr) in runner.spec.params.iter().zip(&params.arrays) {
+                    owned.push(rt.stage_f32(arr, &p.shape)?);
+                }
+                owned.push(rt.stage_i32(&batch.tokens, &[d.batch, d.max_seq])?);
+                owned.push(rt.stage_i32(&batch.labels, &[d.batch])?);
+                let refs: Vec<&xla::PjRtBuffer> = owned.iter().collect();
+                let out = rt.execute_buffers(&exe, &refs)?;
+                let _ = helene::runtime::scalar_f32(&out[0])?;
+            }
+            "lit" => {
+                // literal marshalling only, no execution
+                for (p, arr) in runner.spec.params.iter().zip(&params.arrays) {
+                    let _ = lit_f32(arr, &p.shape)?;
+                }
+            }
+            other => anyhow::bail!("mode {other}?"),
+        }
+        if i % 50 == 49 {
+            println!("iter {:>4}: RSS {} kB (+{} kB, {:.1} kB/iter)",
+                i + 1, rss_kb(), rss_kb() - before, (rss_kb() - before) as f64 / (i + 1) as f64);
+        }
+    }
+    Ok(())
+}

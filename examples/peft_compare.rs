@@ -1,0 +1,39 @@
+//! PEFT comparison: HELENE remains compatible with parameter-efficient
+//! fine-tuning — full FT vs LoRA vs prefix-tuning on the same task
+//! (the paper's Tables 1-2 protocol), with trainable-parameter accounting.
+
+use helene::optim::helene::Helene;
+use helene::runtime::{ModelRunner, Runtime};
+use helene::tasks;
+use helene::train::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let task = "sst2";
+    println!("HELENE × tuning method on synthetic {task} (cls-tiny):\n");
+    println!(
+        "{:<8} {:>12} {:>10} {:>10} {:>8}",
+        "variant", "trainable", "dev", "test", "secs"
+    );
+    for variant in ["ft", "lora", "prefix"] {
+        let runner = ModelRunner::new(&rt, "cls-tiny", variant)?;
+        let dims = runner.spec.dims.clone();
+        let data = tasks::generate(task, dims.vocab, dims.max_seq, 16, 0)?;
+        let params = runner.load_init_params()?;
+        let mut opt = Helene::paper_defaults().with_lr(3e-3);
+        let cfg = TrainConfig { steps: 1200, eval_every: 300, ..Default::default() };
+        let report = Trainer::new(cfg).run(&runner, &data, &mut opt)?;
+        println!(
+            "{:<8} {:>8} ({:>4.1}%) {:>10.3} {:>10.3} {:>8.1}",
+            variant,
+            params.n_trainable(),
+            100.0 * params.n_trainable() as f64 / params.n_params() as f64,
+            report.final_dev_metric,
+            report.test_metric,
+            report.wall_s,
+        );
+    }
+    println!("\nLoRA/prefix train <6% of parameters; ZO perturbation, Hessian state and");
+    println!("updates all shrink with the trainable set (state = 2 x trainable f32s).");
+    Ok(())
+}

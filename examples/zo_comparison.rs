@@ -1,0 +1,59 @@
+//! The optimizer zoo head-to-head (paper Table 3 / Figure 4 in miniature):
+//! every zeroth-order method plus the FO references on one task, same
+//! budget, same seed.
+
+use helene::optim;
+use helene::runtime::{ModelRunner, Runtime};
+use helene::tasks;
+use helene::train::{TrainConfig, Trainer};
+
+const ZO_STEPS: usize = 1500;
+const FO_STEPS: usize = 200;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft")?;
+    let dims = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", dims.vocab, dims.max_seq, 16, 0)?;
+
+    let grid: &[(&str, f32, usize)] = &[
+        ("fo-sgd", 1e-2, FO_STEPS),
+        ("fo-adam", 1e-2, FO_STEPS),
+        ("forward-grad", 1e-3, ZO_STEPS),
+        ("mezo", 1e-3, ZO_STEPS),
+        ("zo-sgd-mmt", 3e-4, ZO_STEPS),
+        ("zo-sgd-cons", 1e-3, ZO_STEPS),
+        ("zo-sgd-sign", 1e-4, ZO_STEPS),
+        ("zo-adam", 3e-3, ZO_STEPS),
+        ("zo-adamw", 3e-3, ZO_STEPS),
+        ("zo-lion", 3e-4, ZO_STEPS),
+        ("zo-sophia", 1e-3, ZO_STEPS),
+        ("helene", 3e-3, ZO_STEPS),
+    ];
+
+    println!(
+        "{:<14} {:>6} {:>7} {:>8} {:>8} {:>9} {:>8}",
+        "optimizer", "steps", "lr", "loss", "dev", "test", "state×"
+    );
+    for &(name, lr, steps) in grid {
+        let mut opt = optim::by_name(name, lr)?;
+        let cfg = TrainConfig { steps, eval_every: steps / 4, ..Default::default() };
+        let report = Trainer::new(cfg).run(&runner, &data, opt.as_mut())?;
+        let params = runner.load_init_params()?;
+        let state_ratio =
+            (params.state_bytes() + opt.state_bytes()) as f64 / params.state_bytes() as f64;
+        println!(
+            "{:<14} {:>6} {:>7.0e} {:>8.3} {:>8.3} {:>9.3} {:>7.0}x",
+            name,
+            steps,
+            lr,
+            report.history.smoothed_loss(50).unwrap_or(f32::NAN),
+            report.final_dev_metric,
+            report.test_metric,
+            state_ratio,
+        );
+    }
+    println!("\n(state× = total memory relative to MeZO's parameters-only footprint;");
+    println!(" HELENE = 3x, matching the paper's §C.1 accounting)");
+    Ok(())
+}

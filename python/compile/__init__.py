@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at runtime; `make artifacts` runs
+``python -m compile.aot`` once and the Rust coordinator consumes the
+resulting HLO text + manifest.
+"""

@@ -1,0 +1,262 @@
+"""AOT lowering: JAX/Pallas → HLO text + manifest + initial parameters.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per (model × variant × entrypoint), an HLO **text** file — text, not
+``.serialize()``: jax ≥ 0.5 writes HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Plus:
+
+* ``manifest.json`` — the contract with the Rust coordinator: model configs,
+  ordered parameter layouts (name/shape/layer-group/trainable/offset), and
+  the entrypoint → file map with input/output descriptions.
+* ``<model>.<variant>.params.bin`` — initial parameters, concatenated
+  little-endian f32 in manifest order.
+* standalone fused-optimizer kernels (``fused_update.N.hlo.txt``,
+  ``agnb_ema.N.hlo.txt``) for the L1 ablation benches.
+
+Python never runs after this step; the Rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.attention import mxu_flops, vmem_bytes
+from compile.kernels.helene_update import (
+    agnb_ema as agnb_ema_fn,
+    hbm_traffic_bytes,
+    helene_update as helene_update_fn,
+)
+
+# Which entrypoints to compile per model. The big LM only needs the training
+# path (end-to-end example); the small models back the full experiment matrix.
+FULL = ["loss", "logits", "loss_ref", "logits_ref", "loss_grad", "loss_jvp"]
+
+MATRIX: dict[str, dict[str, list[str]]] = {
+    "cls-tiny": {
+        "ft": FULL,
+        "lora": ["loss", "logits", "loss_ref", "logits_ref", "loss_grad"],
+        "prefix": ["loss", "logits", "loss_ref", "logits_ref", "loss_grad"],
+    },
+    "cls-small": {"ft": FULL, "lora": FULL, "prefix": FULL},
+    "dec-small": {"ft": FULL, "lora": FULL, "prefix": FULL},
+    "lm-small": {"ft": ["loss", "logits", "loss_ref", "logits_ref", "loss_grad"]},
+    "lm-big": {"ft": ["loss", "loss_ref", "loss_grad"]},
+}
+
+FUSED_SIZES = [16384, 65536]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True contract)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entrypoint(cfg: M.ModelConfig, variant: str, ep: str) -> str:
+    fn, arg_specs = M.build_entrypoints(cfg, variant)[ep]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def entry_io(cfg: M.ModelConfig, variant: str, ep: str) -> dict:
+    """Describe the entrypoint's inputs/outputs for the manifest."""
+    has_labels = cfg.kind != "lm"
+    data = ["tokens"] + (["labels"] if has_labels else [])
+    n = len(M.param_specs(cfg, variant))
+    if ep in ("loss", "loss_ref"):
+        return {"inputs": ["params"] + data, "outputs": ["loss"]}
+    if ep in ("logits", "logits_ref"):
+        return {"inputs": ["params", "tokens"], "outputs": ["logits"]}
+    if ep == "loss_grad":
+        return {"inputs": ["params"] + data, "outputs": ["loss"] + ["grads"] * n}
+    if ep == "loss_jvp":
+        return {"inputs": ["params", "tangents"] + data, "outputs": ["loss", "jvp"]}
+    raise ValueError(ep)
+
+
+def write_params_bin(path: str, params: list[jnp.ndarray]) -> int:
+    total = 0
+    with open(path, "wb") as f:
+        for p in params:
+            arr = np.asarray(p, dtype="<f4").ravel()
+            f.write(arr.tobytes())
+            total += arr.size
+    return total
+
+
+def lower_fused_kernels(out_dir: str) -> list[dict]:
+    entries = []
+    for n in FUSED_SIZES:
+        vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+        sc8 = jax.ShapeDtypeStruct((1, 8), jnp.float32)
+        sc3 = jax.ShapeDtypeStruct((1, 3), jnp.float32)
+
+        def upd(theta, m, h, z, scal):
+            return helene_update_fn(theta, m, h, z, scal)
+
+        def ema(h, z, scal):
+            return (agnb_ema_fn(h, z, scal),)
+
+        f1 = f"fused_update.{n}.hlo.txt"
+        with open(os.path.join(out_dir, f1), "w") as f:
+            f.write(to_hlo_text(jax.jit(upd).lower(vec, vec, vec, vec, sc8)))
+        f2 = f"agnb_ema.{n}.hlo.txt"
+        with open(os.path.join(out_dir, f2), "w") as f:
+            f.write(to_hlo_text(jax.jit(ema).lower(vec, vec, sc3)))
+        entries.append(
+            {
+                "n": n,
+                "update_file": f1,
+                "update_scalars": ["g_scale", "alpha", "beta1", "lr", "gamma",
+                                    "lam", "eps", "weight_decay"],
+                "ema_file": f2,
+                "ema_scalars": ["g_scale", "batch", "beta2"],
+            }
+        )
+    return entries
+
+
+def report(models: list[str]) -> None:
+    """Print the VMEM/MXU accounting used by DESIGN.md §Perf."""
+    print("== L1 kernel accounting (TPU estimates; executed interpret-mode) ==")
+    for name in models:
+        cfg = M.MODEL_ZOO[name]
+        s, dh = cfg.max_seq, cfg.d_head
+        bq = min(s, 128)
+        vb = vmem_bytes(s, s, dh, bq)
+        fl = mxu_flops(s, s, dh) * cfg.batch * cfg.n_heads * cfg.n_layers
+        print(f"  {name}: attention tile VMEM={vb/1024:.1f} KiB, "
+              f"MXU FLOPs/step(fwd)={fl/1e6:.2f} M")
+    for n in FUSED_SIZES:
+        fused = hbm_traffic_bytes(n, fused=True)
+        unfused = hbm_traffic_bytes(n, fused=False)
+        print(f"  fused_update n={n}: HBM {fused/1024:.0f} KiB vs unfused "
+              f"{unfused/1024:.0f} KiB ({unfused/fused:.1f}x saved)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(MATRIX.keys()))
+    ap.add_argument("--skip-big", action="store_true",
+                    help="skip lm-big (fast test builds)")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+
+    models = [m for m in args.models if not (args.skip_big and m == "lm-big")]
+    if args.report:
+        report(models)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest: dict = {"format": 1, "models": [], "fused_kernels": []}
+
+    for name in models:
+        cfg = M.MODEL_ZOO[name]
+        mrec: dict = {
+            "name": name,
+            "kind": cfg.kind,
+            "config": {
+                "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads, "n_layers": cfg.n_layers,
+                "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+                "n_classes": cfg.n_classes, "batch": cfg.batch,
+                "lora_rank": cfg.lora_rank, "lora_alpha": cfg.lora_alpha,
+                "prefix_len": cfg.prefix_len,
+            },
+            "variants": {},
+        }
+        for variant, eps in MATRIX[name].items():
+            t0 = time.time()
+            specs = M.param_specs(cfg, variant)
+            params = M.init_params(cfg, variant, seed=0)
+            bin_name = f"{name}.{variant}.params.bin"
+            total = write_params_bin(os.path.join(args.out, bin_name), params)
+
+            offset = 0
+            prec = []
+            for s in specs:
+                prec.append({
+                    "name": s.name, "shape": list(s.shape), "layer": s.layer,
+                    "trainable": s.trainable, "offset": offset, "size": s.size,
+                })
+                offset += s.size
+            assert offset == total
+
+            eprec = {}
+            for ep in eps:
+                fname = f"{name}.{variant}.{ep}.hlo.txt"
+                text = lower_entrypoint(cfg, variant, ep)
+                with open(os.path.join(args.out, fname), "w") as f:
+                    f.write(text)
+                eprec[ep] = {"file": fname, **entry_io(cfg, variant, ep)}
+            mrec["variants"][variant] = {
+                "params_bin": bin_name,
+                "n_params": total,
+                "params": prec,
+                "entrypoints": eprec,
+            }
+            print(f"[aot] {name}.{variant}: {total} params, "
+                  f"{len(eps)} entrypoints, {time.time()-t0:.1f}s", flush=True)
+        manifest["models"].append(mrec)
+
+    manifest["fused_kernels"] = lower_fused_kernels(args.out)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    write_goldens(args.out, models)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} models")
+
+
+def write_goldens(out_dir: str, models: list[str]) -> None:
+    """Golden numerics for the Rust integration tests (tests/runtime_goldens.rs).
+
+    For each small model/variant with a ``loss`` entrypoint: evaluate the loss
+    at the shipped init params on a deterministic batch (tokens[b, s] =
+    (7 b + 3 s) % vocab, labels[b] = b % 4) and record it. The Rust runtime
+    must reproduce these through the compiled HLO to 1e-5.
+    """
+    goldens: dict = {}
+    for name in models:
+        if name == "lm-big":
+            continue  # too slow for a unit-level golden
+        cfg = M.MODEL_ZOO[name]
+        b, s = cfg.batch, cfg.max_seq
+        tokens = jnp.asarray(
+            (7 * np.arange(b)[:, None] + 3 * np.arange(s)[None, :]) % cfg.vocab,
+            jnp.int32,
+        )
+        labels = jnp.asarray(np.arange(b) % 4, jnp.int32)
+        for variant in MATRIX[name]:
+            params = M.init_params(cfg, variant, seed=0)
+            pd = {sp.name: a for sp, a in zip(M.param_specs(cfg, variant), params)}
+            loss = M.loss_fn(pd, tokens, labels if cfg.kind != "lm" else None,
+                             cfg, variant, use_pallas=True)
+            rec: dict = {"loss": float(loss)}
+            if cfg.kind != "lm":
+                lg = M.logits_fn(pd, tokens, cfg, variant, use_pallas=True)
+                rec["logits_row0"] = [float(x) for x in lg[0]]
+            goldens[f"{name}.{variant}"] = rec
+    with open(os.path.join(out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from compile.kernels.attention import attention, mxu_flops, vmem_bytes
+from compile.kernels.helene_update import agnb_ema, hbm_traffic_bytes, helene_update
+from compile.kernels.ref import agnb_ema_ref, attention_ref, helene_update_ref
+
+__all__ = [
+    "attention",
+    "attention_ref",
+    "helene_update",
+    "helene_update_ref",
+    "agnb_ema",
+    "agnb_ema_ref",
+    "vmem_bytes",
+    "mxu_flops",
+    "hbm_traffic_bytes",
+]

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: tiled multi-head attention.
+
+TPU-idiom tiling (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+(batch, head, query-block); each grid cell stages a (BQ, Dh) query tile plus
+the full (Skv, Dh) key/value panels for that head into VMEM, computes a
+numerically-stable softmax on the VPU, and hits the MXU twice (q·kᵀ and p·v).
+This is the TPU analogue of the CUDA threadblock/shared-memory scheme the
+GPU-oriented literature uses: BlockSpec expresses the HBM↔VMEM schedule that
+threadblocks + __shared__ would on an A100.
+
+``interpret=True`` is mandatory on this box — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. The kernel is still authored
+with TPU block shapes so the VMEM/MXU accounting in DESIGN.md §Perf holds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, prefix_len, bq):
+    """One grid cell: queries block (1, 1, BQ, Dh) vs full KV (1, 1, Skv, Dh)."""
+    qi = pl.program_id(2)  # query-block index within the sequence
+    q = q_ref[0, 0].astype(jnp.float32)  # (BQ, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (Skv, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)  # (Skv, Dh)
+
+    logits = jnp.dot(q, k.T) * scale  # (BQ, Skv) — MXU
+    if causal:
+        skv = k.shape[0]
+        row = qi * bq + jnp.arange(bq)[:, None]  # absolute query positions
+        col = jnp.arange(skv)[None, :]
+        mask = (col < prefix_len) | ((col - prefix_len) <= row)
+        logits = jnp.where(mask, logits, -1e30)
+
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.dot(p / denom, v)  # (BQ, Dh) — MXU
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    prefix_len: int = 0,
+    block_q: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tiled multi-head attention via Pallas.
+
+    Shapes: q (B, H, Sq, Dh); k, v (B, H, Skv, Dh) with
+    ``Skv = prefix_len + Sq`` for prefix-tuning, else ``Skv == Sq``.
+    Matches :func:`kernels.ref.attention_ref` to float32 tolerance.
+    """
+    b, h, sq, dh = q.shape
+    skv = k.shape[2]
+    if block_q is None:
+        block_q = min(sq, 128)
+    if sq % block_q != 0:
+        raise ValueError(f"sq={sq} not divisible by block_q={block_q}")
+    scale = 1.0 / (dh**0.5)
+
+    grid = (b, h, sq // block_q)
+    kernel = functools.partial(
+        _attention_kernel,
+        scale=scale,
+        causal=causal,
+        prefix_len=prefix_len,
+        bq=block_q,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, skv, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, skv, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(sq: int, skv: int, dh: int, block_q: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint estimate for one grid cell (DESIGN.md §Perf input).
+
+    q tile + k panel + v panel + logits + output, all resident at once.
+    """
+    q_t = block_q * dh
+    kv = 2 * skv * dh
+    logits = block_q * skv
+    out = block_q * dh
+    return dtype_bytes * (q_t + kv + logits + out)
+
+
+def mxu_flops(sq: int, skv: int, dh: int) -> int:
+    """MXU FLOP count per (batch, head): two matmuls."""
+    return 2 * sq * skv * dh * 2

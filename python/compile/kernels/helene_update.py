@@ -1,0 +1,138 @@
+"""L1 Pallas kernels: fused HELENE optimizer update + A-GNB Hessian EMA.
+
+The optimizer step is HELENE's second hot-spot (the first is the model
+forward): at 100M parameters the unfused update is five full passes over HBM
+(read theta/m/h/z, write theta/m). The fused kernel does one read + one write
+per tensor, VMEM-chunked via BlockSpec — a pure VPU elementwise kernel, no MXU.
+
+Scalars (g_scale, alpha, ...) travel as (1, 1) f32 arrays so the same lowered
+HLO is reusable every step without recompilation: the Rust coordinator feeds
+fresh scalar literals per step. ``interpret=True`` everywhere (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM chunk: 16k f32 = 64 KiB per operand, 6 operands ≈ 384 KiB —
+# comfortably inside a TPU core's ~16 MiB VMEM with double-buffering room.
+DEFAULT_BLOCK = 16384
+
+
+def _update_kernel(scal_ref, theta_ref, m_ref, h_ref, z_ref, theta_out, m_out):
+    g_scale = scal_ref[0, 0]
+    alpha = scal_ref[0, 1]
+    beta1 = scal_ref[0, 2]
+    lr = scal_ref[0, 3]
+    gamma = scal_ref[0, 4]
+    lam = scal_ref[0, 5]
+    eps = scal_ref[0, 6]
+    wd = scal_ref[0, 7]
+
+    theta = theta_ref[...]
+    g = g_scale * z_ref[...]
+    m_next = beta1 * m_ref[...] + alpha * g
+    denom = gamma * jnp.maximum(h_ref[...], lam) + eps
+    theta_out[...] = theta - lr * wd * theta - lr * m_next / denom
+    m_out[...] = m_next
+
+
+def helene_update(
+    theta: jnp.ndarray,
+    m: jnp.ndarray,
+    h: jnp.ndarray,
+    z: jnp.ndarray,
+    scalars: jnp.ndarray,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused HELENE update over a flat f32 parameter vector.
+
+    Args:
+      theta, m, h, z: (N,) f32 — parameters, momentum, Hessian diagonal,
+        regenerated SPSA direction.
+      scalars: (1, 8) f32 — ``[g_scale, alpha, beta1, lr, gamma, lam, eps,
+        weight_decay]`` (see :func:`kernels.ref.helene_update_ref`).
+
+    Returns ``(theta_next, m_next)``.
+    """
+    (n,) = theta.shape
+    blk = min(block, n)
+    if n % blk != 0:
+        raise ValueError(f"n={n} not divisible by block={blk}")
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),  # broadcast scalars
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), theta.dtype),
+            jax.ShapeDtypeStruct((n,), m.dtype),
+        ],
+        interpret=interpret,
+    )(scalars, theta, m, h, z)
+
+
+def _agnb_kernel(scal_ref, h_ref, z_ref, h_out):
+    g_scale = scal_ref[0, 0]
+    batch = scal_ref[0, 1]
+    beta2 = scal_ref[0, 2]
+    g = g_scale * z_ref[...]
+    h_hat = batch * g * g
+    h_out[...] = beta2 * h_ref[...] + (1.0 - beta2) * h_hat
+
+
+def agnb_ema(
+    h: jnp.ndarray,
+    z: jnp.ndarray,
+    scalars: jnp.ndarray,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """A-GNB Hessian-diagonal EMA over a flat f32 vector.
+
+    ``scalars``: (1, 3) f32 — ``[g_scale, batch_size, beta2]``.
+    Matches :func:`kernels.ref.agnb_ema_ref`.
+    """
+    (n,) = h.shape
+    blk = min(block, n)
+    if n % blk != 0:
+        raise ValueError(f"n={n} not divisible by block={blk}")
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _agnb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), h.dtype),
+        interpret=interpret,
+    )(scalars, h, z)
+
+
+def hbm_traffic_bytes(n: int, fused: bool) -> int:
+    """HBM bytes moved by one update step (DESIGN.md §Perf input)."""
+    if fused:
+        return 4 * n * (4 + 2)  # read theta/m/h/z, write theta/m
+    # unfused: g=g_s*z (r z, w g); m=b m+a g (r m,g, w m); denom (r h, w d);
+    # theta (r theta,m,d, w theta)
+    return 4 * n * (1 + 1 + 2 + 1 + 1 + 1 + 3 + 1)

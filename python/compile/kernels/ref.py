@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle here to float tolerance (see python/tests/). They are
+also used directly by model.py when ``use_pallas=False`` so that the model
+itself can be differentially tested against its kernelised form.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    prefix_len: int = 0,
+) -> jnp.ndarray:
+    """Multi-head scaled dot-product attention oracle.
+
+    Args:
+      q: (B, H, Sq, Dh) queries.
+      k: (B, H, Skv, Dh) keys. ``Skv = prefix_len + Sq`` when a learnable
+         prefix is prepended (prefix-tuning); otherwise ``Skv == Sq``.
+      v: (B, H, Skv, Dh) values.
+      causal: apply a causal mask. Query i may attend to every prefix
+        position plus key positions ``j - prefix_len <= i``.
+      prefix_len: number of leading key/value positions that are a
+        learnable prefix (always attendable).
+
+    Returns:
+      (B, H, Sq, Dh) attention output.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        sq = q.shape[2]
+        skv = k.shape[2]
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(skv)[None, :]
+        mask = (kj < prefix_len) | ((kj - prefix_len) <= qi)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def helene_update_ref(
+    theta: jnp.ndarray,
+    m: jnp.ndarray,
+    h: jnp.ndarray,
+    z: jnp.ndarray,
+    *,
+    g_scale,
+    alpha,
+    beta1,
+    lr,
+    gamma,
+    lam,
+    eps,
+    weight_decay,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the fused HELENE parameter update (Algorithm 1, lines 7 + 13-14).
+
+    The SPSA gradient for this layer is ``g = g_scale * z`` (MeZO's seeded
+    regeneration: ``z`` is the layer's slice of the perturbation direction and
+    ``g_scale = (L+ - L-) / (2 eps_spsa)``).
+
+    Returns ``(theta_next, m_next)``::
+
+      m_next     = beta1 * m + alpha * g
+      denom      = gamma * max(h, lam) + eps
+      theta_next = theta - lr * weight_decay * theta - lr * m_next / denom
+    """
+    g = g_scale * z
+    m_next = beta1 * m + alpha * g
+    denom = gamma * jnp.maximum(h, lam) + eps
+    theta_next = theta - lr * weight_decay * theta - lr * m_next / denom
+    return theta_next, m_next
+
+
+def agnb_ema_ref(
+    h: jnp.ndarray,
+    z: jnp.ndarray,
+    *,
+    g_scale,
+    batch,
+    beta2,
+) -> jnp.ndarray:
+    """Oracle for the A-GNB diagonal-Hessian EMA step (Alg. 1 line 10; Alg. 2).
+
+    The zeroth-order A-GNB estimate of the Hessian diagonal is
+    ``h_hat = B * g ⊙ g`` with ``g = g_scale * z`` (Algorithm 2 returns
+    ``B · ĝ ⊙ ĝ``). The EMA is ``h' = beta2 * h + (1 - beta2) * h_hat``.
+    """
+    g = g_scale * z
+    h_hat = batch * g * g
+    return beta2 * h + (1.0 - beta2) * h_hat

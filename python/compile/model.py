@@ -1,0 +1,387 @@
+"""L2: JAX transformer models (build-time only) — forward, loss, grad, jvp.
+
+Three architectures back the paper's experiment matrix (DESIGN.md §3):
+
+* ``cls``   — encoder classifier ("roberta-lite" stand-in for RoBERTa-large):
+              bidirectional attention, mean-pool, linear head.
+* ``dec``   — decoder classifier ("opt-lite" stand-in for OPT-1.3B used as a
+              classifier): causal attention, last-position pool, linear head.
+* ``lm``    — causal language model (next-token CE) for the end-to-end
+              100M-parameter training example.
+
+Each architecture is compiled per tuning *variant* — ``ft`` (all parameters
+trainable), ``lora`` (LoRA adapters on W_q/W_v; base frozen), ``prefix``
+(learnable per-layer prefix KV; base frozen) — and per *entrypoint*:
+
+* ``loss``      : (params…, tokens[, labels]) → (loss,)            [ZO path]
+* ``logits``    : (params…, tokens)           → (logits,)           [eval]
+* ``loss_grad`` : (params…, tokens[, labels]) → (loss, grads…)      [FO path]
+* ``loss_jvp``  : (params…, tangents…, tokens[, labels]) → (loss, jvp)
+                                                            [Forward-Grad]
+
+The ZO entrypoints run the L1 Pallas attention kernel (interpret-lowered so
+it executes on CPU PJRT). The differentiated entrypoints use the pure-jnp
+oracle ``attention_ref`` — interpret-mode ``pallas_call`` has no JVP rule —
+which python/tests/ verifies is numerically identical to the kernel, so both
+paths compute the same function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import attention
+from compile.kernels.ref import attention_ref
+
+LN_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of one compiled model family."""
+
+    name: str
+    kind: str  # "cls" | "dec" | "lm"
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    max_seq: int
+    n_classes: int  # classifier head width (ignored for kind == "lm")
+    batch: int
+    lora_rank: int = 4
+    lora_alpha: float = 8.0
+    prefix_len: int = 4
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def causal(self) -> bool:
+        return self.kind in ("dec", "lm")
+
+
+# The model zoo compiled by aot.py. Sizes are chosen for a 1-core CPU box;
+# `lm-big` is the ~100M-parameter end-to-end configuration (DESIGN.md §3).
+MODEL_ZOO: dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        ModelConfig("cls-tiny", "cls", vocab=64, d_model=32, n_heads=2, n_layers=2,
+                    d_ff=64, max_seq=16, n_classes=8, batch=4, lora_rank=2,
+                    prefix_len=2),
+        ModelConfig("cls-small", "cls", vocab=512, d_model=128, n_heads=4,
+                    n_layers=4, d_ff=512, max_seq=32, n_classes=8, batch=8),
+        ModelConfig("dec-small", "dec", vocab=512, d_model=128, n_heads=4,
+                    n_layers=4, d_ff=512, max_seq=32, n_classes=8, batch=8),
+        ModelConfig("lm-small", "lm", vocab=512, d_model=128, n_heads=4,
+                    n_layers=4, d_ff=512, max_seq=32, n_classes=0, batch=8),
+        ModelConfig("lm-big", "lm", vocab=8192, d_model=768, n_heads=12,
+                    n_layers=12, d_ff=3072, max_seq=64, n_classes=0, batch=2),
+    ]
+}
+
+VARIANTS = ("ft", "lora", "prefix")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter array in manifest order."""
+
+    name: str
+    shape: tuple[int, ...]
+    layer: str  # layer group for layer-wise clipping (e.g. "block2.attn")
+    trainable: bool
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def param_specs(cfg: ModelConfig, variant: str) -> list[ParamSpec]:
+    """The ordered parameter layout for (model, variant).
+
+    Order is authoring order and is the manifest contract with the Rust
+    coordinator: params.bin, loss_grad outputs, and jvp tangents all follow
+    this exact ordering.
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}")
+    d, f, s, v = cfg.d_model, cfg.d_ff, cfg.max_seq, cfg.vocab
+    base_trainable = variant == "ft"
+    specs: list[ParamSpec] = [
+        ParamSpec("embed.tok", (v, d), "embed", base_trainable),
+        ParamSpec("embed.pos", (s, d), "embed", base_trainable),
+    ]
+    for i in range(cfg.n_layers):
+        blk = f"block{i}"
+        specs += [
+            ParamSpec(f"{blk}.ln1.scale", (d,), f"{blk}.attn", base_trainable),
+            ParamSpec(f"{blk}.ln1.bias", (d,), f"{blk}.attn", base_trainable),
+            ParamSpec(f"{blk}.attn.wq", (d, d), f"{blk}.attn", base_trainable),
+            ParamSpec(f"{blk}.attn.wk", (d, d), f"{blk}.attn", base_trainable),
+            ParamSpec(f"{blk}.attn.wv", (d, d), f"{blk}.attn", base_trainable),
+            ParamSpec(f"{blk}.attn.wo", (d, d), f"{blk}.attn", base_trainable),
+            ParamSpec(f"{blk}.ln2.scale", (d,), f"{blk}.mlp", base_trainable),
+            ParamSpec(f"{blk}.ln2.bias", (d,), f"{blk}.mlp", base_trainable),
+            ParamSpec(f"{blk}.mlp.w1", (d, f), f"{blk}.mlp", base_trainable),
+            ParamSpec(f"{blk}.mlp.b1", (f,), f"{blk}.mlp", base_trainable),
+            ParamSpec(f"{blk}.mlp.w2", (f, d), f"{blk}.mlp", base_trainable),
+            ParamSpec(f"{blk}.mlp.b2", (d,), f"{blk}.mlp", base_trainable),
+        ]
+        if variant == "lora":
+            r = cfg.lora_rank
+            specs += [
+                ParamSpec(f"{blk}.lora.q.a", (d, r), f"{blk}.lora", True),
+                ParamSpec(f"{blk}.lora.q.b", (r, d), f"{blk}.lora", True),
+                ParamSpec(f"{blk}.lora.v.a", (d, r), f"{blk}.lora", True),
+                ParamSpec(f"{blk}.lora.v.b", (r, d), f"{blk}.lora", True),
+            ]
+        if variant == "prefix":
+            p = cfg.prefix_len
+            specs += [
+                ParamSpec(f"{blk}.prefix.k", (p, d), f"{blk}.prefix", True),
+                ParamSpec(f"{blk}.prefix.v", (p, d), f"{blk}.prefix", True),
+            ]
+    specs += [
+        ParamSpec("final_ln.scale", (d,), "head", base_trainable),
+        ParamSpec("final_ln.bias", (d,), "head", base_trainable),
+    ]
+    if cfg.kind == "lm":
+        specs.append(ParamSpec("head.w", (d, v), "head", base_trainable))
+    else:
+        # The classifier head is always trainable: PEFT fine-tuning keeps a
+        # task head, matching the MeZO/HELENE experimental protocol.
+        specs.append(ParamSpec("head.w", (d, cfg.n_classes), "head", True))
+        specs.append(ParamSpec("head.b", (cfg.n_classes,), "head", True))
+    return specs
+
+
+def init_params(cfg: ModelConfig, variant: str, seed: int = 0) -> list[jnp.ndarray]:
+    """Deterministic initialisation following the specs order.
+
+    GPT-2-style: normal(0.02) embeddings and projections with 1/sqrt(2L)
+    scaling on residual-writing matrices; LayerNorm at identity; LoRA B and
+    prefix start at ~zero so the PEFT variants begin exactly at the base
+    model's function (verified in tests).
+    """
+    specs = param_specs(cfg, variant)
+    key = jax.random.PRNGKey(seed)
+    out: list[jnp.ndarray] = []
+    resid_scale = 1.0 / math.sqrt(2.0 * cfg.n_layers)
+    for spec in specs:
+        key, sub = jax.random.split(key)
+        leaf = spec.name.split(".")[-1]
+        if "ln" in spec.name and leaf == "scale":
+            arr = jnp.ones(spec.shape, jnp.float32)
+        elif leaf in ("bias", "b1", "b2", "b") and "lora" not in spec.name:
+            arr = jnp.zeros(spec.shape, jnp.float32)
+        elif ".lora." in spec.name and leaf == "b":
+            arr = jnp.zeros(spec.shape, jnp.float32)
+        elif ".prefix." in spec.name:
+            arr = 0.01 * jax.random.normal(sub, spec.shape, jnp.float32)
+        else:
+            std = 0.02
+            if leaf in ("wo", "w2"):
+                std *= resid_scale
+            arr = std * jax.random.normal(sub, spec.shape, jnp.float32)
+        out.append(arr)
+    return out
+
+
+def _layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * scale + bias
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def forward(
+    params: dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    variant: str,
+    *,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    """Transformer trunk → (B, S, D) final-LN hidden states."""
+    b, s = tokens.shape
+    x = params["embed.tok"][tokens] + params["embed.pos"][None, :s]
+    attn_fn = attention if use_pallas else attention_ref
+    prefix_len = cfg.prefix_len if variant == "prefix" else 0
+
+    for i in range(cfg.n_layers):
+        blk = f"block{i}"
+        xn = _layernorm(x, params[f"{blk}.ln1.scale"], params[f"{blk}.ln1.bias"])
+        q = xn @ params[f"{blk}.attn.wq"]
+        k = xn @ params[f"{blk}.attn.wk"]
+        v = xn @ params[f"{blk}.attn.wv"]
+        if variant == "lora":
+            lscale = cfg.lora_alpha / cfg.lora_rank
+            q = q + lscale * (xn @ params[f"{blk}.lora.q.a"]) @ params[f"{blk}.lora.q.b"]
+            v = v + lscale * (xn @ params[f"{blk}.lora.v.a"]) @ params[f"{blk}.lora.v.b"]
+        qh, kh, vh = (_split_heads(t, cfg.n_heads) for t in (q, k, v))
+        if variant == "prefix":
+            pk = _split_heads(
+                jnp.broadcast_to(params[f"{blk}.prefix.k"][None], (b, prefix_len, cfg.d_model)),
+                cfg.n_heads,
+            )
+            pv = _split_heads(
+                jnp.broadcast_to(params[f"{blk}.prefix.v"][None], (b, prefix_len, cfg.d_model)),
+                cfg.n_heads,
+            )
+            kh = jnp.concatenate([pk, kh], axis=2)
+            vh = jnp.concatenate([pv, vh], axis=2)
+        att = attn_fn(qh, kh, vh, causal=cfg.causal, prefix_len=prefix_len)
+        x = x + _merge_heads(att) @ params[f"{blk}.attn.wo"]
+
+        xn = _layernorm(x, params[f"{blk}.ln2.scale"], params[f"{blk}.ln2.bias"])
+        hmid = jax.nn.gelu(xn @ params[f"{blk}.mlp.w1"] + params[f"{blk}.mlp.b1"])
+        x = x + hmid @ params[f"{blk}.mlp.w2"] + params[f"{blk}.mlp.b2"]
+
+    return _layernorm(x, params["final_ln.scale"], params["final_ln.bias"])
+
+
+def logits_fn(
+    params: dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    variant: str,
+    *,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    """Classifier logits (B, C) for cls/dec kinds; LM logits (B, S, V) for lm."""
+    hidden = forward(params, tokens, cfg, variant, use_pallas=use_pallas)
+    if cfg.kind == "lm":
+        return hidden @ params["head.w"]
+    if cfg.kind == "cls":
+        pooled = jnp.mean(hidden, axis=1)
+    else:  # dec: causal model — only the last position sees the whole input
+        pooled = hidden[:, -1]
+    return pooled @ params["head.w"] + params["head.b"]
+
+
+def _softmax_ce(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)
+
+
+def loss_fn(
+    params: dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray | None,
+    cfg: ModelConfig,
+    variant: str,
+    *,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    """Mean cross-entropy. For ``lm`` kind labels are the shifted tokens."""
+    lg = logits_fn(params, tokens, cfg, variant, use_pallas=use_pallas)
+    if cfg.kind == "lm":
+        return _softmax_ce(lg[:, :-1], tokens[:, 1:])
+    assert labels is not None
+    return _softmax_ce(lg, labels)
+
+
+# --------------------------------------------------------------------------
+# Entrypoint builders: positional flat-param functions ready for jax.jit.
+# --------------------------------------------------------------------------
+
+
+def _to_dict(specs: list[ParamSpec], flat: tuple[jnp.ndarray, ...]) -> dict[str, jnp.ndarray]:
+    return {s.name: a for s, a in zip(specs, flat)}
+
+
+def build_entrypoints(
+    cfg: ModelConfig, variant: str
+) -> dict[str, tuple[Callable, list[jax.ShapeDtypeStruct]]]:
+    """Return {entrypoint: (fn, example_arg_specs)} for AOT lowering.
+
+    Every fn returns a tuple (lowered with return_tuple=True; the Rust side
+    unwraps). Data arguments come after params (and after tangents for jvp).
+    """
+    specs = param_specs(cfg, variant)
+    n = len(specs)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.max_seq), jnp.int32)
+    lbl_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    p_specs = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in specs]
+    has_labels = cfg.kind != "lm"
+
+    def loss_ep(*args):
+        params = _to_dict(specs, args[:n])
+        tokens = args[n]
+        labels = args[n + 1] if has_labels else None
+        return (loss_fn(params, tokens, labels, cfg, variant, use_pallas=True),)
+
+    def logits_ep(*args):
+        params = _to_dict(specs, args[:n])
+        return (logits_fn(params, args[n], cfg, variant, use_pallas=True),)
+
+    # Oracle-attention twins of loss/logits. Numerically identical to the
+    # Pallas graphs (pytest-verified); compiled so the CPU-bound experiment
+    # sweeps can opt out of interpret-mode Pallas overhead (HELENE_REF_ATTN).
+    # On a real TPU the Pallas graph is the fast one — see DESIGN.md §Perf.
+    def loss_ref_ep(*args):
+        params = _to_dict(specs, args[:n])
+        tokens = args[n]
+        labels = args[n + 1] if has_labels else None
+        return (loss_fn(params, tokens, labels, cfg, variant, use_pallas=False),)
+
+    def logits_ref_ep(*args):
+        params = _to_dict(specs, args[:n])
+        return (logits_fn(params, args[n], cfg, variant, use_pallas=False),)
+
+    def loss_grad_ep(*args):
+        tokens = args[n]
+        labels = args[n + 1] if has_labels else None
+
+        def scalar_loss(flat):
+            return loss_fn(_to_dict(specs, flat), tokens, labels, cfg, variant,
+                           use_pallas=False)
+
+        val, grads = jax.value_and_grad(scalar_loss)(tuple(args[:n]))
+        return (val, *grads)
+
+    def loss_jvp_ep(*args):
+        primals = tuple(args[:n])
+        tangents = tuple(args[n : 2 * n])
+        tokens = args[2 * n]
+        labels = args[2 * n + 1] if has_labels else None
+
+        def scalar_loss(flat):
+            return loss_fn(_to_dict(specs, flat), tokens, labels, cfg, variant,
+                           use_pallas=False)
+
+        val, jvp = jax.jvp(scalar_loss, (primals,), (tangents,))
+        return (val, jvp)
+
+    data = [tok_spec] + ([lbl_spec] if has_labels else [])
+    eps = {
+        "loss": (loss_ep, p_specs + data),
+        "logits": (logits_ep, p_specs + [tok_spec]),
+        "loss_ref": (loss_ref_ep, p_specs + data),
+        "logits_ref": (logits_ref_ep, p_specs + [tok_spec]),
+        "loss_grad": (loss_grad_ep, p_specs + data),
+        "loss_jvp": (loss_jvp_ep, p_specs + p_specs + data),
+    }
+    return eps
+
+
+def n_params(cfg: ModelConfig, variant: str = "ft") -> int:
+    return sum(s.size for s in param_specs(cfg, variant))

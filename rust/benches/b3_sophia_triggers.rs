@@ -1,0 +1,91 @@
+//! §B.3: why Sophia destabilises — clip-trigger counting.
+//!
+//! The paper compares two training windows (loss ≈ 0.57 vs ≈ 0.65 later)
+//! and finds Sophia's update-clip fires 1.18-1.22× more often in the worse
+//! window. We run ZO-Sophia, count triggers per window, and correlate
+//! trigger rate with the loss trend; HELENE's Hessian-floor "trigger"
+//! fraction is shown alongside for contrast.
+
+use helene::bench::{bench_lr, Bench};
+use helene::data::batcher::Batcher;
+use helene::optim::helene::Helene;
+use helene::optim::sophia::ZoSophia;
+use helene::optim::{spsa, Optimizer};
+use helene::runtime::ModelRunner;
+use helene::tasks;
+use helene::util::rng::mix64;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("b3_sophia_triggers")?;
+    let steps = b.scale.zo_steps().max(400);
+    let window = steps / 4;
+    let model = "cls-small";
+
+    let runner = ModelRunner::new(&b.rt, model, "ft")?;
+    let dims = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", dims.vocab, dims.max_seq, 16, 0)?;
+    let mut params = runner.load_init_params()?;
+    let mut batcher = Batcher::new(&data.train, dims.batch, dims.max_seq, 0, true);
+
+    let mut sophia = ZoSophia::new(bench_lr("zo-sophia", model));
+    sophia.configure_batch(dims.batch);
+    sophia.init(&params);
+
+    b.header(&["mean loss", "trigger rate"]);
+    let mut windows: Vec<(f64, f64)> = Vec::new();
+    for w in 0..4 {
+        sophia.reset_triggers();
+        let mut loss_sum = 0f64;
+        for s in 0..window {
+            let step = w * window + s + 1;
+            let batch = batcher.next_batch();
+            let est = spsa::estimate_with(&mut params, mix64(0, step as u64), 1e-3, |p| {
+                runner.loss(p, &batch)
+            })?;
+            sophia.step_zo(&mut params, est.g_scale, est.seed)?;
+            loss_sum += est.loss() as f64;
+        }
+        let mean_loss = loss_sum / window as f64;
+        let rate = sophia.trigger_rate();
+        windows.push((mean_loss, rate));
+        b.row(
+            &format!("sophia window {}..{}", w * window, (w + 1) * window),
+            vec![format!("{mean_loss:.3}"), format!("{rate:.3}")],
+        );
+    }
+
+    // HELENE's λ-floor activity for contrast (same protocol, fresh params)
+    let mut params = runner.load_init_params()?;
+    let mut helene = Helene::paper_defaults().with_lr(bench_lr("helene", model));
+    helene.configure_batch(dims.batch);
+    helene.init(&params);
+    let mut loss_sum = 0f64;
+    for step in 1..=window {
+        let batch = batcher.next_batch();
+        let est = spsa::estimate_with(&mut params, mix64(1, step as u64), 1e-3, |p| {
+            runner.loss(p, &batch)
+        })?;
+        helene.step_zo(&mut params, est.g_scale, est.seed)?;
+        loss_sum += est.loss() as f64;
+    }
+    b.row(
+        "helene window 0..w (floor)",
+        vec![
+            format!("{:.3}", loss_sum / window as f64),
+            format!("{:.3}", helene.clip_fraction()),
+        ],
+    );
+
+    // the paper's observation: worse windows ↔ more clipping. report the
+    // ratio between the worst- and best-loss windows.
+    let best = windows.iter().cloned().fold((f64::INFINITY, 0.0), |a, b| if b.0 < a.0 { b } else { a });
+    let worst = windows.iter().cloned().fold((f64::NEG_INFINITY, 0.0), |a, b| if b.0 > a.0 { b } else { a });
+    if best.1 > 0.0 {
+        println!(
+            "trigger-rate ratio (worst-loss window / best-loss window): {:.2} (paper: 1.18-1.22)",
+            worst.1 / best.1
+        );
+    }
+    b.finish(&["window", "mean_loss", "trigger_rate"])?;
+    Ok(())
+}

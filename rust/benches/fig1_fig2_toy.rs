@@ -1,0 +1,63 @@
+//! Figures 1 & 2: the 2-D heterogeneous-curvature toy.
+//!
+//! Fig. 1 — trajectories of GD / Adam / Newton / Sophia / HELENE (CSV per
+//! method under reports/toy/). Fig. 2 — their training-loss curves, plus the
+//! summary rows printed here (paper claim: HELENE stable, Newton + Sophia
+//! unstable, first-order slower).
+
+use helene::toy::{run_all, Toy2d, ToyConfig, ToyMethod};
+
+fn main() -> anyhow::Result<()> {
+    let scale = helene::bench::Scale::detect();
+    let steps = match scale {
+        helene::bench::Scale::Smoke => 500,
+        helene::bench::Scale::Default => 2000,
+        helene::bench::Scale::Full => 10000,
+    };
+    println!("== bench fig1_fig2_toy (scale {scale:?}, steps {steps}) ==");
+    let problem = Toy2d::default();
+    let cfg = ToyConfig { steps, ..Default::default() };
+    let out_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("reports/toy");
+    std::fs::create_dir_all(&out_dir)?;
+
+    println!(
+        "  {:<8} {:>14} {:>10} {:>10} {:>10}",
+        "method", "final loss", "tail(100)", "dist2min", "status"
+    );
+    let all = run_all(problem, &cfg);
+    for t in &all {
+        let end = *t.points.last().unwrap();
+        let n = t.losses.len();
+        let w = 100.min(n);
+        let tail: f32 = t.losses[n - w..].iter().sum::<f32>() / w as f32;
+        println!(
+            "  {:<8} {:>14.6} {:>10.5} {:>10.4} {:>10}",
+            t.name,
+            t.final_loss(),
+            tail,
+            problem.dist_to_min(end),
+            if t.diverged() { "DIVERGED" } else { "ok" }
+        );
+        // fig1: trajectory; fig2: loss curve (same CSV carries both)
+        let mut csv = String::from("step,x,y,loss\n");
+        for (i, (p, l)) in t.points.iter().zip(&t.losses).enumerate() {
+            csv.push_str(&format!("{},{},{},{}\n", i, p[0], p[1], l));
+        }
+        std::fs::write(out_dir.join(format!("fig1_{}.csv", t.name)), csv)?;
+    }
+
+    // Figure-2 cross-check assertions (the paper's qualitative ordering) —
+    // only meaningful once the runs have converged (not at smoke scale)
+    if scale != helene::bench::Scale::Smoke {
+        let by = |m: ToyMethod| all.iter().find(|t| t.name == m.name()).unwrap();
+        let helene = by(ToyMethod::Helene);
+        let newton = by(ToyMethod::Newton);
+        let sophia = by(ToyMethod::Sophia);
+        assert!(problem.dist_to_min(*helene.points.last().unwrap()) < 0.3);
+        assert!(newton.final_loss() > 10.0 * helene.final_loss().max(1e-6));
+        assert!(sophia.final_loss() > helene.final_loss());
+        println!("figure-1/2 orderings hold: HELENE stable; Newton & Sophia unstable");
+    }
+    println!("CSV written to {}", out_dir.display());
+    Ok(())
+}

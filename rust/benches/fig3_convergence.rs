@@ -1,0 +1,56 @@
+//! Figure 3: convergence curves — MeZO vs HELENE, accuracy/loss vs steps,
+//! across 4 datasets × tuning methods, plus the steps-to-target speedup
+//! ratio (the paper's ~10-20× headline).
+//!
+//! Emits reports/fig3/<task>.<variant>.<opt>.csv (step, loss, dev_acc) and
+//! prints the speedup summary.
+
+use helene::bench::{speedup_target_at, Bench, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("fig3_convergence")?;
+    let tasks: &[&str] = match b.scale {
+        Scale::Smoke => &["sst2"],
+        _ => &["sst2", "snli", "rte", "trec"],
+    };
+    let variants: &[&str] =
+        if b.scale == Scale::Full { &["ft", "lora", "prefix"] } else { &["ft"] };
+    // give MeZO a longer budget: the paper's point is that it needs many
+    // more steps to hit the same accuracy
+    let helene_steps = b.scale.zo_steps();
+    let mezo_steps = helene_steps * 3;
+    let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("reports/fig3");
+    std::fs::create_dir_all(&out)?;
+
+    b.header(&["target", "mezo steps", "helene steps", "speedup"]);
+    for task in tasks {
+        for variant in variants {
+            let target = speedup_target_at(task, b.scale);
+            let hel = b.train_once("cls-small", variant, task, "helene",
+                                   helene_steps, 0, Some(target), false)?;
+            let mez = b.train_once("cls-small", variant, task, "mezo",
+                                   mezo_steps, 0, Some(target), false)?;
+            hel.history.write_csv(&out.join(format!("{task}.{variant}.helene.csv")))?;
+            mez.history.write_csv(&out.join(format!("{task}.{variant}.mezo.csv")))?;
+            let fmt = |s: Option<usize>, cap: usize| {
+                s.map(|x| x.to_string()).unwrap_or(format!(">{cap}"))
+            };
+            let speedup = match (mez.steps_to_target, hel.steps_to_target) {
+                (Some(m), Some(h)) => format!("{:.1}x", m as f64 / h as f64),
+                (None, Some(h)) => format!(">{:.1}x", mezo_steps as f64 / h as f64),
+                _ => "n/a".to_string(),
+            };
+            b.row(
+                &format!("{task}/{variant}"),
+                vec![
+                    format!("{target:.2}"),
+                    fmt(mez.steps_to_target, mezo_steps),
+                    fmt(hel.steps_to_target, helene_steps),
+                    speedup,
+                ],
+            );
+        }
+    }
+    b.finish(&["run", "target", "mezo_steps", "helene_steps", "speedup"])?;
+    Ok(())
+}

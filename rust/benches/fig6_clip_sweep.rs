@@ -1,0 +1,58 @@
+//! Figure 6 (§B.2): robustness of the clipping lower bound λ.
+//!
+//! The paper sweeps λ ∈ {0.9, 1, 2, 3}: 1-3 are all stable, while 0.9
+//! drops ~10 points ("problematic Hessian values are concentrated below
+//! 1"). We sweep the same grid plus the theory-guided layer-scaled policy
+//! (λ_i = R/2√d_i, Theorem 1).
+
+use helene::bench::{bench_lr, Bench};
+use helene::optim::clip::ClipPolicy;
+use helene::optim::helene::Helene;
+use helene::runtime::ModelRunner;
+use helene::tasks;
+use helene::train::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("fig6_clip_sweep")?;
+    let steps = b.scale.zo_steps();
+    let model = "cls-small";
+    let lr = bench_lr("helene", model);
+    let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("reports/fig6");
+    std::fs::create_dir_all(&out)?;
+
+    let runner = ModelRunner::new(&b.rt, model, "ft")?;
+    let dims = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", dims.vocab, dims.max_seq, 16, 0)?;
+
+    let policies: Vec<(String, ClipPolicy)> = [0.5f32, 0.9, 1.0, 2.0, 3.0]
+        .iter()
+        .map(|&l| (format!("lambda={l}"), ClipPolicy::Constant(l)))
+        .chain(std::iter::once((
+            "layer-scaled(R=64)".to_string(),
+            ClipPolicy::LayerScaled { r: 64.0 },
+        )))
+        .collect();
+
+    b.header(&["dev acc", "test acc", "clip fraction"]);
+    for (name, policy) in policies {
+        let mut opt = Helene::paper_defaults().with_lr(lr).with_clip(policy);
+        let tc = TrainConfig {
+            steps,
+            eval_every: (steps / 8).max(25),
+            eval_examples: 96,
+            ..Default::default()
+        };
+        let report = Trainer::new(tc).run(&runner, &data, &mut opt)?;
+        report.history.write_csv(&out.join(format!("{}.csv", name.replace('=', "_"))))?;
+        b.row(
+            &name,
+            vec![
+                format!("{:.3}", report.final_dev_metric),
+                format!("{:.3}", report.test_metric),
+                format!("{:.4}", opt.clip_fraction()),
+            ],
+        );
+    }
+    b.finish(&["policy", "dev_acc", "test_acc", "clip_fraction"])?;
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! §Perf: hot-path microbenchmarks (no criterion in the vendored set; this
+//! is a plain timing harness with warmup + repeated trials).
+//!
+//! Measures the L3 per-step cost structure the perf pass optimizes:
+//!   * perturb/restore pass over a ParamSet (RNG + AXPY throughput)
+//!   * one PJRT forward (`loss`) — Pallas vs oracle graph
+//!   * full SPSA step (2 probes + restore)
+//!   * HELENE optimizer update (host) vs the compiled fused L1 kernel
+//!   * loss_grad (FO path)
+
+use std::time::Instant;
+
+use helene::bench::Bench;
+use helene::data::batcher::Batcher;
+use helene::optim::helene::Helene;
+use helene::optim::{spsa, Optimizer};
+use helene::runtime::{lit_f32, ModelRunner};
+use helene::tasks;
+use helene::util::rng::Pcg64;
+
+fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("perf_hotpath")?;
+    let iters = match b.scale {
+        helene::bench::Scale::Smoke => 5,
+        _ => 20,
+    };
+    let model = "cls-small";
+    let mut runner = ModelRunner::new(&b.rt, model, "ft")?;
+    let dims = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", dims.vocab, dims.max_seq, 16, 0)?;
+    let mut batcher = Batcher::new(&data.train, dims.batch, dims.max_seq, 0, false);
+    let batch = batcher.next_batch();
+    let mut params = runner.load_init_params()?;
+    let n = params.n_params();
+
+    b.header(&["ms/op", "notes"]);
+
+    // 1. RNG + perturb throughput
+    let ms = 1000.0 * time(2, iters, || {
+        params.perturb_trainable(1234, 1e-3);
+        params.perturb_trainable(1234, -1e-3);
+    });
+    b.row(
+        "perturb+restore",
+        vec![format!("{ms:.2}"), format!("{:.0} Melem/s", 2.0 * n as f64 / ms / 1e3)],
+    );
+
+    // 2. forward: Pallas vs oracle graph
+    runner.set_ref_graph(false);
+    let ms_pallas = 1000.0 * time(1, iters, || {
+        runner.loss(&params, &batch).unwrap();
+    });
+    b.row("forward (pallas graph)", vec![format!("{ms_pallas:.2}"), String::new()]);
+    runner.set_ref_graph(true);
+    let ms_ref = 1000.0 * time(1, iters, || {
+        runner.loss(&params, &batch).unwrap();
+    });
+    b.row(
+        "forward (oracle graph)",
+        vec![format!("{ms_ref:.2}"), format!("{:.1}x vs pallas-interpret", ms_pallas / ms_ref)],
+    );
+
+    // 2b. buffered fast path (frozen params staged once)
+    let mut runner_buf = ModelRunner::new(&b.rt, model, "lora")?;
+    runner_buf.set_ref_graph(true);
+    let lora_params = runner_buf.load_init_params()?;
+    let ms_plain = 1000.0 * time(1, iters, || {
+        runner_buf.loss(&lora_params, &batch).unwrap();
+    });
+    runner_buf.enable_buffer_cache();
+    let ms_buf = 1000.0 * time(1, iters, || {
+        runner_buf.loss(&lora_params, &batch).unwrap();
+    });
+    b.row(
+        "forward lora (literal vs buffer-cache)",
+        vec![format!("{ms_plain:.2} → {ms_buf:.2}"), format!("{:.2}x", ms_plain / ms_buf)],
+    );
+
+    // 3. full SPSA step: seeded regeneration vs z-cache
+    let ms = 1000.0 * time(1, iters, || {
+        spsa::estimate_with(&mut params, 77, 1e-3, |p| runner.loss(p, &batch)).unwrap();
+    });
+    b.row("spsa step (regen z)", vec![format!("{ms:.2}"), String::new()]);
+    let mut zcache = helene::model::params::ZCache::default();
+    let ms_c = 1000.0 * time(1, iters, || {
+        spsa::estimate_cached(&mut params, &mut zcache, 77, 1e-3, |p| runner.loss(p, &batch))
+            .unwrap();
+    });
+    b.row(
+        "spsa step (z-cache)",
+        vec![format!("{ms_c:.2}"), format!("{:.2}x", ms / ms_c)],
+    );
+
+    // 4. HELENE host update vs fused L1 kernel artifact
+    let mut opt = Helene::paper_defaults();
+    opt.configure_batch(dims.batch);
+    opt.init(&params);
+    let ms_host = 1000.0 * time(2, iters, || {
+        opt.step_zo(&mut params, 0.3, 99).unwrap();
+    });
+    b.row(
+        "helene update (host)",
+        vec![format!("{ms_host:.2}"), format!("{:.0} Melem/s", n as f64 / ms_host / 1e3)],
+    );
+
+    if let Some(fk) = b.rt.manifest.fused.iter().find(|f| f.n == 65536).cloned() {
+        let fn_ = fk.n;
+        let mut rng = Pcg64::new(1);
+        let mut v = vec![0f32; fn_];
+        rng.fill_normal(&mut v);
+        let sc = [0.3f32, 0.95, 0.9, 1e-3, 1.0, 1.0, 1e-8, 0.0];
+        let ms_fused = 1000.0 * time(2, iters, || {
+            let args = vec![
+                lit_f32(&v, &[fn_]).unwrap(),
+                lit_f32(&v, &[fn_]).unwrap(),
+                lit_f32(&v, &[fn_]).unwrap(),
+                lit_f32(&v, &[fn_]).unwrap(),
+                lit_f32(&sc, &[1, 8]).unwrap(),
+            ];
+            b.rt.execute(&fk.update_file, &args).unwrap();
+        });
+        b.row(
+            "fused L1 update kernel (65536)",
+            vec![
+                format!("{ms_fused:.2}"),
+                format!("{:.0} Melem/s incl marshalling", fn_ as f64 / ms_fused / 1e3),
+            ],
+        );
+    }
+
+    // 5. FO gradient
+    let ms = 1000.0 * time(1, iters.min(10), || {
+        runner.loss_grad(&params, &batch).unwrap();
+    });
+    b.row("loss_grad (fwd+bwd)", vec![format!("{ms:.2}"), String::new()]);
+
+    b.finish(&["op", "ms", "notes"])?;
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Table 1: the RoBERTa-large (→ `cls-small`) few-shot suite, k = 16.
+//!
+//! Rows: Zero-shot, LP (linear probing), FT (Adam), MeZO, HELENE — for the
+//! FT protocol at default scale; `HELENE_BENCH_SCALE=full` adds the LoRA and
+//! prefix PEFT variants of MeZO and HELENE (the paper's extra rows).
+//! Columns: SST-2, SST-5, SNLI, MNLI, RTE, TREC (synthetic stand-ins,
+//! DESIGN.md §4). Cells: test accuracy, mean (±std over seeds).
+
+use helene::bench::{fmt_acc, Bench, Scale};
+use helene::tasks::ROBERTA_SUITE;
+use helene::util::metrics::MeanStd;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("table1_roberta")?;
+    let model = "cls-small";
+    let tasks: Vec<&str> = b.scale.tasks(ROBERTA_SUITE).to_vec();
+    let zo = b.scale.zo_steps();
+    let fo = b.scale.fo_steps();
+    b.header(&tasks);
+
+    // Zero-shot
+    let cells: Vec<String> = tasks
+        .iter()
+        .map(|t| Ok(format!("{:.1}", b.zero_shot(model, "ft", t)?)))
+        .collect::<anyhow::Result<_>>()?;
+    b.row("zero-shot", cells);
+
+    // LP (head-only fo-adam)
+    let cells: Vec<String> = tasks
+        .iter()
+        .map(|t| {
+            let mut accs = Vec::new();
+            for seed in b.scale.seeds() {
+                let r = b.train_once(model, "ft", t, "fo-adam", fo, seed, None, true)?;
+                accs.push(100.0 * r.test_metric as f64);
+            }
+            Ok(fmt_acc(MeanStd::of(&accs)))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    b.row("lp", cells);
+
+    // FT with Adam (the paper's 12x-memory reference row)
+    let cells: Vec<String> = tasks
+        .iter()
+        .map(|t| Ok(fmt_acc(b.train_seeds(model, "ft", t, "fo-adam", fo)?)))
+        .collect::<anyhow::Result<_>>()?;
+    b.row("ft(adam)", cells);
+
+    // MeZO and HELENE (FT protocol)
+    for opt in ["mezo", "helene"] {
+        let cells: Vec<String> = tasks
+            .iter()
+            .map(|t| Ok(fmt_acc(b.train_seeds(model, "ft", t, opt, zo)?)))
+            .collect::<anyhow::Result<_>>()?;
+        b.row(opt, cells);
+    }
+
+    // PEFT rows at full scale
+    if b.scale == Scale::Full {
+        for variant in ["lora", "prefix"] {
+            for opt in ["mezo", "helene"] {
+                let cells: Vec<String> = tasks
+                    .iter()
+                    .map(|t| Ok(fmt_acc(b.train_seeds(model, variant, t, opt, zo)?)))
+                    .collect::<anyhow::Result<_>>()?;
+                b.row(&format!("{opt}({variant})"), cells);
+            }
+        }
+    }
+
+    let mut header = vec!["row"];
+    header.extend(tasks.iter());
+    b.finish(&header)?;
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Table 2: the OPT-1.3B (→ `dec-small` causal classifier) suite.
+//!
+//! Columns: SST-2, RTE, CB, BoolQ, WSC, WIC, COPA, ReCoRD, SQuAD-lite.
+//! Rows: zero-shot, LP, MeZO, HELENE (+ their LoRA/prefix variants at full
+//! scale) and FT(Adam) — mirroring the paper's layout. The paper's headline
+//! here: HELENE (+PEFT) consistently ≥ MeZO.
+
+use helene::bench::{fmt_acc, Bench, Scale};
+use helene::tasks::OPT_SUITE;
+use helene::util::metrics::MeanStd;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("table2_opt")?;
+    let model = "dec-small";
+    let tasks: Vec<&str> = b.scale.tasks(OPT_SUITE).to_vec();
+    let zo = b.scale.zo_steps();
+    let fo = b.scale.fo_steps();
+    b.header(&tasks);
+
+    let cells: Vec<String> = tasks
+        .iter()
+        .map(|t| Ok(format!("{:.1}", b.zero_shot(model, "ft", t)?)))
+        .collect::<anyhow::Result<_>>()?;
+    b.row("zero-shot", cells);
+
+    let cells: Vec<String> = tasks
+        .iter()
+        .map(|t| {
+            let mut accs = Vec::new();
+            for seed in b.scale.seeds() {
+                let r = b.train_once(model, "ft", t, "fo-adam", fo, seed, None, true)?;
+                accs.push(100.0 * r.test_metric as f64);
+            }
+            Ok(fmt_acc(MeanStd::of(&accs)))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    b.row("lp", cells);
+
+    for opt in ["mezo", "helene"] {
+        let cells: Vec<String> = tasks
+            .iter()
+            .map(|t| Ok(fmt_acc(b.train_seeds(model, "ft", t, opt, zo)?)))
+            .collect::<anyhow::Result<_>>()?;
+        b.row(opt, cells);
+    }
+
+    if b.scale == Scale::Full {
+        for variant in ["lora", "prefix"] {
+            for opt in ["mezo", "helene"] {
+                let cells: Vec<String> = tasks
+                    .iter()
+                    .map(|t| Ok(fmt_acc(b.train_seeds(model, variant, t, opt, zo)?)))
+                    .collect::<anyhow::Result<_>>()?;
+                b.row(&format!("{opt}({variant})"), cells);
+            }
+        }
+    }
+
+    // FT reference (the "12× memory" row)
+    let cells: Vec<String> = tasks
+        .iter()
+        .map(|t| Ok(fmt_acc(b.train_seeds(model, "ft", t, "fo-adam", fo)?)))
+        .collect::<anyhow::Result<_>>()?;
+    b.row("ft(adam,12x-mem)", cells);
+
+    let mut header = vec!["row"];
+    header.extend(tasks.iter());
+    b.finish(&header)?;
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Table 3: the optimizer grid on SST-2 — FO-SGD, Forward-Grad, ZO-SGD,
+//! ZO-SGD-MMT, ZO-SGD-Cons, ZO-SGD-Sign, ZO-Adam, HELENE — over both model
+//! families (`cls-small` ~ RoBERTa-large, `dec-small` ~ OPT-1.3B) × tuning
+//! methods (FT; + LoRA/prefix at full scale).
+
+use helene::bench::{fmt_acc, Bench, Scale};
+
+const OPTS: &[&str] = &[
+    "fo-sgd",
+    "forward-grad",
+    "mezo", // = ZO-SGD
+    "zo-sgd-mmt",
+    "zo-sgd-cons",
+    "zo-sgd-sign",
+    "zo-adam",
+    "helene",
+];
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new("table3_optimizers")?;
+    let variants: &[&str] =
+        if b.scale == Scale::Full { &["ft", "lora", "prefix"] } else { &["ft"] };
+    let models = ["cls-small", "dec-small"];
+    let mut header_cols = Vec::new();
+    for m in &models {
+        for v in variants {
+            header_cols.push(format!("{m}/{v}"));
+        }
+    }
+    b.header(&header_cols.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    for opt in OPTS {
+        let mut cells = Vec::new();
+        for model in &models {
+            for variant in variants {
+                let steps = if opt.starts_with("fo") {
+                    b.scale.fo_steps()
+                } else {
+                    b.scale.zo_steps()
+                };
+                cells.push(fmt_acc(b.train_seeds(model, variant, "sst2", opt, steps)?));
+            }
+        }
+        b.row(opt, cells);
+    }
+
+    let mut header = vec!["optimizer".to_string()];
+    header.extend(header_cols);
+    b.finish(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+    Ok(())
+}

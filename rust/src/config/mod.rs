@@ -1,0 +1,218 @@
+//! Experiment configuration substrate: a TOML-lite format + typed accessors.
+//!
+//! No serde/toml crates in the vendored set, so experiment files use a
+//! small INI/TOML subset — `[section]` headers, `key = value` lines where
+//! value is a string, number, bool, or flat array — which covers every
+//! config in `configs/` and the CLI `--set section.key=value` overrides.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed config: `section.key → raw string value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            if full.is_empty() || key.trim().is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            values.insert(full, unquote(value.trim()).to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn set(&mut self, assignment: &str) -> Result<()> {
+        let (k, v) = assignment
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value: {assignment:?}"))?;
+        self.values.insert(k.trim().to_string(), unquote(v.trim()).to_string());
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("missing required config key {key:?}"))
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("config {key} = {s:?} is not a number")),
+        }
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.f64(key, default as f64)? as f32)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("config {key} = {s:?} is not an integer")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("config {key} = {s:?} is not an integer")),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(s) => bail!("config {key} = {s:?} is not a bool"),
+        }
+    }
+
+    /// Flat array value: `a, b, c` (strings) — used for task lists.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|s| {
+                s.trim_matches(|c| c == '[' || c == ']')
+                    .split(',')
+                    .map(|x| unquote(x.trim()).to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(s: &str) -> &str {
+    if s.len() >= 2 && s.starts_with('"') && s.ends_with('"') {
+        &s[1..s.len() - 1]
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment: table1 row
+model = "cls-small"          # model family
+[train]
+steps = 5000
+lr = 1e-4
+use_pallas = true
+tasks = [sst2, sst5, rte]
+[helene]
+lambda = 0.5
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("model", ""), "cls-small");
+        assert_eq!(c.usize("train.steps", 0).unwrap(), 5000);
+        assert!((c.f64("train.lr", 0.0).unwrap() - 1e-4).abs() < 1e-12);
+        assert!(c.bool("train.use_pallas", false).unwrap());
+        assert_eq!(c.list("train.tasks"), vec!["sst2", "sst5", "rte"]);
+        assert!((c.f32("helene.lambda", 0.0).unwrap() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize("nope", 7).unwrap(), 7);
+        assert!(c.req_str("nope").is_err());
+        assert!(c.list("nope").is_empty());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("train.steps=123").unwrap();
+        c.set("new.key=hello").unwrap();
+        assert_eq!(c.usize("train.steps", 0).unwrap(), 123);
+        assert_eq!(c.str("new.key", ""), "hello");
+        assert!(c.set("notanassignment").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("keywithoutvalue").is_err());
+        assert!(Config::parse("= novalue").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let c = Config::parse("x = notanumber").unwrap();
+        assert!(c.f64("x", 0.0).is_err());
+        assert!(c.usize("x", 0).is_err());
+        assert!(c.bool("x", false).is_err());
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let c = Config::parse("s = \"a # b\" # trailing").unwrap();
+        assert_eq!(c.str("s", ""), "a # b");
+    }
+}

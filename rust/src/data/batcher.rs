@@ -1,0 +1,147 @@
+//! Batching: fixed-size (B, S) int32 batches for the compiled entrypoints.
+//!
+//! Executables are compiled for a fixed batch size, so the batcher always
+//! emits exactly `batch` rows, cycling (with per-epoch reshuffle) through
+//! the split and wrapping around at the end — the standard drop-nothing
+//! protocol for few-shot training where an epoch is only a few batches.
+
+use crate::data::synth::Example;
+use crate::util::rng::Pcg64;
+
+/// One fixed-size batch, row-major tokens.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub tokens: Vec<i32>, // len = batch * seq
+    pub labels: Vec<i32>, // len = batch
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Cycling, shuffling batch iterator over a split.
+pub struct Batcher {
+    examples: Vec<Example>,
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    seq: usize,
+    rng: Pcg64,
+    shuffle: bool,
+}
+
+impl Batcher {
+    pub fn new(examples: &[Example], batch: usize, seq: usize, seed: u64, shuffle: bool) -> Self {
+        assert!(!examples.is_empty(), "empty split");
+        assert!(examples.iter().all(|e| e.tokens.len() == seq), "seq mismatch");
+        let mut b = Self {
+            examples: examples.to_vec(),
+            order: (0..examples.len()).collect(),
+            cursor: 0,
+            batch,
+            seq,
+            rng: Pcg64::new_stream(seed, 0xBA7C),
+            shuffle,
+        };
+        if shuffle {
+            b.rng.shuffle(&mut b.order);
+        }
+        b
+    }
+
+    /// Next fixed-size batch (wraps + reshuffles at epoch end).
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                if self.shuffle {
+                    self.rng.shuffle(&mut self.order);
+                }
+            }
+            let ex = &self.examples[self.order[self.cursor]];
+            tokens.extend_from_slice(&ex.tokens);
+            labels.push(ex.label);
+            self.cursor += 1;
+        }
+        Batch { tokens, labels, batch: self.batch, seq: self.seq }
+    }
+
+    /// All batches needed to cover the split once (last batch wraps).
+    pub fn epoch_batches(&self) -> usize {
+        self.examples.len().div_ceil(self.batch)
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exs(n: usize, seq: usize) -> Vec<Example> {
+        (0..n)
+            .map(|i| Example { tokens: vec![i as i32; seq], label: (i % 3) as i32 })
+            .collect()
+    }
+
+    #[test]
+    fn emits_fixed_size_batches() {
+        let mut b = Batcher::new(&exs(10, 4), 3, 4, 0, false);
+        for _ in 0..5 {
+            let batch = b.next_batch();
+            assert_eq!(batch.tokens.len(), 12);
+            assert_eq!(batch.labels.len(), 3);
+        }
+    }
+
+    #[test]
+    fn unshuffled_cycles_in_order() {
+        let mut b = Batcher::new(&exs(4, 2), 2, 2, 0, false);
+        let b1 = b.next_batch();
+        let b2 = b.next_batch();
+        let b3 = b.next_batch(); // wrap
+        assert_eq!(b1.tokens, vec![0, 0, 1, 1]);
+        assert_eq!(b2.tokens, vec![2, 2, 3, 3]);
+        assert_eq!(b3.tokens, b1.tokens);
+    }
+
+    #[test]
+    fn shuffled_covers_everything_each_epoch() {
+        let n = 9;
+        let mut b = Batcher::new(&exs(n, 1), 3, 1, 7, true);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            for t in b.next_batch().tokens {
+                seen.insert(t);
+            }
+        }
+        assert_eq!(seen.len(), n);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Batcher::new(&exs(10, 2), 4, 2, 5, true);
+        let mut b = Batcher::new(&exs(10, 2), 4, 2, 5, true);
+        for _ in 0..6 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "seq mismatch")]
+    fn rejects_wrong_seq() {
+        Batcher::new(&exs(4, 3), 2, 8, 0, false);
+    }
+
+    #[test]
+    fn epoch_batches_rounds_up() {
+        let b = Batcher::new(&exs(10, 1), 4, 1, 0, false);
+        assert_eq!(b.epoch_batches(), 3);
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny-corpus generator for the language-model end-to-end example.
+//!
+//! A seeded order-2 Markov "grammar" over the model vocabulary: a random but
+//! fixed transition structure with low branching factor, so the stream has
+//! real learnable statistics (conditional entropy well below uniform) and a
+//! ~100M-parameter LM trained on it shows a genuine falling loss curve.
+
+use crate::util::rng::{mix64, Pcg64};
+
+/// Deterministic synthetic corpus: `next = f(prev2, prev1, noise)`.
+#[derive(Clone, Debug)]
+pub struct TinyCorpus {
+    vocab: usize,
+    branch: usize,
+    noise: f64,
+    seed: u64,
+}
+
+impl TinyCorpus {
+    /// `branch` = number of plausible successors per bigram context;
+    /// `noise` = probability of an unconditioned (uniform) token.
+    pub fn new(vocab: usize, branch: usize, noise: f64, seed: u64) -> Self {
+        assert!(vocab >= 4 && branch >= 1);
+        Self { vocab, branch, noise, seed }
+    }
+
+    /// The b-th successor candidate of context (p2, p1) — a fixed function
+    /// of the seed, so the "grammar" is identical across streams. Successors
+    /// are drawn log-uniformly (Zipf-like marginals): real corpora have
+    /// skewed unigram statistics, and that first-order structure is what a
+    /// model learns in its first few hundred steps.
+    fn successor(&self, p2: i32, p1: i32, b: usize) -> i32 {
+        let h = mix64(self.seed, mix64(p2 as u64, (p1 as u64) << 20 | b as u64));
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64; // uniform [0,1)
+        (((self.vocab as f64).powf(u) - 1.0) as u64 % self.vocab as u64) as i32
+    }
+
+    /// Generate a token stream of length `n` (stream id picks the starting
+    /// context, so train/eval streams differ but share the grammar).
+    pub fn stream(&self, n: usize, stream_id: u64) -> Vec<i32> {
+        let mut rng = Pcg64::new_stream(self.seed ^ 0xC0B9, stream_id);
+        let mut out = Vec::with_capacity(n);
+        let mut p2 = (rng.next_below(self.vocab as u64)) as i32;
+        let mut p1 = (rng.next_below(self.vocab as u64)) as i32;
+        for _ in 0..n {
+            let next = if rng.next_f64() < self.noise {
+                rng.next_below(self.vocab as u64) as i32
+            } else {
+                let b = rng.next_below(self.branch as u64) as usize;
+                self.successor(p2, p1, b)
+            };
+            out.push(next);
+            p2 = p1;
+            p1 = next;
+        }
+        out
+    }
+
+    /// Chop a stream into (batch, seq) examples for the LM loss entrypoint.
+    pub fn batches(&self, n_batches: usize, batch: usize, seq: usize, stream_id: u64) -> Vec<Vec<i32>> {
+        let total = n_batches * batch * seq;
+        let s = self.stream(total, stream_id);
+        (0..n_batches)
+            .map(|i| s[i * batch * seq..(i + 1) * batch * seq].to_vec())
+            .collect()
+    }
+
+    /// Theoretical floor of the per-token cross-entropy in nats, ignoring
+    /// collision effects: H ≈ noise·ln(V) + (1-noise)·ln(branch).
+    pub fn entropy_floor(&self) -> f64 {
+        self.noise * (self.vocab as f64).ln()
+            + (1.0 - self.noise) * (self.branch as f64).ln()
+    }
+
+    /// Entropy of the (log-uniform) unigram marginal — the loss level a
+    /// model reaches once it has learned base rates but no context:
+    /// roughly ½·ln(V) + noise correction.
+    pub fn unigram_entropy(&self) -> f64 {
+        let lnv = (self.vocab as f64).ln();
+        self.noise * lnv + (1.0 - self.noise) * 0.5 * lnv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_dependent() {
+        let c = TinyCorpus::new(512, 4, 0.05, 9);
+        assert_eq!(c.stream(100, 0), c.stream(100, 0));
+        assert_ne!(c.stream(100, 0), c.stream(100, 1));
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let c = TinyCorpus::new(64, 2, 0.1, 3);
+        assert!(c.stream(1000, 0).iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn grammar_is_learnable() {
+        // bigram-conditional successor distribution must be concentrated:
+        // for a fixed observed context, successors should repeat.
+        // small vocab so bigram contexts recur often enough to measure
+        let c = TinyCorpus::new(16, 3, 0.0, 7);
+        let s = c.stream(200_000, 0);
+        use std::collections::HashMap;
+        let mut ctx: HashMap<(i32, i32), HashMap<i32, usize>> = HashMap::new();
+        for w in s.windows(3) {
+            *ctx.entry((w[0], w[1])).or_default().entry(w[2]).or_insert(0) += 1;
+        }
+        // contexts seen often enough must have ≤ branch distinct successors
+        let mut checked = 0;
+        for (_, succ) in ctx.iter().filter(|(_, s)| s.values().sum::<usize>() > 20) {
+            assert!(succ.len() <= 3, "too many successors: {}", succ.len());
+            checked += 1;
+        }
+        assert!(checked > 10, "not enough frequent contexts ({checked})");
+    }
+
+    #[test]
+    fn batches_cover_stream() {
+        let c = TinyCorpus::new(128, 2, 0.0, 1);
+        let b = c.batches(3, 2, 16, 0);
+        assert_eq!(b.len(), 3);
+        assert!(b.iter().all(|x| x.len() == 32));
+        let flat: Vec<i32> = b.concat();
+        assert_eq!(flat, c.stream(96, 0));
+    }
+
+    #[test]
+    fn entropy_floor_sane() {
+        let c = TinyCorpus::new(8192, 4, 0.05, 0);
+        let h = c.entropy_floor();
+        assert!(h > (4.0f64).ln() * 0.9);
+        assert!(h < (8192.0f64).ln() * 0.2);
+    }
+}

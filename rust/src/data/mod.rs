@@ -1,0 +1,15 @@
+//! Synthetic data substrate.
+//!
+//! The paper evaluates on GLUE/SuperGLUE-family datasets we cannot ship;
+//! per DESIGN.md §3 every task is replaced by a synthetic generator with the
+//! same *shape* (label cardinality, single-sequence vs pair, few-shot k=16
+//! protocol) and a controllable planted signal, so the optimizer comparisons
+//! the paper makes are preserved while staying self-contained.
+
+pub mod batcher;
+pub mod corpus;
+pub mod synth;
+
+pub use batcher::{Batch, Batcher};
+pub use corpus::TinyCorpus;
+pub use synth::{Dataset, Example, GenSpec, TaskShape};

@@ -1,0 +1,294 @@
+//! Synthetic classification task generators (paper-task stand-ins).
+//!
+//! Every generator emits fixed-length token sequences over a shared vocab:
+//!
+//! * token 0 = PAD (unused — sequences are generated full length),
+//! * token 1 = SEP separating premise/hypothesis in pair tasks,
+//! * tokens [2, 2+n_marker_band) = class-signal marker band,
+//! * the rest = Zipf-distributed background noise.
+//!
+//! A class plants `markers_per_seq` tokens from its class-conditional marker
+//! subset at random positions; pair tasks additionally encode the *relation*
+//! between the two segments (shared vs disjoint marker draws), mirroring how
+//! NLI-style tasks hinge on premise/hypothesis interaction. `signal` in
+//! [0, 1] scales how many markers survive (lower = harder), which is the
+//! difficulty knob the convergence benches sweep.
+
+use crate::util::rng::{mix64, Pcg64};
+
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+const MARKER_BAND: usize = 48; // tokens 2..50 reserved for class markers
+
+/// Single-sequence vs paired-segment task shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskShape {
+    Single,
+    Pair,
+}
+
+/// One labelled example.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// Generator specification for one synthetic task.
+#[derive(Clone, Debug)]
+pub struct GenSpec {
+    pub name: &'static str,
+    pub shape: TaskShape,
+    pub n_classes: usize,
+    /// markers planted per segment at signal = 1.0
+    pub markers_per_seq: usize,
+    /// fraction of planted markers kept (difficulty knob)
+    pub signal: f64,
+    /// number of distinct "domains" (MNLI is multi-genre: each domain shifts
+    /// the background distribution)
+    pub domains: usize,
+}
+
+impl GenSpec {
+    pub fn new(name: &'static str, shape: TaskShape, n_classes: usize) -> Self {
+        Self { name, shape, n_classes, markers_per_seq: 6, signal: 1.0, domains: 1 }
+    }
+
+    pub fn with_signal(mut self, signal: f64) -> Self {
+        self.signal = signal;
+        self
+    }
+
+    pub fn with_domains(mut self, domains: usize) -> Self {
+        self.domains = domains;
+        self
+    }
+
+    pub fn with_markers(mut self, m: usize) -> Self {
+        self.markers_per_seq = m;
+        self
+    }
+}
+
+/// A materialised dataset with deterministic splits.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub n_classes: usize,
+    pub train: Vec<Example>,
+    pub dev: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+impl Dataset {
+    /// Generate with the paper's few-shot protocol: `k` examples *per class*
+    /// for train, plus dev/test pools.
+    pub fn generate(
+        spec: &GenSpec,
+        vocab: usize,
+        seq_len: usize,
+        k_per_class: usize,
+        dev_size: usize,
+        test_size: usize,
+        seed: u64,
+    ) -> Dataset {
+        assert!(vocab > MARKER_BAND + 8, "vocab too small for marker band");
+        let mut train = Vec::with_capacity(k_per_class * spec.n_classes);
+        for class in 0..spec.n_classes {
+            for i in 0..k_per_class {
+                let ex_seed = mix64(seed, (class * 1_000_003 + i) as u64);
+                train.push(gen_example(spec, vocab, seq_len, class as i32, ex_seed));
+            }
+        }
+        let mut rng = Pcg64::new_stream(seed, 0xDA7A);
+        rng.shuffle(&mut train);
+        let dev = gen_split(spec, vocab, seq_len, dev_size, mix64(seed, 0xDE7));
+        let test = gen_split(spec, vocab, seq_len, test_size, mix64(seed, 0x7E57));
+        Dataset { name: spec.name.to_string(), n_classes: spec.n_classes, train, dev, test }
+    }
+
+    pub fn majority_class_acc(&self) -> f32 {
+        let mut counts = vec![0usize; self.n_classes];
+        for e in &self.test {
+            counts[e.label as usize] += 1;
+        }
+        *counts.iter().max().unwrap_or(&0) as f32 / self.test.len().max(1) as f32
+    }
+}
+
+fn gen_split(spec: &GenSpec, vocab: usize, seq_len: usize, n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|i| {
+            let class = rng.next_below(spec.n_classes as u64) as i32;
+            gen_example(spec, vocab, seq_len, class, mix64(seed, i as u64 + 1))
+        })
+        .collect()
+}
+
+/// Class-conditional marker subset: class c owns MARKER_BAND / n_classes
+/// tokens of the marker band (disjoint across classes).
+fn class_markers(class: i32, n_classes: usize) -> (i32, i32) {
+    let width = (MARKER_BAND / n_classes).max(1) as i32;
+    let lo = 2 + class * width;
+    (lo, lo + width)
+}
+
+/// Zipf-ish background token: rank r with p ∝ 1/(r+2), over the non-reserved
+/// band. Domains rotate the mapping so different domains have different
+/// frequent tokens.
+fn background_token(rng: &mut Pcg64, vocab: usize, domain: usize) -> i32 {
+    let band = vocab - MARKER_BAND - 2;
+    // inverse-CDF sample of 1/(r+2) via rejection-free approximation:
+    // u ~ U(0,1), rank = floor(exp(u * ln(band)) - 1) gives log-uniform ranks.
+    let u = rng.next_f64();
+    let rank = ((band as f64).powf(u) - 1.0) as usize % band;
+    let rotated = (rank + domain * 97) % band;
+    (2 + MARKER_BAND + rotated) as i32
+}
+
+fn gen_example(spec: &GenSpec, vocab: usize, seq_len: usize, class: i32, seed: u64) -> Example {
+    let mut rng = Pcg64::new(seed);
+    let domain = rng.next_below(spec.domains as u64) as usize;
+    let mut tokens = vec![PAD; seq_len];
+    match spec.shape {
+        TaskShape::Single => {
+            for t in tokens.iter_mut() {
+                *t = background_token(&mut rng, vocab, domain);
+            }
+            plant_markers(&mut rng, &mut tokens, 0, seq_len, class, spec);
+        }
+        TaskShape::Pair => {
+            let half = seq_len / 2;
+            for t in tokens.iter_mut() {
+                *t = background_token(&mut rng, vocab, domain);
+            }
+            tokens[half] = SEP;
+            // Premise carries a random "topic" marker set; the label is
+            // encoded in how the hypothesis relates to it: same topic markers
+            // (entail-like) vs the class-shifted set (neutral/contradict-like).
+            let topic = rng.next_below(spec.n_classes as u64) as i32;
+            plant_markers(&mut rng, &mut tokens, 0, half, topic, spec);
+            let hyp_class = (topic + class) % spec.n_classes as i32;
+            plant_markers(&mut rng, &mut tokens, half + 1, seq_len, hyp_class, spec);
+        }
+    }
+    Example { tokens, label: class }
+}
+
+fn plant_markers(
+    rng: &mut Pcg64,
+    tokens: &mut [i32],
+    lo: usize,
+    hi: usize,
+    class: i32,
+    spec: &GenSpec,
+) {
+    let (mlo, mhi) = class_markers(class, spec.n_classes);
+    let keep = ((spec.markers_per_seq as f64) * spec.signal).round() as usize;
+    for _ in 0..keep.max(1) {
+        let pos = lo + rng.next_below((hi - lo) as u64) as usize;
+        if tokens[pos] != SEP {
+            tokens[pos] = mlo + rng.next_below((mhi - mlo) as u64) as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GenSpec {
+        GenSpec::new("sst2", TaskShape::Single, 2)
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Dataset::generate(&spec(), 512, 32, 16, 50, 50, 42);
+        let b = Dataset::generate(&spec(), 512, 32, 16, 50, 50, 42);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+        let c = Dataset::generate(&spec(), 512, 32, 16, 50, 50, 43);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn few_shot_protocol_counts() {
+        let d = Dataset::generate(&spec(), 512, 32, 16, 100, 200, 1);
+        assert_eq!(d.train.len(), 32); // k per class
+        assert_eq!(d.dev.len(), 100);
+        assert_eq!(d.test.len(), 200);
+        let ones = d.train.iter().filter(|e| e.label == 1).count();
+        assert_eq!(ones, 16);
+    }
+
+    #[test]
+    fn tokens_in_vocab_and_fixed_length() {
+        let s = GenSpec::new("nli", TaskShape::Pair, 3).with_domains(5);
+        let d = Dataset::generate(&s, 512, 32, 4, 20, 20, 7);
+        for e in d.train.iter().chain(&d.dev).chain(&d.test) {
+            assert_eq!(e.tokens.len(), 32);
+            assert!(e.tokens.iter().all(|&t| (0..512).contains(&t)));
+            assert!((0..3).contains(&e.label));
+        }
+    }
+
+    #[test]
+    fn pair_tasks_have_separator() {
+        let s = GenSpec::new("rte", TaskShape::Pair, 2);
+        let d = Dataset::generate(&s, 512, 32, 4, 10, 10, 3);
+        for e in &d.train {
+            assert_eq!(e.tokens[16], SEP);
+        }
+    }
+
+    #[test]
+    fn class_markers_disjoint() {
+        for n in [2usize, 3, 5, 6, 8] {
+            let ranges: Vec<_> = (0..n as i32).map(|c| class_markers(c, n)).collect();
+            for (i, a) in ranges.iter().enumerate() {
+                assert!(a.0 < a.1);
+                for b in ranges.iter().skip(i + 1) {
+                    assert!(a.1 <= b.0 || b.1 <= a.0, "overlap {a:?} {b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signal_knob_reduces_markers() {
+        let hi = GenSpec::new("x", TaskShape::Single, 2).with_signal(1.0).with_markers(8);
+        let lo = GenSpec::new("x", TaskShape::Single, 2).with_signal(0.25).with_markers(8);
+        let count = |d: &Dataset| -> usize {
+            d.train
+                .iter()
+                .flat_map(|e| e.tokens.iter())
+                .filter(|&&t| (2..2 + MARKER_BAND as i32).contains(&t))
+                .count()
+        };
+        let dh = Dataset::generate(&hi, 512, 32, 16, 0, 0, 5);
+        let dl = Dataset::generate(&lo, 512, 32, 16, 0, 0, 5);
+        assert!(count(&dh) > 2 * count(&dl), "{} vs {}", count(&dh), count(&dl));
+    }
+
+    #[test]
+    fn majority_class_acc_near_uniform() {
+        let d = Dataset::generate(&spec(), 512, 32, 16, 10, 2000, 11);
+        let maj = d.majority_class_acc();
+        assert!(maj < 0.58, "maj {maj}");
+    }
+
+    #[test]
+    fn background_is_zipfish() {
+        // the most frequent background token should be much more common
+        // than the median one
+        let mut rng = Pcg64::new(1);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            *counts.entry(background_token(&mut rng, 512, 0)).or_insert(0usize) += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(freqs[0] > 5 * freqs[freqs.len() / 2]);
+    }
+}

@@ -1,0 +1,44 @@
+//! # HELENE — Hessian Layer-wise Clipping and Gradient Annealing
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of the EMNLP 2025 paper
+//! *"HELENE: Hessian Layer-wise Clipping and Gradient Annealing for
+//! Accelerating Fine-tuning LLM with Zeroth-order Optimization"*.
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: zeroth-order training runtime,
+//!   the HELENE optimizer and its baseline zoo, synthetic task suite,
+//!   evaluation, benches regenerating every paper table/figure.
+//! * **L2 (python/compile/model.py)** — JAX transformer models, AOT-lowered
+//!   to HLO text once at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (tiled attention,
+//!   fused HELENE update) lowered into the same HLO.
+//!
+//! Python never runs at training time; the PJRT CPU client executes the
+//! compiled artifacts from `artifacts/`.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use helene::runtime::{ModelRunner, Runtime};
+//! use helene::optim::{helene::Helene, Optimizer};
+//! use helene::train::{Trainer, TrainConfig};
+//!
+//! let rt = Runtime::load(&Runtime::default_dir()).unwrap();
+//! let mut runner = ModelRunner::new(&rt, "cls-small", "ft").unwrap();
+//! let data = helene::tasks::generate("sst2", 512, 32, 16, 0).unwrap();
+//! let cfg = TrainConfig { steps: 2000, ..Default::default() };
+//! let mut opt = Helene::paper_defaults();
+//! let report = Trainer::new(cfg).run(&mut runner, &data, &mut opt).unwrap();
+//! println!("dev acc {:?}", report.history.best_acc());
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod data;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tasks;
+pub mod toy;
+pub mod train;
+pub mod util;

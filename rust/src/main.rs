@@ -1,0 +1,340 @@
+//! `helene` — the launcher CLI.
+//!
+//! ```text
+//! helene train --model cls-small --variant ft --task sst2 --opt helene \
+//!              --steps 2000 [--lr 1e-3] [--set train.eval_every=100] \
+//!              [--config path.toml] [--out reports/run.csv]
+//! helene zero-shot --model cls-small --task sst2
+//! helene toy [--steps 2000] [--out reports/toy]
+//! helene list            # models, variants, tasks, optimizers
+//! helene info            # runtime / artifact diagnostics
+//! ```
+//!
+//! (Hand-rolled argument parsing: the vendored crate set has no clap.)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use helene::config::Config;
+use helene::optim;
+use helene::runtime::{ModelRunner, Runtime};
+use helene::tasks;
+use helene::toy;
+use helene::train::{zero_shot_metric, TrainConfig, Trainer};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` / `--flag` style args into a map.
+struct Args {
+    cmd: String,
+    opts: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut opts: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut key: Option<String> = None;
+        for a in it {
+            if let Some(k) = a.strip_prefix("--") {
+                if let Some(prev) = key.take() {
+                    opts.entry(prev).or_default().push("true".into());
+                }
+                key = Some(k.to_string());
+            } else if let Some(k) = key.take() {
+                opts.entry(k).or_default().push(a);
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        if let Some(prev) = key.take() {
+            opts.entry(prev).or_default().push("true".into());
+        }
+        Ok(Args { cmd, opts })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    fn all(&self, key: &str) -> Vec<&str> {
+        self.opts.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} {s:?} is not an integer")),
+        }
+    }
+
+    fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} {s:?} is not a number")),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} {s:?} is not an integer")),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "zero-shot" => cmd_zero_shot(&args),
+        "toy" => cmd_toy(&args),
+        "list" => cmd_list(),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `helene help`"),
+    }
+}
+
+const HELP: &str = "\
+helene — zeroth-order fine-tuning framework (HELENE reproduction)
+
+commands:
+  train      train a model on a synthetic task with any optimizer
+  zero-shot  evaluate the init parameters on a task
+  toy        run the 2-D heterogeneous-curvature demo (Figures 1-2)
+  list       list models, variants, tasks and optimizers
+  info       artifact / runtime diagnostics
+
+train options:
+  --model M      cls-tiny | cls-small | dec-small | lm-small (default cls-small)
+  --variant V    ft | lora | prefix (default ft)
+  --task T       sst2 | sst5 | snli | mnli | rte | trec | cb | boolq | wsc |
+                 wic | copa | record | squad (default sst2)
+  --opt O        helene | mezo | zo-sgd-mmt | zo-sgd-cons | zo-sgd-sign |
+                 zo-adam | zo-adamw | zo-lion | zo-sophia | zo-newton |
+                 fo-sgd | fo-adam | forward-grad (default helene)
+  --steps N      training steps (default 1000)
+  --lr F         learning rate (default per optimizer family)
+  --k N          few-shot examples per class (default 16)
+  --seed S       run seed (default 0)
+  --target F     early-stop dev metric target (speedup measurement)
+  --lp           linear probing (train head only, fo-adam)
+  --config PATH  TOML-lite config file (CLI flags win)
+
+sweep: grid-search lr on dev (paper protocol):
+  helene sweep --model M --task T --opt O --lrs 1e-4,3e-4,1e-3 --steps 600
+  --out PATH     write the step history CSV here
+";
+
+fn default_lr(opt: &str) -> f32 {
+    match opt {
+        "fo-sgd" | "fo-adam" => 1e-3,
+        "zo-sgd-sign" | "zo-lion" => 1e-4,
+        "helene" | "helene-fo" => 1e-3,
+        _ => 1e-3, // mezo-family
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg_file = Config::default();
+    if let Some(path) = args.get("config") {
+        cfg_file = Config::load(&PathBuf::from(path))?;
+    }
+    for set in args.all("set") {
+        cfg_file.set(set)?;
+    }
+
+    let model = args.str("model", &cfg_file.str("model", "cls-small"));
+    let variant = args.str("variant", &cfg_file.str("variant", "ft"));
+    let task_name = args.str("task", &cfg_file.str("task", "sst2"));
+    let opt_name = args.str("opt", &cfg_file.str("opt", "helene"));
+    let steps = args.usize("steps", cfg_file.usize("train.steps", 1000)?)?;
+    let lr = args.f32("lr", cfg_file.f32("train.lr", default_lr(&opt_name))?)?;
+    let k = args.usize("k", cfg_file.usize("train.k", 16)?)?;
+    let seed = args.u64("seed", cfg_file.u64("train.seed", 0)?)?;
+    let lp = args.get("lp").is_some();
+
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let runner = ModelRunner::new(&rt, &model, &variant)?;
+    let dims = runner.spec.dims.clone();
+    let task = tasks::task(&task_name)?;
+    let data = tasks::generate(&task_name, dims.vocab, dims.max_seq, k, seed)?;
+
+    let mut tc = TrainConfig {
+        steps,
+        seed,
+        metric: task.metric,
+        eval_every: args.usize("eval-every", cfg_file.usize("train.eval_every", 100)?)?,
+        ..Default::default()
+    };
+    if let Some(t) = args.get("target") {
+        tc.target_metric = Some(t.parse()?);
+    }
+    let mut opt: Box<dyn optim::Optimizer> = if lp {
+        tc.train_only_layers = Some(vec!["head".to_string()]);
+        optim::by_name("fo-adam", lr)?
+    } else if opt_name == "helene" {
+        // honour `--set helene.*` overrides
+        Box::new(optim::helene::from_config(&cfg_file, lr)?)
+    } else {
+        optim::by_name(&opt_name, lr)?
+    };
+
+    println!(
+        "train: {model}.{variant} task={task_name} opt={} lr={lr} steps={steps} k={k} seed={seed}",
+        opt.name()
+    );
+    let report = Trainer::new(tc).run(&runner, &data, opt.as_mut())?;
+    println!(
+        "done in {:.1}s: final loss {:.4}, dev {:.3}, test {:.3}{}",
+        report.wall_s,
+        report.history.final_loss().unwrap_or(f32::NAN),
+        report.final_dev_metric,
+        report.test_metric,
+        report
+            .steps_to_target
+            .map(|s| format!(", target reached at step {s}"))
+            .unwrap_or_default()
+    );
+    println!("timing:\n{}", report.timing.report());
+    if let Some(out) = args.get("out") {
+        report.history.write_csv(&PathBuf::from(out))?;
+        println!("history written to {out}");
+    }
+    Ok(())
+}
+
+/// The paper's hyper-parameter protocol: grid-search lr on dev, report the
+/// best. `helene sweep --model M --task T --opt O --lrs 1e-4,3e-4,1e-3`.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = args.str("model", "cls-small");
+    let variant = args.str("variant", "ft");
+    let task_name = args.str("task", "sst2");
+    let opt_name = args.str("opt", "helene");
+    let steps = args.usize("steps", 600)?;
+    let seed = args.u64("seed", 0)?;
+    let lrs: Vec<f32> = args
+        .str("lrs", "1e-4,3e-4,1e-3,3e-3")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| anyhow::anyhow!("bad lr {s:?}")))
+        .collect::<Result<_>>()?;
+
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let runner = ModelRunner::new(&rt, &model, &variant)?;
+    let dims = runner.spec.dims.clone();
+    let task = tasks::task(&task_name)?;
+    let data = tasks::generate(&task_name, dims.vocab, dims.max_seq, 16, seed)?;
+
+    println!("sweep {opt_name} on {model}.{variant}/{task_name} ({steps} steps):");
+    let mut best: Option<(f32, f32, f32)> = None; // (lr, dev, test)
+    for lr in lrs {
+        let tc = TrainConfig {
+            steps,
+            seed,
+            metric: task.metric,
+            eval_every: (steps / 6).max(25),
+            ..Default::default()
+        };
+        let mut opt = optim::by_name(&opt_name, lr)?;
+        let r = Trainer::new(tc).run(&runner, &data, opt.as_mut())?;
+        println!(
+            "  lr {lr:>8.0e}: dev {:.3}  test {:.3}  final-loss {:.3}",
+            r.final_dev_metric,
+            r.test_metric,
+            r.history.smoothed_loss(steps / 10).unwrap_or(f32::NAN)
+        );
+        if best.map_or(true, |(_, d, _)| r.final_dev_metric > d) {
+            best = Some((lr, r.final_dev_metric, r.test_metric));
+        }
+    }
+    if let Some((lr, dev, test)) = best {
+        println!("best by dev: lr {lr:.0e} (dev {dev:.3}, test {test:.3})");
+    }
+    Ok(())
+}
+
+fn cmd_zero_shot(args: &Args) -> Result<()> {
+    let model = args.str("model", "cls-small");
+    let variant = args.str("variant", "ft");
+    let task_name = args.str("task", "sst2");
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let runner = ModelRunner::new(&rt, &model, &variant)?;
+    let dims = runner.spec.dims.clone();
+    let task = tasks::task(&task_name)?;
+    let data = tasks::generate(&task_name, dims.vocab, dims.max_seq, 16, args.u64("seed", 0)?)?;
+    let m = zero_shot_metric(&runner, &data, task.metric)?;
+    println!("zero-shot {model}.{variant} on {task_name}: {m:.3}");
+    Ok(())
+}
+
+fn cmd_toy(args: &Args) -> Result<()> {
+    let steps = args.usize("steps", 2000)?;
+    let cfg = toy::ToyConfig { steps, ..Default::default() };
+    let problem = toy::Toy2d::default();
+    let out_dir = PathBuf::from(args.str("out", "reports/toy"));
+    std::fs::create_dir_all(&out_dir)?;
+    println!("toy 2-D problem: L(x,y) = (x²−1)² + 25y², start {:?}", cfg.start);
+    for t in toy::run_all(problem, &cfg) {
+        let end = t.points.last().unwrap();
+        println!(
+            "  {:<8} final loss {:>12.5}  end ({:+.3}, {:+.3})  dist-to-min {:.3}{}",
+            t.name,
+            t.final_loss(),
+            end[0],
+            end[1],
+            problem.dist_to_min(*end),
+            if t.diverged() { "  [DIVERGED]" } else { "" }
+        );
+        let mut csv = String::from("step,x,y,loss\n");
+        for (i, (p, l)) in t.points.iter().zip(&t.losses).enumerate() {
+            csv.push_str(&format!("{},{},{},{}\n", i, p[0], p[1], l));
+        }
+        std::fs::write(out_dir.join(format!("fig1_{}.csv", t.name)), csv)?;
+    }
+    println!("trajectories written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    println!("models/variants in artifacts:");
+    for (m, v) in rt.manifest.variants.keys() {
+        let spec = &rt.manifest.variants[&(m.clone(), v.clone())];
+        println!(
+            "  {m}.{v}: {} params, entrypoints [{}]",
+            spec.n_params,
+            spec.entrypoints.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+    }
+    println!("tasks: {}", tasks::ROBERTA_SUITE.iter().chain(tasks::OPT_SUITE).cloned().collect::<Vec<_>>().join(", "));
+    println!("optimizers: helene helene-fo mezo zo-sgd-mmt zo-sgd-cons zo-sgd-sign zo-adam zo-adamw zo-lion zo-sophia zo-newton fo-sgd fo-adam forward-grad");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = Runtime::default_dir();
+    println!("artifact dir: {}", dir.display());
+    let rt = Runtime::load(&dir)?;
+    println!("platform: {}", rt.client().platform_name());
+    println!("devices: {}", rt.client().device_count());
+    println!("models: {}", rt.manifest.variants.len());
+    println!("fused kernels: {:?}", rt.manifest.fused.iter().map(|f| f.n).collect::<Vec<_>>());
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Checkpointing: ParamSet (+ optional optimizer state) ↔ disk.
+//!
+//! Format: a small JSON header (model, variant, step, array count/sizes)
+//! followed by raw little-endian f32 payload — same byte convention as the
+//! artifact params.bin, so a checkpoint of the init params is byte-identical
+//! to the shipped file.
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::VariantSpec;
+use crate::model::params::ParamSet;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"HELENE1\n";
+
+/// Save parameters (and any extra named state sets, e.g. momentum/hessian).
+pub fn save(
+    path: &Path,
+    step: usize,
+    params: &ParamSet,
+    extra: &[(&str, &ParamSet)],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut header = std::collections::BTreeMap::new();
+    header.insert("model".to_string(), Json::Str(params.spec.model.clone()));
+    header.insert("variant".to_string(), Json::Str(params.spec.variant.clone()));
+    header.insert("step".to_string(), Json::Num(step as f64));
+    header.insert("n_params".to_string(), Json::Num(params.n_params() as f64));
+    header.insert(
+        "sets".to_string(),
+        Json::Arr(
+            std::iter::once(Json::Str("params".into()))
+                .chain(extra.iter().map(|(n, _)| Json::Str(n.to_string())))
+                .collect(),
+        ),
+    );
+    let header_text = Json::Obj(header).to_string();
+
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header_text.len() as u64).to_le_bytes())?;
+    f.write_all(header_text.as_bytes())?;
+    for set in std::iter::once(params).chain(extra.iter().map(|(_, s)| *s)) {
+        if set.n_params() != params.n_params() {
+            bail!("extra state set has mismatched layout");
+        }
+        for arr in &set.arrays {
+            // bulk little-endian write
+            let mut bytes = Vec::with_capacity(arr.len() * 4);
+            for &x in arr {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save`]. Returns (step, params, extras).
+pub fn load(
+    path: &Path,
+    spec: Arc<VariantSpec>,
+) -> Result<(usize, ParamSet, Vec<(String, ParamSet)>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a HELENE checkpoint", path.display());
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+
+    let model = header.req("model")?.as_str().unwrap_or_default();
+    let variant = header.req("variant")?.as_str().unwrap_or_default();
+    if model != spec.model || variant != spec.variant {
+        bail!(
+            "checkpoint is for {model}.{variant}, expected {}.{}",
+            spec.model, spec.variant
+        );
+    }
+    let n_params = header.req("n_params")?.as_usize().unwrap_or(0);
+    if n_params != spec.n_params {
+        bail!("checkpoint n_params {} != spec {}", n_params, spec.n_params);
+    }
+    let step = header.req("step")?.as_usize().unwrap_or(0);
+    let set_names: Vec<String> = header
+        .req("sets")?
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|x| x.as_str().map(str::to_string))
+        .collect();
+
+    let mut read_set = |spec: &Arc<VariantSpec>| -> Result<ParamSet> {
+        let mut arrays = Vec::with_capacity(spec.params.len());
+        for p in &spec.params {
+            let mut bytes = vec![0u8; 4 * p.size];
+            f.read_exact(&mut bytes)?;
+            let mut v = vec![0f32; p.size];
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                v[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            arrays.push(v);
+        }
+        let train_mask = spec.params.iter().map(|p| p.trainable).collect();
+        Ok(ParamSet { spec: spec.clone(), arrays, train_mask })
+    };
+
+    let params = read_set(&spec)?;
+    let mut extras = Vec::new();
+    for name in set_names.iter().skip(1) {
+        extras.push((name.clone(), read_set(&spec)?));
+    }
+    Ok((step, params, extras))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{ModelDims, ModelKind, ParamInfo};
+    use std::collections::BTreeMap;
+
+    fn toy() -> ParamSet {
+        let params = vec![
+            ParamInfo { name: "a".into(), shape: vec![3], layer: "l0".into(), trainable: true, offset: 0, size: 3 },
+            ParamInfo { name: "b".into(), shape: vec![2, 2], layer: "l1".into(), trainable: true, offset: 3, size: 4 },
+        ];
+        let spec = Arc::new(VariantSpec {
+            model: "toy".into(),
+            variant: "ft".into(),
+            kind: ModelKind::Cls,
+            dims: ModelDims { vocab: 1, d_model: 1, n_heads: 1, n_layers: 1, d_ff: 1, max_seq: 1, n_classes: 1, batch: 1, lora_rank: 1, prefix_len: 1 },
+            params_bin: "x".into(),
+            n_params: 7,
+            params,
+            entrypoints: BTreeMap::new(),
+        });
+        let train_mask = vec![true; 2];
+        ParamSet { spec, arrays: vec![vec![1.0, -2.0, 3.5], vec![0.0, 4.0, -5.0, 6.25]], train_mask }
+    }
+
+    #[test]
+    fn round_trip_with_extras() {
+        let p = toy();
+        let m = p.full_like(0.5);
+        let dir = std::env::temp_dir().join("helene_ckpt_test");
+        let path = dir.join("ckpt.bin");
+        save(&path, 123, &p, &[("momentum", &m)]).unwrap();
+        let (step, p2, extras) = load(&path, p.spec.clone()).unwrap();
+        assert_eq!(step, 123);
+        assert_eq!(p2.arrays, p.arrays);
+        assert_eq!(extras.len(), 1);
+        assert_eq!(extras[0].0, "momentum");
+        assert_eq!(extras[0].1.arrays, m.arrays);
+    }
+
+    #[test]
+    fn rejects_wrong_spec() {
+        let p = toy();
+        let dir = std::env::temp_dir().join("helene_ckpt_test2");
+        let path = dir.join("ckpt.bin");
+        save(&path, 1, &p, &[]).unwrap();
+        let mut other = (*p.spec).clone();
+        other.model = "different".into();
+        assert!(load(&path, Arc::new(other)).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("helene_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path, toy().spec.clone()).is_err());
+    }
+}

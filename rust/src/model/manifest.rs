@@ -1,0 +1,322 @@
+//! Artifact manifest loader — the contract with `python/compile/aot.py`.
+//!
+//! `artifacts/manifest.json` describes every compiled model: its config,
+//! the ordered parameter layout per tuning variant (name / shape / layer
+//! group / trainable flag / flat offset), and the entrypoint → HLO-file map.
+//! This module parses it into typed structs using the repo JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model kind, mirroring python `ModelConfig.kind`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Cls,
+    Dec,
+    Lm,
+}
+
+impl ModelKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cls" => ModelKind::Cls,
+            "dec" => ModelKind::Dec,
+            "lm" => ModelKind::Lm,
+            other => bail!("unknown model kind {other:?}"),
+        })
+    }
+
+    /// Classification-style entrypoints take a labels input.
+    pub fn has_labels(self) -> bool {
+        !matches!(self, ModelKind::Lm)
+    }
+}
+
+/// Static dims of a compiled model.
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_classes: usize,
+    pub batch: usize,
+    pub lora_rank: usize,
+    pub prefix_len: usize,
+}
+
+/// One named parameter array (manifest order = execution order).
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub layer: String,
+    pub trainable: bool,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One compiled entrypoint.
+#[derive(Clone, Debug)]
+pub struct EntrypointInfo {
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// One (model, variant) compilation unit.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub model: String,
+    pub variant: String,
+    pub kind: ModelKind,
+    pub dims: ModelDims,
+    pub params_bin: String,
+    pub n_params: usize,
+    pub params: Vec<ParamInfo>,
+    pub entrypoints: BTreeMap<String, EntrypointInfo>,
+}
+
+impl VariantSpec {
+    pub fn entrypoint(&self, name: &str) -> Result<&EntrypointInfo> {
+        self.entrypoints
+            .get(name)
+            .ok_or_else(|| anyhow!("{}.{}: no entrypoint {name:?}", self.model, self.variant))
+    }
+
+    /// Indices of trainable parameter arrays.
+    pub fn trainable_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.trainable)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Ordered layer groups with their member param indices — the unit of
+    /// the paper's layer-wise clipping (λ_i per group).
+    pub fn layer_groups(&self) -> Vec<(String, Vec<usize>)> {
+        let mut order: Vec<String> = Vec::new();
+        let mut members: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, p) in self.params.iter().enumerate() {
+            if !members.contains_key(&p.layer) {
+                order.push(p.layer.clone());
+            }
+            members.entry(p.layer.clone()).or_default().push(i);
+        }
+        order.into_iter().map(|k| {
+            let v = members.remove(&k).unwrap();
+            (k, v)
+        }).collect()
+    }
+}
+
+/// A fused optimizer kernel artifact (L1 ablation path).
+#[derive(Clone, Debug)]
+pub struct FusedKernelInfo {
+    pub n: usize,
+    pub update_file: String,
+    pub ema_file: String,
+}
+
+/// The whole artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<(String, String), VariantSpec>,
+    pub fused: Vec<FusedKernelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let format = root.req("format")?.as_usize().unwrap_or(0);
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+
+        let mut variants = BTreeMap::new();
+        for m in root.req("models")?.as_arr().unwrap_or(&[]) {
+            let name = m.req("name")?.as_str().unwrap_or_default().to_string();
+            let kind = ModelKind::parse(m.req("kind")?.as_str().unwrap_or_default())?;
+            let c = m.req("config")?;
+            let dim = |k: &str| -> Result<usize> {
+                c.req(k)?.as_usize().ok_or_else(|| anyhow!("config.{k} not a number"))
+            };
+            let dims = ModelDims {
+                vocab: dim("vocab")?,
+                d_model: dim("d_model")?,
+                n_heads: dim("n_heads")?,
+                n_layers: dim("n_layers")?,
+                d_ff: dim("d_ff")?,
+                max_seq: dim("max_seq")?,
+                n_classes: dim("n_classes")?,
+                batch: dim("batch")?,
+                lora_rank: dim("lora_rank")?,
+                prefix_len: dim("prefix_len")?,
+            };
+            for (vname, v) in m.req("variants")?.as_obj().into_iter().flatten() {
+                let mut params = Vec::new();
+                for p in v.req("params")?.as_arr().unwrap_or(&[]) {
+                    params.push(ParamInfo {
+                        name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                        shape: p
+                            .req("shape")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(|x| x.as_usize().unwrap_or(0))
+                            .collect(),
+                        layer: p.req("layer")?.as_str().unwrap_or_default().to_string(),
+                        trainable: p.req("trainable")?.as_bool().unwrap_or(false),
+                        offset: p.req("offset")?.as_usize().unwrap_or(0),
+                        size: p.req("size")?.as_usize().unwrap_or(0),
+                    });
+                }
+                let mut entrypoints = BTreeMap::new();
+                for (ename, e) in v.req("entrypoints")?.as_obj().into_iter().flatten() {
+                    let strs = |key: &str| -> Vec<String> {
+                        e.get(key)
+                            .and_then(|x| x.as_arr())
+                            .map(|a| {
+                                a.iter()
+                                    .filter_map(|x| x.as_str().map(str::to_string))
+                                    .collect()
+                            })
+                            .unwrap_or_default()
+                    };
+                    entrypoints.insert(
+                        ename.clone(),
+                        EntrypointInfo {
+                            file: e.req("file")?.as_str().unwrap_or_default().to_string(),
+                            inputs: strs("inputs"),
+                            outputs: strs("outputs"),
+                        },
+                    );
+                }
+                let spec = VariantSpec {
+                    model: name.clone(),
+                    variant: vname.clone(),
+                    kind,
+                    dims: dims.clone(),
+                    params_bin: v.req("params_bin")?.as_str().unwrap_or_default().to_string(),
+                    n_params: v.req("n_params")?.as_usize().unwrap_or(0),
+                    params,
+                    entrypoints,
+                };
+                validate(&spec)?;
+                variants.insert((name.clone(), vname.clone()), spec);
+            }
+        }
+
+        let mut fused = Vec::new();
+        for f in root.req("fused_kernels")?.as_arr().unwrap_or(&[]) {
+            fused.push(FusedKernelInfo {
+                n: f.req("n")?.as_usize().unwrap_or(0),
+                update_file: f.req("update_file")?.as_str().unwrap_or_default().to_string(),
+                ema_file: f.req("ema_file")?.as_str().unwrap_or_default().to_string(),
+            });
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), variants, fused })
+    }
+
+    pub fn variant(&self, model: &str, variant: &str) -> Result<&VariantSpec> {
+        self.variants
+            .get(&(model.to_string(), variant.to_string()))
+            .ok_or_else(|| anyhow!("manifest has no {model}.{variant} (models present: {:?})",
+                self.variants.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.variants.keys().map(|(m, _)| m.as_str()).collect();
+        names.dedup();
+        names
+    }
+}
+
+/// Structural invariants the Rust side relies on.
+fn validate(spec: &VariantSpec) -> Result<()> {
+    let mut offset = 0usize;
+    for p in &spec.params {
+        if p.offset != offset {
+            bail!("{}.{}: param {} offset {} != expected {}",
+                spec.model, spec.variant, p.name, p.offset, offset);
+        }
+        let prod: usize = p.shape.iter().product();
+        if prod != p.size {
+            bail!("{}.{}: param {} size mismatch", spec.model, spec.variant, p.name);
+        }
+        offset += p.size;
+    }
+    if offset != spec.n_params {
+        bail!("{}.{}: n_params {} != sum of sizes {}",
+            spec.model, spec.variant, spec.n_params, offset);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn toy_spec() -> VariantSpec {
+        VariantSpec {
+            model: "toy".into(),
+            variant: "ft".into(),
+            kind: ModelKind::Cls,
+            dims: ModelDims {
+                vocab: 16, d_model: 4, n_heads: 1, n_layers: 1, d_ff: 8,
+                max_seq: 4, n_classes: 2, batch: 2, lora_rank: 2, prefix_len: 2,
+            },
+            params_bin: "toy.bin".into(),
+            n_params: 12,
+            params: vec![
+                ParamInfo { name: "embed.tok".into(), shape: vec![2, 2], layer: "embed".into(), trainable: true, offset: 0, size: 4 },
+                ParamInfo { name: "block0.attn.wq".into(), shape: vec![2, 2], layer: "block0.attn".into(), trainable: true, offset: 4, size: 4 },
+                ParamInfo { name: "head.w".into(), shape: vec![4], layer: "head".into(), trainable: true, offset: 8, size: 4 },
+            ],
+            entrypoints: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn layer_groups_ordered_and_complete() {
+        let spec = toy_spec();
+        let groups = spec.layer_groups();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].0, "embed");
+        assert_eq!(groups[1].0, "block0.attn");
+        assert_eq!(groups[2].0, "head");
+        let total: usize = groups.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, spec.params.len());
+    }
+
+    #[test]
+    fn validate_catches_offset_gap() {
+        let mut spec = toy_spec();
+        spec.params[1].offset = 5;
+        assert!(validate(&spec).is_err());
+        let spec2 = toy_spec();
+        assert!(validate(&spec2).is_ok());
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(ModelKind::parse("cls").unwrap(), ModelKind::Cls);
+        assert_eq!(ModelKind::parse("lm").unwrap(), ModelKind::Lm);
+        assert!(ModelKind::parse("gru").is_err());
+        assert!(ModelKind::Cls.has_labels());
+        assert!(!ModelKind::Lm.has_labels());
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-side substrates: manifest contract, parameter store, checkpoints.
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{Manifest, ModelKind, VariantSpec};
+pub use params::ParamSet;

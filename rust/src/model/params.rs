@@ -1,0 +1,402 @@
+//! `ParamSet`: the layer-granular host-side parameter store.
+//!
+//! Parameters live in Rust (one `Vec<f32>` per named array, manifest order);
+//! the PJRT executables are pure functions of them. The ZO machinery
+//! perturbs/restores these buffers in place with seeded noise, and the
+//! optimizers update them — Python is never involved.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::VariantSpec;
+use crate::util::rng::Pcg64;
+
+/// Stream id of the perturbation RNG. Everything that regenerates the same
+/// `z` (perturb, visit_z, the optimizers' in-place updates) derives its
+/// stream as `Pcg64::new_stream(seed, Z_STREAM)` so the draws agree.
+pub const Z_STREAM: u64 = 0x5EED;
+
+/// Host-side parameters for one (model, variant).
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub spec: Arc<VariantSpec>,
+    pub arrays: Vec<Vec<f32>>,
+    /// Effective trainable mask. Starts as the manifest's per-variant flags;
+    /// protocols like linear probing narrow it further at runtime
+    /// (`restrict_to_layers`).
+    pub train_mask: Vec<bool>,
+}
+
+impl ParamSet {
+    fn from_arrays(spec: Arc<VariantSpec>, arrays: Vec<Vec<f32>>) -> ParamSet {
+        let train_mask = spec.params.iter().map(|p| p.trainable).collect();
+        ParamSet { spec, arrays, train_mask }
+    }
+
+    /// Load the shipped initial parameters (`<model>.<variant>.params.bin`).
+    pub fn load_init(spec: Arc<VariantSpec>, artifacts_dir: &Path) -> Result<ParamSet> {
+        let path = artifacts_dir.join(&spec.params_bin);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != 4 * spec.n_params {
+            bail!("{}: expected {} bytes, got {}", path.display(), 4 * spec.n_params, bytes.len());
+        }
+        let mut arrays = Vec::with_capacity(spec.params.len());
+        for p in &spec.params {
+            let start = 4 * p.offset;
+            let end = start + 4 * p.size;
+            let mut v = vec![0f32; p.size];
+            for (i, chunk) in bytes[start..end].chunks_exact(4).enumerate() {
+                v[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            arrays.push(v);
+        }
+        Ok(ParamSet::from_arrays(spec, arrays))
+    }
+
+    /// An all-zeros set with the same layout (optimizer state buffers).
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            spec: self.spec.clone(),
+            arrays: self.arrays.iter().map(|a| vec![0f32; a.len()]).collect(),
+            train_mask: self.train_mask.clone(),
+        }
+    }
+
+    /// A constant-filled set with the same layout.
+    pub fn full_like(&self, value: f32) -> ParamSet {
+        ParamSet {
+            spec: self.spec.clone(),
+            arrays: self.arrays.iter().map(|a| vec![value; a.len()]).collect(),
+            train_mask: self.train_mask.clone(),
+        }
+    }
+
+    /// Narrow the trainable set to the given layer groups (linear probing
+    /// trains `["head"]` only). Layers absent from the manifest are an error.
+    pub fn restrict_to_layers(&mut self, layers: &[&str]) -> Result<()> {
+        let known: std::collections::BTreeSet<&str> =
+            self.spec.params.iter().map(|p| p.layer.as_str()).collect();
+        for l in layers {
+            if !known.contains(l) {
+                bail!("unknown layer group {l:?} (have {known:?})");
+            }
+        }
+        for (i, p) in self.spec.params.iter().enumerate() {
+            self.train_mask[i] =
+                self.train_mask[i] && layers.iter().any(|l| *l == p.layer);
+        }
+        Ok(())
+    }
+
+    pub fn is_trainable(&self, idx: usize) -> bool {
+        self.train_mask[idx]
+    }
+
+    pub fn n_arrays(&self) -> usize {
+        self.arrays.len()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.spec.n_params
+    }
+
+    /// Total trainable scalar count (under the effective mask).
+    pub fn n_trainable(&self) -> usize {
+        self.spec
+            .params
+            .iter()
+            .zip(&self.train_mask)
+            .filter(|(_, &m)| m)
+            .map(|(p, _)| p.size)
+            .sum()
+    }
+
+    /// Bytes of host state this set holds (memory-accounting tests; the
+    /// paper's §C.1 footprint table builds on this).
+    pub fn state_bytes(&self) -> usize {
+        self.arrays.iter().map(|a| 4 * a.len()).sum()
+    }
+
+    /// In-place AXPY over *trainable* arrays with seeded normal noise:
+    /// `theta += scale * z(seed)`. This is MeZO's perturbation primitive:
+    /// `z` is regenerated from the seed, never stored. The ±ε / −2ε / +ε
+    /// perturb-evaluate-restore cycle re-adds the identical `scale * z`
+    /// values, so the restore drift is bounded by a few f32 ulps per
+    /// element per step (the same guarantee the MeZO reference
+    /// implementation provides) — property-tested in `rust/tests/`.
+    pub fn perturb_trainable(&mut self, seed: u64, scale: f32) {
+        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
+        for (i, arr) in self.arrays.iter_mut().enumerate() {
+            if !self.train_mask[i] {
+                continue;
+            }
+            perturb_slice(arr, &mut rng, scale);
+        }
+    }
+
+    /// Regenerate the same `z` stream used by `perturb_trainable` into a
+    /// visitor: `f(array_index, elementwise z-chunk)`. The chunk buffer is
+    /// reused across calls.
+    pub fn visit_z(&self, seed: u64, mut f: impl FnMut(usize, &[f32])) {
+        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
+        let mut buf: Vec<f32> = Vec::new();
+        for (i, arr) in self.arrays.iter().enumerate() {
+            if !self.train_mask[i] {
+                continue;
+            }
+            buf.resize(arr.len(), 0.0);
+            rng.fill_normal(&mut buf);
+            f(i, &buf);
+        }
+    }
+
+    /// Squared L2 norm per layer group (diagnostics + tests).
+    pub fn layer_sq_norms(&self) -> Vec<(String, f64)> {
+        self.spec
+            .layer_groups()
+            .into_iter()
+            .map(|(name, idxs)| {
+                let sq: f64 = idxs
+                    .iter()
+                    .flat_map(|&i| self.arrays[i].iter())
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum();
+                (name, sq)
+            })
+            .collect()
+    }
+
+    /// Flat dot product with another set over trainable arrays.
+    pub fn trainable_dot(&self, other: &ParamSet) -> f64 {
+        let mut acc = 0f64;
+        for (i, _p) in self.spec.params.iter().enumerate() {
+            if !self.train_mask[i] {
+                continue;
+            }
+            acc += self.arrays[i]
+                .iter()
+                .zip(&other.arrays[i])
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum::<f64>();
+        }
+        acc
+    }
+
+    /// Max |a - b| across all arrays (test helper).
+    pub fn max_abs_diff(&self, other: &ParamSet) -> f32 {
+        self.arrays
+            .iter()
+            .zip(&other.arrays)
+            .flat_map(|(a, b)| a.iter().zip(b).map(|(&x, &y)| (x - y).abs()))
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Per-step z scratch for the SPSA probe cycle (§Perf optimization).
+///
+/// The MeZO protocol touches `z` four times per step (+ε, −2ε, +ε probes
+/// plus the optimizer's regeneration). Regeneration keeps memory at the
+/// inference level but costs an RNG pass each time; `ZCache` trades one
+/// trainable-sized buffer for reusing the draws across the three probe
+/// passes (the optimizer still regenerates, keeping its state-free API).
+/// `TrainConfig::cache_z` controls the trade.
+#[derive(Clone, Debug, Default)]
+pub struct ZCache {
+    /// one entry per parameter array (empty for frozen arrays)
+    arrays: Vec<Vec<f32>>,
+}
+
+impl ZCache {
+    /// The cached z draws for array `i` (None if frozen or not yet filled).
+    pub fn z(&self, i: usize) -> Option<&[f32]> {
+        self.arrays.get(i).filter(|v| !v.is_empty()).map(|v| v.as_slice())
+    }
+
+    pub fn is_filled(&self) -> bool {
+        self.arrays.iter().any(|v| !v.is_empty())
+    }
+}
+
+impl ParamSet {
+    /// `theta += scale * z(seed)`, storing the generated z into `cache`.
+    pub fn perturb_fill_cache(&mut self, cache: &mut ZCache, seed: u64, scale: f32) {
+        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
+        cache.arrays.resize(self.arrays.len(), Vec::new());
+        for (i, arr) in self.arrays.iter_mut().enumerate() {
+            let z = &mut cache.arrays[i];
+            if !self.train_mask[i] {
+                z.clear();
+                continue;
+            }
+            z.resize(arr.len(), 0.0);
+            rng.fill_normal(z);
+            for (x, zv) in arr.iter_mut().zip(z.iter()) {
+                *x += scale * zv;
+            }
+        }
+    }
+
+    /// `theta += scale * z` using the cached draws (identical values to a
+    /// regeneration from the same seed — verified by tests).
+    pub fn perturb_from_cache(&mut self, cache: &ZCache, scale: f32) {
+        for (i, arr) in self.arrays.iter_mut().enumerate() {
+            if !self.train_mask[i] {
+                continue;
+            }
+            let z = &cache.arrays[i];
+            debug_assert_eq!(z.len(), arr.len(), "cache layout mismatch");
+            for (x, zv) in arr.iter_mut().zip(z.iter()) {
+                *x += scale * zv;
+            }
+        }
+    }
+}
+
+/// The inner perturbation loop, exposed for the perf bench.
+#[inline]
+pub fn perturb_slice(arr: &mut [f32], rng: &mut Pcg64, scale: f32) {
+    // draw in chunks so fill_normal's pairwise stream is used verbatim
+    let mut buf = [0f32; 256];
+    let mut rest = arr;
+    while !rest.is_empty() {
+        let n = rest.len().min(256);
+        let (head, tail) = rest.split_at_mut(n);
+        rng.fill_normal(&mut buf[..n]);
+        for (x, z) in head.iter_mut().zip(&buf[..n]) {
+            *x += scale * z;
+        }
+        rest = tail;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{ModelDims, ModelKind, ParamInfo, VariantSpec};
+    use std::collections::BTreeMap;
+
+    fn spec(trainable_mask: &[bool]) -> Arc<VariantSpec> {
+        let sizes = [6usize, 4, 10];
+        let mut params = Vec::new();
+        let mut offset = 0;
+        for (i, (&size, &tr)) in sizes.iter().zip(trainable_mask).enumerate() {
+            params.push(ParamInfo {
+                name: format!("p{i}"),
+                shape: vec![size],
+                layer: format!("layer{}", i / 2),
+                trainable: tr,
+                offset,
+                size,
+            });
+            offset += size;
+        }
+        Arc::new(VariantSpec {
+            model: "toy".into(),
+            variant: "ft".into(),
+            kind: ModelKind::Cls,
+            dims: ModelDims {
+                vocab: 4, d_model: 2, n_heads: 1, n_layers: 1, d_ff: 2,
+                max_seq: 2, n_classes: 2, batch: 1, lora_rank: 1, prefix_len: 1,
+            },
+            params_bin: "toy.bin".into(),
+            n_params: offset,
+            params,
+            entrypoints: BTreeMap::new(),
+        })
+    }
+
+    fn pset(mask: &[bool]) -> ParamSet {
+        let spec = spec(mask);
+        let arrays = spec.params.iter().map(|p| vec![1.0f32; p.size]).collect();
+        let train_mask = spec.params.iter().map(|p| p.trainable).collect();
+        ParamSet { spec, arrays, train_mask }
+    }
+
+    #[test]
+    fn perturb_then_inverse_restores_to_ulp() {
+        // +εz then −εz re-adds the identical s*z values; drift is bounded by
+        // one rounding of the intermediate sum (≈ ulp(x) per element).
+        let mut p = pset(&[true, true, true]);
+        let orig = p.clone();
+        p.perturb_trainable(42, 1e-3);
+        assert!(p.max_abs_diff(&orig) > 0.0);
+        p.perturb_trainable(42, -1e-3);
+        assert!(p.max_abs_diff(&orig) <= 2.0 * f32::EPSILON, "drift {}", p.max_abs_diff(&orig));
+    }
+
+    #[test]
+    fn restrict_to_layers_narrows_mask() {
+        let mut p = pset(&[true, true, true]);
+        assert_eq!(p.n_trainable(), 20);
+        p.restrict_to_layers(&["layer1"]).unwrap();
+        assert_eq!(p.n_trainable(), 10); // only p2 (size 10) is in layer1
+        let orig = p.clone();
+        p.perturb_trainable(3, 0.1);
+        assert_eq!(p.arrays[0], orig.arrays[0]);
+        assert_eq!(p.arrays[1], orig.arrays[1]);
+        assert_ne!(p.arrays[2], orig.arrays[2]);
+        assert!(p.restrict_to_layers(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn frozen_arrays_untouched() {
+        let mut p = pset(&[false, true, false]);
+        let orig = p.clone();
+        p.perturb_trainable(7, 0.5);
+        assert_eq!(p.arrays[0], orig.arrays[0]);
+        assert_ne!(p.arrays[1], orig.arrays[1]);
+        assert_eq!(p.arrays[2], orig.arrays[2]);
+        assert_eq!(p.n_trainable(), 4);
+    }
+
+    #[test]
+    fn visit_z_matches_perturbation() {
+        let mut p = pset(&[true, false, true]);
+        let orig = p.clone();
+        let scale = 0.25f32;
+        p.perturb_trainable(9, scale);
+        let mut seen = Vec::new();
+        orig.visit_z(9, |i, z| seen.push((i, z.to_vec())));
+        assert_eq!(seen.len(), 2);
+        for (i, z) in &seen {
+            for (j, zv) in z.iter().enumerate() {
+                let expect = orig.arrays[*i][j] + scale * zv;
+                assert_eq!(p.arrays[*i][j], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_and_full_like() {
+        let p = pset(&[true, true, true]);
+        let z = p.zeros_like();
+        assert!(z.arrays.iter().all(|a| a.iter().all(|&x| x == 0.0)));
+        let f = p.full_like(3.5);
+        assert!(f.arrays.iter().all(|a| a.iter().all(|&x| x == 3.5)));
+        assert_eq!(z.state_bytes(), p.state_bytes());
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let p = pset(&[true, true, false]);
+        let q = p.full_like(2.0);
+        // trainable arrays: sizes 6 + 4 = 10 elements of 1*2
+        assert_eq!(p.trainable_dot(&q), 20.0);
+        let norms = p.layer_sq_norms();
+        assert_eq!(norms.len(), 2);
+        assert_eq!(norms[0], ("layer0".to_string(), 10.0));
+        assert_eq!(norms[1], ("layer1".to_string(), 10.0));
+    }
+
+    #[test]
+    fn different_seeds_different_noise() {
+        let mut a = pset(&[true, true, true]);
+        let mut b = pset(&[true, true, true]);
+        a.perturb_trainable(1, 0.1);
+        b.perturb_trainable(2, 0.1);
+        assert!(a.max_abs_diff(&b) > 0.0);
+    }
+}

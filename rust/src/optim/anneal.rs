@@ -1,0 +1,69 @@
+//! The gradient-annealing schedule (paper §3.3.1, Algorithm 1 Subroutine).
+//!
+//! `α(t) = β₁ + (1 − β₁) · exp(−t / T)`
+//!
+//! α is the weight of the *current* gradient in the biased momentum
+//! accumulator `m_t = β₁ m_{t−1} + α g_t`. Early in training α ≈ 1 (strong,
+//! deliberately biased injection of fresh gradient — fast progress); as
+//! t → ∞, α → β₁, so the accumulator tends to the standard discounted form
+//! and the EMA bias the paper's Figure 5 ablation identifies is annealed
+//! away.
+
+/// Annealing schedule, single hyper-parameter `t_anneal` (the paper's T).
+#[derive(Clone, Copy, Debug)]
+pub struct Anneal {
+    pub beta1: f32,
+    pub t_anneal: f32,
+}
+
+impl Anneal {
+    pub fn new(beta1: f32, t_anneal: f32) -> Self {
+        assert!((0.0..1.0).contains(&beta1), "beta1 in [0,1)");
+        assert!(t_anneal > 0.0);
+        Self { beta1, t_anneal }
+    }
+
+    /// α at step t (Equation 1).
+    pub fn alpha(&self, t: usize) -> f32 {
+        self.beta1 + (1.0 - self.beta1) * (-(t as f32) / self.t_anneal).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_one_decays_to_beta1() {
+        let a = Anneal::new(0.9, 1000.0);
+        assert!((a.alpha(0) - 1.0).abs() < 1e-6);
+        assert!(a.alpha(10_000_000) - 0.9 < 1e-6);
+        assert!(a.alpha(10_000_000) >= 0.9);
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        let a = Anneal::new(0.5, 100.0);
+        let mut prev = f32::INFINITY;
+        for t in 0..1000 {
+            let x = a.alpha(t);
+            assert!(x <= prev);
+            prev = x;
+        }
+    }
+
+    #[test]
+    fn half_life_at_t() {
+        // at t = T the excess over beta1 has decayed by e
+        let a = Anneal::new(0.8, 500.0);
+        let excess0 = a.alpha(0) - 0.8;
+        let excess_t = a.alpha(500) - 0.8;
+        assert!((excess_t / excess0 - (-1.0f32).exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_beta() {
+        Anneal::new(1.5, 100.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Layer-wise Hessian clipping policies (paper §3.5, Theorem 1).
+//!
+//! HELENE clips the *Hessian diagonal*, not the Newton update: the
+//! preconditioner denominator is `γ · max(h_i, λ_i) + ε`, with a
+//! threshold λ_i chosen per layer. Policies:
+//!
+//! * `Constant(λ)` — one magnitude threshold everywhere (the paper's §B.2
+//!   ablation sweeps this in {0.9, 1, 2, 3}).
+//! * `LayerScaled { r }` — the theory-guided setting of Theorem 1:
+//!   `λ_i = R_i / (2 √d_i)` with a shared radius R, so wide layers get a
+//!   smaller floor (finer-grained curvature trust) and narrow layers a
+//!   larger one. This is what reduces the convergence bound from O(d) to
+//!   O(max_i d_i).
+//! * `PerLayer(vec)` — explicit thresholds, one per layer group.
+
+use anyhow::{bail, Result};
+
+/// Per-layer clipping threshold policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClipPolicy {
+    Constant(f32),
+    LayerScaled { r: f32 },
+    PerLayer(Vec<f32>),
+}
+
+impl ClipPolicy {
+    /// Resolve λ for every layer group, given each group's dimension d_i.
+    pub fn lambdas(&self, group_dims: &[usize]) -> Result<Vec<f32>> {
+        match self {
+            ClipPolicy::Constant(l) => {
+                if *l <= 0.0 {
+                    bail!("clip threshold must be positive, got {l}");
+                }
+                Ok(vec![*l; group_dims.len()])
+            }
+            ClipPolicy::LayerScaled { r } => {
+                if *r <= 0.0 {
+                    bail!("radius must be positive, got {r}");
+                }
+                Ok(group_dims
+                    .iter()
+                    .map(|&d| r / (2.0 * (d.max(1) as f32).sqrt()))
+                    .collect())
+            }
+            ClipPolicy::PerLayer(v) => {
+                if v.len() != group_dims.len() {
+                    bail!("PerLayer has {} thresholds for {} groups", v.len(), group_dims.len());
+                }
+                if v.iter().any(|&l| l <= 0.0) {
+                    bail!("all thresholds must be positive");
+                }
+                Ok(v.clone())
+            }
+        }
+    }
+}
+
+impl Default for ClipPolicy {
+    /// The paper's robust default: constant magnitude clipping at 1.0
+    /// (§B.2: "problematic Hessian values are concentrated below 1").
+    fn default() -> Self {
+        ClipPolicy::Constant(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_broadcasts() {
+        let l = ClipPolicy::Constant(2.0).lambdas(&[10, 20, 30]).unwrap();
+        assert_eq!(l, vec![2.0, 2.0, 2.0]);
+        assert!(ClipPolicy::Constant(0.0).lambdas(&[1]).is_err());
+    }
+
+    #[test]
+    fn layer_scaled_matches_theorem() {
+        let dims = [4usize, 64, 1024];
+        let l = ClipPolicy::LayerScaled { r: 1.0 }.lambdas(&dims).unwrap();
+        for (i, &d) in dims.iter().enumerate() {
+            let expect = 1.0 / (2.0 * (d as f32).sqrt());
+            assert!((l[i] - expect).abs() < 1e-7);
+        }
+        // wider layer → smaller threshold
+        assert!(l[0] > l[1] && l[1] > l[2]);
+    }
+
+    #[test]
+    fn per_layer_validated() {
+        assert!(ClipPolicy::PerLayer(vec![1.0, 2.0]).lambdas(&[3, 4]).is_ok());
+        assert!(ClipPolicy::PerLayer(vec![1.0]).lambdas(&[3, 4]).is_err());
+        assert!(ClipPolicy::PerLayer(vec![1.0, -1.0]).lambdas(&[3, 4]).is_err());
+    }
+
+    #[test]
+    fn default_is_paper_constant_one() {
+        assert_eq!(ClipPolicy::default(), ClipPolicy::Constant(1.0));
+    }
+}

@@ -1,0 +1,201 @@
+//! The optimizer zoo: HELENE plus every baseline the paper compares against.
+//!
+//! All zeroth-order optimizers share the MeZO step protocol driven by the
+//! trainer (`train/`): perturb +εz → L⁺ → perturb −2εz → L⁻ → restore →
+//! `step_zo(params, g_scale, seed)` where `g_scale = (L⁺ − L⁻) / 2ε` and
+//! `z` is regenerated from `seed` inside the optimizer via
+//! `ParamSet::visit_z`. First-order baselines receive the exact gradient
+//! from the compiled `loss_grad` entrypoint through `step_fo`.
+//!
+//! | paper name      | type                        | module        |
+//! |-----------------|-----------------------------|---------------|
+//! | HELENE          | [`helene::Helene`]          | `helene.rs`   |
+//! | MeZO / ZO-SGD   | [`zo_sgd::ZoSgd`]           | `zo_sgd.rs`   |
+//! | ZO-SGD-MMT      | [`zo_sgd::ZoSgdMomentum`]   | `zo_sgd.rs`   |
+//! | ZO-SGD-Cons     | [`zo_sgd::ZoSgdCons`]       | `zo_sgd.rs`   |
+//! | ZO-SGD-Sign     | [`zo_sgd::ZoSgdSign`]       | `zo_sgd.rs`   |
+//! | ZO-Adam/AdamW   | [`zo_adam::ZoAdam`]         | `zo_adam.rs`  |
+//! | ZO-Lion         | [`zo_adam::ZoLion`]         | `zo_adam.rs`  |
+//! | ZO-Sophia       | [`sophia::ZoSophia`]        | `sophia.rs`   |
+//! | diag-Newton(ZO) | [`newton::ZoNewton`]        | `newton.rs`   |
+//! | FO-SGD          | [`fo::FoSgd`]               | `fo.rs`       |
+//! | FO-Adam         | [`fo::FoAdam`]              | `fo.rs`       |
+//! | Forward-Grad    | [`zo_sgd::ZoSgd`] + JVP     | trainer mode  |
+
+pub mod anneal;
+pub mod clip;
+pub mod fo;
+pub mod helene;
+pub mod newton;
+pub mod sophia;
+pub mod spsa;
+pub mod zo_adam;
+pub mod zo_sgd;
+
+use anyhow::Result;
+
+use crate::model::params::ParamSet;
+
+/// How the trainer must feed an optimizer each step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// SPSA two-point estimate: `step_zo(g_scale, seed)`.
+    Zo,
+    /// Exact gradient from `loss_grad`: `step_fo(grads)`.
+    Fo,
+    /// JVP along a seeded tangent (Forward-Grad): `step_zo(jvp, seed)`.
+    ForwardGrad,
+}
+
+/// A training algorithm over a `ParamSet`.
+pub trait Optimizer {
+    fn name(&self) -> &'static str;
+
+    fn kind(&self) -> StepKind;
+
+    /// Allocate state buffers for the given parameter layout. Must be
+    /// called once before stepping.
+    fn init(&mut self, params: &ParamSet);
+
+    /// Tell the optimizer the mini-batch size B (the A-GNB estimators use
+    /// it; Algorithm 2 returns `B·ĝ⊙ĝ`). Called by the trainer before
+    /// `init`. Default: ignored.
+    fn configure_batch(&mut self, _batch_size: usize) {}
+
+    /// Zeroth-order step. `g_scale` is the SPSA projected-gradient scalar
+    /// (or the JVP value in ForwardGrad mode); `seed` regenerates `z`.
+    fn step_zo(&mut self, _params: &mut ParamSet, _g_scale: f32, _seed: u64) -> Result<()> {
+        anyhow::bail!("{} is not a zeroth-order optimizer", self.name())
+    }
+
+    /// Zeroth-order step with this step's z already materialised in `cache`
+    /// (§Perf: saves the regeneration pass). Default: fall back to seeded
+    /// regeneration — the cache holds exactly the draws `seed` would give.
+    fn step_zo_cached(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        _cache: &crate::model::params::ZCache,
+    ) -> Result<()> {
+        self.step_zo(params, g_scale, seed)
+    }
+
+    /// First-order step from exact gradients.
+    fn step_fo(&mut self, _params: &mut ParamSet, _grads: &ParamSet) -> Result<()> {
+        anyhow::bail!("{} is not a first-order optimizer", self.name())
+    }
+
+    /// Whether the trainer should evaluate the post-step loss and offer a
+    /// revert (ZO-SGD-Cons). Default: no.
+    fn wants_post_check(&self) -> bool {
+        false
+    }
+
+    /// Post-step hook with (loss_before, loss_after); may revert the update.
+    fn post_check(&mut self, _params: &mut ParamSet, _before: f32, _after: f32) -> Result<()> {
+        Ok(())
+    }
+
+    /// Bytes of optimizer state held (paper §C.1 memory accounting).
+    fn state_bytes(&self) -> usize;
+
+    fn lr(&self) -> f32;
+
+    fn set_lr(&mut self, lr: f32);
+}
+
+/// Construct any optimizer in the zoo by its paper name (bench/CLI entry).
+pub fn by_name(name: &str, lr: f32) -> Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "helene" => Box::new(helene::Helene::paper_defaults().with_lr(lr)),
+        "helene-fo" => Box::new(helene::Helene::paper_defaults().with_lr(lr).with_fo_hessian()),
+        "mezo" | "zo-sgd" => Box::new(zo_sgd::ZoSgd::new(lr)),
+        "zo-sgd-mmt" => Box::new(zo_sgd::ZoSgdMomentum::new(lr, 0.9)),
+        "zo-sgd-cons" => Box::new(zo_sgd::ZoSgdCons::new(lr)),
+        "zo-sgd-sign" => Box::new(zo_sgd::ZoSgdSign::new(lr)),
+        "zo-adam" => Box::new(zo_adam::ZoAdam::new(lr, false)),
+        "zo-adamw" => Box::new(zo_adam::ZoAdam::new(lr, true)),
+        "zo-lion" => Box::new(zo_adam::ZoLion::new(lr)),
+        "zo-sophia" => Box::new(sophia::ZoSophia::new(lr)),
+        "zo-newton" => Box::new(newton::ZoNewton::new(lr)),
+        "fo-sgd" => Box::new(fo::FoSgd::new(lr)),
+        "fo-adam" => Box::new(fo::FoAdam::new(lr)),
+        "forward-grad" => Box::new(zo_sgd::ZoSgd::new(lr).as_forward_grad()),
+        other => anyhow::bail!("unknown optimizer {other:?}"),
+    })
+}
+
+/// All ZO optimizer names (Table 3 grid).
+pub const ZO_ZOO: &[&str] = &[
+    "mezo", "zo-sgd-mmt", "zo-sgd-cons", "zo-sgd-sign", "zo-adam", "zo-adamw",
+    "zo-lion", "zo-sophia", "helene",
+];
+
+/// Shared test fixture: a ParamSet over toy layer groups.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::model::manifest::{ModelDims, ModelKind, ParamInfo, VariantSpec};
+    use crate::model::params::ParamSet;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    /// One single-array layer group per entry of `sizes`, all values 0.5.
+    pub fn toy_params(sizes: &[usize]) -> ParamSet {
+        let mut params = Vec::new();
+        let mut offset = 0;
+        for (i, &size) in sizes.iter().enumerate() {
+            params.push(ParamInfo {
+                name: format!("p{i}"),
+                shape: vec![size],
+                layer: format!("layer{i}"),
+                trainable: true,
+                offset,
+                size,
+            });
+            offset += size;
+        }
+        let spec = Arc::new(VariantSpec {
+            model: "toy".into(),
+            variant: "ft".into(),
+            kind: ModelKind::Cls,
+            dims: ModelDims {
+                vocab: 4, d_model: 2, n_heads: 1, n_layers: 1, d_ff: 2,
+                max_seq: 2, n_classes: 2, batch: 1, lora_rank: 1, prefix_len: 1,
+            },
+            params_bin: "x".into(),
+            n_params: offset,
+            params,
+            entrypoints: BTreeMap::new(),
+        });
+        let arrays = sizes.iter().map(|&s| vec![0.5f32; s]).collect();
+        let train_mask = vec![true; sizes.len()];
+        ParamSet { spec, arrays, train_mask }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_constructs_every_name() {
+        for name in [
+            "helene", "helene-fo", "mezo", "zo-sgd", "zo-sgd-mmt", "zo-sgd-cons",
+            "zo-sgd-sign", "zo-adam", "zo-adamw", "zo-lion", "zo-sophia",
+            "zo-newton", "fo-sgd", "fo-adam", "forward-grad",
+        ] {
+            let opt = by_name(name, 1e-3).unwrap();
+            assert!((opt.lr() - 1e-3).abs() < 1e-9, "{name}");
+        }
+        assert!(by_name("nope", 1e-3).is_err());
+    }
+
+    #[test]
+    fn kinds_are_consistent() {
+        assert_eq!(by_name("mezo", 1e-3).unwrap().kind(), StepKind::Zo);
+        assert_eq!(by_name("helene", 1e-3).unwrap().kind(), StepKind::Zo);
+        assert_eq!(by_name("fo-adam", 1e-3).unwrap().kind(), StepKind::Fo);
+        assert_eq!(by_name("forward-grad", 1e-3).unwrap().kind(), StepKind::ForwardGrad);
+    }
+}

@@ -1,0 +1,110 @@
+//! Naive diagonal Newton's method in the ZO setting — the unstable
+//! second-order baseline of Figures 1-2.
+//!
+//! `θ −= η · g / (h + ε)` with h the raw (EMA-free, clip-free) A-GNB
+//! estimate refreshed every step. With no floor on h, small curvature
+//! estimates produce enormous steps and the method oscillates or diverges
+//! on heterogeneous-curvature problems — exactly the failure mode HELENE's
+//! layer-wise clipping repairs (the toy bench makes this visible).
+
+use anyhow::{anyhow, Result};
+
+use crate::model::params::{ParamSet, Z_STREAM};
+use crate::optim::{Optimizer, StepKind};
+use crate::util::rng::Pcg64;
+
+pub struct ZoNewton {
+    lr: f32,
+    eps: f32,
+    batch_size: f32,
+    h: Option<ParamSet>,
+}
+
+impl ZoNewton {
+    pub fn new(lr: f32) -> Self {
+        Self { lr, eps: 1e-12, batch_size: 8.0, h: None }
+    }
+}
+
+impl Optimizer for ZoNewton {
+    fn name(&self) -> &'static str {
+        "zo-newton"
+    }
+
+    fn kind(&self) -> StepKind {
+        StepKind::Zo
+    }
+
+    fn configure_batch(&mut self, batch_size: usize) {
+        self.batch_size = batch_size as f32;
+    }
+
+    fn init(&mut self, params: &ParamSet) {
+        self.h = Some(params.zeros_like());
+    }
+
+    fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
+        let h = self.h.as_mut().ok_or_else(|| anyhow!("init not called"))?;
+        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
+        let mut zbuf: Vec<f32> = Vec::new();
+        for i in 0..params.arrays.len() {
+            if !params.train_mask[i] {
+                continue;
+            }
+            let th = &mut params.arrays[i];
+            zbuf.resize(th.len(), 0.0);
+            rng.fill_normal(&mut zbuf);
+            let h_arr = &mut h.arrays[i];
+            for j in 0..th.len() {
+                let g = g_scale * zbuf[j];
+                h_arr[j] = self.batch_size * g * g; // raw estimate, no EMA
+                th[j] -= self.lr * g / (h_arr[j] + self.eps);
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.h.as_ref().map_or(0, |h| h.state_bytes())
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::toy_params;
+
+    #[test]
+    fn unclipped_newton_takes_huge_steps_on_flat_curvature() {
+        // h = B g² and update = g / h = 1 / (B g): tiny gradients produce
+        // giant steps — the instability the paper's Figure 1 shows.
+        let mut p = toy_params(&[16]);
+        let before = p.clone();
+        let mut opt = ZoNewton::new(1e-3);
+        opt.init(&p);
+        opt.step_zo(&mut p, 1e-4, 7).unwrap();
+        // expected magnitude ≈ lr / (B · |g|) = 1e-3/(8·1e-4·|z|) ≈ O(1)
+        assert!(p.max_abs_diff(&before) > 0.1, "diff {}", p.max_abs_diff(&before));
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = toy_params(&[8]);
+        let mut b = toy_params(&[8]);
+        let mut o1 = ZoNewton::new(1e-3);
+        let mut o2 = ZoNewton::new(1e-3);
+        o1.init(&a);
+        o2.init(&b);
+        o1.step_zo(&mut a, 0.3, 1).unwrap();
+        o2.step_zo(&mut b, 0.3, 1).unwrap();
+        assert_eq!(a.arrays, b.arrays);
+    }
+}

@@ -1,0 +1,221 @@
+//! SPSA two-point gradient estimation with MeZO's seeded in-place protocol.
+//!
+//! For loss L and perturbation scale ε (paper §2.1):
+//!
+//! ```text
+//! θ ← θ + εz ;  L⁺ = L(θ)
+//! θ ← θ − 2εz;  L⁻ = L(θ)
+//! θ ← θ + εz              (restore)
+//! g_scale = (L⁺ − L⁻) / 2ε        — the projected gradient  zᵀ∇L
+//! ```
+//!
+//! `z ~ N(0, I)` is regenerated from the step seed at every use and never
+//! materialised, so the extra memory is zero — the property that lets MeZO
+//! (and HELENE on top of it) train with inference-level memory.
+//!
+//! The estimator is generic over the loss oracle so the same code drives
+//! the PJRT model runner, the 2-D toy problems, and the unit tests.
+
+use anyhow::Result;
+
+use crate::model::params::ParamSet;
+
+/// One SPSA measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct SpsaEstimate {
+    /// zᵀ∇L estimate: feed to `Optimizer::step_zo` together with `seed`.
+    pub g_scale: f32,
+    /// seed that regenerates this step's z
+    pub seed: u64,
+    pub loss_plus: f32,
+    pub loss_minus: f32,
+}
+
+impl SpsaEstimate {
+    /// The loss value reported for this step (mean of the two probes —
+    /// an unbiased estimate of L(θ) to O(ε²)).
+    pub fn loss(&self) -> f32 {
+        0.5 * (self.loss_plus + self.loss_minus)
+    }
+}
+
+/// Cached variant of [`estimate_with`]: the z draws are generated once into
+/// `cache` (one RNG pass) and reused for the −2ε and restore passes —
+/// identical arithmetic, ~2 RNG passes saved per step (§Perf). Costs one
+/// trainable-sized scratch buffer (`TrainConfig::cache_z`).
+pub fn estimate_cached<F>(
+    params: &mut ParamSet,
+    cache: &mut crate::model::params::ZCache,
+    seed: u64,
+    eps: f32,
+    mut loss_fn: F,
+) -> Result<SpsaEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    debug_assert!(eps > 0.0);
+    params.perturb_fill_cache(cache, seed, eps);
+    let loss_plus = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            params.perturb_from_cache(cache, -eps);
+            return Err(e);
+        }
+    };
+    params.perturb_from_cache(cache, -2.0 * eps);
+    let loss_minus = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            params.perturb_from_cache(cache, eps);
+            return Err(e);
+        }
+    };
+    params.perturb_from_cache(cache, eps);
+    Ok(SpsaEstimate {
+        g_scale: (loss_plus - loss_minus) / (2.0 * eps),
+        seed,
+        loss_plus,
+        loss_minus,
+    })
+}
+
+/// Run the perturb → probe → restore cycle against an arbitrary loss oracle.
+/// On success `params` is restored (up to f32 re-add drift, see `ParamSet`).
+pub fn estimate_with<F>(
+    params: &mut ParamSet,
+    seed: u64,
+    eps: f32,
+    mut loss_fn: F,
+) -> Result<SpsaEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    debug_assert!(eps > 0.0);
+    params.perturb_trainable(seed, eps);
+    let loss_plus = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            params.perturb_trainable(seed, -eps); // restore before bailing
+            return Err(e);
+        }
+    };
+    params.perturb_trainable(seed, -2.0 * eps);
+    let loss_minus = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            params.perturb_trainable(seed, eps);
+            return Err(e);
+        }
+    };
+    params.perturb_trainable(seed, eps);
+    Ok(SpsaEstimate {
+        g_scale: (loss_plus - loss_minus) / (2.0 * eps),
+        seed,
+        loss_plus,
+        loss_minus,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::toy_params;
+
+    /// Quadratic loss with per-array curvature: L = Σ_i c_i ‖θ_i‖²/2.
+    fn quad_loss(p: &ParamSet) -> Result<f32> {
+        let cs = [1.0f32, 10.0];
+        let mut l = 0.0;
+        for (i, arr) in p.arrays.iter().enumerate() {
+            l += 0.5 * cs[i % 2] * arr.iter().map(|x| x * x).sum::<f32>();
+        }
+        Ok(l)
+    }
+
+    #[test]
+    fn restores_params() {
+        let mut p = toy_params(&[32, 32]);
+        let orig = p.clone();
+        let _ = estimate_with(&mut p, 17, 1e-3, quad_loss).unwrap();
+        assert!(p.max_abs_diff(&orig) < 1e-6, "drift {}", p.max_abs_diff(&orig));
+    }
+
+    #[test]
+    fn estimates_projected_gradient() {
+        // for quadratic loss, zᵀ∇L = Σ c_i θ_iᵀ z_i; check against the
+        // analytically recomputed projection
+        let mut p = toy_params(&[64, 64]);
+        let est = estimate_with(&mut p, 23, 1e-4, quad_loss).unwrap();
+        // recompute projection via visit_z
+        let mut proj = 0f64;
+        let cs = [1.0f32, 10.0];
+        p.visit_z(23, |i, z| {
+            for (x, zv) in p.arrays[i].iter().zip(z) {
+                proj += (cs[i % 2] * x * zv) as f64;
+            }
+        });
+        assert!(
+            (est.g_scale as f64 - proj).abs() < 0.05 * proj.abs().max(1.0),
+            "spsa {} vs exact {}",
+            est.g_scale,
+            proj
+        );
+    }
+
+    #[test]
+    fn loss_reported_is_mean_of_probes() {
+        let mut p = toy_params(&[16]);
+        let est = estimate_with(&mut p, 5, 1e-3, quad_loss).unwrap();
+        assert!((est.loss() - 0.5 * (est.loss_plus + est.loss_minus)).abs() < 1e-7);
+        // close to the unperturbed loss
+        let l0 = quad_loss(&p).unwrap();
+        assert!((est.loss() - l0).abs() < 0.05 * l0);
+    }
+
+    #[test]
+    fn failing_oracle_restores_params() {
+        let mut p = toy_params(&[16]);
+        let orig = p.clone();
+        let mut calls = 0;
+        let r = estimate_with(&mut p, 3, 1e-3, |_| {
+            calls += 1;
+            if calls == 2 {
+                anyhow::bail!("boom")
+            }
+            Ok(1.0)
+        });
+        assert!(r.is_err());
+        assert!(p.max_abs_diff(&orig) < 1e-6);
+    }
+
+    #[test]
+    fn cached_estimate_is_bit_identical_to_regeneration() {
+        let mut p1 = toy_params(&[64, 32]);
+        let mut p2 = toy_params(&[64, 32]);
+        let mut cache = crate::model::params::ZCache::default();
+        let a = estimate_with(&mut p1, 31, 1e-3, quad_loss).unwrap();
+        let b = estimate_cached(&mut p2, &mut cache, 31, 1e-3, quad_loss).unwrap();
+        assert_eq!(a.g_scale, b.g_scale);
+        assert_eq!(a.loss_plus, b.loss_plus);
+        assert_eq!(a.loss_minus, b.loss_minus);
+        assert_eq!(p1.arrays, p2.arrays); // identical restore arithmetic
+    }
+
+    #[test]
+    fn cached_estimate_respects_frozen_arrays() {
+        let mut p = toy_params(&[16, 16]);
+        p.train_mask[0] = false;
+        let orig = p.clone();
+        let mut cache = crate::model::params::ZCache::default();
+        let _ = estimate_cached(&mut p, &mut cache, 5, 1e-3, quad_loss).unwrap();
+        assert_eq!(p.arrays[0], orig.arrays[0]);
+        assert!(p.max_abs_diff(&orig) < 1e-6); // restored overall
+    }
+
+    #[test]
+    fn different_seeds_give_different_estimates() {
+        let mut p = toy_params(&[64]);
+        let a = estimate_with(&mut p, 1, 1e-3, quad_loss).unwrap();
+        let b = estimate_with(&mut p, 2, 1e-3, quad_loss).unwrap();
+        assert_ne!(a.g_scale, b.g_scale);
+    }
+}

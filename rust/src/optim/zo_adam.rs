@@ -1,0 +1,248 @@
+//! ZO-Adam / ZO-AdamW / ZO-Lion — the adaptive ZO baselines of Table 3 and
+//! Figure 4. All consume the SPSA gradient `g = g_scale · z` (z regenerated
+//! from the step seed) and apply the textbook first-order update rule to it.
+
+use anyhow::{anyhow, Result};
+
+use crate::model::params::{ParamSet, Z_STREAM};
+use crate::optim::{Optimizer, StepKind};
+use crate::util::rng::Pcg64;
+
+/// ZO-Adam (and AdamW with decoupled weight decay).
+pub struct ZoAdam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    decoupled: bool,
+    t: usize,
+    m: Option<ParamSet>,
+    v: Option<ParamSet>,
+}
+
+impl ZoAdam {
+    pub fn new(lr: f32, decoupled: bool) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: if decoupled { 0.01 } else { 0.0 },
+            decoupled,
+            t: 0,
+            m: None,
+            v: None,
+        }
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+}
+
+impl Optimizer for ZoAdam {
+    fn name(&self) -> &'static str {
+        if self.decoupled {
+            "zo-adamw"
+        } else {
+            "zo-adam"
+        }
+    }
+
+    fn kind(&self) -> StepKind {
+        StepKind::Zo
+    }
+
+    fn init(&mut self, params: &ParamSet) {
+        self.m = Some(params.zeros_like());
+        self.v = Some(params.zeros_like());
+        self.t = 0;
+    }
+
+    fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
+        let m = self.m.as_mut().ok_or_else(|| anyhow!("init not called"))?;
+        let v = self.v.as_mut().ok_or_else(|| anyhow!("init not called"))?;
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
+        let mut zbuf: Vec<f32> = Vec::new();
+        for i in 0..params.arrays.len() {
+            if !params.train_mask[i] {
+                continue;
+            }
+            let th = &mut params.arrays[i];
+            zbuf.resize(th.len(), 0.0);
+            rng.fill_normal(&mut zbuf);
+            let m_arr = &mut m.arrays[i];
+            let v_arr = &mut v.arrays[i];
+            for j in 0..th.len() {
+                let g = g_scale * zbuf[j];
+                m_arr[j] = self.beta1 * m_arr[j] + (1.0 - self.beta1) * g;
+                v_arr[j] = self.beta2 * v_arr[j] + (1.0 - self.beta2) * g * g;
+                let m_hat = m_arr[j] / bc1;
+                let v_hat = v_arr[j] / bc2;
+                if self.decoupled {
+                    th[j] -= self.lr * self.weight_decay * th[j];
+                }
+                th[j] -= self.lr * m_hat / (v_hat.sqrt() + self.eps);
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.as_ref().map_or(0, |m| m.state_bytes())
+            + self.v.as_ref().map_or(0, |v| v.state_bytes())
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// ZO-Lion (Chen et al., 2024): sign of an interpolated momentum.
+pub struct ZoLion {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    weight_decay: f32,
+    m: Option<ParamSet>,
+}
+
+impl ZoLion {
+    pub fn new(lr: f32) -> Self {
+        Self { lr, beta1: 0.9, beta2: 0.99, weight_decay: 0.0, m: None }
+    }
+}
+
+impl Optimizer for ZoLion {
+    fn name(&self) -> &'static str {
+        "zo-lion"
+    }
+
+    fn kind(&self) -> StepKind {
+        StepKind::Zo
+    }
+
+    fn init(&mut self, params: &ParamSet) {
+        self.m = Some(params.zeros_like());
+    }
+
+    fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
+        let m = self.m.as_mut().ok_or_else(|| anyhow!("init not called"))?;
+        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
+        let mut zbuf: Vec<f32> = Vec::new();
+        for i in 0..params.arrays.len() {
+            if !params.train_mask[i] {
+                continue;
+            }
+            let th = &mut params.arrays[i];
+            zbuf.resize(th.len(), 0.0);
+            rng.fill_normal(&mut zbuf);
+            let m_arr = &mut m.arrays[i];
+            for j in 0..th.len() {
+                let g = g_scale * zbuf[j];
+                // c_t = β₁ m + (1−β₁) g ; update = sign(c_t)
+                let c = self.beta1 * m_arr[j] + (1.0 - self.beta1) * g;
+                let upd = if c > 0.0 { 1.0 } else if c < 0.0 { -1.0 } else { 0.0 };
+                th[j] -= self.lr * (upd + self.weight_decay * th[j]);
+                // m_t = β₂ m + (1−β₂) g
+                m_arr[j] = self.beta2 * m_arr[j] + (1.0 - self.beta2) * g;
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.as_ref().map_or(0, |m| m.state_bytes())
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::toy_params;
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, the very first Adam step is ≈ lr·sign(g)
+        let mut p = toy_params(&[64]);
+        let before = p.clone();
+        let mut opt = ZoAdam::new(1e-2, false);
+        opt.init(&p);
+        opt.step_zo(&mut p, 0.8, 42).unwrap();
+        for (a, b) in p.arrays[0].iter().zip(&before.arrays[0]) {
+            let step = (a - b).abs();
+            assert!(step < 1.05e-2 && step > 0.9e-2, "step {step}");
+        }
+    }
+
+    #[test]
+    fn adamw_decays_weights_adam_does_not() {
+        let run = |decoupled: bool| {
+            let mut p = toy_params(&[32]);
+            let mut opt = ZoAdam::new(1e-3, decoupled);
+            opt.init(&p);
+            // zero gradient steps: only decoupled decay moves params
+            for s in 0..10 {
+                opt.step_zo(&mut p, 0.0, s).unwrap();
+            }
+            p.arrays[0][0]
+        };
+        assert_eq!(run(false), 0.5);
+        assert!(run(true) < 0.5);
+    }
+
+    #[test]
+    fn lion_steps_have_fixed_magnitude() {
+        let mut p = toy_params(&[32]);
+        let before = p.clone();
+        let mut opt = ZoLion::new(5e-3);
+        opt.init(&p);
+        opt.step_zo(&mut p, 1.3, 7).unwrap();
+        for (a, b) in p.arrays[0].iter().zip(&before.arrays[0]) {
+            assert!(((a - b).abs() - 5e-3).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn state_accounting() {
+        let p = toy_params(&[128]);
+        let mut adam = ZoAdam::new(1e-3, false);
+        adam.init(&p);
+        assert_eq!(adam.state_bytes(), 2 * p.state_bytes());
+        let mut lion = ZoLion::new(1e-3);
+        lion.init(&p);
+        assert_eq!(lion.state_bytes(), p.state_bytes());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = toy_params(&[16]);
+        let mut b = toy_params(&[16]);
+        let mut o1 = ZoAdam::new(1e-3, true);
+        let mut o2 = ZoAdam::new(1e-3, true);
+        o1.init(&a);
+        o2.init(&b);
+        for s in 0..5 {
+            o1.step_zo(&mut a, 0.4, s).unwrap();
+            o2.step_zo(&mut b, 0.4, s).unwrap();
+        }
+        assert_eq!(a.arrays, b.arrays);
+    }
+}

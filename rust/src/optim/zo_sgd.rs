@@ -1,0 +1,328 @@
+//! ZO-SGD family: MeZO and the benchmark variants of Zhang et al. (2024).
+//!
+//! * `ZoSgd`       — MeZO / ZO-SGD: `θ −= η · g_scale · z` (Table 3 "ZO-SGD";
+//!                   also serves Forward-Grad where g_scale is the JVP).
+//! * `ZoSgdMomentum` — ZO-SGD-MMT: heavy-ball `m = μ m + g; θ −= η m`.
+//! * `ZoSgdCons`   — ZO-SGD-Cons: conservative step — accept only if the
+//!                   post-step loss did not increase, else revert exactly
+//!                   (z regenerated from the step's seed).
+//! * `ZoSgdSign`   — ZO-signSGD: `θ −= η · sign(g_scale · z)`.
+
+use anyhow::{bail, Result};
+
+use crate::model::params::{ParamSet, Z_STREAM};
+use crate::optim::{Optimizer, StepKind};
+use crate::util::rng::Pcg64;
+
+/// MeZO / ZO-SGD (optionally flagged as the Forward-Grad consumer).
+pub struct ZoSgd {
+    lr: f32,
+    forward_grad: bool,
+}
+
+impl ZoSgd {
+    pub fn new(lr: f32) -> Self {
+        Self { lr, forward_grad: false }
+    }
+
+    /// Same update rule, but the trainer feeds the JVP along z instead of
+    /// the SPSA two-point estimate.
+    pub fn as_forward_grad(mut self) -> Self {
+        self.forward_grad = true;
+        self
+    }
+}
+
+impl Optimizer for ZoSgd {
+    fn name(&self) -> &'static str {
+        if self.forward_grad {
+            "forward-grad"
+        } else {
+            "mezo"
+        }
+    }
+
+    fn kind(&self) -> StepKind {
+        if self.forward_grad {
+            StepKind::ForwardGrad
+        } else {
+            StepKind::Zo
+        }
+    }
+
+    fn init(&mut self, _params: &ParamSet) {}
+
+    fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
+        // θ −= η · g_scale · z  — exactly MeZO's update; z regenerated.
+        params.perturb_trainable(seed, -self.lr * g_scale);
+        Ok(())
+    }
+
+    fn step_zo_cached(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        _seed: u64,
+        cache: &crate::model::params::ZCache,
+    ) -> Result<()> {
+        params.perturb_from_cache(cache, -self.lr * g_scale);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        0 // MeZO's selling point: zero optimizer state
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// ZO-SGD with heavy-ball momentum (ZO-SGD-MMT).
+pub struct ZoSgdMomentum {
+    lr: f32,
+    mu: f32,
+    m: Option<ParamSet>,
+}
+
+impl ZoSgdMomentum {
+    pub fn new(lr: f32, mu: f32) -> Self {
+        Self { lr, mu, m: None }
+    }
+}
+
+impl Optimizer for ZoSgdMomentum {
+    fn name(&self) -> &'static str {
+        "zo-sgd-mmt"
+    }
+
+    fn kind(&self) -> StepKind {
+        StepKind::Zo
+    }
+
+    fn init(&mut self, params: &ParamSet) {
+        self.m = Some(params.zeros_like());
+    }
+
+    fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
+        let m = self.m.as_mut().ok_or_else(|| anyhow::anyhow!("init not called"))?;
+        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
+        let mut zbuf: Vec<f32> = Vec::new();
+        for i in 0..params.arrays.len() {
+            if !params.train_mask[i] {
+                continue;
+            }
+            let th = &mut params.arrays[i];
+            zbuf.resize(th.len(), 0.0);
+            rng.fill_normal(&mut zbuf);
+            let m_arr = &mut m.arrays[i];
+            for j in 0..th.len() {
+                m_arr[j] = self.mu * m_arr[j] + g_scale * zbuf[j];
+                th[j] -= self.lr * m_arr[j];
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.as_ref().map_or(0, |m| m.state_bytes())
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Conservative ZO-SGD: revert the step when the loss got worse.
+pub struct ZoSgdCons {
+    lr: f32,
+    last: Option<(f32, u64)>, // (g_scale, seed) of the pending step
+    pub accepted: u64,
+    pub reverted: u64,
+}
+
+impl ZoSgdCons {
+    pub fn new(lr: f32) -> Self {
+        Self { lr, last: None, accepted: 0, reverted: 0 }
+    }
+}
+
+impl Optimizer for ZoSgdCons {
+    fn name(&self) -> &'static str {
+        "zo-sgd-cons"
+    }
+
+    fn kind(&self) -> StepKind {
+        StepKind::Zo
+    }
+
+    fn init(&mut self, _params: &ParamSet) {}
+
+    fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
+        params.perturb_trainable(seed, -self.lr * g_scale);
+        self.last = Some((g_scale, seed));
+        Ok(())
+    }
+
+    fn wants_post_check(&self) -> bool {
+        true
+    }
+
+    fn post_check(&mut self, params: &mut ParamSet, before: f32, after: f32) -> Result<()> {
+        let Some((g_scale, seed)) = self.last.take() else {
+            bail!("post_check without a pending step");
+        };
+        if after > before {
+            // revert exactly: add back the same η·g·z values
+            params.perturb_trainable(seed, self.lr * g_scale);
+            self.reverted += 1;
+        } else {
+            self.accepted += 1;
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// ZO-signSGD: θ −= η · sign(g_scale · z).
+pub struct ZoSgdSign {
+    lr: f32,
+}
+
+impl ZoSgdSign {
+    pub fn new(lr: f32) -> Self {
+        Self { lr }
+    }
+}
+
+impl Optimizer for ZoSgdSign {
+    fn name(&self) -> &'static str {
+        "zo-sgd-sign"
+    }
+
+    fn kind(&self) -> StepKind {
+        StepKind::Zo
+    }
+
+    fn init(&mut self, _params: &ParamSet) {}
+
+    fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
+        if g_scale == 0.0 {
+            return Ok(()); // sign(0) = 0: no update
+        }
+        let gs = g_scale.signum();
+        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
+        let mut zbuf: Vec<f32> = Vec::new();
+        for i in 0..params.arrays.len() {
+            if !params.train_mask[i] {
+                continue;
+            }
+            let th = &mut params.arrays[i];
+            zbuf.resize(th.len(), 0.0);
+            rng.fill_normal(&mut zbuf);
+            for j in 0..th.len() {
+                th[j] -= self.lr * (gs * zbuf[j]).signum();
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::toy_params;
+
+    #[test]
+    fn zo_sgd_matches_manual_axpy() {
+        let mut p = toy_params(&[16]);
+        let mut q = toy_params(&[16]);
+        let mut opt = ZoSgd::new(0.01);
+        opt.init(&p);
+        opt.step_zo(&mut p, 0.5, 99).unwrap();
+        // manual: θ += (-lr*g) * z
+        q.perturb_trainable(99, -0.01 * 0.5);
+        assert_eq!(p.arrays, q.arrays);
+        assert_eq!(opt.state_bytes(), 0);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut p = toy_params(&[16]);
+        let mut opt = ZoSgdMomentum::new(0.01, 0.9);
+        opt.init(&p);
+        // repeated identical gradients: displacement grows superlinearly
+        let start = p.clone();
+        opt.step_zo(&mut p, 1.0, 5).unwrap();
+        let d1 = p.max_abs_diff(&start);
+        opt.step_zo(&mut p, 1.0, 5).unwrap();
+        let d2 = p.max_abs_diff(&start);
+        assert!(d2 > 1.8 * d1, "momentum not accumulating: {d1} {d2}");
+    }
+
+    #[test]
+    fn cons_reverts_bad_steps() {
+        let mut p = toy_params(&[16]);
+        let orig = p.clone();
+        let mut opt = ZoSgdCons::new(0.05);
+        opt.init(&p);
+        opt.step_zo(&mut p, 1.0, 3).unwrap();
+        assert!(opt.wants_post_check());
+        opt.post_check(&mut p, 1.0, 2.0).unwrap(); // got worse → revert
+        assert!(p.max_abs_diff(&orig) <= 2.0 * f32::EPSILON);
+        assert_eq!((opt.accepted, opt.reverted), (0, 1));
+
+        opt.step_zo(&mut p, 1.0, 4).unwrap();
+        let moved = p.clone();
+        opt.post_check(&mut p, 1.0, 0.5).unwrap(); // improved → keep
+        assert_eq!(p.arrays, moved.arrays);
+        assert_eq!((opt.accepted, opt.reverted), (1, 1));
+    }
+
+    #[test]
+    fn sign_steps_are_constant_magnitude() {
+        let mut p = toy_params(&[32]);
+        let before = p.clone();
+        let mut opt = ZoSgdSign::new(0.01);
+        opt.init(&p);
+        opt.step_zo(&mut p, -0.7, 11).unwrap();
+        for (a, b) in p.arrays[0].iter().zip(&before.arrays[0]) {
+            assert!(((a - b).abs() - 0.01).abs() < 1e-7);
+        }
+        // zero gradient → no movement
+        let frozen = p.clone();
+        opt.step_zo(&mut p, 0.0, 12).unwrap();
+        assert_eq!(p.arrays, frozen.arrays);
+    }
+}

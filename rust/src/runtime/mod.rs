@@ -1,0 +1,193 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the hot loop.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile` →
+//! `execute`. Text is the interchange format because xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos (64-bit instruction ids).
+//!
+//! Executables are compiled exactly once and cached; the training loop's
+//! per-step work is literal marshalling + execution only. A cache-hit
+//! counter is exposed so tests can assert "no recompilation in the loop"
+//! (DESIGN.md §Perf).
+
+pub mod model_runner;
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::model::manifest::Manifest;
+
+pub use model_runner::ModelRunner;
+
+/// PJRT client + compiled-executable cache over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    compilations: Cell<usize>,
+    executions: Cell<usize>,
+}
+
+impl Runtime {
+    /// Load the manifest and bring up the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            compilations: Cell::new(0),
+            executions: Cell::new(0),
+        })
+    }
+
+    /// Default artifact location (repo-root/artifacts), overridable with
+    /// HELENE_ARTIFACTS.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HELENE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch cached) the executable for an HLO-text artifact.
+    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", file))?,
+        );
+        self.compilations.set(self.compilations.get() + 1);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the decomposed output
+    /// tuple (all entrypoints are lowered with `return_tuple=True`).
+    ///
+    /// Arguments are staged to device buffers and executed via the buffer
+    /// path: the xla crate's literal-argument `execute` leaks its argument
+    /// copies on the C side (~the full argument size per call — found by
+    /// `examples/leak_probe.rs`; 36 GB OOM in a bench sweep), while the
+    /// buffer path is leak-free.
+    pub fn execute(&self, file: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        let mut bufs = Vec::with_capacity(args.len());
+        for lit in args {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .context("staging literal argument")?,
+            );
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.executions.set(self.executions.get() + 1);
+        let result = exe.execute_b(&refs).with_context(|| format!("executing {}", file))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", file))?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Execute on pre-staged device buffers (the fast path: frozen inputs
+    /// stay device-resident across steps).
+    pub fn execute_buffers(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        self.executions.set(self.executions.get() + 1);
+        let result = exe.execute_b(args).context("executing on buffers")?;
+        let lit = result[0][0].to_literal_sync()?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Stage host data as a device buffer (f32).
+    pub fn stage_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Stage host data as a device buffer (i32).
+    pub fn stage_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn compilations(&self) -> usize {
+        self.compilations.get()
+    }
+
+    pub fn executions(&self) -> usize {
+        self.executions.get()
+    }
+}
+
+/// Build an f32 literal of the given shape without intermediate copies.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_round_trip() {
+        let data = [1.0f32, -2.5, 3.25, 0.0, 7.5, -0.125];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data.to_vec());
+    }
+
+    #[test]
+    fn lit_i32_round_trip() {
+        let data = [5i32, -7, 0, 123];
+        let lit = lit_i32(&data, &[4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data.to_vec());
+    }
+
+    #[test]
+    fn lit_shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! `ModelRunner`: typed execution of one (model, variant)'s entrypoints.
+//!
+//! Binds a `VariantSpec` to the runtime and marshals `ParamSet` + batch data
+//! into the compiled entrypoints:
+//!
+//! * `loss`      — the ZO hot path (two calls per SPSA step)
+//! * `logits`    — evaluation
+//! * `loss_grad` — FO baselines / linear probing / exact A-GNB
+//! * `loss_jvp`  — Forward-Grad baseline
+//!
+//! The default path marshals literals per call. `enable_buffer_cache` turns
+//! on the §Perf fast path: *frozen* parameter arrays are staged to device
+//! buffers once and reused every call, so PEFT runs only re-upload the
+//! (tiny) trainable arrays + batch data each step.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::data::batcher::Batch;
+use crate::model::manifest::VariantSpec;
+use crate::model::params::ParamSet;
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, Runtime};
+
+pub struct ModelRunner<'rt> {
+    pub rt: &'rt Runtime,
+    pub spec: Arc<VariantSpec>,
+    /// device-resident frozen params, keyed by array index
+    frozen_cache: RefCell<HashMap<usize, Rc<xla::PjRtBuffer>>>,
+    buffer_mode: bool,
+    /// prefer the oracle-attention (`*_ref`) graphs where compiled — same
+    /// numerics, faster on CPU where interpret-mode Pallas pays a serial
+    /// grid-loop tax (DESIGN.md §Perf). Defaults from HELENE_REF_ATTN.
+    ref_graph: bool,
+}
+
+impl<'rt> ModelRunner<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str, variant: &str) -> Result<ModelRunner<'rt>> {
+        let spec = Arc::new(rt.manifest.variant(model, variant)?.clone());
+        let ref_graph = std::env::var("HELENE_REF_ATTN").map_or(false, |v| v != "0");
+        Ok(ModelRunner {
+            rt,
+            spec,
+            frozen_cache: RefCell::new(HashMap::new()),
+            buffer_mode: false,
+            ref_graph,
+        })
+    }
+
+    /// Enable the device-buffer fast path (frozen params staged once).
+    pub fn enable_buffer_cache(&mut self) {
+        self.buffer_mode = true;
+    }
+
+    /// Prefer the oracle-attention graphs (falls back to Pallas if absent).
+    pub fn set_ref_graph(&mut self, on: bool) {
+        self.ref_graph = on;
+    }
+
+    /// Resolve an entrypoint honouring the ref-graph preference.
+    fn pick(&self, base: &str) -> Result<&crate::model::manifest::EntrypointInfo> {
+        if self.ref_graph {
+            let ref_name = format!("{base}_ref");
+            if let Ok(ep) = self.spec.entrypoint(&ref_name) {
+                return Ok(ep);
+            }
+        }
+        self.spec.entrypoint(base)
+    }
+
+    pub fn load_init_params(&self) -> Result<ParamSet> {
+        ParamSet::load_init(self.spec.clone(), &self.rt.manifest.dir)
+    }
+
+    fn check_batch(&self, batch: &Batch) -> Result<()> {
+        let d = &self.spec.dims;
+        if batch.batch != d.batch || batch.seq != d.max_seq {
+            bail!(
+                "batch shape ({}, {}) does not match compiled ({}, {})",
+                batch.batch, batch.seq, d.batch, d.max_seq
+            );
+        }
+        Ok(())
+    }
+
+    /// Assemble the positional literal argument list: params, [tangents],
+    /// tokens, [labels].
+    fn args(
+        &self,
+        params: &ParamSet,
+        tangents: Option<&ParamSet>,
+        batch: &Batch,
+        with_labels: bool,
+    ) -> Result<Vec<xla::Literal>> {
+        self.check_batch(batch)?;
+        let mut out = Vec::with_capacity(
+            params.n_arrays() * (1 + tangents.is_some() as usize) + 2,
+        );
+        for (p, arr) in self.spec.params.iter().zip(&params.arrays) {
+            out.push(lit_f32(arr, &p.shape)?);
+        }
+        if let Some(t) = tangents {
+            for (p, arr) in self.spec.params.iter().zip(&t.arrays) {
+                out.push(lit_f32(arr, &p.shape)?);
+            }
+        }
+        out.push(lit_i32(&batch.tokens, &[batch.batch, batch.seq])?);
+        if with_labels && self.spec.kind.has_labels() {
+            out.push(lit_i32(&batch.labels, &[batch.batch])?);
+        }
+        Ok(out)
+    }
+
+    /// Mini-batch loss via the ZO (Pallas-kernel) graph.
+    pub fn loss(&self, params: &ParamSet, batch: &Batch) -> Result<f32> {
+        let ep = self.pick("loss")?;
+        if self.buffer_mode {
+            return self.loss_buffered(params, batch, &ep.file);
+        }
+        let args = self.args(params, None, batch, true)?;
+        let out = self.rt.execute(&ep.file, &args)?;
+        scalar_f32(&out[0])
+    }
+
+    /// Buffered loss path: frozen arrays staged once, trainable re-uploaded.
+    fn loss_buffered(&self, params: &ParamSet, batch: &Batch, file: &str) -> Result<f32> {
+        self.check_batch(batch)?;
+        let exe = self.rt.executable(file)?;
+        let mut owned: Vec<Rc<xla::PjRtBuffer>> = Vec::with_capacity(params.n_arrays() + 2);
+        {
+            let mut cache = self.frozen_cache.borrow_mut();
+            for (i, (p, arr)) in self.spec.params.iter().zip(&params.arrays).enumerate() {
+                if params.is_trainable(i) {
+                    owned.push(Rc::new(self.rt.stage_f32(arr, &p.shape)?));
+                } else {
+                    let buf = match cache.get(&i) {
+                        Some(b) => b.clone(),
+                        None => {
+                            let b = Rc::new(self.rt.stage_f32(arr, &p.shape)?);
+                            cache.insert(i, b.clone());
+                            b
+                        }
+                    };
+                    owned.push(buf);
+                }
+            }
+        }
+        owned.push(Rc::new(self.rt.stage_i32(&batch.tokens, &[batch.batch, batch.seq])?));
+        if self.spec.kind.has_labels() {
+            owned.push(Rc::new(self.rt.stage_i32(&batch.labels, &[batch.batch])?));
+        }
+        let refs: Vec<&xla::PjRtBuffer> = owned.iter().map(|b| b.as_ref()).collect();
+        let out = self.rt.execute_buffers(&exe, &refs)?;
+        scalar_f32(&out[0])
+    }
+
+    /// Classifier logits, flattened row-major (batch, n_classes).
+    pub fn logits(&self, params: &ParamSet, batch: &Batch) -> Result<Vec<f32>> {
+        let ep = self.pick("logits")?;
+        let args = self.args(params, None, batch, false)?;
+        let out = self.rt.execute(&ep.file, &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Argmax predictions for a batch, restricted to the task's first
+    /// `n_valid` classes (the compiled head is task-agnostic and wider than
+    /// most tasks; unused logits must not participate — cf. the paper's
+    /// verbalizer-restricted scoring for zero-shot).
+    pub fn predict(&self, params: &ParamSet, batch: &Batch, n_valid: usize) -> Result<Vec<i32>> {
+        let flat = self.logits(params, batch)?;
+        let c = self.spec.dims.n_classes;
+        let v = n_valid.clamp(1, c);
+        Ok(flat
+            .chunks_exact(c)
+            .map(|row| {
+                row[..v]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    /// Loss + full gradient (FO path, oracle-attention graph).
+    pub fn loss_grad(&self, params: &ParamSet, batch: &Batch) -> Result<(f32, ParamSet)> {
+        let ep = self.spec.entrypoint("loss_grad")?;
+        let args = self.args(params, None, batch, true)?;
+        let out = self.rt.execute(&ep.file, &args)?;
+        if out.len() != 1 + params.n_arrays() {
+            bail!("loss_grad returned {} outputs, expected {}", out.len(), 1 + params.n_arrays());
+        }
+        let loss = scalar_f32(&out[0])?;
+        let mut grads = params.zeros_like();
+        for (i, lit) in out[1..].iter().enumerate() {
+            grads.arrays[i] = lit.to_vec::<f32>()?;
+        }
+        Ok((loss, grads))
+    }
+
+    /// Loss + directional derivative along `tangents` (Forward-Grad path).
+    pub fn loss_jvp(
+        &self,
+        params: &ParamSet,
+        tangents: &ParamSet,
+        batch: &Batch,
+    ) -> Result<(f32, f32)> {
+        let ep = self.spec.entrypoint("loss_jvp")?;
+        let args = self.args(params, Some(tangents), batch, true)?;
+        let out = self.rt.execute(&ep.file, &args)?;
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    /// Evaluate accuracy (argmax) over a full split, batch by batch.
+    pub fn eval_accuracy(
+        &self,
+        params: &ParamSet,
+        examples: &[crate::data::synth::Example],
+    ) -> Result<f32> {
+        let n_valid = 1 + examples.iter().map(|e| e.label).max().unwrap_or(0) as usize;
+        let (preds, labels) = self.eval_predictions(params, examples, n_valid)?;
+        let hits = preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        Ok(hits as f32 / labels.len().max(1) as f32)
+    }
+
+    /// Predictions + gold labels over a split (for task-specific metrics).
+    pub fn eval_predictions(
+        &self,
+        params: &ParamSet,
+        examples: &[crate::data::synth::Example],
+        n_valid: usize,
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let d = &self.spec.dims;
+        let mut batcher =
+            crate::data::batcher::Batcher::new(examples, d.batch, d.max_seq, 0, false);
+        let n_batches = batcher.epoch_batches();
+        let mut preds = Vec::with_capacity(examples.len());
+        let mut labels = Vec::with_capacity(examples.len());
+        for _ in 0..n_batches {
+            let b = batcher.next_batch();
+            let p = self.predict(params, &b, n_valid)?;
+            let take = (examples.len() - preds.len()).min(d.batch);
+            preds.extend_from_slice(&p[..take]);
+            labels.extend_from_slice(&b.labels[..take]);
+        }
+        Ok((preds, labels))
+    }
+}

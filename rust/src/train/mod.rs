@@ -1,0 +1,334 @@
+//! The training coordinator: the loop that drives any optimizer in the zoo
+//! against a compiled model over a synthetic task.
+//!
+//! Per step the trainer dispatches on `Optimizer::kind()`:
+//!
+//! * `Zo` — MeZO protocol: SPSA probe pair through the compiled `loss`
+//!   entrypoint (Pallas graph), then `step_zo(g_scale, seed)`.
+//! * `Fo` — one `loss_grad` execution, then `step_fo(grads)`.
+//! * `ForwardGrad` — seeded tangent, one `loss_jvp` execution, then
+//!   `step_zo(jvp, seed)` (the update regenerates the same tangent).
+//!
+//! The trainer owns evaluation (dev metric every `eval_every` steps,
+//! steps-to-target tracking — the paper's speedup headline is a
+//! steps-to-target ratio), timing buckets for the §Perf pass, and the
+//! post-step accept/revert hook for ZO-SGD-Cons.
+
+pub mod schedule;
+
+use anyhow::{Context, Result};
+
+use crate::data::batcher::Batcher;
+use crate::data::synth::Dataset;
+use crate::model::params::ParamSet;
+use crate::optim::spsa;
+use crate::optim::{Optimizer, StepKind};
+use crate::runtime::ModelRunner;
+use crate::tasks::{score, Metric};
+use crate::util::metrics::{History, TimingBreakdown, Timer};
+use crate::util::rng::mix64;
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    /// SPSA perturbation scale ε (MeZO default 1e-3)
+    pub spsa_eps: f32,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// dev examples used per evaluation (cost control on 1 core)
+    pub eval_examples: usize,
+    /// early-stop once dev metric reaches this value
+    pub target_metric: Option<f32>,
+    /// hard wall-clock cap (benches)
+    pub max_wall_s: Option<f64>,
+    /// restrict training to these layer groups (linear probing = ["head"])
+    pub train_only_layers: Option<Vec<String>>,
+    pub metric: Metric,
+    /// reuse the step's z draws across the SPSA probe passes (one extra
+    /// trainable-sized buffer; ~2 RNG passes saved per step — §Perf)
+    pub cache_z: bool,
+    /// learning-rate schedule applied multiplicatively to the optimizer lr
+    pub lr_schedule: Option<schedule::LrSchedule>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 1000,
+            spsa_eps: 1e-3,
+            seed: 0,
+            eval_every: 100,
+            eval_examples: 128,
+            target_metric: None,
+            max_wall_s: None,
+            train_only_layers: None,
+            metric: Metric::Accuracy,
+            cache_z: true,
+            lr_schedule: None,
+        }
+    }
+}
+
+/// Result of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub history: History,
+    /// first step at which the dev metric reached the target
+    pub steps_to_target: Option<usize>,
+    pub final_dev_metric: f32,
+    pub test_metric: f32,
+    pub wall_s: f64,
+    pub timing: TimingBreakdown,
+    pub optimizer: String,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Train from the shipped init params; returns the report and leaves the
+    /// trained parameters in `params_out` if provided.
+    pub fn run(
+        &self,
+        runner: &ModelRunner,
+        data: &Dataset,
+        opt: &mut dyn Optimizer,
+    ) -> Result<TrainReport> {
+        let mut params = runner.load_init_params()?;
+        self.run_with_params(runner, data, opt, &mut params)
+    }
+
+    pub fn run_with_params(
+        &self,
+        runner: &ModelRunner,
+        data: &Dataset,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+    ) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        if let Some(layers) = &cfg.train_only_layers {
+            let refs: Vec<&str> = layers.iter().map(|s| s.as_str()).collect();
+            params.restrict_to_layers(&refs)?;
+        }
+        opt.configure_batch(runner.spec.dims.batch);
+        opt.init(params);
+
+        let dims = &runner.spec.dims;
+        let mut batcher = Batcher::new(&data.train, dims.batch, dims.max_seq, cfg.seed, true);
+        let mut zcache = crate::model::params::ZCache::default();
+        let mut history = History::default();
+        let mut timing = TimingBreakdown::default();
+        let run_timer = Timer::start();
+        let mut steps_to_target: Option<usize> = None;
+        let mut last_dev = 0.0f32;
+
+        let base_lr = opt.lr();
+        for step in 1..=cfg.steps {
+            let batch = batcher.next_batch();
+            let step_seed = mix64(cfg.seed, step as u64);
+            if let Some(sched) = &cfg.lr_schedule {
+                opt.set_lr(base_lr * sched.factor(step));
+            }
+
+            let loss = match opt.kind() {
+                StepKind::Zo => {
+                    let t = Timer::start();
+                    let est = if cfg.cache_z {
+                        spsa::estimate_cached(params, &mut zcache, step_seed, cfg.spsa_eps, |p| {
+                            runner.loss(p, &batch)
+                        })
+                    } else {
+                        spsa::estimate_with(params, step_seed, cfg.spsa_eps, |p| {
+                            runner.loss(p, &batch)
+                        })
+                    }
+                    .context("SPSA estimate")?;
+                    timing.add("spsa_probes", t.seconds());
+
+                    let t = Timer::start();
+                    if cfg.cache_z {
+                        opt.step_zo_cached(params, est.g_scale, est.seed, &zcache)?;
+                    } else {
+                        opt.step_zo(params, est.g_scale, est.seed)?;
+                    }
+                    timing.add("optimizer_step", t.seconds());
+
+                    if opt.wants_post_check() {
+                        let t = Timer::start();
+                        let after = runner.loss(params, &batch)?;
+                        opt.post_check(params, est.loss(), after)?;
+                        timing.add("post_check", t.seconds());
+                    }
+                    est.loss()
+                }
+                StepKind::Fo => {
+                    let t = Timer::start();
+                    let (loss, grads) = runner.loss_grad(params, &batch)?;
+                    timing.add("loss_grad", t.seconds());
+                    let t = Timer::start();
+                    opt.step_fo(params, &grads)?;
+                    timing.add("optimizer_step", t.seconds());
+                    loss
+                }
+                StepKind::ForwardGrad => {
+                    // tangent = seeded z on trainable arrays, zero elsewhere
+                    let t = Timer::start();
+                    let mut tangent = params.zeros_like();
+                    tangent.perturb_trainable(step_seed, 1.0);
+                    let (loss, jvp) = runner.loss_jvp(params, &tangent, &batch)?;
+                    timing.add("loss_jvp", t.seconds());
+                    let t = Timer::start();
+                    opt.step_zo(params, jvp, step_seed)?;
+                    timing.add("optimizer_step", t.seconds());
+                    loss
+                }
+            };
+
+            let mut dev_metric = None;
+            if step % cfg.eval_every == 0 || step == cfg.steps {
+                let t = Timer::start();
+                let n = cfg.eval_examples.min(data.dev.len());
+                let m = self.eval_metric(runner, params, &data.dev[..n], data.n_classes)?;
+                timing.add("eval", t.seconds());
+                dev_metric = Some(m);
+                last_dev = m;
+                if steps_to_target.is_none() {
+                    if let Some(target) = cfg.target_metric {
+                        if m >= target {
+                            steps_to_target = Some(step);
+                        }
+                    }
+                }
+            }
+            history.push(step, loss, dev_metric, run_timer.seconds());
+
+            if let (Some(_), Some(target)) = (steps_to_target, cfg.target_metric) {
+                // early-stop once the target is reached (speedup measurement)
+                if last_dev >= target {
+                    break;
+                }
+            }
+            if let Some(cap) = cfg.max_wall_s {
+                if run_timer.seconds() > cap {
+                    break;
+                }
+            }
+        }
+
+        let t = Timer::start();
+        let test_metric =
+            self.eval_metric(runner, params, &data.test, data.n_classes)?;
+        timing.add("final_eval", t.seconds());
+
+        Ok(TrainReport {
+            history,
+            steps_to_target,
+            final_dev_metric: last_dev,
+            test_metric,
+            wall_s: run_timer.seconds(),
+            timing,
+            optimizer: opt.name().to_string(),
+        })
+    }
+
+    fn eval_metric(
+        &self,
+        runner: &ModelRunner,
+        params: &ParamSet,
+        examples: &[crate::data::synth::Example],
+        n_classes: usize,
+    ) -> Result<f32> {
+        let (preds, labels) = runner.eval_predictions(params, examples, n_classes)?;
+        Ok(score(self.cfg.metric, &preds, &labels, n_classes))
+    }
+}
+
+/// Evaluate a parameter set with no training (zero-shot rows of Tables 1-2).
+pub fn zero_shot_metric(
+    runner: &ModelRunner,
+    data: &Dataset,
+    metric: Metric,
+) -> Result<f32> {
+    let params = runner.load_init_params()?;
+    let (preds, labels) = runner.eval_predictions(&params, &data.test, data.n_classes)?;
+    Ok(score(metric, &preds, &labels, data.n_classes))
+}
+
+/// LM pre-training loop (the 100M end-to-end example): loss-only history
+/// over corpus batches; supports both ZO and FO optimizers.
+pub fn run_lm(
+    runner: &ModelRunner,
+    batches: &[Vec<i32>],
+    opt: &mut dyn Optimizer,
+    cfg: &TrainConfig,
+) -> Result<History> {
+    let dims = &runner.spec.dims;
+    let mut params = runner.load_init_params()?;
+    opt.configure_batch(dims.batch);
+    opt.init(&params);
+    let mut zcache = crate::model::params::ZCache::default();
+    let mut history = History::default();
+    let timer = Timer::start();
+    for (step, tokens) in batches.iter().enumerate().map(|(i, b)| (i + 1, b)) {
+        let batch = crate::data::batcher::Batch {
+            tokens: tokens.clone(),
+            labels: vec![],
+            batch: dims.batch,
+            seq: dims.max_seq,
+        };
+        let step_seed = mix64(cfg.seed, step as u64);
+        let loss = match opt.kind() {
+            StepKind::Zo => {
+                let est = if cfg.cache_z {
+                    spsa::estimate_cached(&mut params, &mut zcache, step_seed, cfg.spsa_eps, |p| {
+                        runner.loss(p, &batch)
+                    })?
+                } else {
+                    spsa::estimate_with(&mut params, step_seed, cfg.spsa_eps, |p| {
+                        runner.loss(p, &batch)
+                    })?
+                };
+                opt.step_zo(&mut params, est.g_scale, est.seed)?;
+                est.loss()
+            }
+            StepKind::Fo => {
+                let (loss, grads) = runner.loss_grad(&params, &batch)?;
+                opt.step_fo(&mut params, &grads)?;
+                loss
+            }
+            StepKind::ForwardGrad => {
+                let mut tangent = params.zeros_like();
+                tangent.perturb_trainable(step_seed, 1.0);
+                let (loss, jvp) = runner.loss_jvp(&params, &tangent, &batch)?;
+                opt.step_zo(&mut params, jvp, step_seed)?;
+                loss
+            }
+        };
+        history.push(step, loss, None, timer.seconds());
+        if let Some(cap) = cfg.max_wall_s {
+            if timer.seconds() > cap {
+                break;
+            }
+        }
+    }
+    Ok(history)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = TrainConfig::default();
+        assert!(c.steps > 0);
+        assert!(c.spsa_eps > 0.0);
+        assert_eq!(c.metric, Metric::Accuracy);
+    }
+}

@@ -1,0 +1,123 @@
+//! Learning-rate schedules (the paper's experiments use constant and
+//! linearly-decayed rates with optional warmup; cosine is included for the
+//! extension benches).
+
+use anyhow::{bail, Result};
+
+/// LR schedule over a fixed step budget.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// linear decay from lr to `end_factor`·lr over the budget
+    Linear { end_factor: f32 },
+    /// cosine decay from lr to `end_factor`·lr
+    Cosine { end_factor: f32 },
+}
+
+/// Schedule + warmup wrapper: multiply the base lr by `factor(step)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrSchedule {
+    pub schedule: Schedule,
+    /// linear warmup steps from 0 → lr
+    pub warmup: usize,
+    pub total_steps: usize,
+}
+
+impl LrSchedule {
+    pub fn constant(total_steps: usize) -> Self {
+        Self { schedule: Schedule::Constant, warmup: 0, total_steps }
+    }
+
+    /// Parse from config strings: "constant" | "linear" | "cosine"
+    /// (+ `train.warmup`, `train.lr_end_factor`).
+    pub fn from_config(cfg: &crate::config::Config, total_steps: usize) -> Result<Self> {
+        let warmup = cfg.usize("train.warmup", 0)?;
+        let end = cfg.f32("train.lr_end_factor", 0.1)?;
+        let schedule = match cfg.str("train.schedule", "constant").as_str() {
+            "constant" => Schedule::Constant,
+            "linear" => Schedule::Linear { end_factor: end },
+            "cosine" => Schedule::Cosine { end_factor: end },
+            other => bail!("unknown schedule {other:?}"),
+        };
+        Ok(Self { schedule, warmup, total_steps })
+    }
+
+    /// Multiplicative lr factor at `step` (1-based).
+    pub fn factor(&self, step: usize) -> f32 {
+        if self.warmup > 0 && step <= self.warmup {
+            return step as f32 / self.warmup as f32;
+        }
+        let total = self.total_steps.max(1) as f32;
+        let t = ((step.saturating_sub(self.warmup)) as f32
+            / (total - self.warmup as f32).max(1.0))
+            .clamp(0.0, 1.0);
+        match self.schedule {
+            Schedule::Constant => 1.0,
+            Schedule::Linear { end_factor } => 1.0 + (end_factor - 1.0) * t,
+            Schedule::Cosine { end_factor } => {
+                end_factor + (1.0 - end_factor) * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn constant_is_one_everywhere() {
+        let s = LrSchedule::constant(100);
+        for step in [1, 50, 100] {
+            assert_eq!(s.factor(step), 1.0);
+        }
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule { schedule: Schedule::Constant, warmup: 10, total_steps: 100 };
+        assert!((s.factor(1) - 0.1).abs() < 1e-6);
+        assert!((s.factor(5) - 0.5).abs() < 1e-6);
+        assert_eq!(s.factor(10), 1.0);
+        assert_eq!(s.factor(50), 1.0);
+    }
+
+    #[test]
+    fn linear_decays_to_end_factor() {
+        let s = LrSchedule {
+            schedule: Schedule::Linear { end_factor: 0.1 },
+            warmup: 0,
+            total_steps: 100,
+        };
+        assert!((s.factor(1) - 0.991).abs() < 0.01);
+        assert!((s.factor(100) - 0.1).abs() < 1e-6);
+        assert!(s.factor(50) > s.factor(90));
+    }
+
+    #[test]
+    fn cosine_monotone_decreasing_after_warmup() {
+        let s = LrSchedule {
+            schedule: Schedule::Cosine { end_factor: 0.0 },
+            warmup: 5,
+            total_steps: 100,
+        };
+        let mut prev = f32::INFINITY;
+        for step in 5..=100 {
+            let f = s.factor(step);
+            assert!(f <= prev + 1e-6, "step {step}: {f} > {prev}");
+            prev = f;
+        }
+        assert!(s.factor(100) < 1e-3);
+    }
+
+    #[test]
+    fn from_config_parses() {
+        let c = Config::parse("[train]\nschedule = cosine\nwarmup = 7\nlr_end_factor = 0.2\n").unwrap();
+        let s = LrSchedule::from_config(&c, 50).unwrap();
+        assert_eq!(s.warmup, 7);
+        assert_eq!(s.schedule, Schedule::Cosine { end_factor: 0.2 });
+        let bad = Config::parse("[train]\nschedule = sawtooth\n").unwrap();
+        assert!(LrSchedule::from_config(&bad, 50).is_err());
+    }
+}

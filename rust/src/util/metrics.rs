@@ -1,0 +1,237 @@
+//! Metric recording substrate: step histories, CSV/JSONL writers, timers.
+//!
+//! Every training run produces a `History` (loss / accuracy / wall-time per
+//! logged step) that the benches turn into the paper's tables and figures;
+//! CSV output lands under `reports/` so curves can be re-plotted offline.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// One logged training step.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub dev_acc: Option<f32>,
+    pub wall_s: f64,
+}
+
+/// Loss/accuracy history of one run.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub records: Vec<StepRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, step: usize, loss: f32, dev_acc: Option<f32>, wall_s: f64) {
+        self.records.push(StepRecord { step, loss, dev_acc, wall_s });
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn best_acc(&self) -> Option<f32> {
+        self.records.iter().filter_map(|r| r.dev_acc).fold(None, |acc, a| {
+            Some(acc.map_or(a, |b: f32| b.max(a)))
+        })
+    }
+
+    /// First step at which dev accuracy reached `target` (the paper's
+    /// speedup metric: HELENE steps-to-target vs MeZO steps-to-target).
+    pub fn steps_to_acc(&self, target: f32) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.dev_acc.map_or(false, |a| a >= target))
+            .map(|r| r.step)
+    }
+
+    /// First step at which the smoothed loss dropped to `target`.
+    pub fn steps_to_loss(&self, target: f32) -> Option<usize> {
+        self.records.iter().find(|r| r.loss <= target).map(|r| r.step)
+    }
+
+    /// Trailing-window mean loss (robust convergence signal for noisy ZO).
+    pub fn smoothed_loss(&self, window: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(window)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path)?;
+        writeln!(f, "step,loss,dev_acc,wall_s")?;
+        for r in &self.records {
+            let acc = r.dev_acc.map_or(String::new(), |a| format!("{a}"));
+            writeln!(f, "{},{},{},{}", r.step, r.loss, acc, r.wall_s)?;
+        }
+        Ok(())
+    }
+}
+
+/// Mean ± std over repeated runs — the paper reports "avg (±std) across 5
+/// runs" everywhere.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl MeanStd {
+    pub fn of(xs: &[f64]) -> MeanStd {
+        let n = xs.len();
+        if n == 0 {
+            return MeanStd { mean: f64::NAN, std: f64::NAN, n: 0 };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        MeanStd { mean, std: var.sqrt(), n }
+    }
+}
+
+impl std::fmt::Display for MeanStd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.1} (±{:.1})", self.mean, self.std)
+    }
+}
+
+/// Scoped wall-clock timer for the §Perf pass.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates named wall-time buckets: `timing.add("perturb", t)`.
+/// Printed by the perf bench to locate the hot path.
+#[derive(Clone, Debug, Default)]
+pub struct TimingBreakdown {
+    buckets: Vec<(String, f64, usize)>,
+}
+
+impl TimingBreakdown {
+    pub fn add(&mut self, name: &str, seconds: f64) {
+        if let Some(b) = self.buckets.iter_mut().find(|b| b.0 == name) {
+            b.1 += seconds;
+            b.2 += 1;
+        } else {
+            self.buckets.push((name.to_string(), seconds, 1));
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.buckets.iter().map(|b| b.1).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<(f64, usize)> {
+        self.buckets.iter().find(|b| b.0 == name).map(|b| (b.1, b.2))
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().max(1e-12);
+        let mut rows: Vec<&(String, f64, usize)> = self.buckets.iter().collect();
+        rows.sort_by(|a, b| b.1.total_cmp(&a.1));
+        let mut s = String::new();
+        for (name, secs, n) in rows {
+            s.push_str(&format!(
+                "  {name:<24} {secs:>9.3}s  {:>5.1}%  ({n} calls, {:.3} ms/call)\n",
+                100.0 * secs / total,
+                1000.0 * secs / *n as f64
+            ));
+        }
+        s
+    }
+}
+
+/// Write a simple table (rows of (label, cells)) as CSV under reports/.
+pub fn write_table_csv(
+    path: &Path,
+    header: &[&str],
+    rows: &[(String, Vec<String>)],
+) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut f = fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for (label, cells) in rows {
+        writeln!(f, "{},{}", label, cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_to_acc_finds_first_crossing() {
+        let mut h = History::default();
+        h.push(0, 2.0, Some(0.3), 0.0);
+        h.push(100, 1.5, Some(0.55), 1.0);
+        h.push(200, 1.0, Some(0.8), 2.0);
+        assert_eq!(h.steps_to_acc(0.5), Some(100));
+        assert_eq!(h.steps_to_acc(0.9), None);
+        assert_eq!(h.steps_to_loss(1.2), Some(200));
+        assert_eq!(h.best_acc(), Some(0.8));
+    }
+
+    #[test]
+    fn smoothed_loss_window() {
+        let mut h = History::default();
+        for (i, l) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            h.push(i, *l, None, 0.0);
+        }
+        assert!((h.smoothed_loss(2).unwrap() - 1.5).abs() < 1e-6);
+        assert!((h.smoothed_loss(10).unwrap() - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_std() {
+        let ms = MeanStd::of(&[1.0, 2.0, 3.0]);
+        assert!((ms.mean - 2.0).abs() < 1e-12);
+        assert!((ms.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(format!("{}", MeanStd::of(&[90.0, 92.0])), "91.0 (±1.0)");
+    }
+
+    #[test]
+    fn csv_write(){
+        let dir = std::env::temp_dir().join("helene_metrics_test");
+        let path = dir.join("h.csv");
+        let mut h = History::default();
+        h.push(1, 0.5, Some(0.7), 0.1);
+        h.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss,dev_acc,wall_s\n"));
+        assert!(text.contains("1,0.5,0.7,0.1"));
+    }
+
+    #[test]
+    fn timing_breakdown_aggregates() {
+        let mut t = TimingBreakdown::default();
+        t.add("forward", 1.0);
+        t.add("forward", 1.0);
+        t.add("perturb", 0.5);
+        assert_eq!(t.get("forward"), Some((2.0, 2)));
+        assert!((t.total() - 2.5).abs() < 1e-12);
+        let rep = t.report();
+        assert!(rep.contains("forward"));
+        assert!(rep.contains("80.0%"));
+    }
+}

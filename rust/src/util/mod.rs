@@ -1,0 +1,7 @@
+//! Shared substrates: RNG, JSON, metrics, property-testing.
+
+pub mod json;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod zig_tables;

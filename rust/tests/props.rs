@@ -1,0 +1,259 @@
+//! Property tests on coordinator invariants (hand-rolled proptest-lite,
+//! see `util::prop`). These don't need artifacts — they exercise the pure
+//! ZO machinery over randomized layouts, seeds, and hyper-parameters.
+
+use helene::model::manifest::{ModelDims, ModelKind, ParamInfo, VariantSpec};
+use helene::model::params::ParamSet;
+use helene::optim::clip::ClipPolicy;
+use helene::optim::helene::{Helene, HeleneConfig, MomentumMode};
+use helene::optim::sophia::ZoSophia;
+use helene::optim::zo_sgd::ZoSgd;
+use helene::optim::{spsa, Optimizer};
+use helene::util::prop::{forall, Gen};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Random ParamSet: 1-5 layer groups of random sizes/values.
+fn gen_params(g: &mut Gen) -> ParamSet {
+    let n_layers = g.usize_in(1, 6);
+    let mut params = Vec::new();
+    let mut offset = 0;
+    for i in 0..n_layers {
+        let size = g.usize_in(1, 200);
+        params.push(ParamInfo {
+            name: format!("p{i}"),
+            shape: vec![size],
+            layer: format!("layer{}", i / 2),
+            trainable: true,
+            offset,
+            size,
+        });
+        offset += size;
+    }
+    let spec = Arc::new(VariantSpec {
+        model: "prop".into(),
+        variant: "ft".into(),
+        kind: ModelKind::Cls,
+        dims: ModelDims {
+            vocab: 8, d_model: 4, n_heads: 1, n_layers: 1, d_ff: 4,
+            max_seq: 4, n_classes: 2, batch: 2, lora_rank: 1, prefix_len: 1,
+        },
+        params_bin: "none".into(),
+        n_params: offset,
+        params: params.clone(),
+        entrypoints: BTreeMap::new(),
+    });
+    let arrays = params.iter().map(|p| g.vec_f32(p.size, -2.0, 2.0)).collect();
+    let train_mask = (0..n_layers).map(|_| g.bool() || true).collect();
+    ParamSet { spec, arrays, train_mask }
+}
+
+#[test]
+fn prop_perturb_restore_drift_bounded() {
+    forall("perturb-restore-drift", |g| {
+        let mut p = gen_params(g);
+        let orig = p.clone();
+        let seed = g.u64();
+        let eps = g.f32_in(1e-6, 1e-1);
+        // the SPSA cycle: +ε, −2ε, +ε
+        p.perturb_trainable(seed, eps);
+        p.perturb_trainable(seed, -2.0 * eps);
+        p.perturb_trainable(seed, eps);
+        let drift = p.max_abs_diff(&orig);
+        // drift bounded by a few ulps of the (value + perturbation) scale
+        let bound = 8.0 * f32::EPSILON * (2.0 + 6.0 * eps);
+        if drift > bound {
+            return Err(format!("drift {drift} > bound {bound} (eps {eps})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spsa_estimates_quadratic_gradient() {
+    // for L = ½‖θ‖², zᵀ∇L is recovered to O(ε) for any seed/layout
+    forall("spsa-quadratic", |g| {
+        let mut p = gen_params(g);
+        let seed = g.u64();
+        let eps = 1e-4f32;
+        let mut loss_mag = 0f32;
+        let est = spsa::estimate_with(&mut p, seed, eps, |q| {
+            // accumulate in f64 so the property tests SPSA itself, not the
+            // oracle's sequential f32 summation error
+            let l = 0.5 * q
+                .arrays
+                .iter()
+                .flatten()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>() as f32;
+            loss_mag = loss_mag.max(l);
+            Ok(l)
+        })
+        .map_err(|e| e.to_string())?;
+        let mut proj = 0f64;
+        p.visit_z(seed, |i, z| {
+            for (x, zv) in p.arrays[i].iter().zip(z) {
+                proj += (*x as f64) * (*zv as f64);
+            }
+        });
+        // error floor: f32 cancellation in (L⁺ − L⁻) is ~ulp(L)/2ε
+        let cancel = (loss_mag * f32::EPSILON) as f64 / (2.0 * eps as f64);
+        let tol = 0.02 * proj.abs().max(1.0) + 8.0 * cancel;
+        let err = (est.g_scale as f64 - proj).abs();
+        if err > tol {
+            return Err(format!("spsa {} vs proj {proj} (tol {tol})", est.g_scale));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_helene_step_bounded_by_lambda_floor() {
+    // the preconditioner denominator is ≥ γλ + ε, so the per-element step
+    // is ≤ lr·|m|/(γλ) (+ weight-decay term); with fresh state |m| ≤ α|g|.
+    forall("helene-step-bound", |g| {
+        let mut p = gen_params(g);
+        let before = p.clone();
+        let lam = g.f32_in(0.1, 3.0);
+        let lr = g.f32_in(1e-5, 1e-2);
+        let g_scale = g.f32_in(-2.0, 2.0);
+        let mut opt = Helene::new(HeleneConfig {
+            lr,
+            clip: ClipPolicy::Constant(lam),
+            weight_decay: 0.0,
+            gamma: 1.0,
+            ..Default::default()
+        });
+        opt.init(&p);
+        let seed = g.u64();
+        opt.step_zo(&mut p, g_scale, seed).map_err(|e| e.to_string())?;
+        // bound per element: |Δθ| ≤ lr·|α·g_scale·z|/λ with α ≤ 1
+        let mut max_viol = 0f32;
+        before.visit_z(seed, |i, z| {
+            for (j, zv) in z.iter().enumerate() {
+                let step = (p.arrays[i][j] - before.arrays[i][j]).abs();
+                let bound = lr * (g_scale * zv).abs() / lam * 1.01 + 1e-7;
+                if step > bound {
+                    max_viol = max_viol.max(step - bound);
+                }
+            }
+        });
+        if max_viol > 0.0 {
+            return Err(format!("step exceeded λ-floor bound by {max_viol}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layer_scaled_lambda_decreases_with_width() {
+    forall("lambda-monotone", |g| {
+        let d1 = g.usize_in(1, 1000);
+        let d2 = d1 + g.usize_in(1, 1000);
+        let r = g.f32_in(0.01, 10.0);
+        let l = ClipPolicy::LayerScaled { r }
+            .lambdas(&[d1, d2])
+            .map_err(|e| e.to_string())?;
+        if l[0] < l[1] {
+            return Err(format!("λ({d1})={} < λ({d2})={}", l[0], l[1]));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sophia_update_magnitude_clipped() {
+    forall("sophia-clip", |g| {
+        let mut p = gen_params(g);
+        let before = p.clone();
+        let lr = g.f32_in(1e-5, 1e-2);
+        let mut opt = ZoSophia::new(lr);
+        opt.init(&p);
+        let steps = g.usize_in(1, 5);
+        for s in 0..steps {
+            opt.step_zo(&mut p, g.f32_in(-3.0, 3.0), g.u64().wrapping_add(s as u64))
+                .map_err(|e| e.to_string())?;
+        }
+        let max_step = p.max_abs_diff(&before);
+        let bound = steps as f32 * lr * opt.rho * 10.0 + 1e-6;
+        if max_step > bound {
+            return Err(format!("sophia moved {max_step} > {bound}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zo_sgd_is_exact_seeded_axpy() {
+    forall("zo-sgd-axpy", |g| {
+        let mut p = gen_params(g);
+        let mut q = p.clone();
+        let lr = g.f32_in(1e-6, 1e-1);
+        let gs = g.f32_in(-5.0, 5.0);
+        let seed = g.u64();
+        let mut opt = ZoSgd::new(lr);
+        opt.init(&p);
+        opt.step_zo(&mut p, gs, seed).map_err(|e| e.to_string())?;
+        q.perturb_trainable(seed, -lr * gs);
+        if p.max_abs_diff(&q) != 0.0 {
+            return Err("zo-sgd diverged from manual axpy".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_update_ignores_frozen_arrays() {
+    forall("frozen-untouched", |g| {
+        let mut p = gen_params(g);
+        // freeze a random prefix of arrays
+        let k = g.usize_in(0, p.n_arrays());
+        for i in 0..k {
+            p.train_mask[i] = false;
+        }
+        let before = p.clone();
+        let mut opt = Helene::paper_defaults().with_lr(1e-2);
+        opt.init(&p);
+        opt.step_zo(&mut p, g.f32_in(-2.0, 2.0), g.u64())
+            .map_err(|e| e.to_string())?;
+        for i in 0..k {
+            if p.arrays[i] != before.arrays[i] {
+                return Err(format!("frozen array {i} moved"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_momentum_modes_all_descend_on_quadratic() {
+    // every HELENE momentum mode reduces ‖θ‖ on L = ½‖θ‖² when driven by
+    // exact SPSA estimates (descent sanity across the ablation ladder)
+    forall("modes-descend", |g| {
+        let mode = match g.usize_in(0, 4) {
+            0 => MomentumMode::None,
+            1 => MomentumMode::Ema,
+            2 => MomentumMode::Biased,
+            _ => MomentumMode::Annealed,
+        };
+        let mut p = gen_params(g);
+        let norm0: f64 = p.arrays.iter().flatten().map(|&x| (x as f64).powi(2)).sum();
+        if norm0 < 1e-6 {
+            return Ok(());
+        }
+        let mut opt = Helene::paper_defaults().with_lr(5e-3).with_momentum(mode);
+        opt.init(&p);
+        for s in 0..100 {
+            let est = spsa::estimate_with(&mut p, 1000 + s, 1e-4, |q| {
+                Ok(0.5 * q.arrays.iter().flatten().map(|x| x * x).sum::<f32>())
+            })
+            .map_err(|e| e.to_string())?;
+            opt.step_zo(&mut p, est.g_scale, est.seed).map_err(|e| e.to_string())?;
+        }
+        let norm1: f64 = p.arrays.iter().flatten().map(|&x| (x as f64).powi(2)).sum();
+        if norm1 >= norm0 {
+            return Err(format!("{mode:?}: ‖θ‖² {norm0} → {norm1} did not descend"));
+        }
+        Ok(())
+    });
+}

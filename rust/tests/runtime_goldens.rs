@@ -1,0 +1,186 @@
+//! Integration: the Rust runtime reproduces python-recorded numerics through
+//! the compiled HLO artifacts, and the executable cache behaves.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent).
+
+use helene::data::batcher::Batch;
+use helene::runtime::{ModelRunner, Runtime};
+use helene::util::json::Json;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime loads"))
+}
+
+/// The deterministic batch used by aot.write_goldens.
+fn golden_batch(batch: usize, seq: usize, vocab: usize) -> Batch {
+    let mut tokens = Vec::with_capacity(batch * seq);
+    for b in 0..batch {
+        for s in 0..seq {
+            tokens.push(((7 * b + 3 * s) % vocab) as i32);
+        }
+    }
+    let labels = (0..batch).map(|b| (b % 4) as i32).collect();
+    Batch { tokens, labels, batch, seq }
+}
+
+fn goldens(rt: &Runtime) -> Json {
+    let text = std::fs::read_to_string(rt.manifest.dir.join("goldens.json")).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+#[test]
+fn losses_match_python_goldens() {
+    let Some(rt) = runtime() else { return };
+    let g = goldens(&rt);
+    for (model, variant) in [
+        ("cls-tiny", "ft"),
+        ("cls-tiny", "lora"),
+        ("cls-tiny", "prefix"),
+        ("cls-small", "ft"),
+        ("dec-small", "ft"),
+        ("lm-small", "ft"),
+    ] {
+        let key = format!("{model}.{variant}");
+        let Some(rec) = g.get(&key) else { continue };
+        let want = rec.req("loss").unwrap().as_f64().unwrap() as f32;
+        let runner = ModelRunner::new(&rt, model, variant).unwrap();
+        let params = runner.load_init_params().unwrap();
+        let d = &runner.spec.dims;
+        let batch = golden_batch(d.batch, d.max_seq, d.vocab);
+        let got = runner.loss(&params, &batch).unwrap();
+        assert!(
+            (got - want).abs() < 1e-4 * want.abs().max(1.0),
+            "{key}: rust {got} vs python {want}"
+        );
+    }
+}
+
+#[test]
+fn logits_match_python_goldens() {
+    let Some(rt) = runtime() else { return };
+    let g = goldens(&rt);
+    let rec = g.get("cls-tiny.ft").unwrap();
+    let want: Vec<f32> = rec
+        .req("logits_row0")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let params = runner.load_init_params().unwrap();
+    let d = &runner.spec.dims;
+    let batch = golden_batch(d.batch, d.max_seq, d.vocab);
+    let got = runner.logits(&params, &batch).unwrap();
+    for (i, w) in want.iter().enumerate() {
+        assert!((got[i] - w).abs() < 1e-4, "logit {i}: {} vs {w}", got[i]);
+    }
+}
+
+#[test]
+fn pallas_and_ref_graphs_agree_through_pjrt() {
+    // the L1 Pallas attention graph and the oracle graph compute the same
+    // loss through the full runtime stack
+    let Some(rt) = runtime() else { return };
+    for model in ["cls-small", "dec-small"] {
+        let mut runner = ModelRunner::new(&rt, model, "ft").unwrap();
+        runner.set_ref_graph(false);
+        let params = runner.load_init_params().unwrap();
+        let d = runner.spec.dims.clone();
+        let batch = golden_batch(d.batch, d.max_seq, d.vocab);
+        let pallas = runner.loss(&params, &batch).unwrap();
+        runner.set_ref_graph(true);
+        let oracle = runner.loss(&params, &batch).unwrap();
+        assert!(
+            (pallas - oracle).abs() < 2e-5 * oracle.abs().max(1.0),
+            "{model}: pallas {pallas} vs oracle {oracle}"
+        );
+    }
+}
+
+#[test]
+fn executable_cache_no_recompilation_in_loop() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let params = runner.load_init_params().unwrap();
+    let d = &runner.spec.dims;
+    let batch = golden_batch(d.batch, d.max_seq, d.vocab);
+    let _ = runner.loss(&params, &batch).unwrap();
+    let after_first = rt.compilations();
+    for _ in 0..5 {
+        let _ = runner.loss(&params, &batch).unwrap();
+    }
+    assert_eq!(rt.compilations(), after_first, "loop recompiled an executable");
+    assert!(rt.executions() >= 6);
+}
+
+#[test]
+fn loss_grad_gradient_matches_spsa_projection() {
+    // consistency across entrypoints: the SPSA projected gradient should
+    // approximate zᵀ(exact grad) from loss_grad
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let mut params = runner.load_init_params().unwrap();
+    let d = runner.spec.dims.clone();
+    let batch = golden_batch(d.batch, d.max_seq, d.vocab);
+
+    let (_, grads) = runner.loss_grad(&params, &batch).unwrap();
+    let seed = 1234u64;
+    let est = helene::optim::spsa::estimate_with(&mut params, seed, 1e-3, |p| {
+        runner.loss(p, &batch)
+    })
+    .unwrap();
+    // recompute zᵀg exactly
+    let mut proj = 0f64;
+    params.visit_z(seed, |i, z| {
+        for (gv, zv) in grads.arrays[i].iter().zip(z) {
+            proj += (*gv as f64) * (*zv as f64);
+        }
+    });
+    let err = (est.g_scale as f64 - proj).abs();
+    assert!(
+        err < 0.05 * proj.abs().max(0.5),
+        "SPSA {} vs exact projection {}",
+        est.g_scale,
+        proj
+    );
+}
+
+#[test]
+fn jvp_matches_grad_dot_tangent_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let params = runner.load_init_params().unwrap();
+    let d = runner.spec.dims.clone();
+    let batch = golden_batch(d.batch, d.max_seq, d.vocab);
+    let mut tangent = params.zeros_like();
+    tangent.perturb_trainable(77, 1.0);
+    let (loss1, jvp) = runner.loss_jvp(&params, &tangent, &batch).unwrap();
+    let (loss2, grads) = runner.loss_grad(&params, &batch).unwrap();
+    assert!((loss1 - loss2).abs() < 1e-5);
+    let dot = grads.trainable_dot(&tangent) as f32;
+    assert!((jvp - dot).abs() < 1e-3 * dot.abs().max(1.0), "jvp {jvp} vs dot {dot}");
+}
+
+#[test]
+fn eval_predictions_cover_split_once() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let params = runner.load_init_params().unwrap();
+    let d = runner.spec.dims.clone();
+    let data = helene::tasks::generate("sst2", d.vocab, d.max_seq, 4, 3).unwrap();
+    // odd-sized split exercises the wrap-and-truncate path
+    let split = &data.dev[..11];
+    let (preds, labels) = runner.eval_predictions(&params, split, 2).unwrap();
+    assert_eq!(preds.len(), 11);
+    assert_eq!(labels.len(), 11);
+    for (l, e) in labels.iter().zip(split) {
+        assert_eq!(*l, e.label);
+    }
+}

@@ -1,0 +1,237 @@
+//! End-to-end training integration: the full L3→PJRT stack learns.
+
+use helene::model::checkpoint;
+use helene::optim::{self, Optimizer};
+use helene::runtime::{ModelRunner, Runtime};
+use helene::tasks;
+use helene::train::{zero_shot_metric, TrainConfig, Trainer};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime loads"))
+}
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig { steps, eval_every: steps / 2, eval_examples: 64, ..Default::default() }
+}
+
+#[test]
+fn fo_adam_solves_sst2_tiny() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", d.vocab, d.max_seq, 16, 0).unwrap();
+    let mut opt = optim::by_name("fo-adam", 1e-2).unwrap();
+    let report = Trainer::new(cfg(150)).run(&runner, &data, opt.as_mut()).unwrap();
+    assert!(report.test_metric > 0.9, "fo-adam test acc {}", report.test_metric);
+    assert!(report.history.final_loss().unwrap() < 0.1);
+}
+
+#[test]
+fn helene_zo_beats_zero_shot() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", d.vocab, d.max_seq, 16, 0).unwrap();
+    let zs = zero_shot_metric(&runner, &data, tasks::Metric::Accuracy).unwrap();
+    let mut opt = optim::by_name("helene", 3e-3).unwrap();
+    let report = Trainer::new(cfg(1500)).run(&runner, &data, opt.as_mut()).unwrap();
+    assert!(
+        report.test_metric > zs + 0.1,
+        "helene {} vs zero-shot {zs}",
+        report.test_metric
+    );
+}
+
+#[test]
+fn runs_are_reproducible_by_seed() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", d.vocab, d.max_seq, 8, 1).unwrap();
+    let run = || {
+        let mut opt = optim::by_name("helene", 1e-3).unwrap();
+        Trainer::new(cfg(60)).run(&runner, &data, opt.as_mut()).unwrap()
+    };
+    let a = run();
+    let b = run();
+    let la: Vec<f32> = a.history.records.iter().map(|r| r.loss).collect();
+    let lb: Vec<f32> = b.history.records.iter().map(|r| r.loss).collect();
+    assert_eq!(la, lb, "identical seeds must give identical loss traces");
+    assert_eq!(a.test_metric, b.test_metric);
+}
+
+#[test]
+fn different_seeds_differ() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", d.vocab, d.max_seq, 8, 1).unwrap();
+    let run = |seed: u64| {
+        let mut opt = optim::by_name("mezo", 1e-3).unwrap();
+        let mut c = cfg(40);
+        c.seed = seed;
+        Trainer::new(c).run(&runner, &data, opt.as_mut()).unwrap()
+    };
+    let a = run(0);
+    let b = run(123);
+    let la: Vec<f32> = a.history.records.iter().map(|r| r.loss).collect();
+    let lb: Vec<f32> = b.history.records.iter().map(|r| r.loss).collect();
+    assert_ne!(la, lb);
+}
+
+#[test]
+fn peft_variants_train() {
+    // LoRA and prefix tuning move only their adapter params and still learn
+    let Some(rt) = runtime() else { return };
+    for variant in ["lora", "prefix"] {
+        let runner = ModelRunner::new(&rt, "cls-tiny", variant).unwrap();
+        let d = runner.spec.dims.clone();
+        let data = tasks::generate("sst2", d.vocab, d.max_seq, 16, 0).unwrap();
+        let mut params = runner.load_init_params().unwrap();
+        let frozen_before: Vec<Vec<f32>> = params
+            .arrays
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !params.is_trainable(*i))
+            .map(|(_, a)| a.clone())
+            .collect();
+        let mut opt = optim::by_name("fo-adam", 1e-2).unwrap();
+        let report = Trainer::new(cfg(300))
+            .run_with_params(&runner, &data, opt.as_mut(), &mut params)
+            .unwrap();
+        // rank-2 LoRA / len-2 prefix on a 2-block model: modest but real
+        assert!(
+            report.test_metric > 0.72,
+            "{variant}: test acc {}",
+            report.test_metric
+        );
+        let frozen_after: Vec<Vec<f32>> = params
+            .arrays
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !params.is_trainable(*i))
+            .map(|(_, a)| a.clone())
+            .collect();
+        assert_eq!(frozen_before, frozen_after, "{variant}: frozen params moved");
+    }
+}
+
+#[test]
+fn linear_probing_trains_head_only() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", d.vocab, d.max_seq, 16, 0).unwrap();
+    let mut params = runner.load_init_params().unwrap();
+    let embed_before = params.arrays[0].clone();
+    let mut opt = optim::by_name("fo-adam", 1e-2).unwrap();
+    let mut c = cfg(100);
+    c.train_only_layers = Some(vec!["head".to_string()]);
+    let report = Trainer::new(c)
+        .run_with_params(&runner, &data, opt.as_mut(), &mut params)
+        .unwrap();
+    assert_eq!(params.arrays[0], embed_before, "LP must not move the embedding");
+    assert!(report.test_metric > 0.55, "LP acc {}", report.test_metric);
+}
+
+#[test]
+fn cons_post_check_runs_in_loop() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", d.vocab, d.max_seq, 8, 2).unwrap();
+    let mut opt = optim::zo_sgd::ZoSgdCons::new(3e-3);
+    let _ = Trainer::new(cfg(150)).run(&runner, &data, &mut opt).unwrap();
+    assert_eq!(opt.accepted + opt.reverted, 150, "every step adjudicated");
+    assert!(opt.reverted > 0, "some ZO steps should get reverted");
+}
+
+#[test]
+fn checkpoint_round_trip_resumes_identically() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", d.vocab, d.max_seq, 8, 5).unwrap();
+    let mut params = runner.load_init_params().unwrap();
+    let mut opt = optim::by_name("mezo", 1e-3).unwrap();
+    let _ = Trainer::new(cfg(30))
+        .run_with_params(&runner, &data, opt.as_mut(), &mut params)
+        .unwrap();
+
+    let path = std::env::temp_dir().join("helene_e2e_ckpt/ck.bin");
+    checkpoint::save(&path, 30, &params, &[]).unwrap();
+    let (step, restored, extras) = checkpoint::load(&path, params.spec.clone()).unwrap();
+    assert_eq!(step, 30);
+    assert!(extras.is_empty());
+    assert_eq!(restored.arrays, params.arrays);
+
+    // the restored params evaluate identically
+    let a = runner.eval_accuracy(&params, &data.test[..32]).unwrap();
+    let b = runner.eval_accuracy(&restored, &data.test[..32]).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn memory_footprint_matches_paper_c1() {
+    // §C.1: HELENE ≈ 3× MeZO (params + m + h); Adam-family 3×; MeZO 1×.
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-small", "ft").unwrap();
+    let params = runner.load_init_params().unwrap();
+    let psz = params.state_bytes();
+
+    let mut helene = optim::by_name("helene", 1e-3).unwrap();
+    helene.init(&params);
+    assert_eq!(psz + helene.state_bytes(), 3 * psz);
+
+    let mut mezo = optim::by_name("mezo", 1e-3).unwrap();
+    mezo.init(&params);
+    assert_eq!(psz + mezo.state_bytes(), psz);
+
+    let mut adam = optim::by_name("zo-adam", 1e-3).unwrap();
+    adam.init(&params);
+    assert_eq!(psz + adam.state_bytes(), 3 * psz);
+
+    let mut sophia = optim::by_name("zo-sophia", 1e-3).unwrap();
+    sophia.init(&params);
+    assert_eq!(psz + sophia.state_bytes(), 3 * psz);
+}
+
+#[test]
+fn forward_grad_trains() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "cls-tiny", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let data = tasks::generate("sst2", d.vocab, d.max_seq, 16, 0).unwrap();
+    let mut opt = optim::by_name("forward-grad", 1e-3).unwrap();
+    let report = Trainer::new(cfg(300)).run(&runner, &data, opt.as_mut()).unwrap();
+    let first_losses: f32 = report.history.records[..20].iter().map(|r| r.loss).sum::<f32>() / 20.0;
+    let last = report.history.smoothed_loss(20).unwrap();
+    assert!(last < first_losses, "forward-grad loss did not drop: {first_losses} → {last}");
+}
+
+#[test]
+fn lm_training_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let runner = ModelRunner::new(&rt, "lm-small", "ft").unwrap();
+    let d = runner.spec.dims.clone();
+    let corpus = helene::data::corpus::TinyCorpus::new(d.vocab, 4, 0.05, 42);
+    let batches = corpus.batches(250, d.batch, d.max_seq, 0);
+    let mut opt = optim::by_name("fo-adam", 3e-3).unwrap();
+    let tc = TrainConfig::default();
+    let hist = helene::train::run_lm(&runner, &batches, opt.as_mut(), &tc).unwrap();
+    let first = hist.records[0].loss;
+    let last = hist.smoothed_loss(10).unwrap();
+    // 250 Adam steps capture the unigram statistics: the loss must drop
+    // well below the uniform baseline ln(V), heading towards the corpus'
+    // unigram entropy (≈ ½ ln V)
+    assert!(
+        last < first - 0.8,
+        "LM loss did not drop: {first} → {last} (unigram {})",
+        corpus.unigram_entropy()
+    );
+}
