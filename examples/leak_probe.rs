@@ -36,8 +36,8 @@ fn main() -> anyhow::Result<()> {
             "buf" => {
                 let exe = rt.executable(&runner.spec.entrypoint("loss_ref")?.file)?;
                 let mut owned = Vec::new();
-                for (p, arr) in runner.spec.params.iter().zip(&params.arrays) {
-                    owned.push(rt.stage_f32(arr, &p.shape)?);
+                for (i, p) in runner.spec.params.iter().enumerate() {
+                    owned.push(rt.stage_f32(params.array(i), &p.shape)?);
                 }
                 owned.push(rt.stage_i32(&batch.tokens, &[d.batch, d.max_seq])?);
                 owned.push(rt.stage_i32(&batch.labels, &[d.batch])?);
@@ -47,8 +47,8 @@ fn main() -> anyhow::Result<()> {
             }
             "lit" => {
                 // literal marshalling only, no execution
-                for (p, arr) in runner.spec.params.iter().zip(&params.arrays) {
-                    let _ = lit_f32(arr, &p.shape)?;
+                for (i, p) in runner.spec.params.iter().enumerate() {
+                    let _ = lit_f32(params.array(i), &p.shape)?;
                 }
             }
             other => anyhow::bail!("mode {other}?"),

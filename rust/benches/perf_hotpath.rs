@@ -1,21 +1,30 @@
 //! §Perf: hot-path microbenchmarks (no criterion in the vendored set; this
 //! is a plain timing harness with warmup + repeated trials).
 //!
-//! Measures the L3 per-step cost structure the perf pass optimizes:
-//!   * perturb/restore pass over a ParamSet (RNG + AXPY throughput)
-//!   * one PJRT forward (`loss`) — Pallas vs oracle graph
-//!   * full SPSA step (2 probes + restore)
-//!   * HELENE optimizer update (host) vs the compiled fused L1 kernel
-//!   * loss_grad (FO path)
+//! Two sections:
+//!
+//! 1. **Host section** (always runs — no artifacts needed): the sharded
+//!    flat-arena hot path on the largest synthetic variant, swept across
+//!    rayon pool sizes 1/2/4/8 for perturb / optimizer step / full SPSA
+//!    cycle, plus a bitwise thread-count determinism check. Emits
+//!    machine-readable `reports/BENCH_hotpath.json` (the perf trajectory
+//!    seed) in addition to the printed table.
+//! 2. **PJRT section** (skipped when `artifacts/` is absent): forward
+//!    passes, the buffered fast path, the fused L1 update kernel and
+//!    loss_grad — the per-step cost structure DESIGN.md §Perf documents.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
-use helene::bench::Bench;
+use helene::bench::{Bench, Scale};
 use helene::data::batcher::Batcher;
+use helene::model::params::{ParamSet, ZCache, SHARD_SIZE};
 use helene::optim::helene::Helene;
 use helene::optim::{spsa, Optimizer};
-use helene::runtime::{lit_f32, ModelRunner};
+use helene::runtime::{lit_f32, ModelRunner, Runtime};
 use helene::tasks;
+use helene::util::json::Json;
 use helene::util::rng::Pcg64;
 
 fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
@@ -29,12 +38,156 @@ fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
-fn main() -> anyhow::Result<()> {
-    let b = Bench::new("perf_hotpath")?;
-    let iters = match b.scale {
-        helene::bench::Scale::Smoke => 5,
-        _ => 20,
+/// The largest synthetic variant at this scale (layer sizes deliberately
+/// misaligned with SHARD_SIZE so segments straddle shard boundaries).
+fn synth_sizes(scale: Scale) -> Vec<usize> {
+    let n: usize = match scale {
+        Scale::Smoke => 1 << 20,   // ~1.0M params (CI)
+        Scale::Default => 1 << 22, // ~4.2M
+        Scale::Full => 1 << 23,    // ~8.4M
     };
+    vec![n / 2, n / 4, n / 8, n / 8 + 12_345]
+}
+
+struct ThreadRow {
+    threads: usize,
+    perturb_ms: f64,
+    step_ms: f64,
+    cycle_ms: f64,
+}
+
+fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
+    let sizes = synth_sizes(scale);
+    let mut rows = Vec::new();
+    let base = ParamSet::synthetic(&sizes, 0.5);
+    let n = base.n_params();
+    println!(
+        "== host hot path: {} params, {} shards of {} ==",
+        n,
+        base.n_shards(),
+        SHARD_SIZE
+    );
+    println!("  {:<10} {:>12} {:>12} {:>12} {:>14}", "threads", "perturb ms", "step ms", "cycle ms", "perturb Melem/s");
+
+    for &t in &[1usize, 2, 4, 8] {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(t).build()?;
+        let mut params = base.clone();
+        let mut opt = Helene::paper_defaults().with_lr(1e-3);
+        opt.configure_batch(8);
+        opt.init(&params);
+        let mut zcache = ZCache::default();
+        let row = pool.install(|| {
+            // 1. perturb+restore pass (RNG + AXPY throughput)
+            let perturb_ms = 1000.0 * time(1, iters, || {
+                params.perturb_trainable(1234, 1e-3);
+                params.perturb_trainable(1234, -1e-3);
+            });
+            // 2. one fused HELENE update (momentum + A-GNB + clipped step)
+            let mut seed = 0u64;
+            let step_ms = 1000.0 * time(1, iters, || {
+                seed += 1;
+                opt.step_zo(&mut params, 0.3, seed).unwrap();
+            });
+            // 3. full MeZO cycle: ±ε probes + restore + optimizer update,
+            //    with a free loss oracle so the row isolates the ZO
+            //    machinery itself (z-cache path, as the trainer defaults)
+            let cycle_ms = 1000.0 * time(1, iters, || {
+                seed += 1;
+                let est = spsa::estimate_cached(&mut params, &mut zcache, seed, 1e-3, |_| Ok(0.0))
+                    .unwrap();
+                opt.step_zo_cached(&mut params, est.g_scale, est.seed, &zcache).unwrap();
+            });
+            ThreadRow { threads: t, perturb_ms, step_ms, cycle_ms }
+        });
+        println!(
+            "  {:<10} {:>12.2} {:>12.2} {:>12.2} {:>14.0}",
+            row.threads,
+            row.perturb_ms,
+            row.step_ms,
+            row.cycle_ms,
+            2.0 * n as f64 / row.perturb_ms / 1e3
+        );
+        rows.push(row);
+    }
+
+    // bitwise determinism across pool sizes (the shard-stream guarantee)
+    let run_in = |threads: usize| -> anyhow::Result<ParamSet> {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
+        let mut p = base.clone();
+        let mut opt = Helene::paper_defaults().with_lr(1e-3);
+        opt.init(&p);
+        pool.install(|| {
+            p.perturb_trainable(99, 1e-3);
+            opt.step_zo(&mut p, 0.7, 100).unwrap();
+        });
+        Ok(p)
+    };
+    let a = run_in(1)?;
+    let b = run_in(8)?;
+    let identical = a.flat() == b.flat();
+    println!(
+        "  determinism 1 vs 8 threads: {}",
+        if identical { "bitwise identical" } else { "MISMATCH" }
+    );
+    anyhow::ensure!(identical, "thread-count determinism violated");
+
+    if let (Some(r1), Some(r4)) = (
+        rows.iter().find(|r| r.threads == 1),
+        rows.iter().find(|r| r.threads == 4),
+    ) {
+        println!(
+            "  speedup @4 threads: perturb {:.2}x  step {:.2}x  cycle {:.2}x",
+            r1.perturb_ms / r4.perturb_ms,
+            r1.step_ms / r4.step_ms,
+            r1.cycle_ms / r4.cycle_ms,
+        );
+    }
+    Ok(rows)
+}
+
+fn write_json(scale: Scale, rows: &[ThreadRow], n_params: usize) -> anyhow::Result<PathBuf> {
+    let mut threads = BTreeMap::new();
+    for r in rows {
+        let mut o = BTreeMap::new();
+        o.insert("perturb_ms".to_string(), Json::Num(r.perturb_ms));
+        o.insert("step_ms".to_string(), Json::Num(r.step_ms));
+        o.insert("cycle_ms".to_string(), Json::Num(r.cycle_ms));
+        threads.insert(r.threads.to_string(), Json::Obj(o));
+    }
+    let speedup = |f: fn(&ThreadRow) -> f64| -> Json {
+        let r1 = rows.iter().find(|r| r.threads == 1);
+        let r4 = rows.iter().find(|r| r.threads == 4);
+        match (r1, r4) {
+            (Some(a), Some(b)) => Json::Num(f(a) / f(b)),
+            _ => Json::Null,
+        }
+    };
+    let mut sp = BTreeMap::new();
+    sp.insert("perturb".to_string(), speedup(|r| r.perturb_ms));
+    sp.insert("step".to_string(), speedup(|r| r.step_ms));
+    sp.insert("cycle".to_string(), speedup(|r| r.cycle_ms));
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("perf_hotpath".into()));
+    root.insert("scale".to_string(), Json::Str(format!("{scale:?}").to_lowercase()));
+    root.insert("n_params".to_string(), Json::Num(n_params as f64));
+    root.insert("shard_size".to_string(), Json::Num(SHARD_SIZE as f64));
+    root.insert("threads".to_string(), Json::Obj(threads));
+    root.insert("speedup_4t".to_string(), Json::Obj(sp));
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("reports")
+        .join("BENCH_hotpath.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, Json::Obj(root).to_string())?;
+    println!("thread-scaling results written to {}", path.display());
+    Ok(path)
+}
+
+fn pjrt_section(iters: usize) -> anyhow::Result<()> {
+    let b = Bench::new("perf_hotpath")?;
     let model = "cls-small";
     let mut runner = ModelRunner::new(&b.rt, model, "ft")?;
     let dims = runner.spec.dims.clone();
@@ -46,7 +199,7 @@ fn main() -> anyhow::Result<()> {
 
     b.header(&["ms/op", "notes"]);
 
-    // 1. RNG + perturb throughput
+    // 1. RNG + perturb throughput on the compiled variant
     let ms = 1000.0 * time(2, iters, || {
         params.perturb_trainable(1234, 1e-3);
         params.perturb_trainable(1234, -1e-3);
@@ -92,7 +245,7 @@ fn main() -> anyhow::Result<()> {
         spsa::estimate_with(&mut params, 77, 1e-3, |p| runner.loss(p, &batch)).unwrap();
     });
     b.row("spsa step (regen z)", vec![format!("{ms:.2}"), String::new()]);
-    let mut zcache = helene::model::params::ZCache::default();
+    let mut zcache = ZCache::default();
     let ms_c = 1000.0 * time(1, iters, || {
         spsa::estimate_cached(&mut params, &mut zcache, 77, 1e-3, |p| runner.loss(p, &batch))
             .unwrap();
@@ -146,5 +299,28 @@ fn main() -> anyhow::Result<()> {
     b.row("loss_grad (fwd+bwd)", vec![format!("{ms:.2}"), String::new()]);
 
     b.finish(&["op", "ms", "notes"])?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::detect();
+    let iters = match scale {
+        Scale::Smoke => 3,
+        _ => 10,
+    };
+    println!("== bench perf_hotpath (scale {scale:?}) ==");
+
+    let rows = host_section(scale, iters)?;
+    let n_params = synth_sizes(scale).iter().sum();
+    write_json(scale, &rows, n_params)?;
+
+    if Runtime::default_dir().join("manifest.json").exists() {
+        pjrt_section(match scale {
+            Scale::Smoke => 5,
+            _ => 20,
+        })?;
+    } else {
+        println!("(PJRT section skipped: no artifacts at {})", Runtime::default_dir().display());
+    }
     Ok(())
 }

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::model::manifest::VariantSpec;
-use crate::model::params::ParamSet;
+use crate::model::params::{decode_f32_le, encode_f32_le, ParamSet};
 use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"HELENE1\n";
@@ -51,14 +51,8 @@ pub fn save(
         if set.n_params() != params.n_params() {
             bail!("extra state set has mismatched layout");
         }
-        for arr in &set.arrays {
-            // bulk little-endian write
-            let mut bytes = Vec::with_capacity(arr.len() * 4);
-            for &x in arr {
-                bytes.extend_from_slice(&x.to_le_bytes());
-            }
-            f.write_all(&bytes)?;
-        }
+        // the flat arena IS the payload byte layout: one bulk LE write
+        f.write_all(&encode_f32_le(set.flat()))?;
     }
     Ok(())
 }
@@ -104,18 +98,9 @@ pub fn load(
         .collect();
 
     let mut read_set = |spec: &Arc<VariantSpec>| -> Result<ParamSet> {
-        let mut arrays = Vec::with_capacity(spec.params.len());
-        for p in &spec.params {
-            let mut bytes = vec![0u8; 4 * p.size];
-            f.read_exact(&mut bytes)?;
-            let mut v = vec![0f32; p.size];
-            for (i, c) in bytes.chunks_exact(4).enumerate() {
-                v[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-            }
-            arrays.push(v);
-        }
-        let train_mask = spec.params.iter().map(|p| p.trainable).collect();
-        Ok(ParamSet { spec: spec.clone(), arrays, train_mask })
+        let mut bytes = vec![0u8; 4 * spec.n_params];
+        f.read_exact(&mut bytes)?;
+        Ok(ParamSet::from_flat(spec.clone(), decode_f32_le(&bytes)))
     };
 
     let params = read_set(&spec)?;
@@ -147,8 +132,7 @@ mod tests {
             params,
             entrypoints: BTreeMap::new(),
         });
-        let train_mask = vec![true; 2];
-        ParamSet { spec, arrays: vec![vec![1.0, -2.0, 3.5], vec![0.0, 4.0, -5.0, 6.25]], train_mask }
+        ParamSet::from_arrays(spec, vec![vec![1.0, -2.0, 3.5], vec![0.0, 4.0, -5.0, 6.25]])
     }
 
     #[test]
@@ -160,10 +144,10 @@ mod tests {
         save(&path, 123, &p, &[("momentum", &m)]).unwrap();
         let (step, p2, extras) = load(&path, p.spec.clone()).unwrap();
         assert_eq!(step, 123);
-        assert_eq!(p2.arrays, p.arrays);
+        assert_eq!(p2.flat(), p.flat());
         assert_eq!(extras.len(), 1);
         assert_eq!(extras[0].0, "momentum");
-        assert_eq!(extras[0].1.arrays, m.arrays);
+        assert_eq!(extras[0].1.flat(), m.flat());
     }
 
     #[test]

@@ -1,41 +1,169 @@
-//! `ParamSet`: the layer-granular host-side parameter store.
+//! `ParamSet`: the sharded flat-arena host-side parameter store.
 //!
-//! Parameters live in Rust (one `Vec<f32>` per named array, manifest order);
-//! the PJRT executables are pure functions of them. The ZO machinery
-//! perturbs/restores these buffers in place with seeded noise, and the
-//! optimizers update them — Python is never involved.
+//! Parameters live in Rust as **one contiguous `Vec<f32>` arena** in manifest
+//! order (array i occupies `[offset_i, offset_i + size_i)`, exactly the
+//! `params.bin` byte layout); the PJRT executables are pure functions of
+//! them. The arena is partitioned into fixed [`SHARD_SIZE`]-element shards,
+//! and every seeded operation (perturbation, z regeneration, optimizer
+//! updates) derives an **independent RNG stream per shard** from
+//! `(step_seed, shard_index)` — see [`shard_rng`]. Consequences:
+//!
+//! * the hot path (perturb → probe → restore → `step_zo`) runs
+//!   shard-parallel under rayon, scaling with cores;
+//! * results are **bitwise identical for any `RAYON_NUM_THREADS`**, because
+//!   a draw depends only on `(seed, shard, position-in-shard)`, never on
+//!   scheduling (property-tested in `rust/tests/shard_determinism.rs`);
+//! * `z[j]` is a pure function of the seed and the flat position `j` — it
+//!   does not depend on the train mask (frozen positions consume their
+//!   draws without applying them), so freezing one layer leaves every other
+//!   element's perturbation unchanged.
+//!
+//! This z-stream layout deliberately **breaks compatibility** with the
+//! earlier single-stream `Vec<Vec<f32>>` store (one `Pcg64` threaded
+//! sequentially through trainable arrays); see DESIGN.md §Sharding for the
+//! derivation rule and migration notes.
 
+use std::ops::Range;
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
+use rayon::prelude::*;
 
 use crate::model::manifest::VariantSpec;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{mix64, Pcg64};
 
-/// Stream id of the perturbation RNG. Everything that regenerates the same
-/// `z` (perturb, visit_z, the optimizers' in-place updates) derives its
-/// stream as `Pcg64::new_stream(seed, Z_STREAM)` so the draws agree.
+/// Stream id of the perturbation RNG. Every shard's generator is
+/// `Pcg64::new_stream(mix64(seed, shard_index), Z_STREAM)`, so everything
+/// that regenerates `z` (perturb, `visit_z`, the optimizers' in-place
+/// updates) agrees draw-for-draw.
 pub const Z_STREAM: u64 = 0x5EED;
+
+/// Elements per shard. This constant is part of the z-stream format:
+/// changing it re-shuffles which stream produces which element's draw, so
+/// it is fixed and documented in DESIGN.md §Sharding.
+pub const SHARD_SIZE: usize = 16_384;
+
+/// The per-shard perturbation stream: independent of every other shard,
+/// derived only from `(seed, shard_index)`.
+#[inline]
+pub fn shard_rng(seed: u64, shard: u64) -> Pcg64 {
+    Pcg64::new_stream(mix64(seed, shard), Z_STREAM)
+}
+
+/// One maximal run of a single parameter array inside one shard. Shard
+/// visitors receive these so per-array metadata (layer-wise λ, masks,
+/// telemetry) can be resolved without a search.
+#[derive(Clone, Debug)]
+pub struct ShardSeg {
+    /// index of the parameter array in manifest order
+    pub array: usize,
+    /// element range in the flat arena
+    pub global: Range<usize>,
+    /// the same range relative to the shard base
+    pub local: Range<usize>,
+}
+
+/// The segments tiling shard `[base, base + len)`. Arrays are dense in the
+/// arena (validated by the manifest loader), so the segments cover the
+/// shard exactly, in order.
+fn segments_in(spec: &VariantSpec, base: usize, len: usize) -> Vec<ShardSeg> {
+    let end = base + len;
+    let mut i = spec.params.partition_point(|p| p.offset + p.size <= base);
+    let mut out = Vec::new();
+    while i < spec.params.len() {
+        let p = &spec.params[i];
+        if p.offset >= end {
+            break;
+        }
+        let s = p.offset.max(base);
+        let e = (p.offset + p.size).min(end);
+        if s < e {
+            out.push(ShardSeg { array: i, global: s..e, local: (s - base)..(e - base) });
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Where a shard-parallel update reads its gradient direction from.
+pub enum GradSource<'a> {
+    /// `g ∝ z(seed)`: z regenerated from the per-shard streams (MeZO trick)
+    Seeded(u64),
+    /// `g ∝ z` from the draws captured by [`ParamSet::perturb_fill_cache`]
+    Cached(&'a ZCache),
+    /// exact per-element gradients with the same arena layout (FO path)
+    Exact(&'a ParamSet),
+}
 
 /// Host-side parameters for one (model, variant).
 #[derive(Clone, Debug)]
 pub struct ParamSet {
     pub spec: Arc<VariantSpec>,
-    pub arrays: Vec<Vec<f32>>,
-    /// Effective trainable mask. Starts as the manifest's per-variant flags;
-    /// protocols like linear probing narrow it further at runtime
-    /// (`restrict_to_layers`).
+    /// flat contiguous arena, `spec.n_params` long, manifest byte layout
+    data: Vec<f32>,
+    /// Effective trainable mask, one flag per array. Starts as the
+    /// manifest's per-variant flags; protocols like linear probing narrow
+    /// it further at runtime (`restrict_to_layers`).
     pub train_mask: Vec<bool>,
 }
 
 impl ParamSet {
-    fn from_arrays(spec: Arc<VariantSpec>, arrays: Vec<Vec<f32>>) -> ParamSet {
+    /// Build from a flat arena in manifest layout.
+    pub fn from_flat(spec: Arc<VariantSpec>, data: Vec<f32>) -> ParamSet {
+        assert_eq!(data.len(), spec.n_params, "arena length != spec.n_params");
         let train_mask = spec.params.iter().map(|p| p.trainable).collect();
-        ParamSet { spec, arrays, train_mask }
+        ParamSet { spec, data, train_mask }
     }
 
-    /// Load the shipped initial parameters (`<model>.<variant>.params.bin`).
+    /// Build from per-array vectors (test/checkpoint convenience); the
+    /// arrays are concatenated into the arena in manifest order.
+    pub fn from_arrays(spec: Arc<VariantSpec>, arrays: Vec<Vec<f32>>) -> ParamSet {
+        assert_eq!(arrays.len(), spec.params.len(), "array count mismatch");
+        let mut data = Vec::with_capacity(spec.n_params);
+        for (p, a) in spec.params.iter().zip(&arrays) {
+            assert_eq!(a.len(), p.size, "array {} size mismatch", p.name);
+            data.extend_from_slice(a);
+        }
+        ParamSet::from_flat(spec, data)
+    }
+
+    /// A synthetic all-trainable layout (one single-array layer group per
+    /// entry of `sizes`, every element = `fill`) — the fixture behind the
+    /// perf benches and the shard determinism tests.
+    pub fn synthetic(sizes: &[usize], fill: f32) -> ParamSet {
+        use crate::model::manifest::{ModelDims, ModelKind, ParamInfo};
+        let mut params = Vec::new();
+        let mut offset = 0;
+        for (i, &size) in sizes.iter().enumerate() {
+            params.push(ParamInfo {
+                name: format!("p{i}"),
+                shape: vec![size],
+                layer: format!("layer{i}"),
+                trainable: true,
+                offset,
+                size,
+            });
+            offset += size;
+        }
+        let spec = Arc::new(VariantSpec {
+            model: "synthetic".into(),
+            variant: "ft".into(),
+            kind: ModelKind::Cls,
+            dims: ModelDims {
+                vocab: 4, d_model: 2, n_heads: 1, n_layers: 1, d_ff: 2,
+                max_seq: 2, n_classes: 2, batch: 1, lora_rank: 1, prefix_len: 1,
+            },
+            params_bin: "synthetic.bin".into(),
+            n_params: offset,
+            params,
+            entrypoints: std::collections::BTreeMap::new(),
+        });
+        ParamSet::from_flat(spec, vec![fill; offset])
+    }
+
+    /// Load the shipped initial parameters (`<model>.<variant>.params.bin`)
+    /// with a single bulk little-endian decode into the arena.
     pub fn load_init(spec: Arc<VariantSpec>, artifacts_dir: &Path) -> Result<ParamSet> {
         let path = artifacts_dir.join(&spec.params_bin);
         let bytes = std::fs::read(&path)
@@ -43,24 +171,14 @@ impl ParamSet {
         if bytes.len() != 4 * spec.n_params {
             bail!("{}: expected {} bytes, got {}", path.display(), 4 * spec.n_params, bytes.len());
         }
-        let mut arrays = Vec::with_capacity(spec.params.len());
-        for p in &spec.params {
-            let start = 4 * p.offset;
-            let end = start + 4 * p.size;
-            let mut v = vec![0f32; p.size];
-            for (i, chunk) in bytes[start..end].chunks_exact(4).enumerate() {
-                v[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
-            }
-            arrays.push(v);
-        }
-        Ok(ParamSet::from_arrays(spec, arrays))
+        Ok(ParamSet::from_flat(spec, decode_f32_le(&bytes)))
     }
 
     /// An all-zeros set with the same layout (optimizer state buffers).
     pub fn zeros_like(&self) -> ParamSet {
         ParamSet {
             spec: self.spec.clone(),
-            arrays: self.arrays.iter().map(|a| vec![0f32; a.len()]).collect(),
+            data: vec![0f32; self.data.len()],
             train_mask: self.train_mask.clone(),
         }
     }
@@ -69,9 +187,29 @@ impl ParamSet {
     pub fn full_like(&self, value: f32) -> ParamSet {
         ParamSet {
             spec: self.spec.clone(),
-            arrays: self.arrays.iter().map(|a| vec![value; a.len()]).collect(),
+            data: vec![value; self.data.len()],
             train_mask: self.train_mask.clone(),
         }
+    }
+
+    /// The whole arena (manifest byte order).
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Array `i` as a slice of the arena.
+    pub fn array(&self, i: usize) -> &[f32] {
+        let p = &self.spec.params[i];
+        &self.data[p.offset..p.offset + p.size]
+    }
+
+    pub fn array_mut(&mut self, i: usize) -> &mut [f32] {
+        let p = &self.spec.params[i];
+        &mut self.data[p.offset..p.offset + p.size]
     }
 
     /// Narrow the trainable set to the given layer groups (linear probing
@@ -96,11 +234,16 @@ impl ParamSet {
     }
 
     pub fn n_arrays(&self) -> usize {
-        self.arrays.len()
+        self.spec.params.len()
     }
 
     pub fn n_params(&self) -> usize {
         self.spec.n_params
+    }
+
+    /// Number of shards tiling the arena.
+    pub fn n_shards(&self) -> usize {
+        (self.data.len() + SHARD_SIZE - 1) / SHARD_SIZE
     }
 
     /// Total trainable scalar count (under the effective mask).
@@ -117,39 +260,70 @@ impl ParamSet {
     /// Bytes of host state this set holds (memory-accounting tests; the
     /// paper's §C.1 footprint table builds on this).
     pub fn state_bytes(&self) -> usize {
-        self.arrays.iter().map(|a| 4 * a.len()).sum()
+        4 * self.data.len()
     }
 
-    /// In-place AXPY over *trainable* arrays with seeded normal noise:
+    /// In-place AXPY over *trainable* elements with seeded normal noise:
     /// `theta += scale * z(seed)`. This is MeZO's perturbation primitive:
     /// `z` is regenerated from the seed, never stored. The ±ε / −2ε / +ε
     /// perturb-evaluate-restore cycle re-adds the identical `scale * z`
     /// values, so the restore drift is bounded by a few f32 ulps per
     /// element per step (the same guarantee the MeZO reference
     /// implementation provides) — property-tested in `rust/tests/`.
+    ///
+    /// Runs shard-parallel; frozen segments inside an active shard consume
+    /// their draws without applying them, keeping `z[j]` a pure function of
+    /// `(seed, j)`.
     pub fn perturb_trainable(&mut self, seed: u64, scale: f32) {
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        for (i, arr) in self.arrays.iter_mut().enumerate() {
-            if !self.train_mask[i] {
-                continue;
-            }
-            perturb_slice(arr, &mut rng, scale);
-        }
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        self.data
+            .par_chunks_mut(SHARD_SIZE)
+            .enumerate()
+            .for_each(|(s, chunk)| {
+                let base = s * SHARD_SIZE;
+                let segs = segments_in(spec, base, chunk.len());
+                if !segs.iter().any(|g| mask[g.array]) {
+                    return;
+                }
+                let mut rng = shard_rng(seed, s as u64);
+                for seg in &segs {
+                    if mask[seg.array] {
+                        perturb_slice(&mut chunk[seg.local.clone()], &mut rng, scale);
+                    } else {
+                        skip_normals(&mut rng, seg.local.len());
+                    }
+                }
+            });
     }
 
-    /// Regenerate the same `z` stream used by `perturb_trainable` into a
-    /// visitor: `f(array_index, elementwise z-chunk)`. The chunk buffer is
-    /// reused across calls.
-    pub fn visit_z(&self, seed: u64, mut f: impl FnMut(usize, &[f32])) {
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        let mut buf: Vec<f32> = Vec::new();
-        for (i, arr) in self.arrays.iter().enumerate() {
-            if !self.train_mask[i] {
-                continue;
+    /// Regenerate the full z arena for `seed` (zeros in shards with no
+    /// trainable element — those never contribute to any update).
+    fn gen_z(&self, seed: u64) -> Vec<f32> {
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        let mut z = vec![0f32; self.data.len()];
+        z.par_chunks_mut(SHARD_SIZE).enumerate().for_each(|(s, chunk)| {
+            let base = s * SHARD_SIZE;
+            let active = segments_in(spec, base, chunk.len())
+                .iter()
+                .any(|g| mask[g.array]);
+            if active {
+                shard_rng(seed, s as u64).fill_normal(chunk);
             }
-            buf.resize(arr.len(), 0.0);
-            rng.fill_normal(&mut buf);
-            f(i, &buf);
+        });
+        z
+    }
+
+    /// Regenerate the same `z` values used by `perturb_trainable` into a
+    /// visitor: `f(array_index, elementwise z-chunk)`, called for every
+    /// trainable array in manifest order (diagnostics and tests).
+    pub fn visit_z(&self, seed: u64, mut f: impl FnMut(usize, &[f32])) {
+        let z = self.gen_z(seed);
+        for (i, p) in self.spec.params.iter().enumerate() {
+            if self.train_mask[i] {
+                f(i, &z[p.offset..p.offset + p.size]);
+            }
         }
     }
 
@@ -161,7 +335,7 @@ impl ParamSet {
             .map(|(name, idxs)| {
                 let sq: f64 = idxs
                     .iter()
-                    .flat_map(|&i| self.arrays[i].iter())
+                    .flat_map(|&i| self.array(i).iter())
                     .map(|&x| (x as f64) * (x as f64))
                     .sum();
                 (name, sq)
@@ -169,29 +343,178 @@ impl ParamSet {
             .collect()
     }
 
-    /// Flat dot product with another set over trainable arrays.
+    /// Flat dot product with another set over trainable elements.
+    /// Shard-parallel; per-shard partials are reduced in shard order, so
+    /// the result does not depend on the thread count.
     pub fn trainable_dot(&self, other: &ParamSet) -> f64 {
-        let mut acc = 0f64;
-        for (i, _p) in self.spec.params.iter().enumerate() {
-            if !self.train_mask[i] {
-                continue;
-            }
-            acc += self.arrays[i]
-                .iter()
-                .zip(&other.arrays[i])
-                .map(|(&a, &b)| a as f64 * b as f64)
-                .sum::<f64>();
-        }
-        acc
+        assert_eq!(other.data.len(), self.data.len(), "layout mismatch");
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        let partials: Vec<f64> = self
+            .data
+            .par_chunks(SHARD_SIZE)
+            .zip(other.data.par_chunks(SHARD_SIZE))
+            .enumerate()
+            .map(|(s, (a, b))| {
+                let base = s * SHARD_SIZE;
+                let mut acc = 0f64;
+                for seg in segments_in(spec, base, a.len()) {
+                    if !mask[seg.array] {
+                        continue;
+                    }
+                    let r = seg.local.clone();
+                    acc += a[r.clone()]
+                        .iter()
+                        .zip(&b[r])
+                        .map(|(&x, &y)| x as f64 * y as f64)
+                        .sum::<f64>();
+                }
+                acc
+            })
+            .collect();
+        partials.iter().sum()
     }
 
-    /// Max |a - b| across all arrays (test helper).
+    /// Max |a - b| across the arena (test helper).
     pub fn max_abs_diff(&self, other: &ParamSet) -> f32 {
-        self.arrays
+        self.data
             .iter()
-            .zip(&other.arrays)
-            .flat_map(|(a, b)| a.iter().zip(b).map(|(&x, &y)| (x - y).abs()))
+            .zip(&other.data)
+            .map(|(&x, &y)| (x - y).abs())
             .fold(0.0, f32::max)
+    }
+
+    /// Shard-parallel seeded update over θ alone: `f(seg, θ_seg, g_seg)` per
+    /// trainable segment, where `g_seg` is the gradient-direction basis
+    /// (regenerated z, cached z, or exact gradients per `src`).
+    pub fn update_shards<F>(&mut self, src: GradSource<'_>, f: F)
+    where
+        F: Fn(&ShardSeg, &mut [f32], &[f32]) + Sync,
+    {
+        let (g_all, seed) = resolve_src(src, self.data.len());
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        self.data
+            .par_chunks_mut(SHARD_SIZE)
+            .enumerate()
+            .for_each_init(Vec::new, |scratch, (s, th)| {
+                let base = s * SHARD_SIZE;
+                let segs = segments_in(spec, base, th.len());
+                if !segs.iter().any(|g| mask[g.array]) {
+                    return;
+                }
+                let g = shard_g(g_all, seed, s, base, th.len(), scratch);
+                for seg in &segs {
+                    if !mask[seg.array] {
+                        continue;
+                    }
+                    let r = seg.local.clone();
+                    f(seg, &mut th[r.clone()], &g[r]);
+                }
+            });
+    }
+
+    /// Like [`update_shards`] with one same-layout state arena (momentum).
+    pub fn update_shards1<F>(&mut self, s1: &mut ParamSet, src: GradSource<'_>, f: F)
+    where
+        F: Fn(&ShardSeg, &mut [f32], &mut [f32], &[f32]) + Sync,
+    {
+        assert_eq!(s1.data.len(), self.data.len(), "state arena layout mismatch");
+        let (g_all, seed) = resolve_src(src, self.data.len());
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        self.data
+            .par_chunks_mut(SHARD_SIZE)
+            .zip(s1.data.par_chunks_mut(SHARD_SIZE))
+            .enumerate()
+            .for_each_init(Vec::new, |scratch, (s, (th, a))| {
+                let base = s * SHARD_SIZE;
+                let segs = segments_in(spec, base, th.len());
+                if !segs.iter().any(|g| mask[g.array]) {
+                    return;
+                }
+                let g = shard_g(g_all, seed, s, base, th.len(), scratch);
+                for seg in &segs {
+                    if !mask[seg.array] {
+                        continue;
+                    }
+                    let r = seg.local.clone();
+                    f(seg, &mut th[r.clone()], &mut a[r.clone()], &g[r]);
+                }
+            });
+    }
+
+    /// Like [`update_shards`] with two same-layout state arenas (m and h/v).
+    pub fn update_shards2<F>(
+        &mut self,
+        s1: &mut ParamSet,
+        s2: &mut ParamSet,
+        src: GradSource<'_>,
+        f: F,
+    ) where
+        F: Fn(&ShardSeg, &mut [f32], &mut [f32], &mut [f32], &[f32]) + Sync,
+    {
+        assert_eq!(s1.data.len(), self.data.len(), "state arena layout mismatch");
+        assert_eq!(s2.data.len(), self.data.len(), "state arena layout mismatch");
+        let (g_all, seed) = resolve_src(src, self.data.len());
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        self.data
+            .par_chunks_mut(SHARD_SIZE)
+            .zip(s1.data.par_chunks_mut(SHARD_SIZE))
+            .zip(s2.data.par_chunks_mut(SHARD_SIZE))
+            .enumerate()
+            .for_each_init(Vec::new, |scratch, (s, ((th, a), b))| {
+                let base = s * SHARD_SIZE;
+                let segs = segments_in(spec, base, th.len());
+                if !segs.iter().any(|g| mask[g.array]) {
+                    return;
+                }
+                let g = shard_g(g_all, seed, s, base, th.len(), scratch);
+                for seg in &segs {
+                    if !mask[seg.array] {
+                        continue;
+                    }
+                    let r = seg.local.clone();
+                    f(seg, &mut th[r.clone()], &mut a[r.clone()], &mut b[r.clone()], &g[r]);
+                }
+            });
+    }
+}
+
+/// Validate a gradient source against the arena length; returns the full
+/// basis arena (for `Cached`/`Exact`) or the seed (for `Seeded`).
+fn resolve_src(src: GradSource<'_>, n: usize) -> (Option<&[f32]>, u64) {
+    match src {
+        GradSource::Seeded(seed) => (None, seed),
+        GradSource::Cached(c) => {
+            assert_eq!(c.data.len(), n, "z-cache layout mismatch");
+            (Some(&c.data), 0)
+        }
+        GradSource::Exact(g) => {
+            assert_eq!(g.data.len(), n, "gradient arena layout mismatch");
+            (Some(&g.data), 0)
+        }
+    }
+}
+
+/// The gradient basis for one shard: a slice of the source arena, or z
+/// regenerated into `scratch` from the shard's stream.
+fn shard_g<'a>(
+    g_all: Option<&'a [f32]>,
+    seed: u64,
+    shard: usize,
+    base: usize,
+    len: usize,
+    scratch: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    match g_all {
+        Some(all) => &all[base..base + len],
+        None => {
+            scratch.resize(len, 0.0);
+            shard_rng(seed, shard as u64).fill_normal(scratch);
+            scratch
+        }
     }
 }
 
@@ -200,65 +523,145 @@ impl ParamSet {
 /// The MeZO protocol touches `z` four times per step (+ε, −2ε, +ε probes
 /// plus the optimizer's regeneration). Regeneration keeps memory at the
 /// inference level but costs an RNG pass each time; `ZCache` trades one
-/// trainable-sized buffer for reusing the draws across the three probe
-/// passes (the optimizer still regenerates, keeping its state-free API).
-/// `TrainConfig::cache_z` controls the trade.
+/// arena-sized buffer for reusing the draws across the probe passes and the
+/// optimizer update. `TrainConfig::cache_z` controls the trade. The cache
+/// holds the full per-shard draws (zeros in inactive shards), so its values
+/// are bitwise identical to a regeneration from the same seed.
 #[derive(Clone, Debug, Default)]
 pub struct ZCache {
-    /// one entry per parameter array (empty for frozen arrays)
-    arrays: Vec<Vec<f32>>,
+    data: Vec<f32>,
+    filled: bool,
 }
 
 impl ZCache {
-    /// The cached z draws for array `i` (None if frozen or not yet filled).
-    pub fn z(&self, i: usize) -> Option<&[f32]> {
-        self.arrays.get(i).filter(|v| !v.is_empty()).map(|v| v.as_slice())
+    /// The cached z draws for a global arena range (`None` until filled or
+    /// when the range falls outside the cached arena).
+    pub fn z(&self, global: Range<usize>) -> Option<&[f32]> {
+        if !self.filled {
+            return None;
+        }
+        self.data.get(global)
     }
 
     pub fn is_filled(&self) -> bool {
-        self.arrays.iter().any(|v| !v.is_empty())
+        self.filled
+    }
+
+    /// Whether this cache holds draws for `params`' arena layout — callers
+    /// of the `Cached` paths check this to return a recoverable error
+    /// instead of tripping the layout asserts.
+    pub fn matches(&self, params: &ParamSet) -> bool {
+        self.filled && self.data.len() == params.data.len()
     }
 }
 
 impl ParamSet {
     /// `theta += scale * z(seed)`, storing the generated z into `cache`.
     pub fn perturb_fill_cache(&mut self, cache: &mut ZCache, seed: u64, scale: f32) {
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        cache.arrays.resize(self.arrays.len(), Vec::new());
-        for (i, arr) in self.arrays.iter_mut().enumerate() {
-            let z = &mut cache.arrays[i];
-            if !self.train_mask[i] {
-                z.clear();
-                continue;
-            }
-            z.resize(arr.len(), 0.0);
-            rng.fill_normal(z);
-            for (x, zv) in arr.iter_mut().zip(z.iter()) {
-                *x += scale * zv;
-            }
-        }
+        cache.data.resize(self.data.len(), 0.0);
+        cache.filled = true;
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        self.data
+            .par_chunks_mut(SHARD_SIZE)
+            .zip(cache.data.par_chunks_mut(SHARD_SIZE))
+            .enumerate()
+            .for_each(|(s, (th, zc))| {
+                let base = s * SHARD_SIZE;
+                let segs = segments_in(spec, base, th.len());
+                if !segs.iter().any(|g| mask[g.array]) {
+                    zc.fill(0.0);
+                    return;
+                }
+                shard_rng(seed, s as u64).fill_normal(zc);
+                for seg in &segs {
+                    if !mask[seg.array] {
+                        continue;
+                    }
+                    let r = seg.local.clone();
+                    for (x, zv) in th[r.clone()].iter_mut().zip(&zc[r]) {
+                        *x += scale * zv;
+                    }
+                }
+            });
     }
 
     /// `theta += scale * z` using the cached draws (identical values to a
     /// regeneration from the same seed — verified by tests).
     pub fn perturb_from_cache(&mut self, cache: &ZCache, scale: f32) {
-        for (i, arr) in self.arrays.iter_mut().enumerate() {
-            if !self.train_mask[i] {
-                continue;
-            }
-            let z = &cache.arrays[i];
-            debug_assert_eq!(z.len(), arr.len(), "cache layout mismatch");
-            for (x, zv) in arr.iter_mut().zip(z.iter()) {
-                *x += scale * zv;
-            }
-        }
+        assert_eq!(cache.data.len(), self.data.len(), "z-cache layout mismatch");
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        self.data
+            .par_chunks_mut(SHARD_SIZE)
+            .zip(cache.data.par_chunks(SHARD_SIZE))
+            .enumerate()
+            .for_each(|(s, (th, zc))| {
+                let base = s * SHARD_SIZE;
+                for seg in segments_in(spec, base, th.len()) {
+                    if !mask[seg.array] {
+                        continue;
+                    }
+                    let r = seg.local.clone();
+                    for (x, zv) in th[r.clone()].iter_mut().zip(&zc[r]) {
+                        *x += scale * zv;
+                    }
+                }
+            });
     }
 }
 
-/// The inner perturbation loop, exposed for the perf bench.
+/// Bulk little-endian f32 decode (the `params.bin` / checkpoint payload
+/// convention). On little-endian hosts this is a single memcpy into the
+/// arena instead of a per-element parse loop.
+pub fn decode_f32_le(bytes: &[u8]) -> Vec<f32> {
+    // hard assert: a 4*(len/4)-element allocation must never receive a
+    // bytes.len() memcpy (heap corruption in release builds otherwise)
+    assert_eq!(bytes.len() % 4, 0, "f32 payload length {} not a multiple of 4", bytes.len());
+    let n = bytes.len() / 4;
+    let mut out = vec![0f32; n];
+    if cfg!(target_endian = "little") {
+        // dest is f32-aligned; u8 source needs no alignment
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+    } else {
+        for (dst, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+    out
+}
+
+/// Bulk little-endian f32 encode (inverse of [`decode_f32_le`]).
+pub fn encode_f32_le(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * vals.len());
+    if cfg!(target_endian = "little") {
+        out.resize(4 * vals.len(), 0);
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                vals.as_ptr() as *const u8,
+                out.as_mut_ptr(),
+                out.len(),
+            );
+        }
+    } else {
+        for &x in vals {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// The inner streaming perturbation loop (one shard's segment), exposed for
+/// the perf bench: draws in 256-chunks so `fill_normal`'s stream is used
+/// verbatim, one draw per element in position order.
 #[inline]
 pub fn perturb_slice(arr: &mut [f32], rng: &mut Pcg64, scale: f32) {
-    // draw in chunks so fill_normal's pairwise stream is used verbatim
     let mut buf = [0f32; 256];
     let mut rest = arr;
     while !rest.is_empty() {
@@ -269,6 +672,18 @@ pub fn perturb_slice(arr: &mut [f32], rng: &mut Pcg64, scale: f32) {
             *x += scale * z;
         }
         rest = tail;
+    }
+}
+
+/// Advance the stream past `n` draws (frozen segments inside active shards:
+/// their z values exist in the stream but are never applied).
+#[inline]
+fn skip_normals(rng: &mut Pcg64, mut n: usize) {
+    let mut sink = [0f32; 256];
+    while n > 0 {
+        let k = n.min(256);
+        rng.fill_normal(&mut sink[..k]);
+        n -= k;
     }
 }
 
@@ -310,9 +725,8 @@ mod tests {
 
     fn pset(mask: &[bool]) -> ParamSet {
         let spec = spec(mask);
-        let arrays = spec.params.iter().map(|p| vec![1.0f32; p.size]).collect();
-        let train_mask = spec.params.iter().map(|p| p.trainable).collect();
-        ParamSet { spec, arrays, train_mask }
+        let n = spec.n_params;
+        ParamSet::from_flat(spec, vec![1.0f32; n])
     }
 
     #[test]
@@ -335,9 +749,9 @@ mod tests {
         assert_eq!(p.n_trainable(), 10); // only p2 (size 10) is in layer1
         let orig = p.clone();
         p.perturb_trainable(3, 0.1);
-        assert_eq!(p.arrays[0], orig.arrays[0]);
-        assert_eq!(p.arrays[1], orig.arrays[1]);
-        assert_ne!(p.arrays[2], orig.arrays[2]);
+        assert_eq!(p.array(0), orig.array(0));
+        assert_eq!(p.array(1), orig.array(1));
+        assert_ne!(p.array(2), orig.array(2));
         assert!(p.restrict_to_layers(&["nope"]).is_err());
     }
 
@@ -346,10 +760,23 @@ mod tests {
         let mut p = pset(&[false, true, false]);
         let orig = p.clone();
         p.perturb_trainable(7, 0.5);
-        assert_eq!(p.arrays[0], orig.arrays[0]);
-        assert_ne!(p.arrays[1], orig.arrays[1]);
-        assert_eq!(p.arrays[2], orig.arrays[2]);
+        assert_eq!(p.array(0), orig.array(0));
+        assert_ne!(p.array(1), orig.array(1));
+        assert_eq!(p.array(2), orig.array(2));
         assert_eq!(p.n_trainable(), 4);
+    }
+
+    #[test]
+    fn frozen_segments_do_not_shift_the_stream() {
+        // z[j] is a pure function of (seed, j): freezing p0 must not change
+        // the z applied to p1/p2 (they live in the same shard — the frozen
+        // segment's draws are skipped, not reassigned).
+        let mut all = pset(&[true, true, true]);
+        let mut some = pset(&[false, true, true]);
+        all.perturb_trainable(11, 0.25);
+        some.perturb_trainable(11, 0.25);
+        assert_eq!(all.array(1), some.array(1));
+        assert_eq!(all.array(2), some.array(2));
     }
 
     #[test]
@@ -363,8 +790,8 @@ mod tests {
         assert_eq!(seen.len(), 2);
         for (i, z) in &seen {
             for (j, zv) in z.iter().enumerate() {
-                let expect = orig.arrays[*i][j] + scale * zv;
-                assert_eq!(p.arrays[*i][j], expect);
+                let expect = orig.array(*i)[j] + scale * zv;
+                assert_eq!(p.array(*i)[j], expect);
             }
         }
     }
@@ -373,9 +800,9 @@ mod tests {
     fn zeros_and_full_like() {
         let p = pset(&[true, true, true]);
         let z = p.zeros_like();
-        assert!(z.arrays.iter().all(|a| a.iter().all(|&x| x == 0.0)));
+        assert!(z.flat().iter().all(|&x| x == 0.0));
         let f = p.full_like(3.5);
-        assert!(f.arrays.iter().all(|a| a.iter().all(|&x| x == 3.5)));
+        assert!(f.flat().iter().all(|&x| x == 3.5));
         assert_eq!(z.state_bytes(), p.state_bytes());
     }
 
@@ -398,5 +825,80 @@ mod tests {
         a.perturb_trainable(1, 0.1);
         b.perturb_trainable(2, 0.1);
         assert!(a.max_abs_diff(&b) > 0.0);
+    }
+
+    #[test]
+    fn segments_tile_every_shard() {
+        // multi-shard synthetic layout: arrays straddle shard boundaries
+        let p = ParamSet::synthetic(&[SHARD_SIZE - 7, 1000, 2 * SHARD_SIZE + 3, 40], 0.0);
+        assert!(p.n_shards() >= 4);
+        let mut covered = 0usize;
+        for s in 0..p.n_shards() {
+            let base = s * SHARD_SIZE;
+            let len = (p.n_params() - base).min(SHARD_SIZE);
+            let segs = segments_in(&p.spec, base, len);
+            // segments are contiguous, in order, and tile [0, len)
+            let mut pos = 0usize;
+            for seg in &segs {
+                assert_eq!(seg.local.start, pos, "gap in shard {s}");
+                assert_eq!(seg.global.start, base + pos);
+                assert_eq!(seg.global.len(), seg.local.len());
+                pos = seg.local.end;
+            }
+            assert_eq!(pos, len, "shard {s} not fully tiled");
+            covered += len;
+        }
+        assert_eq!(covered, p.n_params());
+    }
+
+    #[test]
+    fn update_shards_matches_perturb() {
+        // the arity-0 kernel with an axpy body is exactly perturb_trainable
+        let mut a = ParamSet::synthetic(&[SHARD_SIZE + 123, 777], 0.5);
+        let mut b = a.clone();
+        let scale = 0.01f32;
+        a.perturb_trainable(5, scale);
+        b.update_shards(GradSource::Seeded(5), |_seg, th, z| {
+            for (x, zv) in th.iter_mut().zip(z) {
+                *x += scale * zv;
+            }
+        });
+        assert_eq!(a.flat(), b.flat());
+    }
+
+    #[test]
+    fn cached_draws_match_seeded_regeneration() {
+        let mut a = ParamSet::synthetic(&[SHARD_SIZE / 2, SHARD_SIZE, 333], 1.0);
+        let mut b = a.clone();
+        let mut cache = ZCache::default();
+        a.perturb_fill_cache(&mut cache, 77, 1e-3);
+        b.perturb_trainable(77, 1e-3);
+        assert_eq!(a.flat(), b.flat());
+        assert!(cache.is_filled());
+        a.perturb_from_cache(&cache, -1e-3);
+        b.perturb_trainable(77, -1e-3);
+        assert_eq!(a.flat(), b.flat());
+    }
+
+    #[test]
+    fn decode_encode_round_trip() {
+        let vals = [1.0f32, -2.5, 0.0, f32::MIN_POSITIVE, 3.25e7, -0.125];
+        let bytes = encode_f32_le(&vals);
+        assert_eq!(bytes.len(), 4 * vals.len());
+        assert_eq!(decode_f32_le(&bytes), vals.to_vec());
+        // matches the scalar convention
+        assert_eq!(&bytes[..4], &1.0f32.to_le_bytes());
+    }
+
+    #[test]
+    fn exact_source_feeds_gradients_through() {
+        let mut p = ParamSet::synthetic(&[64], 1.0);
+        let g = p.full_like(2.0);
+        p.update_shards(GradSource::Exact(&g), |_seg, th, gv| {
+            for (x, &gj) in th.iter_mut().zip(gv) {
+                *x -= 0.5 * gj;
+            }
+        });
+        assert!(p.flat().iter().all(|&x| x == 0.0));
     }
 }

@@ -13,7 +13,12 @@
 //!   O(max_i d_i).
 //! * `PerLayer(vec)` — explicit thresholds, one per layer group.
 
+use std::ops::Range;
+
 use anyhow::{bail, Result};
+
+use crate::model::manifest::VariantSpec;
+use crate::model::params::SHARD_SIZE;
 
 /// Per-layer clipping threshold policy.
 #[derive(Clone, Debug, PartialEq)]
@@ -63,6 +68,75 @@ impl Default for ClipPolicy {
     }
 }
 
+/// Resolve λ for every parameter *array* by broadcasting each layer group's
+/// λ to its member arrays — the lookup table the shard-parallel HELENE
+/// kernel indexes by `ShardSeg::array`.
+pub fn lambda_per_array(policy: &ClipPolicy, spec: &VariantSpec) -> Result<Vec<f32>> {
+    let groups = spec.layer_groups();
+    let dims: Vec<usize> = groups
+        .iter()
+        .map(|(_, idxs)| idxs.iter().map(|&i| spec.params[i].size).sum())
+        .collect();
+    let lambdas = policy.lambdas(&dims)?;
+    let mut out = vec![0.0f32; spec.params.len()];
+    for ((_, idxs), lam) in groups.iter().zip(&lambdas) {
+        for &i in idxs {
+            out[i] = *lam;
+        }
+    }
+    Ok(out)
+}
+
+/// One layer group's footprint in the sharded flat arena: its resolved λ,
+/// the contiguous element ranges its member arrays occupy, and the shard
+/// indices those ranges touch (clip telemetry and the multi-worker
+/// sharding plan both need the group ↔ shard correspondence).
+#[derive(Clone, Debug)]
+pub struct LayerSpans {
+    pub layer: String,
+    pub lambda: f32,
+    /// maximal contiguous element ranges in the flat arena
+    pub elem_ranges: Vec<Range<usize>>,
+    /// maximal contiguous runs of shard indices covered by those ranges
+    pub shard_ranges: Vec<Range<usize>>,
+}
+
+/// Map every layer group to its arena element ranges and the shards they
+/// occupy, with λ resolved from `policy`.
+pub fn layer_shard_spans(policy: &ClipPolicy, spec: &VariantSpec) -> Result<Vec<LayerSpans>> {
+    let lam = lambda_per_array(policy, spec)?;
+    Ok(spec
+        .layer_groups()
+        .into_iter()
+        .map(|(layer, idxs)| {
+            // merge adjacent member arrays into maximal element ranges
+            let mut elem_ranges: Vec<Range<usize>> = Vec::new();
+            for &i in &idxs {
+                let p = &spec.params[i];
+                let r = p.offset..p.offset + p.size;
+                if r.is_empty() {
+                    continue;
+                }
+                match elem_ranges.last_mut() {
+                    Some(last) if last.end == r.start => last.end = r.end,
+                    _ => elem_ranges.push(r),
+                }
+            }
+            // shard indices touched by each element range, runs merged
+            let mut shard_ranges: Vec<Range<usize>> = Vec::new();
+            for r in &elem_ranges {
+                let s = r.start / SHARD_SIZE..(r.end - 1) / SHARD_SIZE + 1;
+                match shard_ranges.last_mut() {
+                    Some(last) if last.end >= s.start => last.end = last.end.max(s.end),
+                    _ => shard_ranges.push(s),
+                }
+            }
+            let lambda = idxs.first().map_or(0.0, |&i| lam[i]);
+            LayerSpans { layer, lambda, elem_ranges, shard_ranges }
+        })
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +170,39 @@ mod tests {
     #[test]
     fn default_is_paper_constant_one() {
         assert_eq!(ClipPolicy::default(), ClipPolicy::Constant(1.0));
+    }
+
+    #[test]
+    fn lambda_per_array_broadcasts_group_values() {
+        // synthetic layout: one layer group per array
+        let p = crate::model::params::ParamSet::synthetic(&[4, 100], 0.0);
+        let lam = lambda_per_array(&ClipPolicy::LayerScaled { r: 1.0 }, &p.spec).unwrap();
+        assert_eq!(lam.len(), 2);
+        assert!((lam[0] - 1.0 / (2.0 * 2.0)).abs() < 1e-6);
+        assert!((lam[1] - 1.0 / (2.0 * 10.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layer_spans_cover_arena_and_map_to_shards() {
+        // arrays straddle shard boundaries; groups are per-array here
+        let sizes = [SHARD_SIZE + 100, 50, 3 * SHARD_SIZE];
+        let p = crate::model::params::ParamSet::synthetic(&sizes, 0.0);
+        let spans = layer_shard_spans(&ClipPolicy::Constant(1.0), &p.spec).unwrap();
+        assert_eq!(spans.len(), 3);
+        // element ranges tile the arena in order
+        let mut pos = 0usize;
+        for s in &spans {
+            assert_eq!(s.elem_ranges.len(), 1);
+            assert_eq!(s.elem_ranges[0].start, pos);
+            pos = s.elem_ranges[0].end;
+            assert_eq!(s.lambda, 1.0);
+        }
+        assert_eq!(pos, p.n_params());
+        // layer0 spans shards 0..2 (it ends 100 elements into shard 1)
+        assert_eq!(spans[0].shard_ranges, vec![0..2]);
+        // layer1 lives entirely inside shard 1
+        assert_eq!(spans[1].shard_ranges, vec![1..2]);
+        // layer2 runs to the end of the arena
+        assert_eq!(spans[2].shard_ranges.last().unwrap().end, p.n_shards());
     }
 }

@@ -1,10 +1,12 @@
 //! First-order baselines (Table 3's FO-SGD; Tables 1-2's "FT" rows) fed by
 //! the compiled `loss_grad` entrypoint. Also used for linear probing (the
-//! trainer narrows the trainable mask to the head).
+//! trainer narrows the trainable mask to the head). Updates run
+//! shard-parallel over the flat arena with `GradSource::Exact` (the
+//! gradient set shares the arena layout, so the same kernels apply).
 
 use anyhow::{anyhow, Result};
 
-use crate::model::params::ParamSet;
+use crate::model::params::{GradSource, ParamSet};
 use crate::optim::{Optimizer, StepKind};
 
 /// Plain SGD: `θ −= η (g + wd·θ)`.
@@ -36,16 +38,12 @@ impl Optimizer for FoSgd {
     fn init(&mut self, _params: &ParamSet) {}
 
     fn step_fo(&mut self, params: &mut ParamSet, grads: &ParamSet) -> Result<()> {
-        for i in 0..params.arrays.len() {
-            if !params.train_mask[i] {
-                continue;
-            }
-            let g = &grads.arrays[i];
-            let th = &mut params.arrays[i];
+        let (lr, wd) = (self.lr, self.weight_decay);
+        params.update_shards(GradSource::Exact(grads), |_seg, th, g| {
             for j in 0..th.len() {
-                th[j] -= self.lr * (g[j] + self.weight_decay * th[j]);
+                th[j] -= lr * (g[j] + wd * th[j]);
             }
-        }
+        });
         Ok(())
     }
 
@@ -96,27 +94,24 @@ impl Optimizer for FoAdam {
     }
 
     fn step_fo(&mut self, params: &mut ParamSet, grads: &ParamSet) -> Result<()> {
-        let m = self.m.as_mut().ok_or_else(|| anyhow!("init not called"))?;
-        let v = self.v.as_mut().ok_or_else(|| anyhow!("init not called"))?;
+        let (m, v) = match (&mut self.m, &mut self.v) {
+            (Some(m), Some(v)) => (m, v),
+            _ => return Err(anyhow!("init not called")),
+        };
         self.t += 1;
         let bc1 = 1.0 - self.beta1.powi(self.t as i32);
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        for i in 0..params.arrays.len() {
-            if !params.train_mask[i] {
-                continue;
-            }
-            let g = &grads.arrays[i];
-            let th = &mut params.arrays[i];
-            let m_arr = &mut m.arrays[i];
-            let v_arr = &mut v.arrays[i];
+        let (lr, beta1, beta2, eps, wd) =
+            (self.lr, self.beta1, self.beta2, self.eps, self.weight_decay);
+        params.update_shards2(m, v, GradSource::Exact(grads), |_seg, th, m_arr, v_arr, g| {
             for j in 0..th.len() {
-                m_arr[j] = self.beta1 * m_arr[j] + (1.0 - self.beta1) * g[j];
-                v_arr[j] = self.beta2 * v_arr[j] + (1.0 - self.beta2) * g[j] * g[j];
+                m_arr[j] = beta1 * m_arr[j] + (1.0 - beta1) * g[j];
+                v_arr[j] = beta2 * v_arr[j] + (1.0 - beta2) * g[j] * g[j];
                 let m_hat = m_arr[j] / bc1;
                 let v_hat = v_arr[j] / bc2;
-                th[j] -= self.lr * (m_hat / (v_hat.sqrt() + self.eps) + self.weight_decay * th[j]);
+                th[j] -= lr * (m_hat / (v_hat.sqrt() + eps) + wd * th[j]);
             }
-        }
+        });
         Ok(())
     }
 
@@ -143,11 +138,11 @@ mod tests {
     fn sgd_exact_update() {
         let mut p = toy_params(&[8]);
         let mut g = p.zeros_like();
-        g.arrays[0] = vec![2.0; 8];
+        g.array_mut(0).copy_from_slice(&[2.0; 8]);
         let mut opt = FoSgd::new(0.1);
         opt.init(&p);
         opt.step_fo(&mut p, &g).unwrap();
-        for &x in &p.arrays[0] {
+        for &x in p.array(0) {
             assert!((x - (0.5 - 0.2)).abs() < 1e-7);
         }
     }
@@ -160,8 +155,8 @@ mod tests {
         let mut opt = FoSgd::new(0.1);
         opt.init(&p);
         opt.step_fo(&mut p, &g).unwrap();
-        assert!(p.arrays[0].iter().all(|&x| x == 0.5));
-        assert!(p.arrays[1].iter().all(|&x| x != 0.5));
+        assert!(p.array(0).iter().all(|&x| x == 0.5));
+        assert!(p.array(1).iter().all(|&x| x != 0.5));
     }
 
     #[test]
@@ -174,11 +169,11 @@ mod tests {
         for _ in 0..200 {
             let mut g = p.zeros_like();
             for j in 0..16 {
-                g.arrays[0][j] = 2.0 * p.arrays[0][j];
+                g.array_mut(0)[j] = 2.0 * p.array(0)[j];
             }
             opt.step_fo(&mut p, &g).unwrap();
         }
-        let norm: f32 = p.arrays[0].iter().map(|x| x * x).sum();
+        let norm: f32 = p.array(0).iter().map(|x| x * x).sum();
         assert!(norm < 1e-4, "norm {norm}");
     }
 

@@ -15,16 +15,23 @@
 //! the literal Algorithm 2 of the paper (A-GNB with true labels); the ZO
 //! form is its SPSA projection.
 //!
+//! The fused elementwise update runs **shard-parallel** over the flat
+//! parameter arena (`ParamSet::update_shards2`): θ, m and h are sliced into
+//! the same [`crate::model::params::SHARD_SIZE`] shards and each shard
+//! regenerates its own z stream, so one optimizer step scales with cores
+//! while staying bitwise deterministic (DESIGN.md §Sharding).
+//!
 //! The momentum mode ladder reproduces the Figure 5 ablation:
 //! `None → Ema → Biased → Annealed` (full HELENE = Annealed + Hessian).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{bail, Result};
 
-use crate::model::params::{ParamSet, Z_STREAM};
+use crate::model::params::{GradSource, ParamSet};
 use crate::optim::anneal::Anneal;
-use crate::optim::clip::ClipPolicy;
+use crate::optim::clip::{lambda_per_array, ClipPolicy};
 use crate::optim::{Optimizer, StepKind};
-use crate::util::rng::Pcg64;
 
 /// Momentum accumulation mode (Figure 5 ablation ladder).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -172,9 +179,10 @@ impl Helene {
         }
     }
 
-    /// Shared update core. For each trainable array i and element j with
-    /// gradient g, apply momentum / Hessian-EMA / clipped preconditioning.
-    fn apply(&mut self, params: &mut ParamSet, source: GradSource<'_>) -> Result<()> {
+    /// Shared update core, shard-parallel. `g_scale` multiplies the basis
+    /// from `src` into the per-element gradient: the SPSA scalar for
+    /// `Seeded`/`Cached` z, 1.0 for `Exact` gradients.
+    fn apply(&mut self, params: &mut ParamSet, src: GradSource<'_>, g_scale: f32) -> Result<()> {
         let (m, h) = match (&mut self.m, &mut self.h) {
             (Some(m), Some(h)) => (m, h),
             _ => bail!("Helene::init not called"),
@@ -194,18 +202,19 @@ impl Helene {
         // Algorithm 1 line 8: refresh on t ≡ 1 (mod k)
         let refresh_h = cfg.use_hessian && t % cfg.hessian_every_k.max(1) == 1 % cfg.hessian_every_k.max(1);
 
-        let mut clipped = 0u64;
-        let mut total = 0u64;
+        let clipped = AtomicU64::new(0);
+        let total = AtomicU64::new(0);
         let lambda = &self.lambda;
 
-        // inner elementwise kernel — mirrors the L1 fused Pallas kernel
+        // fused elementwise kernel, one call per trainable shard segment —
+        // mirrors the L1 fused Pallas kernel
         // (python/compile/kernels/helene_update.py); tests/fused_kernel.rs
         // checks the two agree through the compiled artifact.
-        let mut update_array = |i: usize, g_of: &mut dyn FnMut(usize) -> f32,
-                                m_arr: &mut [f32], h_arr: &mut [f32], th: &mut [f32]| {
-            let lam = lambda[i];
+        params.update_shards2(m, h, src, |seg, th, m_arr, h_arr, basis| {
+            let lam = lambda[seg.array];
+            let mut seg_clipped = 0u64;
             for j in 0..th.len() {
-                let g = g_of(j);
+                let g = g_scale * basis[j];
                 // momentum (Algorithm 1 line 7)
                 m_arr[j] = beta1 * m_arr[j] + alpha * g;
                 // A-GNB Hessian EMA (lines 8-11)
@@ -217,9 +226,8 @@ impl Helene {
                 let denom = if cfg.use_hessian {
                     let hv = h_arr[j];
                     if hv < lam {
-                        clipped += 1;
+                        seg_clipped += 1;
                     }
-                    total += 1;
                     cfg.gamma * hv.max(lam) + cfg.eps
                 } else {
                     1.0
@@ -227,75 +235,16 @@ impl Helene {
                 th[j] -= cfg.lr * cfg.weight_decay * th[j];
                 th[j] -= cfg.lr * m_arr[j] / denom;
             }
-        };
+            if cfg.use_hessian {
+                clipped.fetch_add(seg_clipped, Ordering::Relaxed);
+                total.fetch_add(th.len() as u64, Ordering::Relaxed);
+            }
+        });
 
-        match source {
-            GradSource::Seeded { g_scale, seed } => {
-                // regenerate z in-stream (identical draws to perturb_trainable)
-                let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-                let mut zbuf: Vec<f32> = Vec::new();
-                for i in 0..params.arrays.len() {
-                    if !params.train_mask[i] {
-                        continue;
-                    }
-                    let th = &mut params.arrays[i];
-                    zbuf.resize(th.len(), 0.0);
-                    rng.fill_normal(&mut zbuf);
-                    let z = &zbuf;
-                    update_array(
-                        i,
-                        &mut |j| g_scale * z[j],
-                        &mut m.arrays[i],
-                        &mut h.arrays[i],
-                        th,
-                    );
-                }
-            }
-            GradSource::Cached { g_scale, cache } => {
-                for i in 0..params.arrays.len() {
-                    if !params.train_mask[i] {
-                        continue;
-                    }
-                    let Some(z) = cache.z(i) else {
-                        bail!("z-cache missing array {i}");
-                    };
-                    update_array(
-                        i,
-                        &mut |j| g_scale * z[j],
-                        &mut m.arrays[i],
-                        &mut h.arrays[i],
-                        &mut params.arrays[i],
-                    );
-                }
-            }
-            GradSource::Exact(grads) => {
-                for i in 0..params.arrays.len() {
-                    if !params.train_mask[i] {
-                        continue;
-                    }
-                    let g = &grads.arrays[i];
-                    update_array(
-                        i,
-                        &mut |j| g[j],
-                        &mut m.arrays[i],
-                        &mut h.arrays[i],
-                        &mut params.arrays[i],
-                    );
-                }
-            }
-        }
-        drop(update_array);
-
-        self.clipped_elems += clipped;
-        self.total_elems += total;
+        self.clipped_elems += clipped.into_inner();
+        self.total_elems += total.into_inner();
         Ok(())
     }
-}
-
-enum GradSource<'a> {
-    Seeded { g_scale: f32, seed: u64 },
-    Cached { g_scale: f32, cache: &'a crate::model::params::ZCache },
-    Exact(&'a ParamSet),
 }
 
 impl Optimizer for Helene {
@@ -323,27 +272,12 @@ impl Optimizer for Helene {
         self.m = Some(params.zeros_like());
         self.h = Some(params.zeros_like());
         self.t = 0;
-        // resolve λ_i per layer group, then broadcast to member arrays
-        let groups = params.spec.layer_groups();
-        let dims: Vec<usize> = groups
-            .iter()
-            .map(|(_, idxs)| idxs.iter().map(|&i| params.spec.params[i].size).sum())
-            .collect();
-        let lambdas = self
-            .cfg
-            .clip
-            .lambdas(&dims)
+        self.lambda = lambda_per_array(&self.cfg.clip, &params.spec)
             .expect("clip policy resolution");
-        self.lambda = vec![0.0; params.n_arrays()];
-        for ((_, idxs), lam) in groups.iter().zip(&lambdas) {
-            for &i in idxs {
-                self.lambda[i] = *lam;
-            }
-        }
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        self.apply(params, GradSource::Seeded { g_scale, seed })
+        self.apply(params, GradSource::Seeded(seed), g_scale)
     }
 
     fn step_zo_cached(
@@ -353,14 +287,17 @@ impl Optimizer for Helene {
         _seed: u64,
         cache: &crate::model::params::ZCache,
     ) -> Result<()> {
-        self.apply(params, GradSource::Cached { g_scale, cache })
+        if !cache.matches(params) {
+            bail!("helene: z-cache not filled for this parameter layout");
+        }
+        self.apply(params, GradSource::Cached(cache), g_scale)
     }
 
     fn step_fo(&mut self, params: &mut ParamSet, grads: &ParamSet) -> Result<()> {
         if !self.fo {
             bail!("helene: FO step requires with_fo_hessian()");
         }
-        self.apply(params, GradSource::Exact(grads))
+        self.apply(params, GradSource::Exact(grads), 1.0)
     }
 
     fn state_bytes(&self) -> usize {
@@ -404,7 +341,7 @@ mod tests {
             o1.step_zo(&mut p1, 0.3, 100 + step).unwrap();
             o2.step_zo(&mut p2, 0.3, 100 + step).unwrap();
         }
-        assert_eq!(p1.arrays, p2.arrays);
+        assert_eq!(p1.flat(), p2.flat());
         assert!(p1.max_abs_diff(&toy_params(&[8, 8])) > 0.0);
     }
 
@@ -428,7 +365,7 @@ mod tests {
         opt.step_zo(&mut p, g_scale, 7).unwrap();
         // m = alpha * g, |g| = |g_scale * z|; bound with generous z range
         let mut max_step = 0f32;
-        for (a, b) in p.arrays[0].iter().zip(&before.arrays[0]) {
+        for (a, b) in p.array(0).iter().zip(before.array(0)) {
             max_step = max_step.max((a - b).abs());
         }
         // |z| < 6 w.h.p. → |m| < 0.6, denom ≥ λ → step < lr*0.6/0.5
@@ -477,7 +414,7 @@ mod tests {
         });
         opt.init(&p);
         opt.step_zo(&mut p, 0.0, 3).unwrap(); // zero gradient: pure decay
-        for &x in &p.arrays[0] {
+        for &x in p.array(0) {
             assert!((x - 0.5 * (1.0 - 0.05)).abs() < 1e-6);
         }
     }
@@ -486,7 +423,7 @@ mod tests {
     fn fo_variant_uses_exact_grads() {
         let mut p = toy_params(&[16]);
         let mut g = p.zeros_like();
-        for v in g.arrays[0].iter_mut() {
+        for v in g.array_mut(0).iter_mut() {
             *v = 1.0;
         }
         let mut opt = Helene::paper_defaults().with_fo_hessian().with_lr(1e-2);
@@ -495,14 +432,46 @@ mod tests {
         let before = p.clone();
         opt.step_fo(&mut p, &g).unwrap();
         // all elements get identical treatment → uniform step
-        let d0 = before.arrays[0][0] - p.arrays[0][0];
+        let d0 = before.array(0)[0] - p.array(0)[0];
         for j in 0..16 {
-            assert!((before.arrays[0][j] - p.arrays[0][j] - d0).abs() < 1e-7);
+            assert!((before.array(0)[j] - p.array(0)[j] - d0).abs() < 1e-7);
         }
         assert!(d0 > 0.0);
         // ZO-configured helene must reject step_fo
         let mut zo = Helene::paper_defaults();
         zo.init(&p);
         assert!(zo.step_fo(&mut p, &g).is_err());
+    }
+
+    #[test]
+    fn cached_step_rejects_unfilled_cache() {
+        // an unfilled cache is a recoverable error, not a panic
+        let mut p = toy_params(&[8]);
+        let mut opt = Helene::paper_defaults();
+        opt.init(&p);
+        let empty = crate::model::params::ZCache::default();
+        assert!(opt.step_zo_cached(&mut p, 0.1, 1, &empty).is_err());
+        assert!(empty.z(0..4).is_none());
+    }
+
+    #[test]
+    fn cached_step_is_bitwise_identical_to_seeded() {
+        // the z-cache path feeds the same shard draws to the kernel
+        let mut p1 = toy_params(&[200, 120]);
+        let mut p2 = toy_params(&[200, 120]);
+        let mut o1 = Helene::paper_defaults().with_lr(5e-3);
+        let mut o2 = Helene::paper_defaults().with_lr(5e-3);
+        o1.init(&p1);
+        o2.init(&p2);
+        let mut cache = crate::model::params::ZCache::default();
+        for s in 0..3 {
+            let seed = 40 + s;
+            // fill the cache on a scratch copy so p2's θ is untouched
+            let mut scratch = p2.clone();
+            scratch.perturb_fill_cache(&mut cache, seed, 1e-3);
+            o1.step_zo(&mut p1, 0.4, seed).unwrap();
+            o2.step_zo_cached(&mut p2, 0.4, seed, &cache).unwrap();
+        }
+        assert_eq!(p1.max_abs_diff(&p2), 0.0);
     }
 }

@@ -3,8 +3,9 @@
 //! All zeroth-order optimizers share the MeZO step protocol driven by the
 //! trainer (`train/`): perturb +εz → L⁺ → perturb −2εz → L⁻ → restore →
 //! `step_zo(params, g_scale, seed)` where `g_scale = (L⁺ − L⁻) / 2ε` and
-//! `z` is regenerated from `seed` inside the optimizer via
-//! `ParamSet::visit_z`. First-order baselines receive the exact gradient
+//! `z` is regenerated from `seed` inside the optimizer via the
+//! shard-parallel `ParamSet::update_shards*` kernels (per-shard streams,
+//! DESIGN.md §Sharding). First-order baselines receive the exact gradient
 //! from the compiled `loss_grad` entrypoint through `step_fo`.
 //!
 //! | paper name      | type                        | module        |
@@ -135,42 +136,11 @@ pub const ZO_ZOO: &[&str] = &[
 /// Shared test fixture: a ParamSet over toy layer groups.
 #[cfg(test)]
 pub(crate) mod testutil {
-    use crate::model::manifest::{ModelDims, ModelKind, ParamInfo, VariantSpec};
     use crate::model::params::ParamSet;
-    use std::collections::BTreeMap;
-    use std::sync::Arc;
 
     /// One single-array layer group per entry of `sizes`, all values 0.5.
     pub fn toy_params(sizes: &[usize]) -> ParamSet {
-        let mut params = Vec::new();
-        let mut offset = 0;
-        for (i, &size) in sizes.iter().enumerate() {
-            params.push(ParamInfo {
-                name: format!("p{i}"),
-                shape: vec![size],
-                layer: format!("layer{i}"),
-                trainable: true,
-                offset,
-                size,
-            });
-            offset += size;
-        }
-        let spec = Arc::new(VariantSpec {
-            model: "toy".into(),
-            variant: "ft".into(),
-            kind: ModelKind::Cls,
-            dims: ModelDims {
-                vocab: 4, d_model: 2, n_heads: 1, n_layers: 1, d_ff: 2,
-                max_seq: 2, n_classes: 2, batch: 1, lora_rank: 1, prefix_len: 1,
-            },
-            params_bin: "x".into(),
-            n_params: offset,
-            params,
-            entrypoints: BTreeMap::new(),
-        });
-        let arrays = sizes.iter().map(|&s| vec![0.5f32; s]).collect();
-        let train_mask = vec![true; sizes.len()];
-        ParamSet { spec, arrays, train_mask }
+        ParamSet::synthetic(sizes, 0.5)
     }
 }
 

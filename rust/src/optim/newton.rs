@@ -9,9 +9,8 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::model::params::{ParamSet, Z_STREAM};
+use crate::model::params::{GradSource, ParamSet};
 use crate::optim::{Optimizer, StepKind};
-use crate::util::rng::Pcg64;
 
 pub struct ZoNewton {
     lr: f32,
@@ -45,22 +44,14 @@ impl Optimizer for ZoNewton {
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
         let h = self.h.as_mut().ok_or_else(|| anyhow!("init not called"))?;
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        let mut zbuf: Vec<f32> = Vec::new();
-        for i in 0..params.arrays.len() {
-            if !params.train_mask[i] {
-                continue;
-            }
-            let th = &mut params.arrays[i];
-            zbuf.resize(th.len(), 0.0);
-            rng.fill_normal(&mut zbuf);
-            let h_arr = &mut h.arrays[i];
+        let (lr, eps, batch_size) = (self.lr, self.eps, self.batch_size);
+        params.update_shards1(h, GradSource::Seeded(seed), |_seg, th, h_arr, z| {
             for j in 0..th.len() {
-                let g = g_scale * zbuf[j];
-                h_arr[j] = self.batch_size * g * g; // raw estimate, no EMA
-                th[j] -= self.lr * g / (h_arr[j] + self.eps);
+                let g = g_scale * z[j];
+                h_arr[j] = batch_size * g * g; // raw estimate, no EMA
+                th[j] -= lr * g / (h_arr[j] + eps);
             }
-        }
+        });
         Ok(())
     }
 
@@ -105,6 +96,6 @@ mod tests {
         o2.init(&b);
         o1.step_zo(&mut a, 0.3, 1).unwrap();
         o2.step_zo(&mut b, 0.3, 1).unwrap();
-        assert_eq!(a.arrays, b.arrays);
+        assert_eq!(a.flat(), b.flat());
     }
 }

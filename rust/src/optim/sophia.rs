@@ -14,11 +14,14 @@
 //!    matching GNB's extra variance without a label-generating model.
 //!
 //! Trigger telemetry (`clip_triggers`, `update_elems`) reproduces the §B.3
-//! counting experiment.
+//! counting experiment; counters accumulate atomically across the
+//! shard-parallel update.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, Result};
 
-use crate::model::params::{ParamSet, Z_STREAM};
+use crate::model::params::{GradSource, ParamSet};
 use crate::optim::{Optimizer, StepKind};
 use crate::util::rng::{mix64, Pcg64};
 
@@ -102,8 +105,10 @@ impl Optimizer for ZoSophia {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        let m = self.m.as_mut().ok_or_else(|| anyhow!("init not called"))?;
-        let h = self.h.as_mut().ok_or_else(|| anyhow!("init not called"))?;
+        let (m, h) = match (&mut self.m, &mut self.h) {
+            (Some(m), Some(h)) => (m, h),
+            _ => return Err(anyhow!("init not called")),
+        };
         self.t += 1;
         let refresh_h = self.t % self.hessian_every_k.max(1) == 1 % self.hessian_every_k.max(1);
         // GNB label-sampling noise: one multiplicative draw per refresh
@@ -115,34 +120,33 @@ impl Optimizer for ZoSophia {
             1.0
         };
 
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        let mut zbuf: Vec<f32> = Vec::new();
-        for i in 0..params.arrays.len() {
-            if !params.train_mask[i] {
-                continue;
-            }
-            let th = &mut params.arrays[i];
-            zbuf.resize(th.len(), 0.0);
-            rng.fill_normal(&mut zbuf);
-            let m_arr = &mut m.arrays[i];
-            let h_arr = &mut h.arrays[i];
+        let (lr, beta1, beta2, gamma, eps, rho) =
+            (self.lr, self.beta1, self.beta2, self.gamma, self.eps, self.rho);
+        let batch_size = self.batch_size;
+        let triggers = AtomicU64::new(0);
+        let elems = AtomicU64::new(0);
+        params.update_shards2(m, h, GradSource::Seeded(seed), |_seg, th, m_arr, h_arr, z| {
+            let mut seg_triggers = 0u64;
             for j in 0..th.len() {
-                let g = g_scale * zbuf[j];
-                m_arr[j] = self.beta1 * m_arr[j] + (1.0 - self.beta1) * g;
+                let g = g_scale * z[j];
+                m_arr[j] = beta1 * m_arr[j] + (1.0 - beta1) * g;
                 if refresh_h {
-                    let h_hat = self.batch_size * (g * noise_u) * (g * noise_u);
-                    h_arr[j] = self.beta2 * h_arr[j] + (1.0 - self.beta2) * h_hat;
+                    let h_hat = batch_size * (g * noise_u) * (g * noise_u);
+                    h_arr[j] = beta2 * h_arr[j] + (1.0 - beta2) * h_hat;
                 }
                 // Sophia update: clip(m / max(γ h, ε), ρ)
-                let raw = m_arr[j] / (self.gamma * h_arr[j]).max(self.eps);
-                let clipped = raw.clamp(-self.rho, self.rho);
+                let raw = m_arr[j] / (gamma * h_arr[j]).max(eps);
+                let clipped = raw.clamp(-rho, rho);
                 if raw != clipped {
-                    self.clip_triggers += 1;
+                    seg_triggers += 1;
                 }
-                self.update_elems += 1;
-                th[j] -= self.lr * clipped;
+                th[j] -= lr * clipped;
             }
-        }
+            triggers.fetch_add(seg_triggers, Ordering::Relaxed);
+            elems.fetch_add(th.len() as u64, Ordering::Relaxed);
+        });
+        self.clip_triggers += triggers.into_inner();
+        self.update_elems += elems.into_inner();
         Ok(())
     }
 
@@ -172,7 +176,7 @@ mod tests {
         let mut opt = ZoSophia::new(1e-2);
         opt.init(&p);
         opt.step_zo(&mut p, 2.0, 3).unwrap();
-        for (a, b) in p.arrays[0].iter().zip(&before.arrays[0]) {
+        for (a, b) in p.array(0).iter().zip(before.array(0)) {
             assert!((a - b).abs() <= 1e-2 * opt.rho + 1e-7);
         }
     }

@@ -125,8 +125,8 @@ mod tests {
     fn quad_loss(p: &ParamSet) -> Result<f32> {
         let cs = [1.0f32, 10.0];
         let mut l = 0.0;
-        for (i, arr) in p.arrays.iter().enumerate() {
-            l += 0.5 * cs[i % 2] * arr.iter().map(|x| x * x).sum::<f32>();
+        for i in 0..p.n_arrays() {
+            l += 0.5 * cs[i % 2] * p.array(i).iter().map(|x| x * x).sum::<f32>();
         }
         Ok(l)
     }
@@ -149,7 +149,7 @@ mod tests {
         let mut proj = 0f64;
         let cs = [1.0f32, 10.0];
         p.visit_z(23, |i, z| {
-            for (x, zv) in p.arrays[i].iter().zip(z) {
+            for (x, zv) in p.array(i).iter().zip(z) {
                 proj += (cs[i % 2] * x * zv) as f64;
             }
         });
@@ -197,7 +197,7 @@ mod tests {
         assert_eq!(a.g_scale, b.g_scale);
         assert_eq!(a.loss_plus, b.loss_plus);
         assert_eq!(a.loss_minus, b.loss_minus);
-        assert_eq!(p1.arrays, p2.arrays); // identical restore arithmetic
+        assert_eq!(p1.flat(), p2.flat()); // identical restore arithmetic
     }
 
     #[test]
@@ -207,7 +207,7 @@ mod tests {
         let orig = p.clone();
         let mut cache = crate::model::params::ZCache::default();
         let _ = estimate_cached(&mut p, &mut cache, 5, 1e-3, quad_loss).unwrap();
-        assert_eq!(p.arrays[0], orig.arrays[0]);
+        assert_eq!(p.array(0), orig.array(0));
         assert!(p.max_abs_diff(&orig) < 1e-6); // restored overall
     }
 

@@ -1,12 +1,12 @@
 //! ZO-Adam / ZO-AdamW / ZO-Lion — the adaptive ZO baselines of Table 3 and
 //! Figure 4. All consume the SPSA gradient `g = g_scale · z` (z regenerated
-//! from the step seed) and apply the textbook first-order update rule to it.
+//! per shard from the step seed) and apply the textbook first-order update
+//! rule to it, shard-parallel via `ParamSet::update_shards*`.
 
 use anyhow::{anyhow, Result};
 
-use crate::model::params::{ParamSet, Z_STREAM};
+use crate::model::params::{GradSource, ParamSet};
 use crate::optim::{Optimizer, StepKind};
-use crate::util::rng::Pcg64;
 
 /// ZO-Adam (and AdamW with decoupled weight decay).
 pub struct ZoAdam {
@@ -62,34 +62,28 @@ impl Optimizer for ZoAdam {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        let m = self.m.as_mut().ok_or_else(|| anyhow!("init not called"))?;
-        let v = self.v.as_mut().ok_or_else(|| anyhow!("init not called"))?;
+        let (m, v) = match (&mut self.m, &mut self.v) {
+            (Some(m), Some(v)) => (m, v),
+            _ => return Err(anyhow!("init not called")),
+        };
         self.t += 1;
         let bc1 = 1.0 - self.beta1.powi(self.t as i32);
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        let mut zbuf: Vec<f32> = Vec::new();
-        for i in 0..params.arrays.len() {
-            if !params.train_mask[i] {
-                continue;
-            }
-            let th = &mut params.arrays[i];
-            zbuf.resize(th.len(), 0.0);
-            rng.fill_normal(&mut zbuf);
-            let m_arr = &mut m.arrays[i];
-            let v_arr = &mut v.arrays[i];
+        let (lr, beta1, beta2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
+        let (decoupled, wd) = (self.decoupled, self.weight_decay);
+        params.update_shards2(m, v, GradSource::Seeded(seed), |_seg, th, m_arr, v_arr, z| {
             for j in 0..th.len() {
-                let g = g_scale * zbuf[j];
-                m_arr[j] = self.beta1 * m_arr[j] + (1.0 - self.beta1) * g;
-                v_arr[j] = self.beta2 * v_arr[j] + (1.0 - self.beta2) * g * g;
+                let g = g_scale * z[j];
+                m_arr[j] = beta1 * m_arr[j] + (1.0 - beta1) * g;
+                v_arr[j] = beta2 * v_arr[j] + (1.0 - beta2) * g * g;
                 let m_hat = m_arr[j] / bc1;
                 let v_hat = v_arr[j] / bc2;
-                if self.decoupled {
-                    th[j] -= self.lr * self.weight_decay * th[j];
+                if decoupled {
+                    th[j] -= lr * wd * th[j];
                 }
-                th[j] -= self.lr * m_hat / (v_hat.sqrt() + self.eps);
+                th[j] -= lr * m_hat / (v_hat.sqrt() + eps);
             }
-        }
+        });
         Ok(())
     }
 
@@ -137,26 +131,18 @@ impl Optimizer for ZoLion {
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
         let m = self.m.as_mut().ok_or_else(|| anyhow!("init not called"))?;
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        let mut zbuf: Vec<f32> = Vec::new();
-        for i in 0..params.arrays.len() {
-            if !params.train_mask[i] {
-                continue;
-            }
-            let th = &mut params.arrays[i];
-            zbuf.resize(th.len(), 0.0);
-            rng.fill_normal(&mut zbuf);
-            let m_arr = &mut m.arrays[i];
+        let (lr, beta1, beta2, wd) = (self.lr, self.beta1, self.beta2, self.weight_decay);
+        params.update_shards1(m, GradSource::Seeded(seed), |_seg, th, m_arr, z| {
             for j in 0..th.len() {
-                let g = g_scale * zbuf[j];
+                let g = g_scale * z[j];
                 // c_t = β₁ m + (1−β₁) g ; update = sign(c_t)
-                let c = self.beta1 * m_arr[j] + (1.0 - self.beta1) * g;
+                let c = beta1 * m_arr[j] + (1.0 - beta1) * g;
                 let upd = if c > 0.0 { 1.0 } else if c < 0.0 { -1.0 } else { 0.0 };
-                th[j] -= self.lr * (upd + self.weight_decay * th[j]);
+                th[j] -= lr * (upd + wd * th[j]);
                 // m_t = β₂ m + (1−β₂) g
-                m_arr[j] = self.beta2 * m_arr[j] + (1.0 - self.beta2) * g;
+                m_arr[j] = beta2 * m_arr[j] + (1.0 - beta2) * g;
             }
-        }
+        });
         Ok(())
     }
 
@@ -186,7 +172,7 @@ mod tests {
         let mut opt = ZoAdam::new(1e-2, false);
         opt.init(&p);
         opt.step_zo(&mut p, 0.8, 42).unwrap();
-        for (a, b) in p.arrays[0].iter().zip(&before.arrays[0]) {
+        for (a, b) in p.array(0).iter().zip(before.array(0)) {
             let step = (a - b).abs();
             assert!(step < 1.05e-2 && step > 0.9e-2, "step {step}");
         }
@@ -202,7 +188,7 @@ mod tests {
             for s in 0..10 {
                 opt.step_zo(&mut p, 0.0, s).unwrap();
             }
-            p.arrays[0][0]
+            p.array(0)[0]
         };
         assert_eq!(run(false), 0.5);
         assert!(run(true) < 0.5);
@@ -215,7 +201,7 @@ mod tests {
         let mut opt = ZoLion::new(5e-3);
         opt.init(&p);
         opt.step_zo(&mut p, 1.3, 7).unwrap();
-        for (a, b) in p.arrays[0].iter().zip(&before.arrays[0]) {
+        for (a, b) in p.array(0).iter().zip(before.array(0)) {
             assert!(((a - b).abs() - 5e-3).abs() < 1e-7);
         }
     }
@@ -243,6 +229,6 @@ mod tests {
             o1.step_zo(&mut a, 0.4, s).unwrap();
             o2.step_zo(&mut b, 0.4, s).unwrap();
         }
-        assert_eq!(a.arrays, b.arrays);
+        assert_eq!(a.flat(), b.flat());
     }
 }

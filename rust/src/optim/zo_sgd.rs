@@ -7,12 +7,15 @@
 //!                   post-step loss did not increase, else revert exactly
 //!                   (z regenerated from the step's seed).
 //! * `ZoSgdSign`   — ZO-signSGD: `θ −= η · sign(g_scale · z)`.
+//!
+//! All updates run shard-parallel over the flat arena via the
+//! `ParamSet::update_shards*` kernels / `perturb_trainable` (z regenerated
+//! per shard from `(seed, shard_index)` — DESIGN.md §Sharding).
 
 use anyhow::{bail, Result};
 
-use crate::model::params::{ParamSet, Z_STREAM};
+use crate::model::params::{GradSource, ParamSet};
 use crate::optim::{Optimizer, StepKind};
-use crate::util::rng::Pcg64;
 
 /// MeZO / ZO-SGD (optionally flagged as the Forward-Grad consumer).
 pub struct ZoSgd {
@@ -65,6 +68,9 @@ impl Optimizer for ZoSgd {
         _seed: u64,
         cache: &crate::model::params::ZCache,
     ) -> Result<()> {
+        if !cache.matches(params) {
+            bail!("zo-sgd: z-cache not filled for this parameter layout");
+        }
         params.perturb_from_cache(cache, -self.lr * g_scale);
         Ok(())
     }
@@ -110,21 +116,13 @@ impl Optimizer for ZoSgdMomentum {
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
         let m = self.m.as_mut().ok_or_else(|| anyhow::anyhow!("init not called"))?;
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        let mut zbuf: Vec<f32> = Vec::new();
-        for i in 0..params.arrays.len() {
-            if !params.train_mask[i] {
-                continue;
-            }
-            let th = &mut params.arrays[i];
-            zbuf.resize(th.len(), 0.0);
-            rng.fill_normal(&mut zbuf);
-            let m_arr = &mut m.arrays[i];
+        let (lr, mu) = (self.lr, self.mu);
+        params.update_shards1(m, GradSource::Seeded(seed), |_seg, th, m_arr, z| {
             for j in 0..th.len() {
-                m_arr[j] = self.mu * m_arr[j] + g_scale * zbuf[j];
-                th[j] -= self.lr * m_arr[j];
+                m_arr[j] = mu * m_arr[j] + g_scale * z[j];
+                th[j] -= lr * m_arr[j];
             }
-        }
+        });
         Ok(())
     }
 
@@ -230,19 +228,12 @@ impl Optimizer for ZoSgdSign {
             return Ok(()); // sign(0) = 0: no update
         }
         let gs = g_scale.signum();
-        let mut rng = Pcg64::new_stream(seed, Z_STREAM);
-        let mut zbuf: Vec<f32> = Vec::new();
-        for i in 0..params.arrays.len() {
-            if !params.train_mask[i] {
-                continue;
-            }
-            let th = &mut params.arrays[i];
-            zbuf.resize(th.len(), 0.0);
-            rng.fill_normal(&mut zbuf);
+        let lr = self.lr;
+        params.update_shards(GradSource::Seeded(seed), |_seg, th, z| {
             for j in 0..th.len() {
-                th[j] -= self.lr * (gs * zbuf[j]).signum();
+                th[j] -= lr * (gs * z[j]).signum();
             }
-        }
+        });
         Ok(())
     }
 
@@ -273,7 +264,7 @@ mod tests {
         opt.step_zo(&mut p, 0.5, 99).unwrap();
         // manual: θ += (-lr*g) * z
         q.perturb_trainable(99, -0.01 * 0.5);
-        assert_eq!(p.arrays, q.arrays);
+        assert_eq!(p.flat(), q.flat());
         assert_eq!(opt.state_bytes(), 0);
     }
 
@@ -306,7 +297,7 @@ mod tests {
         opt.step_zo(&mut p, 1.0, 4).unwrap();
         let moved = p.clone();
         opt.post_check(&mut p, 1.0, 0.5).unwrap(); // improved → keep
-        assert_eq!(p.arrays, moved.arrays);
+        assert_eq!(p.flat(), moved.flat());
         assert_eq!((opt.accepted, opt.reverted), (1, 1));
     }
 
@@ -317,12 +308,12 @@ mod tests {
         let mut opt = ZoSgdSign::new(0.01);
         opt.init(&p);
         opt.step_zo(&mut p, -0.7, 11).unwrap();
-        for (a, b) in p.arrays[0].iter().zip(&before.arrays[0]) {
+        for (a, b) in p.array(0).iter().zip(before.array(0)) {
             assert!(((a - b).abs() - 0.01).abs() < 1e-7);
         }
         // zero gradient → no movement
         let frozen = p.clone();
         opt.step_zo(&mut p, 0.0, 12).unwrap();
-        assert_eq!(p.arrays, frozen.arrays);
+        assert_eq!(p.flat(), frozen.flat());
     }
 }

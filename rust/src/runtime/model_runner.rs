@@ -99,12 +99,12 @@ impl<'rt> ModelRunner<'rt> {
         let mut out = Vec::with_capacity(
             params.n_arrays() * (1 + tangents.is_some() as usize) + 2,
         );
-        for (p, arr) in self.spec.params.iter().zip(&params.arrays) {
-            out.push(lit_f32(arr, &p.shape)?);
+        for (i, p) in self.spec.params.iter().enumerate() {
+            out.push(lit_f32(params.array(i), &p.shape)?);
         }
         if let Some(t) = tangents {
-            for (p, arr) in self.spec.params.iter().zip(&t.arrays) {
-                out.push(lit_f32(arr, &p.shape)?);
+            for (i, p) in self.spec.params.iter().enumerate() {
+                out.push(lit_f32(t.array(i), &p.shape)?);
             }
         }
         out.push(lit_i32(&batch.tokens, &[batch.batch, batch.seq])?);
@@ -132,7 +132,8 @@ impl<'rt> ModelRunner<'rt> {
         let mut owned: Vec<Rc<xla::PjRtBuffer>> = Vec::with_capacity(params.n_arrays() + 2);
         {
             let mut cache = self.frozen_cache.borrow_mut();
-            for (i, (p, arr)) in self.spec.params.iter().zip(&params.arrays).enumerate() {
+            for (i, p) in self.spec.params.iter().enumerate() {
+                let arr = params.array(i);
                 if params.is_trainable(i) {
                     owned.push(Rc::new(self.rt.stage_f32(arr, &p.shape)?));
                 } else {
@@ -197,7 +198,12 @@ impl<'rt> ModelRunner<'rt> {
         let loss = scalar_f32(&out[0])?;
         let mut grads = params.zeros_like();
         for (i, lit) in out[1..].iter().enumerate() {
-            grads.arrays[i] = lit.to_vec::<f32>()?;
+            let v = lit.to_vec::<f32>()?;
+            let dst = grads.array_mut(i);
+            if v.len() != dst.len() {
+                bail!("loss_grad output {i}: {} elements, expected {}", v.len(), dst.len());
+            }
+            dst.copy_from_slice(&v);
         }
         Ok((loss, grads))
     }

@@ -44,8 +44,7 @@ fn gen_params(g: &mut Gen) -> ParamSet {
         entrypoints: BTreeMap::new(),
     });
     let arrays = params.iter().map(|p| g.vec_f32(p.size, -2.0, 2.0)).collect();
-    let train_mask = (0..n_layers).map(|_| g.bool() || true).collect();
-    ParamSet { spec, arrays, train_mask }
+    ParamSet::from_arrays(spec, arrays)
 }
 
 #[test]
@@ -81,9 +80,8 @@ fn prop_spsa_estimates_quadratic_gradient() {
             // accumulate in f64 so the property tests SPSA itself, not the
             // oracle's sequential f32 summation error
             let l = 0.5 * q
-                .arrays
+                .flat()
                 .iter()
-                .flatten()
                 .map(|&x| (x as f64) * (x as f64))
                 .sum::<f64>() as f32;
             loss_mag = loss_mag.max(l);
@@ -92,7 +90,7 @@ fn prop_spsa_estimates_quadratic_gradient() {
         .map_err(|e| e.to_string())?;
         let mut proj = 0f64;
         p.visit_z(seed, |i, z| {
-            for (x, zv) in p.arrays[i].iter().zip(z) {
+            for (x, zv) in p.array(i).iter().zip(z) {
                 proj += (*x as f64) * (*zv as f64);
             }
         });
@@ -131,7 +129,7 @@ fn prop_helene_step_bounded_by_lambda_floor() {
         let mut max_viol = 0f32;
         before.visit_z(seed, |i, z| {
             for (j, zv) in z.iter().enumerate() {
-                let step = (p.arrays[i][j] - before.arrays[i][j]).abs();
+                let step = (p.array(i)[j] - before.array(i)[j]).abs();
                 let bound = lr * (g_scale * zv).abs() / lam * 1.01 + 1e-7;
                 if step > bound {
                     max_viol = max_viol.max(step - bound);
@@ -217,7 +215,7 @@ fn prop_update_ignores_frozen_arrays() {
         opt.step_zo(&mut p, g.f32_in(-2.0, 2.0), g.u64())
             .map_err(|e| e.to_string())?;
         for i in 0..k {
-            if p.arrays[i] != before.arrays[i] {
+            if p.array(i) != before.array(i) {
                 return Err(format!("frozen array {i} moved"));
             }
         }
@@ -237,7 +235,7 @@ fn prop_momentum_modes_all_descend_on_quadratic() {
             _ => MomentumMode::Annealed,
         };
         let mut p = gen_params(g);
-        let norm0: f64 = p.arrays.iter().flatten().map(|&x| (x as f64).powi(2)).sum();
+        let norm0: f64 = p.flat().iter().map(|&x| (x as f64).powi(2)).sum();
         if norm0 < 1e-6 {
             return Ok(());
         }
@@ -245,12 +243,12 @@ fn prop_momentum_modes_all_descend_on_quadratic() {
         opt.init(&p);
         for s in 0..100 {
             let est = spsa::estimate_with(&mut p, 1000 + s, 1e-4, |q| {
-                Ok(0.5 * q.arrays.iter().flatten().map(|x| x * x).sum::<f32>())
+                Ok(0.5 * q.flat().iter().map(|x| x * x).sum::<f32>())
             })
             .map_err(|e| e.to_string())?;
             opt.step_zo(&mut p, est.g_scale, est.seed).map_err(|e| e.to_string())?;
         }
-        let norm1: f64 = p.arrays.iter().flatten().map(|&x| (x as f64).powi(2)).sum();
+        let norm1: f64 = p.flat().iter().map(|&x| (x as f64).powi(2)).sum();
         if norm1 >= norm0 {
             return Err(format!("{mode:?}: ‖θ‖² {norm0} → {norm1} did not descend"));
         }

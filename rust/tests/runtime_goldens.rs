@@ -139,7 +139,7 @@ fn loss_grad_gradient_matches_spsa_projection() {
     // recompute zᵀg exactly
     let mut proj = 0f64;
     params.visit_z(seed, |i, z| {
-        for (gv, zv) in grads.arrays[i].iter().zip(z) {
+        for (gv, zv) in grads.array(i).iter().zip(z) {
             proj += (*gv as f64) * (*zv as f64);
         }
     });

@@ -1,0 +1,168 @@
+//! Parallelism-determinism properties of the sharded flat-arena `ParamSet`.
+//!
+//! The shard layer's contract (DESIGN.md §Sharding): every draw depends
+//! only on `(seed, shard_index, position-in-shard)`, never on scheduling —
+//! so any operation must be **bitwise identical** across rayon pool sizes,
+//! and the MeZO perturb/restore identity must hold on multi-shard arenas
+//! exactly as it did on the old sequential store.
+
+use helene::model::params::{ParamSet, ZCache, SHARD_SIZE};
+use helene::optim::helene::Helene;
+use helene::optim::sophia::ZoSophia;
+use helene::optim::zo_adam::ZoAdam;
+use helene::optim::zo_sgd::ZoSgdMomentum;
+use helene::optim::{spsa, Optimizer};
+use helene::util::prop::{forall, Gen};
+
+/// Run `f` inside a dedicated rayon pool of `threads` workers.
+fn with_pool<T: Send>(threads: usize, f: impl FnOnce() -> T + Send) -> T {
+    rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("pool")
+        .install(f)
+}
+
+/// A multi-shard synthetic arena with randomized (mis)alignment.
+fn gen_multi_shard(g: &mut Gen) -> ParamSet {
+    let sizes = [
+        g.usize_in(1, SHARD_SIZE),
+        g.usize_in(SHARD_SIZE, 2 * SHARD_SIZE),
+        g.usize_in(1, 300),
+        g.usize_in(SHARD_SIZE / 2, SHARD_SIZE + 2),
+    ];
+    let mut p = ParamSet::synthetic(&sizes, 0.0);
+    // randomized contents
+    let vals = g.vec_f32(p.n_params(), -2.0, 2.0);
+    p.flat_mut().copy_from_slice(&vals);
+    p
+}
+
+#[test]
+fn prop_perturb_bitwise_identical_across_thread_counts() {
+    forall("perturb-thread-invariance", |g| {
+        let base = gen_multi_shard(g);
+        let seed = g.u64();
+        let scale = g.f32_in(1e-5, 1e-1);
+        let run = |threads: usize| {
+            let mut p = base.clone();
+            with_pool(threads, || p.perturb_trainable(seed, scale));
+            p
+        };
+        let single = run(1);
+        for threads in [2, 8] {
+            if single.flat() != run(threads).flat() {
+                return Err(format!("perturb differs at {threads} threads"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimizer_steps_bitwise_identical_across_thread_counts() {
+    forall("step-thread-invariance", |g| {
+        let base = gen_multi_shard(g);
+        let seed = g.u64();
+        let g_scale = g.f32_in(-2.0, 2.0);
+        let which = g.usize_in(0, 4);
+        let run = |threads: usize| -> Result<ParamSet, String> {
+            let mut p = base.clone();
+            let mut opt: Box<dyn Optimizer + Send> = match which {
+                0 => Box::new(Helene::paper_defaults().with_lr(1e-3)),
+                1 => Box::new(ZoAdam::new(1e-3, true)),
+                2 => Box::new(ZoSophia::new(1e-3)),
+                _ => Box::new(ZoSgdMomentum::new(1e-3, 0.9)),
+            };
+            opt.init(&p);
+            with_pool(threads, || opt.step_zo(&mut p, g_scale, seed))
+                .map_err(|e| e.to_string())?;
+            Ok(p)
+        };
+        let single = run(1)?;
+        let eight = run(8)?;
+        if single.flat() != eight.flat() {
+            return Err(format!("optimizer {which} differs between 1 and 8 threads"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_perturb_restore_drift_bounded_on_sharded_arena() {
+    // the SPSA cycle +ε / −2ε / +ε re-adds identical values per element, so
+    // drift stays within the ulp bound the old sequential store guaranteed
+    forall("sharded-restore-drift", |g| {
+        let mut p = gen_multi_shard(g);
+        let orig = p.clone();
+        let seed = g.u64();
+        let eps = g.f32_in(1e-6, 1e-1);
+        p.perturb_trainable(seed, eps);
+        p.perturb_trainable(seed, -2.0 * eps);
+        p.perturb_trainable(seed, eps);
+        let drift = p.max_abs_diff(&orig);
+        let bound = 8.0 * f32::EPSILON * (2.0 + 6.0 * eps);
+        if drift > bound {
+            return Err(format!("drift {drift} > bound {bound} (eps {eps})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zcache_path_bitwise_matches_regeneration() {
+    forall("zcache-vs-regen", |g| {
+        let mut a = gen_multi_shard(g);
+        let mut b = a.clone();
+        let seed = g.u64();
+        let eps = g.f32_in(1e-5, 1e-2);
+        let quad = |q: &ParamSet| Ok(q.flat().iter().map(|x| x * x).sum::<f32>());
+        let mut cache = ZCache::default();
+        let ea = spsa::estimate_with(&mut a, seed, eps, quad).map_err(|e| e.to_string())?;
+        let eb = spsa::estimate_cached(&mut b, &mut cache, seed, eps, quad)
+            .map_err(|e| e.to_string())?;
+        if ea.g_scale != eb.g_scale || a.flat() != b.flat() {
+            return Err("cached SPSA cycle diverged from regeneration".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn freezing_one_shard_leaves_other_shards_draws_unchanged() {
+    // arrays aligned to whole shards: freezing array 0 must not change the
+    // z applied to array 1 (independent per-shard streams)
+    let mut all = ParamSet::synthetic(&[SHARD_SIZE, SHARD_SIZE], 1.0);
+    let mut partial = all.clone();
+    partial.train_mask[0] = false;
+    all.perturb_trainable(5, 0.1);
+    partial.perturb_trainable(5, 0.1);
+    assert_eq!(all.array(1), partial.array(1), "shard 1 draws shifted");
+    assert!(partial.array(0).iter().all(|&x| x == 1.0), "frozen shard moved");
+}
+
+#[test]
+fn helene_full_cycle_identical_between_pools() {
+    // several SPSA + step cycles end-to-end under different pools
+    let run = |threads: usize| {
+        with_pool(threads, || {
+            let mut p = ParamSet::synthetic(&[SHARD_SIZE + 7, 3 * SHARD_SIZE / 2], 0.5);
+            let mut opt = Helene::paper_defaults().with_lr(3e-3);
+            opt.init(&p);
+            let mut cache = ZCache::default();
+            for s in 0..4 {
+                let est = spsa::estimate_cached(&mut p, &mut cache, 100 + s, 1e-3, |q| {
+                    Ok(q.flat().iter().map(|x| x * x).sum::<f32>())
+                })
+                .unwrap();
+                opt.step_zo_cached(&mut p, est.g_scale, est.seed, &cache).unwrap();
+            }
+            p
+        })
+    };
+    let a = run(1);
+    let b = run(4);
+    let c = run(8);
+    assert_eq!(a.flat(), b.flat());
+    assert_eq!(b.flat(), c.flat());
+}

@@ -93,12 +93,9 @@ fn peft_variants_train() {
         let d = runner.spec.dims.clone();
         let data = tasks::generate("sst2", d.vocab, d.max_seq, 16, 0).unwrap();
         let mut params = runner.load_init_params().unwrap();
-        let frozen_before: Vec<Vec<f32>> = params
-            .arrays
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| !params.is_trainable(*i))
-            .map(|(_, a)| a.clone())
+        let frozen_before: Vec<Vec<f32>> = (0..params.n_arrays())
+            .filter(|&i| !params.is_trainable(i))
+            .map(|i| params.array(i).to_vec())
             .collect();
         let mut opt = optim::by_name("fo-adam", 1e-2).unwrap();
         let report = Trainer::new(cfg(300))
@@ -110,12 +107,9 @@ fn peft_variants_train() {
             "{variant}: test acc {}",
             report.test_metric
         );
-        let frozen_after: Vec<Vec<f32>> = params
-            .arrays
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| !params.is_trainable(*i))
-            .map(|(_, a)| a.clone())
+        let frozen_after: Vec<Vec<f32>> = (0..params.n_arrays())
+            .filter(|&i| !params.is_trainable(i))
+            .map(|i| params.array(i).to_vec())
             .collect();
         assert_eq!(frozen_before, frozen_after, "{variant}: frozen params moved");
     }
@@ -128,14 +122,14 @@ fn linear_probing_trains_head_only() {
     let d = runner.spec.dims.clone();
     let data = tasks::generate("sst2", d.vocab, d.max_seq, 16, 0).unwrap();
     let mut params = runner.load_init_params().unwrap();
-    let embed_before = params.arrays[0].clone();
+    let embed_before = params.array(0).to_vec();
     let mut opt = optim::by_name("fo-adam", 1e-2).unwrap();
     let mut c = cfg(100);
     c.train_only_layers = Some(vec!["head".to_string()]);
     let report = Trainer::new(c)
         .run_with_params(&runner, &data, opt.as_mut(), &mut params)
         .unwrap();
-    assert_eq!(params.arrays[0], embed_before, "LP must not move the embedding");
+    assert_eq!(params.array(0), &embed_before[..], "LP must not move the embedding");
     assert!(report.test_metric > 0.55, "LP acc {}", report.test_metric);
 }
 
@@ -168,7 +162,7 @@ fn checkpoint_round_trip_resumes_identically() {
     let (step, restored, extras) = checkpoint::load(&path, params.spec.clone()).unwrap();
     assert_eq!(step, 30);
     assert!(extras.is_empty());
-    assert_eq!(restored.arrays, params.arrays);
+    assert_eq!(restored.flat(), params.flat());
 
     // the restored params evaluate identically
     let a = runner.eval_accuracy(&params, &data.test[..32]).unwrap();

@@ -1,0 +1,277 @@
+//! Host-side stub of the `xla` crate (PJRT C-API bindings).
+//!
+//! The real crate wraps `xla_extension` — a multi-gigabyte native library
+//! that is not part of this repo's hermetic build. The coordinator only
+//! needs two things from it:
+//!
+//! 1. **Literals** — host-side typed buffers used for argument marshalling.
+//!    These are implemented for real here (create / element access / decode),
+//!    so the pure-host code paths and their unit tests work unchanged.
+//! 2. **Device execution** — `PjRtClient::cpu()` and everything behind it.
+//!    The stub returns a descriptive error from `cpu()`, so `Runtime::load`
+//!    fails cleanly and every artifact-dependent integration test skips
+//!    (they already gate on `artifacts/manifest.json` existing).
+//!
+//! Swap this path dependency for the real `xla` crate in `rust/Cargo.toml`
+//! to execute compiled HLO artifacts; the API surface is signature-compatible
+//! with the subset the repo uses (see DESIGN.md §Runtime).
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (`std::error::Error + Send + Sync`, so `?` lifts it into
+/// `anyhow::Error` at the call sites).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla-stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+const NO_BACKEND: &str = "PJRT backend unavailable (built against the vendored xla stub; \
+     point rust/Cargo.toml at the real `xla` crate to execute artifacts)";
+
+/// Element dtypes the repo marshals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Native scalar types a [`Literal`] can hold.
+pub trait Element: Copy + Default {
+    const TYPE: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+    fn to_le(self) -> [u8; 4];
+}
+
+impl Element for f32 {
+    const TYPE: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+impl Element for i32 {
+    const TYPE: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+/// A host-side typed array (fully functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let count: usize = dims.iter().product();
+        if count * ty.byte_size() != data.len() {
+            return err(format!(
+                "shape {dims:?} wants {} bytes, got {}",
+                count * ty.byte_size(),
+                data.len()
+            ));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        if T::TYPE != self.ty {
+            return err(format!("literal is {:?}, asked for {:?}", self.ty, T::TYPE));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn get_first_element<T: Element>(&self) -> Result<T> {
+        if T::TYPE != self.ty {
+            return err(format!("literal is {:?}, asked for {:?}", self.ty, T::TYPE));
+        }
+        match self.bytes.get(..4) {
+            Some(c) => Ok(T::from_le([c[0], c[1], c[2], c[3]])),
+            None => err("empty literal"),
+        }
+    }
+
+    /// Decompose a tuple result. Stub literals are never tuples (they only
+    /// exist on the host side), so this is reachable only after a real
+    /// execution — which the stub cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        err(NO_BACKEND)
+    }
+}
+
+/// Parsed HLO module (the stub only checks the file is readable).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(HloModuleProto { text }),
+            Err(e) => err(format!("reading {}: {e}", path.display())),
+        }
+    }
+}
+
+/// An XLA computation graph handle.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// A device-resident buffer (host-backed in the stub).
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A compiled executable. Never constructable through the stub client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(NO_BACKEND)
+    }
+}
+
+/// The PJRT client. `cpu()` fails in the stub, which is the single gate the
+/// repo's runtime layer relies on: no client, no executables, no buffers.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        err(NO_BACKEND)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(NO_BACKEND)
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+
+    pub fn buffer_from_host_buffer<T: Element>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for &x in data {
+            bytes.extend_from_slice(&x.to_le());
+        }
+        Ok(PjRtBuffer { lit: Literal::create_from_shape_and_untyped_data(T::TYPE, dims, &bytes)? })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let data = [1.5f32, -2.0, 0.25];
+        let mut bytes = Vec::new();
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data.to_vec());
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.5);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
