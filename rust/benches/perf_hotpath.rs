@@ -1,19 +1,26 @@
 //! §Perf: hot-path microbenchmarks (no criterion in the vendored set; this
 //! is a plain timing harness with warmup + repeated trials).
 //!
-//! Two sections:
+//! Three sections:
 //!
-//! 1. **Host section** (always runs — no artifacts needed): the sharded
+//! 1. **Sampler section** (always runs): the retained v1 PCG64+Ziggurat
+//!    sampler head-to-head against the v2 stateless counter-based sampler
+//!    (`util/znorm.rs`) on an ~8M-element arena — ns/element for both and
+//!    the v2-vs-v1 speedup, emitted into the report JSON.
+//! 2. **Host section** (always runs — no artifacts needed): the sharded
 //!    flat-arena hot path on the largest synthetic variant, swept across
 //!    rayon pool sizes 1/2/4/8 for perturb / optimizer step / full SPSA
-//!    cycle, plus a bitwise thread-count determinism check. Emits
-//!    machine-readable `reports/BENCH_hotpath.json` (the perf trajectory
-//!    seed) in addition to the printed table.
-//! 2. **PJRT section** (skipped when `artifacts/` is absent): forward
+//!    cycle (both the classic 4-sweep cycle and the fused 3-sweep
+//!    restore+update cycle), plus a bitwise thread-count determinism check.
+//!    Emits machine-readable `reports/BENCH_hotpath.json` (the perf
+//!    trajectory seed; CI gates on its `deterministic` and sampler-speedup
+//!    fields) in addition to the printed table.
+//! 3. **PJRT section** (skipped when `artifacts/` is absent): forward
 //!    passes, the buffered fast path, the fused L1 update kernel and
 //!    loss_grad — the per-step cost structure DESIGN.md §Perf documents.
 
 use std::collections::BTreeMap;
+use std::hint::black_box;
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -26,6 +33,7 @@ use helene::runtime::{lit_f32, ModelRunner, Runtime};
 use helene::tasks;
 use helene::util::json::Json;
 use helene::util::rng::Pcg64;
+use helene::util::znorm;
 
 fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
     for _ in 0..warmup {
@@ -49,11 +57,55 @@ fn synth_sizes(scale: Scale) -> Vec<usize> {
     vec![n / 2, n / 4, n / 8, n / 8 + 12_345]
 }
 
+/// Host arena sweeps per SPSA step (z-cache on, free loss oracle): the
+/// classic cycle is fill-cache + −2ε + restore + step = 4; the fused cycle
+/// folds restore into the step = 3.
+const SWEEPS_UNFUSED: f64 = 4.0;
+const SWEEPS_FUSED: f64 = 3.0;
+
 struct ThreadRow {
     threads: usize,
     perturb_ms: f64,
     step_ms: f64,
     cycle_ms: f64,
+    cycle_fused_ms: f64,
+}
+
+struct SamplerRow {
+    n: usize,
+    v1_ns_per_elem: f64,
+    v2_ns_per_elem: f64,
+}
+
+impl SamplerRow {
+    fn speedup(&self) -> f64 {
+        self.v1_ns_per_elem / self.v2_ns_per_elem
+    }
+}
+
+/// v1 (sequential PCG64+Ziggurat oracle) vs v2 (stateless counter-based
+/// inverse-CDF) normal fill, head-to-head on the ~8M-element arena the
+/// acceptance criteria reference (independent of `Scale` so the comparison
+/// is stable across smoke/full runs).
+fn sampler_section(iters: usize) -> SamplerRow {
+    let n = 1usize << 23; // ~8.4M
+    let mut buf = vec![0f32; n];
+    let v1_s = time(1, iters, || {
+        Pcg64::new(1234).fill_normal(black_box(&mut buf));
+    });
+    let v1 = 1e9 * v1_s / n as f64;
+    let v2_s = time(1, iters, || {
+        znorm::fill_normal_at(1234, 0, black_box(&mut buf));
+    });
+    let v2 = 1e9 * v2_s / n as f64;
+    let row = SamplerRow { n, v1_ns_per_elem: v1, v2_ns_per_elem: v2 };
+    println!("== normal sampler head-to-head: {n} elements ==");
+    println!("  v1 pcg64+ziggurat  {v1:>8.2} ns/elem");
+    println!(
+        "  v2 stateless icdf  {v2:>8.2} ns/elem   ({:.2}x)",
+        row.speedup()
+    );
+    row
 }
 
 fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
@@ -67,7 +119,10 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
         base.n_shards(),
         SHARD_SIZE
     );
-    println!("  {:<10} {:>12} {:>12} {:>12} {:>14}", "threads", "perturb ms", "step ms", "cycle ms", "perturb Melem/s");
+    println!(
+        "  {:<10} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "threads", "perturb ms", "step ms", "cycle ms", "fused-cycle ms", "perturb Melem/s"
+    );
 
     for &t in &[1usize, 2, 4, 8] {
         let pool = rayon::ThreadPoolBuilder::new().num_threads(t).build()?;
@@ -88,45 +143,65 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
                 seed += 1;
                 opt.step_zo(&mut params, 0.3, seed).unwrap();
             });
-            // 3. full MeZO cycle: ±ε probes + restore + optimizer update,
-            //    with a free loss oracle so the row isolates the ZO
-            //    machinery itself (z-cache path, as the trainer defaults)
+            // 3. full MeZO cycle: ±ε probes + restore + optimizer update
+            //    (4 arena sweeps), with a free loss oracle so the row
+            //    isolates the ZO machinery (z-cache path, trainer default)
             let cycle_ms = 1000.0 * time(1, iters, || {
                 seed += 1;
                 let est = spsa::estimate_cached(&mut params, &mut zcache, seed, 1e-3, |_| Ok(0.0))
                     .unwrap();
                 opt.step_zo_cached(&mut params, est.g_scale, est.seed, &zcache).unwrap();
             });
-            ThreadRow { threads: t, perturb_ms, step_ms, cycle_ms }
+            // 4. fused cycle: unrestored probes + fused restore+update
+            //    (3 arena sweeps, identical arithmetic)
+            let cycle_fused_ms = 1000.0 * time(1, iters, || {
+                seed += 1;
+                let est = spsa::estimate_cached_unrestored(
+                    &mut params, &mut zcache, seed, 1e-3, |_| Ok(0.0),
+                )
+                .unwrap();
+                opt.step_zo_fused(&mut params, est.g_scale, est.seed, 1e-3, Some(&zcache))
+                    .unwrap();
+            });
+            ThreadRow { threads: t, perturb_ms, step_ms, cycle_ms, cycle_fused_ms }
         });
         println!(
-            "  {:<10} {:>12.2} {:>12.2} {:>12.2} {:>14.0}",
+            "  {:<10} {:>12.2} {:>12.2} {:>12.2} {:>14.2} {:>14.0}",
             row.threads,
             row.perturb_ms,
             row.step_ms,
             row.cycle_ms,
+            row.cycle_fused_ms,
             2.0 * n as f64 / row.perturb_ms / 1e3
         );
         rows.push(row);
     }
 
-    // bitwise determinism across pool sizes (the shard-stream guarantee)
+    // bitwise determinism across pool sizes (the position-pure z-stream
+    // guarantee), through both the classic and the fused cycle
     let run_in = |threads: usize| -> anyhow::Result<ParamSet> {
         let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
         let mut p = base.clone();
         let mut opt = Helene::paper_defaults().with_lr(1e-3);
         opt.init(&p);
+        let mut zcache = ZCache::default();
         pool.install(|| {
             p.perturb_trainable(99, 1e-3);
             opt.step_zo(&mut p, 0.7, 100).unwrap();
+            let est =
+                spsa::estimate_cached_unrestored(&mut p, &mut zcache, 101, 1e-3, |_| Ok(0.0))
+                    .unwrap();
+            opt.step_zo_fused(&mut p, est.g_scale, est.seed, 1e-3, Some(&zcache)).unwrap();
         });
         Ok(p)
     };
     let a = run_in(1)?;
-    let b = run_in(8)?;
-    let identical = a.flat() == b.flat();
+    let mut identical = true;
+    for &t in &[2usize, 4, 8] {
+        identical &= run_in(t)?.flat() == a.flat();
+    }
     println!(
-        "  determinism 1 vs 8 threads: {}",
+        "  determinism 1 vs 2/4/8 threads: {}",
         if identical { "bitwise identical" } else { "MISMATCH" }
     );
     anyhow::ensure!(identical, "thread-count determinism violated");
@@ -136,22 +211,29 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
         rows.iter().find(|r| r.threads == 4),
     ) {
         println!(
-            "  speedup @4 threads: perturb {:.2}x  step {:.2}x  cycle {:.2}x",
+            "  speedup @4 threads: perturb {:.2}x  step {:.2}x  cycle {:.2}x  fused-vs-unfused {:.2}x",
             r1.perturb_ms / r4.perturb_ms,
             r1.step_ms / r4.step_ms,
             r1.cycle_ms / r4.cycle_ms,
+            r4.cycle_ms / r4.cycle_fused_ms,
         );
     }
     Ok(rows)
 }
 
-fn write_json(scale: Scale, rows: &[ThreadRow], n_params: usize) -> anyhow::Result<PathBuf> {
+fn write_json(
+    scale: Scale,
+    sampler: &SamplerRow,
+    rows: &[ThreadRow],
+    n_params: usize,
+) -> anyhow::Result<PathBuf> {
     let mut threads = BTreeMap::new();
     for r in rows {
         let mut o = BTreeMap::new();
         o.insert("perturb_ms".to_string(), Json::Num(r.perturb_ms));
         o.insert("step_ms".to_string(), Json::Num(r.step_ms));
         o.insert("cycle_ms".to_string(), Json::Num(r.cycle_ms));
+        o.insert("cycle_fused_ms".to_string(), Json::Num(r.cycle_fused_ms));
         threads.insert(r.threads.to_string(), Json::Obj(o));
     }
     let speedup = |f: fn(&ThreadRow) -> f64| -> Json {
@@ -167,11 +249,35 @@ fn write_json(scale: Scale, rows: &[ThreadRow], n_params: usize) -> anyhow::Resu
     sp.insert("step".to_string(), speedup(|r| r.step_ms));
     sp.insert("cycle".to_string(), speedup(|r| r.cycle_ms));
 
+    // canonical fused-vs-unfused comparison: the 4-thread row (falls back
+    // to the first row if absent)
+    let canon = rows.iter().find(|r| r.threads == 4).or_else(|| rows.first());
+
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("perf_hotpath".into()));
     root.insert("scale".to_string(), Json::Str(format!("{scale:?}").to_lowercase()));
     root.insert("n_params".to_string(), Json::Num(n_params as f64));
     root.insert("shard_size".to_string(), Json::Num(SHARD_SIZE as f64));
+    root.insert("z_stream".to_string(), Json::Str("v2-stateless".into()));
+    // written only after the bitwise thread-invariance check passed (the
+    // bench hard-errors otherwise); CI gates on this field
+    root.insert("deterministic".to_string(), Json::Bool(true));
+    root.insert("sampler_n".to_string(), Json::Num(sampler.n as f64));
+    root.insert(
+        "normal_fill_ns_per_elem_v1".to_string(),
+        Json::Num(sampler.v1_ns_per_elem),
+    );
+    root.insert(
+        "normal_fill_ns_per_elem_v2".to_string(),
+        Json::Num(sampler.v2_ns_per_elem),
+    );
+    root.insert("sampler_speedup_v2_vs_v1".to_string(), Json::Num(sampler.speedup()));
+    if let Some(c) = canon {
+        root.insert("cycle_ms_unfused".to_string(), Json::Num(c.cycle_ms));
+        root.insert("cycle_ms_fused".to_string(), Json::Num(c.cycle_fused_ms));
+    }
+    root.insert("arena_sweeps_per_step_unfused".to_string(), Json::Num(SWEEPS_UNFUSED));
+    root.insert("arena_sweeps_per_step_fused".to_string(), Json::Num(SWEEPS_FUSED));
     root.insert("threads".to_string(), Json::Obj(threads));
     root.insert("speedup_4t".to_string(), Json::Obj(sp));
 
@@ -310,9 +416,12 @@ fn main() -> anyhow::Result<()> {
     };
     println!("== bench perf_hotpath (scale {scale:?}) ==");
 
+    // enough iterations that the CI gate's v2-vs-v1 comparison is not at
+    // the mercy of one noisy fill on a shared runner
+    let sampler = sampler_section(iters.max(5));
     let rows = host_section(scale, iters)?;
     let n_params = synth_sizes(scale).iter().sum();
-    write_json(scale, &rows, n_params)?;
+    write_json(scale, &sampler, &rows, n_params)?;
 
     if Runtime::default_dir().join("manifest.json").exists() {
         pjrt_section(match scale {

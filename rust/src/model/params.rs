@@ -3,25 +3,32 @@
 //! Parameters live in Rust as **one contiguous `Vec<f32>` arena** in manifest
 //! order (array i occupies `[offset_i, offset_i + size_i)`, exactly the
 //! `params.bin` byte layout); the PJRT executables are pure functions of
-//! them. The arena is partitioned into fixed [`SHARD_SIZE`]-element shards,
-//! and every seeded operation (perturbation, z regeneration, optimizer
-//! updates) derives an **independent RNG stream per shard** from
-//! `(step_seed, shard_index)` — see [`shard_rng`]. Consequences:
+//! them. The arena is partitioned into fixed [`SHARD_SIZE`]-element shards
+//! for parallelism, and every seeded operation (perturbation, z
+//! regeneration, optimizer updates) draws from the **v2 stateless z-stream**
+//! (`util/znorm.rs`):
+//!
+//! ```text
+//! z[j] = Φ⁻¹(u(mix64(mix64(seed, j), ZNORM_TAG)))
+//! ```
+//!
+//! — one 64-bit hash per flat arena position `j`. Consequences:
 //!
 //! * the hot path (perturb → probe → restore → `step_zo`) runs
 //!   shard-parallel under rayon, scaling with cores;
-//! * results are **bitwise identical for any `RAYON_NUM_THREADS`**, because
-//!   a draw depends only on `(seed, shard, position-in-shard)`, never on
-//!   scheduling (property-tested in `rust/tests/shard_determinism.rs`);
-//! * `z[j]` is a pure function of the seed and the flat position `j` — it
-//!   does not depend on the train mask (frozen positions consume their
-//!   draws without applying them), so freezing one layer leaves every other
-//!   element's perturbation unchanged.
+//! * results are **bitwise identical for any `RAYON_NUM_THREADS`**,
+//!   trivially: a draw depends only on `(seed, j)`, never on scheduling or
+//!   shard partitioning (property-tested in `rust/tests/shard_determinism.rs`);
+//! * `z[j]` does not depend on the train mask — frozen segments are simply
+//!   skipped (no draws are burned, unlike the v1 per-shard streams that had
+//!   to replay them), so freezing one layer leaves every other element's
+//!   perturbation unchanged;
+//! * any element or segment of z is addressable in O(1) — no stream replay.
 //!
-//! This z-stream layout deliberately **breaks compatibility** with the
-//! earlier single-stream `Vec<Vec<f32>>` store (one `Pcg64` threaded
-//! sequentially through trainable arrays); see DESIGN.md §Sharding for the
-//! derivation rule and migration notes.
+//! This z-stream deliberately **breaks compatibility** with the v1
+//! per-shard `Pcg64`+Ziggurat streams (and those broke the original
+//! single-stream store); see DESIGN.md §Sharding for the derivation rule
+//! and migration notes.
 
 use std::ops::Range;
 use std::path::Path;
@@ -31,25 +38,12 @@ use anyhow::{bail, Context, Result};
 use rayon::prelude::*;
 
 use crate::model::manifest::VariantSpec;
-use crate::util::rng::{mix64, Pcg64};
+use crate::util::znorm;
 
-/// Stream id of the perturbation RNG. Every shard's generator is
-/// `Pcg64::new_stream(mix64(seed, shard_index), Z_STREAM)`, so everything
-/// that regenerates `z` (perturb, `visit_z`, the optimizers' in-place
-/// updates) agrees draw-for-draw.
-pub const Z_STREAM: u64 = 0x5EED;
-
-/// Elements per shard. This constant is part of the z-stream format:
-/// changing it re-shuffles which stream produces which element's draw, so
-/// it is fixed and documented in DESIGN.md §Sharding.
+/// Elements per shard — the parallel work granule. Since the v2 stateless
+/// z-stream this is **not** part of the stream format (draws are
+/// position-pure), so it can be retuned without invalidating seeds.
 pub const SHARD_SIZE: usize = 16_384;
-
-/// The per-shard perturbation stream: independent of every other shard,
-/// derived only from `(seed, shard_index)`.
-#[inline]
-pub fn shard_rng(seed: u64, shard: u64) -> Pcg64 {
-    Pcg64::new_stream(mix64(seed, shard), Z_STREAM)
-}
 
 /// One maximal run of a single parameter array inside one shard. Shard
 /// visitors receive these so per-array metadata (layer-wise λ, masks,
@@ -88,7 +82,7 @@ fn segments_in(spec: &VariantSpec, base: usize, len: usize) -> Vec<ShardSeg> {
 
 /// Where a shard-parallel update reads its gradient direction from.
 pub enum GradSource<'a> {
-    /// `g ∝ z(seed)`: z regenerated from the per-shard streams (MeZO trick)
+    /// `g ∝ z(seed)`: z regenerated from the stateless v2 stream (MeZO trick)
     Seeded(u64),
     /// `g ∝ z` from the draws captured by [`ParamSet::perturb_fill_cache`]
     Cached(&'a ZCache),
@@ -271,9 +265,9 @@ impl ParamSet {
     /// element per step (the same guarantee the MeZO reference
     /// implementation provides) — property-tested in `rust/tests/`.
     ///
-    /// Runs shard-parallel; frozen segments inside an active shard consume
-    /// their draws without applying them, keeping `z[j]` a pure function of
-    /// `(seed, j)`.
+    /// Runs shard-parallel; `z[j]` is a pure function of `(seed, j)`, so
+    /// frozen segments are skipped outright — no draws are generated for
+    /// them, and the perturbation applied elsewhere is unaffected.
     pub fn perturb_trainable(&mut self, seed: u64, scale: f32) {
         let spec = &self.spec;
         let mask = &self.train_mask;
@@ -282,16 +276,14 @@ impl ParamSet {
             .enumerate()
             .for_each(|(s, chunk)| {
                 let base = s * SHARD_SIZE;
-                let segs = segments_in(spec, base, chunk.len());
-                if !segs.iter().any(|g| mask[g.array]) {
-                    return;
-                }
-                let mut rng = shard_rng(seed, s as u64);
-                for seg in &segs {
+                for seg in segments_in(spec, base, chunk.len()) {
                     if mask[seg.array] {
-                        perturb_slice(&mut chunk[seg.local.clone()], &mut rng, scale);
-                    } else {
-                        skip_normals(&mut rng, seg.local.len());
+                        znorm::axpy_normal_at(
+                            seed,
+                            seg.global.start as u64,
+                            scale,
+                            &mut chunk[seg.local.clone()],
+                        );
                     }
                 }
             });
@@ -309,7 +301,7 @@ impl ParamSet {
                 .iter()
                 .any(|g| mask[g.array]);
             if active {
-                shard_rng(seed, s as u64).fill_normal(chunk);
+                znorm::fill_normal_at(seed, base as u64, chunk);
             }
         });
         z
@@ -375,8 +367,10 @@ impl ParamSet {
         partials.iter().sum()
     }
 
-    /// Max |a - b| across the arena (test helper).
+    /// Max |a - b| across the arena (test helper). Layout mismatch is a
+    /// caller bug — assert instead of silently truncating the `zip`.
     pub fn max_abs_diff(&self, other: &ParamSet) -> f32 {
+        assert_eq!(other.data.len(), self.data.len(), "layout mismatch");
         self.data
             .iter()
             .zip(&other.data)
@@ -499,11 +493,12 @@ fn resolve_src(src: GradSource<'_>, n: usize) -> (Option<&[f32]>, u64) {
 }
 
 /// The gradient basis for one shard: a slice of the source arena, or z
-/// regenerated into `scratch` from the shard's stream.
+/// regenerated into `scratch` from the stateless stream at the shard's
+/// arena offset (`shard` kept for the visitor signature's stability).
 fn shard_g<'a>(
     g_all: Option<&'a [f32]>,
     seed: u64,
-    shard: usize,
+    _shard: usize,
     base: usize,
     len: usize,
     scratch: &'a mut Vec<f32>,
@@ -512,7 +507,7 @@ fn shard_g<'a>(
         Some(all) => &all[base..base + len],
         None => {
             scratch.resize(len, 0.0);
-            shard_rng(seed, shard as u64).fill_normal(scratch);
+            znorm::fill_normal_at(seed, base as u64, scratch);
             scratch
         }
     }
@@ -525,8 +520,8 @@ fn shard_g<'a>(
 /// inference level but costs an RNG pass each time; `ZCache` trades one
 /// arena-sized buffer for reusing the draws across the probe passes and the
 /// optimizer update. `TrainConfig::cache_z` controls the trade. The cache
-/// holds the full per-shard draws (zeros in inactive shards), so its values
-/// are bitwise identical to a regeneration from the same seed.
+/// holds the full draws of every active shard (zeros in inactive shards),
+/// bitwise identical to a regeneration from the same seed.
 #[derive(Clone, Debug, Default)]
 pub struct ZCache {
     data: Vec<f32>,
@@ -573,7 +568,7 @@ impl ParamSet {
                     zc.fill(0.0);
                     return;
                 }
-                shard_rng(seed, s as u64).fill_normal(zc);
+                znorm::fill_normal_at(seed, base as u64, zc);
                 for seg in &segs {
                     if !mask[seg.array] {
                         continue;
@@ -655,36 +650,6 @@ pub fn encode_f32_le(vals: &[f32]) -> Vec<u8> {
         }
     }
     out
-}
-
-/// The inner streaming perturbation loop (one shard's segment), exposed for
-/// the perf bench: draws in 256-chunks so `fill_normal`'s stream is used
-/// verbatim, one draw per element in position order.
-#[inline]
-pub fn perturb_slice(arr: &mut [f32], rng: &mut Pcg64, scale: f32) {
-    let mut buf = [0f32; 256];
-    let mut rest = arr;
-    while !rest.is_empty() {
-        let n = rest.len().min(256);
-        let (head, tail) = rest.split_at_mut(n);
-        rng.fill_normal(&mut buf[..n]);
-        for (x, z) in head.iter_mut().zip(&buf[..n]) {
-            *x += scale * z;
-        }
-        rest = tail;
-    }
-}
-
-/// Advance the stream past `n` draws (frozen segments inside active shards:
-/// their z values exist in the stream but are never applied).
-#[inline]
-fn skip_normals(rng: &mut Pcg64, mut n: usize) {
-    let mut sink = [0f32; 256];
-    while n > 0 {
-        let k = n.min(256);
-        rng.fill_normal(&mut sink[..k]);
-        n -= k;
-    }
 }
 
 #[cfg(test)]

@@ -18,8 +18,10 @@
 //! The fused elementwise update runs **shard-parallel** over the flat
 //! parameter arena (`ParamSet::update_shards2`): θ, m and h are sliced into
 //! the same [`crate::model::params::SHARD_SIZE`] shards and each shard
-//! regenerates its own z stream, so one optimizer step scales with cores
-//! while staying bitwise deterministic (DESIGN.md §Sharding).
+//! regenerates its z slice from the stateless v2 stream, so one optimizer
+//! step scales with cores while staying bitwise deterministic (DESIGN.md
+//! §Sharding). With `step_zo_fused` the SPSA `+εz` restore rides in the
+//! same sweep.
 //!
 //! The momentum mode ladder reproduces the Figure 5 ablation:
 //! `None → Ema → Biased → Annealed` (full HELENE = Annealed + Hessian).
@@ -181,8 +183,17 @@ impl Helene {
 
     /// Shared update core, shard-parallel. `g_scale` multiplies the basis
     /// from `src` into the per-element gradient: the SPSA scalar for
-    /// `Seeded`/`Cached` z, 1.0 for `Exact` gradients.
-    fn apply(&mut self, params: &mut ParamSet, src: GradSource<'_>, g_scale: f32) -> Result<()> {
+    /// `Seeded`/`Cached` z, 1.0 for `Exact` gradients. A non-zero
+    /// `restore_eps` first applies `θ += restore_eps·z` inside the same
+    /// shard visit — the fused SPSA restore (`step_zo_fused`), arithmetic
+    /// identical to a separate restore sweep.
+    fn apply(
+        &mut self,
+        params: &mut ParamSet,
+        src: GradSource<'_>,
+        g_scale: f32,
+        restore_eps: f32,
+    ) -> Result<()> {
         let (m, h) = match (&mut self.m, &mut self.h) {
             (Some(m), Some(h)) => (m, h),
             _ => bail!("Helene::init not called"),
@@ -213,6 +224,13 @@ impl Helene {
         params.update_shards2(m, h, src, |seg, th, m_arr, h_arr, basis| {
             let lam = lambda[seg.array];
             let mut seg_clipped = 0u64;
+            if restore_eps != 0.0 {
+                // fused +εz restore: same per-element op as the standalone
+                // restore sweep, so the fused path stays bitwise identical
+                for (x, zv) in th.iter_mut().zip(basis) {
+                    *x += restore_eps * zv;
+                }
+            }
             for j in 0..th.len() {
                 let g = g_scale * basis[j];
                 // momentum (Algorithm 1 line 7)
@@ -277,27 +295,37 @@ impl Optimizer for Helene {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        self.apply(params, GradSource::Seeded(seed), g_scale)
+        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0)
     }
 
     fn step_zo_cached(
         &mut self,
         params: &mut ParamSet,
         g_scale: f32,
-        _seed: u64,
+        seed: u64,
         cache: &crate::model::params::ZCache,
     ) -> Result<()> {
-        if !cache.matches(params) {
-            bail!("helene: z-cache not filled for this parameter layout");
-        }
-        self.apply(params, GradSource::Cached(cache), g_scale)
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, Some(cache))?;
+        self.apply(params, src, g_scale, 0.0)
+    }
+
+    fn step_zo_fused(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        self.apply(params, src, g_scale, eps)
     }
 
     fn step_fo(&mut self, params: &mut ParamSet, grads: &ParamSet) -> Result<()> {
         if !self.fo {
             bail!("helene: FO step requires with_fo_hessian()");
         }
-        self.apply(params, GradSource::Exact(grads), 1.0)
+        self.apply(params, GradSource::Exact(grads), 1.0, 0.0)
     }
 
     fn state_bytes(&self) -> usize {

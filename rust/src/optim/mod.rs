@@ -4,9 +4,12 @@
 //! trainer (`train/`): perturb +εz → L⁺ → perturb −2εz → L⁻ → restore →
 //! `step_zo(params, g_scale, seed)` where `g_scale = (L⁺ − L⁻) / 2ε` and
 //! `z` is regenerated from `seed` inside the optimizer via the
-//! shard-parallel `ParamSet::update_shards*` kernels (per-shard streams,
-//! DESIGN.md §Sharding). First-order baselines receive the exact gradient
-//! from the compiled `loss_grad` entrypoint through `step_fo`.
+//! shard-parallel `ParamSet::update_shards*` kernels (stateless v2
+//! z-stream, DESIGN.md §Sharding). With `TrainConfig::fuse_restore` the
+//! restore pass is folded into the update (`step_zo_fused`) — same
+//! arithmetic, one fewer arena sweep. First-order baselines receive the
+//! exact gradient from the compiled `loss_grad` entrypoint through
+//! `step_fo`.
 //!
 //! | paper name      | type                        | module        |
 //! |-----------------|-----------------------------|---------------|
@@ -35,7 +38,30 @@ pub mod zo_sgd;
 
 use anyhow::Result;
 
-use crate::model::params::ParamSet;
+use crate::model::params::{GradSource, ParamSet, ZCache};
+
+/// Resolve a ZO step's gradient basis: the z-cache when provided (validated
+/// against the parameter layout — a recoverable error, never the layout
+/// assert), else seeded stateless regeneration. Shared by every
+/// `step_zo_fused` implementation so the cache-validity contract lives in
+/// one place.
+pub fn zo_grad_src<'a>(
+    name: &str,
+    params: &ParamSet,
+    seed: u64,
+    cache: Option<&'a ZCache>,
+) -> Result<GradSource<'a>> {
+    match cache {
+        Some(c) => {
+            anyhow::ensure!(
+                c.matches(params),
+                "{name}: z-cache not filled for this parameter layout"
+            );
+            Ok(GradSource::Cached(c))
+        }
+        None => Ok(GradSource::Seeded(seed)),
+    }
+}
 
 /// How the trainer must feed an optimizer each step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,6 +106,35 @@ pub trait Optimizer {
         _cache: &crate::model::params::ZCache,
     ) -> Result<()> {
         self.step_zo(params, g_scale, seed)
+    }
+
+    /// Fused restore+update (§Perf): the trainer runs the probe pair via
+    /// `spsa::estimate_*_unrestored`, which leaves `θ − εz`, and this step
+    /// folds the owed `+εz` restore into the update. Per-element arithmetic
+    /// is exactly "restore then step", so the fused path is bitwise
+    /// identical to the unfused one (property-tested); the win is one fewer
+    /// full arena sweep. The default does restore-then-step in two sweeps
+    /// so every optimizer in the zoo keeps working; HELENE, ZO-SGD and
+    /// ZO-Adam override it with a single-sweep kernel. On error the restore
+    /// may be left unapplied — callers abort the run in that case.
+    fn step_zo_fused(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+    ) -> Result<()> {
+        match zo_grad_src(self.name(), params, seed, cache)? {
+            GradSource::Cached(c) => {
+                params.perturb_from_cache(c, eps);
+                self.step_zo_cached(params, g_scale, seed, c)
+            }
+            _ => {
+                params.perturb_trainable(seed, eps);
+                self.step_zo(params, g_scale, seed)
+            }
+        }
     }
 
     /// First-order step from exact gradients.

@@ -13,6 +13,12 @@
 //! materialised, so the extra memory is zero — the property that lets MeZO
 //! (and HELENE on top of it) train with inference-level memory.
 //!
+//! The `*_unrestored` variants stop after L⁻, leaving `θ − εz`: the trainer
+//! then calls `Optimizer::step_zo_fused`, which folds the `+εz` restore
+//! into the optimizer's update sweep — one fewer full pass over the arena
+//! per step with bit-identical arithmetic (§Perf, property-tested in
+//! `tests/shard_determinism.rs`).
+//!
 //! The estimator is generic over the loss oracle so the same code drives
 //! the PJRT model runner, the 2-D toy problems, and the unit tests.
 
@@ -39,11 +45,13 @@ impl SpsaEstimate {
     }
 }
 
-/// Cached variant of [`estimate_with`]: the z draws are generated once into
-/// `cache` (one RNG pass) and reused for the −2ε and restore passes —
-/// identical arithmetic, ~2 RNG passes saved per step (§Perf). Costs one
-/// trainable-sized scratch buffer (`TrainConfig::cache_z`).
-pub fn estimate_cached<F>(
+/// Cached probe pair **without the restore pass**: on success `params` is
+/// left at `θ − εz` and the caller owes a `+εz` restore — normally folded
+/// into the optimizer update via `Optimizer::step_zo_fused`, which turns
+/// restore + update into a single arena sweep (§Perf). The z draws live in
+/// `cache` for the −2ε pass and the fused step. On error `params` IS fully
+/// restored before returning.
+pub fn estimate_cached_unrestored<F>(
     params: &mut ParamSet,
     cache: &mut crate::model::params::ZCache,
     seed: u64,
@@ -70,7 +78,6 @@ where
             return Err(e);
         }
     };
-    params.perturb_from_cache(cache, eps);
     Ok(SpsaEstimate {
         g_scale: (loss_plus - loss_minus) / (2.0 * eps),
         seed,
@@ -79,9 +86,30 @@ where
     })
 }
 
-/// Run the perturb → probe → restore cycle against an arbitrary loss oracle.
-/// On success `params` is restored (up to f32 re-add drift, see `ParamSet`).
-pub fn estimate_with<F>(
+/// Cached variant of [`estimate_with`]: the z draws are generated once into
+/// `cache` (one RNG pass) and reused for the −2ε and restore passes —
+/// identical arithmetic, ~2 RNG passes saved per step (§Perf). Costs one
+/// trainable-sized scratch buffer (`TrainConfig::cache_z`).
+pub fn estimate_cached<F>(
+    params: &mut ParamSet,
+    cache: &mut crate::model::params::ZCache,
+    seed: u64,
+    eps: f32,
+    loss_fn: F,
+) -> Result<SpsaEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    let est = estimate_cached_unrestored(params, cache, seed, eps, loss_fn)?;
+    params.perturb_from_cache(cache, eps);
+    Ok(est)
+}
+
+/// Probe pair **without the restore pass** (seeded-regeneration flavour of
+/// [`estimate_cached_unrestored`]): on success `params` is left at
+/// `θ − εz`; the caller owes the `+εz` restore (`Optimizer::step_zo_fused`
+/// folds it into the update sweep). On error `params` IS fully restored.
+pub fn estimate_unrestored<F>(
     params: &mut ParamSet,
     seed: u64,
     eps: f32,
@@ -107,13 +135,28 @@ where
             return Err(e);
         }
     };
-    params.perturb_trainable(seed, eps);
     Ok(SpsaEstimate {
         g_scale: (loss_plus - loss_minus) / (2.0 * eps),
         seed,
         loss_plus,
         loss_minus,
     })
+}
+
+/// Run the perturb → probe → restore cycle against an arbitrary loss oracle.
+/// On success `params` is restored (up to f32 re-add drift, see `ParamSet`).
+pub fn estimate_with<F>(
+    params: &mut ParamSet,
+    seed: u64,
+    eps: f32,
+    loss_fn: F,
+) -> Result<SpsaEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    let est = estimate_unrestored(params, seed, eps, loss_fn)?;
+    params.perturb_trainable(seed, eps);
+    Ok(est)
 }
 
 #[cfg(test)]
@@ -185,6 +228,41 @@ mod tests {
         });
         assert!(r.is_err());
         assert!(p.max_abs_diff(&orig) < 1e-6);
+    }
+
+    #[test]
+    fn unrestored_leaves_theta_minus_eps_z() {
+        let mut p = toy_params(&[48]);
+        let orig = p.clone();
+        let eps = 1e-3f32;
+        let est = estimate_unrestored(&mut p, 11, eps, quad_loss).unwrap();
+        // θ is exactly the −ε probe point: original + εz − 2εz
+        let mut q = orig.clone();
+        q.perturb_trainable(11, eps);
+        q.perturb_trainable(11, -2.0 * eps);
+        assert_eq!(p.flat(), q.flat());
+        // owing restore: +εz brings θ back within ulp drift
+        p.perturb_trainable(11, eps);
+        assert!(p.max_abs_diff(&orig) < 1e-6, "drift {}", p.max_abs_diff(&orig));
+        // the estimate itself is bitwise the restored variant's
+        let mut r = orig.clone();
+        let full = estimate_with(&mut r, 11, eps, quad_loss).unwrap();
+        assert_eq!(est.g_scale, full.g_scale);
+        assert_eq!(est.loss_plus, full.loss_plus);
+        assert_eq!(est.loss_minus, full.loss_minus);
+    }
+
+    #[test]
+    fn cached_unrestored_matches_seeded_unrestored() {
+        let mut a = toy_params(&[100, 28]);
+        let mut b = toy_params(&[100, 28]);
+        let mut cache = crate::model::params::ZCache::default();
+        let ea = estimate_unrestored(&mut a, 9, 1e-3, quad_loss).unwrap();
+        let eb =
+            estimate_cached_unrestored(&mut b, &mut cache, 9, 1e-3, quad_loss).unwrap();
+        assert_eq!(ea.g_scale, eb.g_scale);
+        assert_eq!(a.flat(), b.flat()); // both sit at θ − εz
+        assert!(cache.is_filled());
     }
 
     #[test]

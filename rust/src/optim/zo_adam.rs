@@ -1,7 +1,7 @@
 //! ZO-Adam / ZO-AdamW / ZO-Lion — the adaptive ZO baselines of Table 3 and
 //! Figure 4. All consume the SPSA gradient `g = g_scale · z` (z regenerated
-//! per shard from the step seed) and apply the textbook first-order update
-//! rule to it, shard-parallel via `ParamSet::update_shards*`.
+//! statelessly from the step seed) and apply the textbook first-order
+//! update rule to it, shard-parallel via `ParamSet::update_shards*`.
 
 use anyhow::{anyhow, Result};
 
@@ -40,6 +40,46 @@ impl ZoAdam {
         self.weight_decay = wd;
         self
     }
+
+    /// Shared shard-parallel update; a non-zero `restore_eps` folds the
+    /// SPSA `θ += εz` restore into the same sweep (`step_zo_fused`), with
+    /// per-element arithmetic identical to a separate restore pass.
+    fn apply(
+        &mut self,
+        params: &mut ParamSet,
+        src: GradSource<'_>,
+        g_scale: f32,
+        restore_eps: f32,
+    ) -> Result<()> {
+        let (m, v) = match (&mut self.m, &mut self.v) {
+            (Some(m), Some(v)) => (m, v),
+            _ => return Err(anyhow!("init not called")),
+        };
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let (lr, beta1, beta2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
+        let (decoupled, wd) = (self.decoupled, self.weight_decay);
+        params.update_shards2(m, v, src, |_seg, th, m_arr, v_arr, z| {
+            if restore_eps != 0.0 {
+                for (x, zv) in th.iter_mut().zip(z) {
+                    *x += restore_eps * zv;
+                }
+            }
+            for j in 0..th.len() {
+                let g = g_scale * z[j];
+                m_arr[j] = beta1 * m_arr[j] + (1.0 - beta1) * g;
+                v_arr[j] = beta2 * v_arr[j] + (1.0 - beta2) * g * g;
+                let m_hat = m_arr[j] / bc1;
+                let v_hat = v_arr[j] / bc2;
+                if decoupled {
+                    th[j] -= lr * wd * th[j];
+                }
+                th[j] -= lr * m_hat / (v_hat.sqrt() + eps);
+            }
+        });
+        Ok(())
+    }
 }
 
 impl Optimizer for ZoAdam {
@@ -62,29 +102,19 @@ impl Optimizer for ZoAdam {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        let (m, v) = match (&mut self.m, &mut self.v) {
-            (Some(m), Some(v)) => (m, v),
-            _ => return Err(anyhow!("init not called")),
-        };
-        self.t += 1;
-        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        let (lr, beta1, beta2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
-        let (decoupled, wd) = (self.decoupled, self.weight_decay);
-        params.update_shards2(m, v, GradSource::Seeded(seed), |_seg, th, m_arr, v_arr, z| {
-            for j in 0..th.len() {
-                let g = g_scale * z[j];
-                m_arr[j] = beta1 * m_arr[j] + (1.0 - beta1) * g;
-                v_arr[j] = beta2 * v_arr[j] + (1.0 - beta2) * g * g;
-                let m_hat = m_arr[j] / bc1;
-                let v_hat = v_arr[j] / bc2;
-                if decoupled {
-                    th[j] -= lr * wd * th[j];
-                }
-                th[j] -= lr * m_hat / (v_hat.sqrt() + eps);
-            }
-        });
-        Ok(())
+        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0)
+    }
+
+    fn step_zo_fused(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        self.apply(params, src, g_scale, eps)
     }
 
     fn state_bytes(&self) -> usize {

@@ -10,7 +10,7 @@
 //!
 //! All updates run shard-parallel over the flat arena via the
 //! `ParamSet::update_shards*` kernels / `perturb_trainable` (z regenerated
-//! per shard from `(seed, shard_index)` — DESIGN.md §Sharding).
+//! statelessly per position — DESIGN.md §Sharding).
 
 use anyhow::{bail, Result};
 
@@ -72,6 +72,27 @@ impl Optimizer for ZoSgd {
             bail!("zo-sgd: z-cache not filled for this parameter layout");
         }
         params.perturb_from_cache(cache, -self.lr * g_scale);
+        Ok(())
+    }
+
+    fn step_zo_fused(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+    ) -> Result<()> {
+        // single sweep: θ += εz (restore) then θ −= η·g·z, per element —
+        // same two ops the separate sweeps apply, so bitwise identical
+        let scale = -self.lr * g_scale;
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        params.update_shards(src, |_seg, th, z| {
+            for (x, zv) in th.iter_mut().zip(z) {
+                *x += eps * zv;
+                *x += scale * zv;
+            }
+        });
         Ok(())
     }
 

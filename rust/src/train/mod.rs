@@ -48,6 +48,10 @@ pub struct TrainConfig {
     /// reuse the step's z draws across the SPSA probe passes (one extra
     /// trainable-sized buffer; ~2 RNG passes saved per step — §Perf)
     pub cache_z: bool,
+    /// fold the SPSA +εz restore into the optimizer update
+    /// (`Optimizer::step_zo_fused`): one fewer full arena sweep per step
+    /// with bit-identical arithmetic (§Perf)
+    pub fuse_restore: bool,
     /// learning-rate schedule applied multiplicatively to the optimizer lr
     pub lr_schedule: Option<schedule::LrSchedule>,
 }
@@ -65,6 +69,7 @@ impl Default for TrainConfig {
             train_only_layers: None,
             metric: Metric::Accuracy,
             cache_z: true,
+            fuse_restore: true,
             lr_schedule: None,
         }
     }
@@ -81,6 +86,49 @@ pub struct TrainReport {
     pub wall_s: f64,
     pub timing: TimingBreakdown,
     pub optimizer: String,
+}
+
+/// One ZO probe pair under the configured `(fuse_restore, cache_z)`
+/// strategy. With `fuse_restore` the `+εz` restore is left owed to
+/// [`zo_step`]. Shared by [`Trainer::run_with_params`] and [`run_lm`] so
+/// the dispatch cannot drift between the two loops.
+fn zo_estimate<F>(
+    cfg: &TrainConfig,
+    params: &mut ParamSet,
+    zcache: &mut crate::model::params::ZCache,
+    step_seed: u64,
+    loss_fn: F,
+) -> Result<spsa::SpsaEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    match (cfg.fuse_restore, cfg.cache_z) {
+        (true, true) => {
+            spsa::estimate_cached_unrestored(params, zcache, step_seed, cfg.spsa_eps, loss_fn)
+        }
+        (true, false) => spsa::estimate_unrestored(params, step_seed, cfg.spsa_eps, loss_fn),
+        (false, true) => spsa::estimate_cached(params, zcache, step_seed, cfg.spsa_eps, loss_fn),
+        (false, false) => spsa::estimate_with(params, step_seed, cfg.spsa_eps, loss_fn),
+    }
+}
+
+/// The optimizer step paired with [`zo_estimate`]: fused restore+update
+/// when `fuse_restore`, else the plain (cached or seeded) step.
+fn zo_step(
+    cfg: &TrainConfig,
+    opt: &mut dyn Optimizer,
+    params: &mut ParamSet,
+    zcache: &crate::model::params::ZCache,
+    est: &spsa::SpsaEstimate,
+) -> Result<()> {
+    if cfg.fuse_restore {
+        let cache = if cfg.cache_z { Some(zcache) } else { None };
+        opt.step_zo_fused(params, est.g_scale, est.seed, cfg.spsa_eps, cache)
+    } else if cfg.cache_z {
+        opt.step_zo_cached(params, est.g_scale, est.seed, zcache)
+    } else {
+        opt.step_zo(params, est.g_scale, est.seed)
+    }
 }
 
 pub struct Trainer {
@@ -138,25 +186,17 @@ impl Trainer {
 
             let loss = match opt.kind() {
                 StepKind::Zo => {
+                    // probe pair; with fuse_restore the +εz restore is owed
+                    // to the optimizer step instead of swept separately
                     let t = Timer::start();
-                    let est = if cfg.cache_z {
-                        spsa::estimate_cached(params, &mut zcache, step_seed, cfg.spsa_eps, |p| {
-                            runner.loss(p, &batch)
-                        })
-                    } else {
-                        spsa::estimate_with(params, step_seed, cfg.spsa_eps, |p| {
-                            runner.loss(p, &batch)
-                        })
-                    }
+                    let est = zo_estimate(cfg, params, &mut zcache, step_seed, |p| {
+                        runner.loss(p, &batch)
+                    })
                     .context("SPSA estimate")?;
                     timing.add("spsa_probes", t.seconds());
 
                     let t = Timer::start();
-                    if cfg.cache_z {
-                        opt.step_zo_cached(params, est.g_scale, est.seed, &zcache)?;
-                    } else {
-                        opt.step_zo(params, est.g_scale, est.seed)?;
-                    }
+                    zo_step(cfg, opt, params, &zcache, &est)?;
                     timing.add("optimizer_step", t.seconds());
 
                     if opt.wants_post_check() {
@@ -285,16 +325,10 @@ pub fn run_lm(
         let step_seed = mix64(cfg.seed, step as u64);
         let loss = match opt.kind() {
             StepKind::Zo => {
-                let est = if cfg.cache_z {
-                    spsa::estimate_cached(&mut params, &mut zcache, step_seed, cfg.spsa_eps, |p| {
-                        runner.loss(p, &batch)
-                    })?
-                } else {
-                    spsa::estimate_with(&mut params, step_seed, cfg.spsa_eps, |p| {
-                        runner.loss(p, &batch)
-                    })?
-                };
-                opt.step_zo(&mut params, est.g_scale, est.seed)?;
+                let est = zo_estimate(cfg, &mut params, &mut zcache, step_seed, |p| {
+                    runner.loss(p, &batch)
+                })?;
+                zo_step(cfg, opt, &mut params, &zcache, &est)?;
                 est.loss()
             }
             StepKind::Fo => {
@@ -329,6 +363,8 @@ mod tests {
         let c = TrainConfig::default();
         assert!(c.steps > 0);
         assert!(c.spsa_eps > 0.0);
+        // §Perf defaults: z-cache on, restore folded into the update sweep
+        assert!(c.cache_z && c.fuse_restore);
         assert_eq!(c.metric, Metric::Accuracy);
     }
 }

@@ -5,3 +5,4 @@ pub mod metrics;
 pub mod prop;
 pub mod rng;
 pub mod zig_tables;
+pub mod znorm;

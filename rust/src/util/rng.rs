@@ -1,4 +1,4 @@
-//! Deterministic PRNG substrate: PCG64 + Box-Muller standard normals.
+//! Deterministic PRNG substrate: PCG64 + Ziggurat standard normals.
 //!
 //! The entire zeroth-order machinery leans on MeZO's seeded-perturbation
 //! trick: the perturbation direction `z ~ N(0, I_d)` is never stored —
@@ -7,6 +7,14 @@
 //! *bit-exact reproducibility from a seed* a correctness requirement, not a
 //! nicety, so the generator is hand-rolled here rather than pulled from a
 //! crate whose stream might change across versions.
+//!
+//! Since the v2 z-stream migration the ZO hot path regenerates `z` through
+//! the stateless counter-based sampler in [`crate::util::znorm`]; the
+//! sequential PCG64+Ziggurat sampler here is **retained as the
+//! property-test oracle** for distribution shape (`znorm`'s acceptance
+//! tests compare moments, tail mass and a two-sample KS statistic against
+//! it) and as the general-purpose RNG for data pipelines, shuffling and the
+//! property-test harness.
 
 /// PCG-XSL-RR-128/64 (Melissa O'Neill's PCG64): 128-bit LCG state, 64-bit
 /// xorshift-rotate output. Passes BigCrush; one multiply + shift per draw.
@@ -17,6 +25,10 @@ pub struct Pcg64 {
 }
 
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// Domain-separation tag for [`Pcg64::new_stream`]'s seed derivation (the
+/// second `mix64` round). Arbitrary but fixed: part of the stream format.
+pub const STREAM_TAG: u64 = 0x1357_9BDF_2468_ACE0;
 
 impl Pcg64 {
     /// Seed with SplitMix64-expanded entropy so nearby seeds give
@@ -30,10 +42,21 @@ impl Pcg64 {
         rng
     }
 
-    /// Derive an independent stream for (seed, stream-id) — used to give
-    /// every optimizer step its own perturbation stream.
+    /// Derive an independent stream for (seed, stream-id) — data pipelines,
+    /// the property-test harness, per-step noise streams.
+    ///
+    /// Derivation: `new(mix64(seed, mix64(stream, STREAM_TAG)))`. The
+    /// earlier `seed ^ stream·C` form was collision-prone — distinct
+    /// `(seed, stream)` pairs with `seed₁ ^ seed₂ = (stream₁ ^ stream₂)·C`
+    /// mapped to the *same* generator. The stream id is avalanched (with
+    /// the domain-separation tag) *before* the xor-fold with the seed, so
+    /// no such linear relation survives; note `mix64(mix64(seed, stream),
+    /// TAG)` would NOT fix it — `mix64(a, b)` is a bijection of `a ^ b·C`
+    /// with the very same `C`, preserving the old collisions exactly.
+    /// This is a stream-format break (same PR as the v2 z-stream;
+    /// DESIGN.md §Sharding migration notes).
     pub fn new_stream(seed: u64, stream: u64) -> Self {
-        Self::new(seed ^ stream.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        Self::new(mix64(seed, mix64(stream, STREAM_TAG)))
     }
 
     #[inline]
@@ -73,11 +96,11 @@ impl Pcg64 {
 
     /// Standard normal via the 128-layer Ziggurat (Marsaglia & Tsang).
     ///
-    /// This is *the* ZO hot path: every SPSA step regenerates the full
-    /// perturbation vector several times, so the sampler is one table
-    /// lookup + one multiply in ~98.5% of draws (§Perf: ~4× over the
-    /// Box-Muller it replaced). One 64-bit draw supplies the 8-bit layer
-    /// index, the sign, and the 53-bit mantissa.
+    /// One 64-bit draw supplies the 8-bit layer index, the sign, and the
+    /// 53-bit mantissa; ~98.5% of draws are one table lookup + multiply.
+    /// No longer the ZO hot path (that is `util/znorm.rs`'s stateless v2
+    /// stream) — kept as the distribution-shape oracle and the sampler
+    /// behind `vec_normal` / the toy problems.
     #[inline]
     pub fn next_normal(&mut self) -> f32 {
         use crate::util::zig_tables::{ZIG_F, ZIG_R, ZIG_X};
@@ -110,8 +133,9 @@ impl Pcg64 {
         }
     }
 
-    /// Fill a slice with i.i.d. standard normals (the hot path for z
-    /// regeneration — one sequential Ziggurat draw per element).
+    /// Fill a slice with i.i.d. standard normals — one sequential Ziggurat
+    /// draw per element (the v1 oracle path; `znorm::fill_normal_at` is the
+    /// ZO hot loop).
     pub fn fill_normal(&mut self, out: &mut [f32]) {
         for v in out.iter_mut() {
             *v = self.next_normal();
@@ -138,13 +162,22 @@ impl Pcg64 {
         }
     }
 
-    /// Sample `k` distinct indices from [0, n) (floyd's algorithm order-free,
-    /// here simple shuffle-prefix for clarity; k << n in few-shot sampling).
+    /// Sample `k` distinct indices from [0, n) with Floyd's algorithm:
+    /// O(k) draws and O(k) memory — no O(n) allocation, which matters when
+    /// k ≪ n (few-shot sampling over large pools). The linear `contains`
+    /// scan keeps it allocation-light; k stays small for every caller.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..n).collect();
-        self.shuffle(&mut idx);
-        idx.truncate(k);
-        idx
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut out: Vec<usize> = Vec::with_capacity(k);
+        for j in n - k..n {
+            let t = self.next_below(j as u64 + 1) as usize;
+            if out.contains(&t) {
+                out.push(j);
+            } else {
+                out.push(t);
+            }
+        }
+        out
     }
 }
 
@@ -313,6 +346,29 @@ mod tests {
         let mut b = Pcg64::new_stream(42, 1);
         let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn stream_derivation_has_no_xor_collisions() {
+        // the old `seed ^ stream·C` derivation mapped (s, 0) and
+        // (s ^ C, 1) to the same generator; the double-mix must not
+        let c = 0x9e37_79b9_7f4a_7c15u64;
+        for s in [0u64, 42, 0xdead_beef, u64::MAX] {
+            let mut a = Pcg64::new_stream(s, 0);
+            let mut b = Pcg64::new_stream(s ^ c, 1);
+            let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+            assert!(same < 2, "seed {s:#x}: colliding streams");
+        }
+    }
+
+    #[test]
+    fn sample_indices_full_range_is_permutation() {
+        // Floyd's algorithm at k = n must still produce n distinct indices
+        let mut rng = Pcg64::new(23);
+        let mut idx = rng.sample_indices(40, 40);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..40).collect::<Vec<_>>());
+        assert!(rng.sample_indices(10, 0).is_empty());
     }
 
     #[test]

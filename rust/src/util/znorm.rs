@@ -1,0 +1,353 @@
+//! The v2 z-stream: stateless, O(1)-addressable standard normals.
+//!
+//! MeZO-style zeroth-order training regenerates the full perturbation vector
+//! `z ~ N(0, I_d)` three to four times per step, so the normal sampler *is*
+//! the host-side hot loop. The v1 sampler (a per-shard `Pcg64` stream feeding
+//! a rejection-sampling Ziggurat, `util/rng.rs`) has two structural costs:
+//! every draw extends a serial 128-bit dependency chain, and `z[j]` is only
+//! reachable by replaying the shard's whole stream (frozen segments had to
+//! *burn* draws to keep positions stable). The v2 stream removes both:
+//!
+//! ```text
+//! z[j] = Φ⁻¹( u52( mix64( mix64(seed, j), ZNORM_TAG ) ) )
+//! ```
+//!
+//! * one stateless 64-bit hash per element — any element, segment, shard, or
+//!   permutation of z is computable in O(1) with no stream replay;
+//! * a fixed-draw-count inverse-CDF normal (no rejection loop), so the
+//!   per-element work is branch-predictable and the whole kernel
+//!   auto-vectorizes ([`fill_normal_at`] processes [`BLOCK`]-wide chunks);
+//! * thread-count and mask invariance are trivial: a draw depends on
+//!   `(seed, j)` and nothing else.
+//!
+//! Φ⁻¹ of a centered 52-bit uniform is evaluated as `√2·erfinv(2u−1)` with
+//! Giles' polynomial pair
+//! (M. Giles, "Approximating the erfinv function", GPU Computing Gems 2010)
+//! — the same fixed-op-count inverse-CDF family as AS241/Acklam, chosen over
+//! those because it needs no division in the rational part. The required
+//! `ln(1−x²)` is computed branch-free from exponent extraction plus an
+//! atanh-series on the mantissa, so the central path (99.66% of draws,
+//! |z| < 2.92) is straight-line FMA-friendly arithmetic. Accuracy vs the
+//! exact Φ⁻¹: < 4e-7 absolute for |z| ≤ 4.75, < 4e-4 out to |z| ≈ 6, and
+//! ~5e-3 relative in the ultra-tail (|z| > 7, mass < 1e-12) — far below the
+//! SPSA estimator's own noise floor. Distribution-level agreement with the
+//! retained v1 Ziggurat oracle is property-tested (moments, tail mass, and a
+//! two-sample KS bound in `util/rng.rs` + `tests/`).
+//!
+//! This module is the single source of truth for the v2 derivation rule;
+//! DESIGN.md §Sharding documents the stream-format break vs v1 (goldens and
+//! recorded traces regenerated).
+
+use crate::util::rng::mix64;
+
+/// Domain-separation tag for the z-stream hash: keeps `z` draws independent
+/// of every other `mix64(seed, i)` derivation in the codebase (step seeds,
+/// data streams, property-test cases). Part of the v2 on-stream format.
+pub const ZNORM_TAG: u64 = 0x5A3C_0DE2_D15E_A5ED;
+
+/// Elements per vectorization block in [`fill_normal_at`]. Purely an
+/// implementation granule: values do not depend on block alignment.
+pub const BLOCK: usize = 8;
+
+/// The stateless per-element hash behind the v2 stream. The inner
+/// `mix64(seed, j)` is a full-avalanche bijection of `seed ^ j·C`; the outer
+/// application folds in [`ZNORM_TAG`]. Two distinct seeds cannot alias more
+/// than incidentally: a correlated run would need `seed₁ ^ j·C = seed₂ ^ k·C`
+/// to hold across consecutive `(j, k)` pairs, which forces `seed₁ = seed₂`.
+#[inline]
+pub fn zbits(seed: u64, index: u64) -> u64 {
+    mix64(mix64(seed, index), ZNORM_TAG)
+}
+
+const U52: f64 = 1.0 / (1u64 << 52) as f64;
+const SQRT2: f64 = std::f64::consts::SQRT_2;
+const LN2: f64 = std::f64::consts::LN_2;
+/// Central/tail split of the erfinv evaluation at w = −ln(1−x²) = 5,
+/// i.e. |z| ≈ 2.92; the tail path runs for ~0.34% of draws.
+const W_SPLIT: f64 = 5.0;
+
+/// `(x, w)` for one draw: `x = 2u−1 ∈ (−1, 1)` and `w = −ln(1−x²)`, with
+/// `u = (k + ½)·2⁻⁵² , k = bits >> 12` the centered 52-bit uniform. 52
+/// bits — not 53 — because `k + ½` must be *exact* in f64: with 53-bit `k`
+/// the top half of the range loses the ½ to rounding, and the extreme
+/// draws round to u = 1.0 (z ≈ −2.7e7 through the tail polynomial) and
+/// u = ½ (z = 0). With `k < 2⁵²`, `u` is exact and strictly inside
+/// (0, 1) with `u ≠ ½`, so `x ≠ 0`, `w` is finite, and `z ≠ 0`.
+#[inline]
+fn draw_xw(bits: u64) -> (f64, f64) {
+    let u = ((bits >> 12) as f64 + 0.5) * U52;
+    let x = 2.0 * u - 1.0;
+    // 1 − x² evaluated as 4u(1−u): no catastrophic cancellation near ±1
+    let t = 4.0 * u * (1.0 - u);
+    (x, -ln_fast(t))
+}
+
+/// Branch-free `ln(t)` for finite normal `t > 0`: exponent extraction plus
+/// the atanh series on the mantissa `m ∈ [1, 2)` (`|s| ≤ ⅓`, truncated after
+/// s¹¹ — absolute error < 1.1e-7, verified against the libm `ln`). All
+/// straight-line arithmetic, so the bulk kernel auto-vectorizes.
+#[inline]
+fn ln_fast(t: f64) -> f64 {
+    let bits = t.to_bits();
+    let e = (((bits >> 52) & 0x7ff) as i64 - 1023) as f64;
+    let m = f64::from_bits((bits & 0x000f_ffff_ffff_ffff) | 0x3ff0_0000_0000_0000);
+    let s = (m - 1.0) / (m + 1.0);
+    let s2 = s * s;
+    let poly = 1.0
+        + s2 * (1.0 / 3.0
+            + s2 * (1.0 / 5.0 + s2 * (1.0 / 7.0 + s2 * (1.0 / 9.0 + s2 * (1.0 / 11.0)))));
+    e * LN2 + 2.0 * s * poly
+}
+
+/// Central-branch draw (w < [`W_SPLIT`]): Giles' degree-8 erfinv polynomial
+/// in `w − 2.5`.
+#[inline]
+fn z_central(w: f64, x: f64) -> f32 {
+    let w = w - 2.5;
+    let mut p = 2.810_226_36e-8;
+    p = 3.432_739_39e-7 + p * w;
+    p = -3.523_387_7e-6 + p * w;
+    p = -4.391_506_54e-6 + p * w;
+    p = 2.185_808_7e-4 + p * w;
+    p = -1.253_725_03e-3 + p * w;
+    p = -4.177_681_64e-3 + p * w;
+    p = 0.246_640_727 + p * w;
+    p = 1.501_409_41 + p * w;
+    (SQRT2 * p * x) as f32
+}
+
+/// Tail-branch draw (w ≥ [`W_SPLIT`]): Giles' degree-8 polynomial in
+/// `√w − 3`.
+#[inline]
+fn z_tail(w: f64, x: f64) -> f32 {
+    let w = w.sqrt() - 3.0;
+    let mut p = -2.002_142_57e-4;
+    p = 1.009_505_58e-4 + p * w;
+    p = 1.349_343_22e-3 + p * w;
+    p = -3.673_428_44e-3 + p * w;
+    p = 5.739_507_73e-3 + p * w;
+    p = -7.622_461_3e-3 + p * w;
+    p = 9.438_870_47e-3 + p * w;
+    p = 1.001_674_06 + p * w;
+    p = 2.832_976_82 + p * w;
+    (SQRT2 * p * x) as f32
+}
+
+/// Φ⁻¹ of the centered 52-bit uniform encoded by `bits` — the draw behind
+/// one z-stream element.
+#[inline]
+pub fn normal_from_bits(bits: u64) -> f32 {
+    let (x, w) = draw_xw(bits);
+    if w < W_SPLIT {
+        z_central(w, x)
+    } else {
+        z_tail(w, x)
+    }
+}
+
+/// The v2 z-stream element at flat position `index`: O(1), position-pure,
+/// bitwise identical to what [`fill_normal_at`] produces at that position.
+#[inline]
+pub fn normal_at(seed: u64, index: u64) -> f32 {
+    normal_from_bits(zbits(seed, index))
+}
+
+/// Bulk kernel: `out[i] = z[start + i]` for the stream of `seed`.
+///
+/// Processes [`BLOCK`]-wide chunks: the hash, uniform conversion, log and
+/// central polynomial are evaluated branch-free across the whole block
+/// (auto-vectorizable), and the rare tail lanes (~0.34%, so ~97% of blocks
+/// have none) are patched afterwards. Values depend only on
+/// `(seed, start + i)` — never on block alignment, slice length, or call
+/// pattern — which is the property the random-access consistency tests pin.
+pub fn fill_normal_at(seed: u64, start: u64, out: &mut [f32]) {
+    let mut base = start;
+    let mut chunks = out.chunks_exact_mut(BLOCK);
+    for chunk in &mut chunks {
+        let mut x = [0f64; BLOCK];
+        let mut w = [0f64; BLOCK];
+        for l in 0..BLOCK {
+            let (xl, wl) = draw_xw(zbits(seed, base + l as u64));
+            x[l] = xl;
+            w[l] = wl;
+        }
+        let mut any_tail = false;
+        for l in 0..BLOCK {
+            chunk[l] = z_central(w[l], x[l]);
+            any_tail |= w[l] >= W_SPLIT;
+        }
+        if any_tail {
+            for l in 0..BLOCK {
+                if w[l] >= W_SPLIT {
+                    chunk[l] = z_tail(w[l], x[l]);
+                }
+            }
+        }
+        base += BLOCK as u64;
+    }
+    for (i, v) in chunks.into_remainder().iter_mut().enumerate() {
+        *v = normal_at(seed, base + i as u64);
+    }
+}
+
+/// Fused generate+AXPY: `out[i] += scale · z[start + i]`. The z values are
+/// the same bitwise as [`fill_normal_at`]'s; generation runs through an
+/// L1-resident staging buffer so the AXPY pass never touches DRAM twice.
+pub fn axpy_normal_at(seed: u64, start: u64, scale: f32, out: &mut [f32]) {
+    let mut buf = [0f32; 256];
+    let mut base = start;
+    let mut rest = out;
+    while !rest.is_empty() {
+        let n = rest.len().min(256);
+        let (head, tail) = rest.split_at_mut(n);
+        fill_normal_at(seed, base, &mut buf[..n]);
+        for (x, z) in head.iter_mut().zip(&buf[..n]) {
+            *x += scale * z;
+        }
+        base += n as u64;
+        rest = tail;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn moments_are_standard_normal() {
+        let n = 200_000usize;
+        let mut buf = vec![0f32; n];
+        fill_normal_at(12345, 0, &mut buf);
+        let nf = n as f64;
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / nf;
+        let var: f64 = buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / nf;
+        let kurt: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(4)).sum::<f64>() / nf / var.powi(2);
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!((kurt - 3.0).abs() < 0.1, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn tail_mass_and_symmetry() {
+        // 2M draws exercise the tail branch; P(|Z| > 3.4426) ≈ 5.76e-4
+        let n = 2_000_000usize;
+        let mut buf = vec![0f32; n];
+        fill_normal_at(21, 0, &mut buf);
+        let beyond =
+            buf.iter().filter(|&&x| x.abs() > 3.442_62).count() as f64 / n as f64;
+        assert!((beyond - 5.76e-4).abs() < 1.5e-4, "tail mass {beyond}");
+        let pos = buf.iter().filter(|&&x| x > 0.0).count() as f64 / n as f64;
+        assert!((pos - 0.5).abs() < 2e-3, "sign balance {pos}");
+        // extreme draws do occur, and no draw is exactly zero (u ≠ ½ by
+        // construction — the sign tests depend on this)
+        assert!(buf.iter().any(|&x| x.abs() > 4.0));
+        assert!(buf.iter().all(|&x| x != 0.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn random_access_matches_bulk_fill() {
+        // z[j] is a pure function of (seed, j): single-element fills, offset
+        // fills, and normal_at all agree bitwise with the bulk fill,
+        // regardless of block alignment.
+        let seed = 99u64;
+        let start = 1_000_003u64; // deliberately not BLOCK-aligned
+        let mut bulk = vec![0f32; 300];
+        fill_normal_at(seed, start, &mut bulk);
+        for &j in &[0usize, 1, 7, 8, 9, 15, 63, 64, 131, 255, 299] {
+            let mut one = [0f32; 1];
+            fill_normal_at(seed, start + j as u64, &mut one);
+            assert_eq!(one[0].to_bits(), bulk[j].to_bits(), "singleton at {j}");
+            assert_eq!(
+                normal_at(seed, start + j as u64).to_bits(),
+                bulk[j].to_bits(),
+                "normal_at at {j}"
+            );
+        }
+        // an offset sub-fill agrees with the corresponding bulk span
+        let mut sub = vec![0f32; 100];
+        fill_normal_at(seed, start + 37, &mut sub);
+        for j in 0..100 {
+            assert_eq!(sub[j].to_bits(), bulk[j + 37].to_bits(), "offset fill at {j}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_fill() {
+        let mut z = vec![0f32; 777];
+        fill_normal_at(5, 123, &mut z);
+        let mut acc = vec![1.5f32; 777];
+        axpy_normal_at(5, 123, 0.25, &mut acc);
+        for j in 0..777 {
+            assert_eq!(acc[j], 1.5 + 0.25 * z[j], "element {j}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_and_positions_decorrelate() {
+        let mut a = vec![0f32; 4096];
+        let mut b = vec![0f32; 4096];
+        fill_normal_at(1, 0, &mut a);
+        fill_normal_at(2, 0, &mut b);
+        assert!(a.iter().zip(&b).all(|(x, y)| x != y));
+        // nearby seeds: empirical cross-correlation is noise-level
+        let dot: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert!((dot / 4096.0).abs() < 0.1, "corr {}", dot / 4096.0);
+    }
+
+    #[test]
+    fn agrees_with_ziggurat_oracle_distribution() {
+        // Statistical acceptance vs the retained v1 PCG64+Ziggurat oracle:
+        // matching moments, matching tail mass, and a two-sample KS bound.
+        let n = 200_000usize;
+        let mut v1 = vec![0f32; n];
+        Pcg64::new(777).fill_normal(&mut v1);
+        let mut v2 = vec![0f32; n];
+        fill_normal_at(777, 0, &mut v2);
+
+        let stats = |v: &[f32]| {
+            let nf = v.len() as f64;
+            let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / nf;
+            let var: f64 = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / nf;
+            let kurt: f64 =
+                v.iter().map(|&x| (x as f64 - mean).powi(4)).sum::<f64>() / nf / var.powi(2);
+            let tail = v.iter().filter(|&&x| x.abs() > 3.442_62).count() as f64 / nf;
+            (mean, var, kurt, tail)
+        };
+        let (m1, s1, k1, t1) = stats(&v1);
+        let (m2, s2, k2, t2) = stats(&v2);
+        assert!((m1 - m2).abs() < 0.01, "mean {m1} vs {m2}");
+        assert!((s1 - s2).abs() < 0.02, "var {s1} vs {s2}");
+        assert!((k1 - k2).abs() < 0.1, "kurtosis {k1} vs {k2}");
+        assert!((t1 - t2).abs() < 2.5e-4, "tail mass {t1} vs {t2}");
+
+        // two-sample Kolmogorov–Smirnov: D = sup |F₁ − F₂|; the α = 0.001
+        // critical value at n = m = 2e5 is ≈ 0.0062, we allow 0.01.
+        let mut a = v1;
+        let mut b = v2;
+        a.sort_by(f32::total_cmp);
+        b.sort_by(f32::total_cmp);
+        let (mut i, mut j, mut d) = (0usize, 0usize, 0f64);
+        while i < n && j < n {
+            if a[i] <= b[j] {
+                i += 1;
+            } else {
+                j += 1;
+            }
+            d = d.max((i as f64 / n as f64 - j as f64 / n as f64).abs());
+        }
+        assert!(d < 0.01, "two-sample KS statistic {d}");
+    }
+
+    #[test]
+    fn hash_avalanches() {
+        let base = zbits(42, 1000);
+        for bit in [0u64, 1, 17, 33, 63] {
+            let d = (base ^ zbits(42, 1000 ^ (1 << bit))).count_ones();
+            assert!((12..=52).contains(&d), "index bit {bit}: hamming {d}");
+            let d = (base ^ zbits(42 ^ (1 << bit), 1000)).count_ones();
+            assert!((12..=52).contains(&d), "seed bit {bit}: hamming {d}");
+        }
+    }
+}

@@ -1,16 +1,17 @@
 //! Parallelism-determinism properties of the sharded flat-arena `ParamSet`.
 //!
-//! The shard layer's contract (DESIGN.md §Sharding): every draw depends
-//! only on `(seed, shard_index, position-in-shard)`, never on scheduling —
-//! so any operation must be **bitwise identical** across rayon pool sizes,
-//! and the MeZO perturb/restore identity must hold on multi-shard arenas
-//! exactly as it did on the old sequential store.
+//! The z-stream contract (DESIGN.md §Sharding, v2): every draw is a pure
+//! function of `(seed, flat-position)` — never of scheduling, shard
+//! partitioning, or the train mask — so any operation must be **bitwise
+//! identical** across rayon pool sizes, the MeZO perturb/restore identity
+//! must hold on multi-shard arenas, and the fused restore+update path must
+//! be bitwise equal to the unfused restore-then-step sequence.
 
 use helene::model::params::{ParamSet, ZCache, SHARD_SIZE};
 use helene::optim::helene::Helene;
 use helene::optim::sophia::ZoSophia;
 use helene::optim::zo_adam::ZoAdam;
-use helene::optim::zo_sgd::ZoSgdMomentum;
+use helene::optim::zo_sgd::{ZoSgd, ZoSgdMomentum};
 use helene::optim::{spsa, Optimizer};
 use helene::util::prop::{forall, Gen};
 
@@ -50,7 +51,7 @@ fn prop_perturb_bitwise_identical_across_thread_counts() {
             p
         };
         let single = run(1);
-        for threads in [2, 8] {
+        for threads in [2, 4, 8] {
             if single.flat() != run(threads).flat() {
                 return Err(format!("perturb differs at {threads} threads"));
             }
@@ -129,9 +130,110 @@ fn prop_zcache_path_bitwise_matches_regeneration() {
 }
 
 #[test]
+fn prop_fused_step_bitwise_matches_unfused() {
+    // θ after (unrestored probes + step_zo_fused) must equal θ after
+    // (restored probes + step_zo) bit-for-bit: the fusion only merges
+    // sweeps, never changes per-element arithmetic. Covers the three
+    // specialized optimizers and one default-impl optimizer, with the
+    // z-cache both on and off.
+    forall("fused-vs-unfused", |g| {
+        let base = gen_multi_shard(g);
+        let seed = g.u64();
+        let eps = g.f32_in(1e-5, 1e-2);
+        let which = g.usize_in(0, 4);
+        let cached = g.bool();
+        let mk = |w: usize| -> Box<dyn Optimizer> {
+            match w {
+                0 => Box::new(Helene::paper_defaults().with_lr(1e-3)),
+                1 => Box::new(ZoAdam::new(1e-3, true)),
+                2 => Box::new(ZoSgd::new(1e-3)),
+                _ => Box::new(ZoSgdMomentum::new(1e-3, 0.9)), // default-impl path
+            }
+        };
+        let quad = |q: &ParamSet| Ok(q.flat().iter().map(|x| x * x).sum::<f32>());
+
+        // unfused: restored probe pair, then the plain step
+        let mut p1 = base.clone();
+        let mut o1 = mk(which);
+        o1.init(&p1);
+        let mut c1 = ZCache::default();
+        let e1 = if cached {
+            spsa::estimate_cached(&mut p1, &mut c1, seed, eps, quad)
+        } else {
+            spsa::estimate_with(&mut p1, seed, eps, quad)
+        }
+        .map_err(|e| e.to_string())?;
+        if cached {
+            o1.step_zo_cached(&mut p1, e1.g_scale, e1.seed, &c1)
+        } else {
+            o1.step_zo(&mut p1, e1.g_scale, e1.seed)
+        }
+        .map_err(|e| e.to_string())?;
+
+        // fused: unrestored probe pair, restore folded into the step
+        let mut p2 = base.clone();
+        let mut o2 = mk(which);
+        o2.init(&p2);
+        let mut c2 = ZCache::default();
+        let e2 = if cached {
+            spsa::estimate_cached_unrestored(&mut p2, &mut c2, seed, eps, quad)
+        } else {
+            spsa::estimate_unrestored(&mut p2, seed, eps, quad)
+        }
+        .map_err(|e| e.to_string())?;
+        let cache_ref = if cached { Some(&c2) } else { None };
+        o2.step_zo_fused(&mut p2, e2.g_scale, e2.seed, eps, cache_ref)
+            .map_err(|e| e.to_string())?;
+
+        if e1.g_scale != e2.g_scale {
+            return Err("probe estimates diverged".into());
+        }
+        if p1.flat() != p2.flat() {
+            return Err(format!(
+                "fused != unfused for optimizer {which} (cached={cached})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_cycle_bitwise_identical_across_thread_counts() {
+    // the fused restore+update sweep keeps the thread-count invariance of
+    // the separate sweeps, across 1/2/4/8-worker pools
+    forall("fused-thread-invariance", |g| {
+        let base = gen_multi_shard(g);
+        let seed = g.u64();
+        let eps = g.f32_in(1e-4, 1e-2);
+        let run = |threads: usize| -> Result<ParamSet, String> {
+            let mut p = base.clone();
+            let mut opt = Helene::paper_defaults().with_lr(1e-3);
+            opt.init(&p);
+            let mut cache = ZCache::default();
+            with_pool(threads, || -> anyhow::Result<()> {
+                let est = spsa::estimate_cached_unrestored(
+                    &mut p, &mut cache, seed, eps,
+                    |q| Ok(q.flat().iter().map(|x| x * x).sum::<f32>()),
+                )?;
+                opt.step_zo_fused(&mut p, est.g_scale, est.seed, eps, Some(&cache))
+            })
+            .map_err(|e| e.to_string())?;
+            Ok(p)
+        };
+        let single = run(1)?;
+        for threads in [2, 4, 8] {
+            if single.flat() != run(threads)?.flat() {
+                return Err(format!("fused cycle differs at {threads} threads"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn freezing_one_shard_leaves_other_shards_draws_unchanged() {
     // arrays aligned to whole shards: freezing array 0 must not change the
-    // z applied to array 1 (independent per-shard streams)
+    // z applied to array 1 (position-pure draws)
     let mut all = ParamSet::synthetic(&[SHARD_SIZE, SHARD_SIZE], 1.0);
     let mut partial = all.clone();
     partial.train_mask[0] = false;
