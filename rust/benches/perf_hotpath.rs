@@ -10,10 +10,14 @@
 //! 2. **Host section** (always runs — no artifacts needed): the sharded
 //!    flat-arena hot path on the largest synthetic variant, swept across
 //!    rayon pool sizes 1/2/4/8 for perturb / optimizer step / full SPSA
-//!    cycle (both the classic 4-sweep cycle and the fused 3-sweep
-//!    restore+update cycle), plus a bitwise thread-count determinism check.
-//!    Emits machine-readable `reports/BENCH_hotpath.json` (the perf
-//!    trajectory seed; CI gates on its `deterministic` and sampler-speedup
+//!    cycle (the classic 4-sweep cycle, the fused 3-sweep restore+update
+//!    cycle, and the 2-sweep cross-step prefetch cycle), plus a bitwise
+//!    thread-count determinism check through all three protocols. Arena
+//!    sweeps per step are **counted** via `ParamSet`'s instrumented sweep
+//!    odometer, not assumed, and turned into effective θ-arena bandwidth
+//!    (read+write bytes per sweep / cycle time). Emits machine-readable
+//!    `reports/BENCH_hotpath.json` (the perf trajectory seed; CI gates on
+//!    its `deterministic`, sampler-speedup and `sweeps_per_step.prefetch`
 //!    fields) in addition to the printed table.
 //! 3. **PJRT section** (skipped when `artifacts/` is absent): forward
 //!    passes, the buffered fast path, the fused L1 update kernel and
@@ -57,18 +61,26 @@ fn synth_sizes(scale: Scale) -> Vec<usize> {
     vec![n / 2, n / 4, n / 8, n / 8 + 12_345]
 }
 
-/// Host arena sweeps per SPSA step (z-cache on, free loss oracle): the
-/// classic cycle is fill-cache + −2ε + restore + step = 4; the fused cycle
-/// folds restore into the step = 3.
-const SWEEPS_UNFUSED: f64 = 4.0;
-const SWEEPS_FUSED: f64 = 3.0;
-
 struct ThreadRow {
     threads: usize,
     perturb_ms: f64,
+    /// one-sweep dual-seed double perturbation (`perturb_trainable2`) vs
+    /// the two sweeps in `perturb_ms`
+    perturb_dual_ms: f64,
     step_ms: f64,
     cycle_ms: f64,
     cycle_fused_ms: f64,
+    /// steady-state cross-step prefetch cycle (pre-perturbed probes +
+    /// dual-stream fused sweep)
+    cycle_prefetch_ms: f64,
+}
+
+/// Measured arena sweeps per steady-state step for the three protocols
+/// (z-cache on), read off `ParamSet`'s instrumented counter.
+struct SweepCounts {
+    unfused: u64,
+    fused: u64,
+    prefetch: u64,
 }
 
 struct SamplerRow {
@@ -108,7 +120,7 @@ fn sampler_section(iters: usize) -> SamplerRow {
     row
 }
 
-fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
+fn host_section(scale: Scale, iters: usize) -> anyhow::Result<(Vec<ThreadRow>, SweepCounts)> {
     let sizes = synth_sizes(scale);
     let mut rows = Vec::new();
     let base = ParamSet::synthetic(&sizes, 0.5);
@@ -120,8 +132,15 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
         SHARD_SIZE
     );
     println!(
-        "  {:<10} {:>12} {:>12} {:>12} {:>14} {:>14}",
-        "threads", "perturb ms", "step ms", "cycle ms", "fused-cycle ms", "perturb Melem/s"
+        "  {:<8} {:>11} {:>13} {:>11} {:>11} {:>13} {:>16} {:>15}",
+        "threads",
+        "perturb ms",
+        "dual-ptrb ms",
+        "step ms",
+        "cycle ms",
+        "fused-cyc ms",
+        "prefetch-cyc ms",
+        "perturb Melem/s"
     );
 
     for &t in &[1usize, 2, 4, 8] {
@@ -132,10 +151,15 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
         opt.init(&params);
         let mut zcache = ZCache::default();
         let row = pool.install(|| {
-            // 1. perturb+restore pass (RNG + AXPY throughput)
+            // 1. perturb+restore pass (RNG + AXPY throughput, two sweeps)
             let perturb_ms = 1000.0 * time(1, iters, || {
                 params.perturb_trainable(1234, 1e-3);
                 params.perturb_trainable(1234, -1e-3);
+            });
+            // 1b. the same two perturbations through the one-sweep
+            //     dual-seed kernel (axpy2: θ crosses memory once)
+            let perturb_dual_ms = 1000.0 * time(1, iters, || {
+                params.perturb_trainable2(1234, 1e-3, 1234, -1e-3);
             });
             // 2. one fused HELENE update (momentum + A-GNB + clipped step)
             let mut seed = 0u64;
@@ -163,22 +187,86 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
                 opt.step_zo_fused(&mut params, est.g_scale, est.seed, 1e-3, Some(&zcache))
                     .unwrap();
             });
-            ThreadRow { threads: t, perturb_ms, step_ms, cycle_ms, cycle_fused_ms }
+            // 5. cross-step prefetch cycle (steady state): θ arrives
+            //    pre-perturbed, so one step is a single −2ε probe sweep
+            //    plus one dual-stream fused sweep (restore + update +
+            //    next-step +εz, captured into the rotating cache) —
+            //    2 arena sweeps, identical arithmetic
+            let mut cur = ZCache::default();
+            let mut nextc = ZCache::default();
+            params.perturb_fill_cache(&mut cur, seed + 1, 1e-3); // prologue
+            let cycle_prefetch_ms = 1000.0 * time(1, iters, || {
+                seed += 1;
+                let est = spsa::estimate_cached_preperturbed(
+                    &mut params, &cur, seed, 1e-3, |_| Ok(0.0),
+                )
+                .unwrap();
+                opt.step_zo_fused_prefetch(
+                    &mut params, est.g_scale, est.seed, seed + 1, 1e-3,
+                    Some(&cur), Some(&mut nextc),
+                )
+                .unwrap();
+                std::mem::swap(&mut cur, &mut nextc);
+            });
+            // epilogue: drop the pending +εz so the row ends pristine
+            params.perturb_from_cache(&cur, seed + 1, -1e-3);
+            ThreadRow {
+                threads: t,
+                perturb_ms,
+                perturb_dual_ms,
+                step_ms,
+                cycle_ms,
+                cycle_fused_ms,
+                cycle_prefetch_ms,
+            }
         });
         println!(
-            "  {:<10} {:>12.2} {:>12.2} {:>12.2} {:>14.2} {:>14.0}",
+            "  {:<8} {:>11.2} {:>13.2} {:>11.2} {:>11.2} {:>13.2} {:>16.2} {:>15.0}",
             row.threads,
             row.perturb_ms,
+            row.perturb_dual_ms,
             row.step_ms,
             row.cycle_ms,
             row.cycle_fused_ms,
+            row.cycle_prefetch_ms,
             2.0 * n as f64 / row.perturb_ms / 1e3
         );
         rows.push(row);
     }
 
+    // measured sweep accounting: one steady-state step under each protocol,
+    // counted by the instrumented ParamSet odometer (z-cache on)
+    let sweeps = {
+        let mut p = base.clone();
+        let mut opt = Helene::paper_defaults().with_lr(1e-3);
+        opt.configure_batch(8);
+        opt.init(&p);
+        let mut zc = ZCache::default();
+        p.reset_sweep_count();
+        let est = spsa::estimate_cached(&mut p, &mut zc, 1, 1e-3, |_| Ok(0.0))?;
+        opt.step_zo_cached(&mut p, est.g_scale, est.seed, &zc)?;
+        let unfused = p.sweep_count();
+        p.reset_sweep_count();
+        let est = spsa::estimate_cached_unrestored(&mut p, &mut zc, 2, 1e-3, |_| Ok(0.0))?;
+        opt.step_zo_fused(&mut p, est.g_scale, est.seed, 1e-3, Some(&zc))?;
+        let fused = p.sweep_count();
+        // prefetch steady state: the prologue fill is amortized over the
+        // run, so the counted window starts pre-perturbed
+        let mut nextc = ZCache::default();
+        p.perturb_fill_cache(&mut zc, 3, 1e-3);
+        p.reset_sweep_count();
+        let est = spsa::estimate_cached_preperturbed(&mut p, &zc, 3, 1e-3, |_| Ok(0.0))?;
+        opt.step_zo_fused_prefetch(&mut p, est.g_scale, est.seed, 4, 1e-3, Some(&zc), Some(&mut nextc))?;
+        let prefetch = p.sweep_count();
+        SweepCounts { unfused, fused, prefetch }
+    };
+    println!(
+        "  measured sweeps/step: unfused {}  fused {}  prefetch {}",
+        sweeps.unfused, sweeps.fused, sweeps.prefetch
+    );
+
     // bitwise determinism across pool sizes (the position-pure z-stream
-    // guarantee), through both the classic and the fused cycle
+    // guarantee), through the classic, fused and cross-step prefetch cycles
     let run_in = |threads: usize| -> anyhow::Result<ParamSet> {
         let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
         let mut p = base.clone();
@@ -192,6 +280,15 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
                 spsa::estimate_cached_unrestored(&mut p, &mut zcache, 101, 1e-3, |_| Ok(0.0))
                     .unwrap();
             opt.step_zo_fused(&mut p, est.g_scale, est.seed, 1e-3, Some(&zcache)).unwrap();
+            // one prefetch-pipeline step on top (dual-stream sweep)
+            let mut nextc = ZCache::default();
+            p.perturb_fill_cache(&mut zcache, 102, 1e-3);
+            let est = spsa::estimate_cached_preperturbed(&mut p, &zcache, 102, 1e-3, |_| Ok(0.0))
+                .unwrap();
+            opt.step_zo_fused_prefetch(
+                &mut p, est.g_scale, est.seed, 103, 1e-3, Some(&zcache), Some(&mut nextc),
+            )
+            .unwrap();
         });
         Ok(p)
     };
@@ -211,29 +308,34 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<Vec<ThreadRow>> {
         rows.iter().find(|r| r.threads == 4),
     ) {
         println!(
-            "  speedup @4 threads: perturb {:.2}x  step {:.2}x  cycle {:.2}x  fused-vs-unfused {:.2}x",
+            "  speedup @4 threads: perturb {:.2}x  step {:.2}x  cycle {:.2}x  \
+             fused-vs-unfused {:.2}x  prefetch-vs-fused {:.2}x",
             r1.perturb_ms / r4.perturb_ms,
             r1.step_ms / r4.step_ms,
             r1.cycle_ms / r4.cycle_ms,
             r4.cycle_ms / r4.cycle_fused_ms,
+            r4.cycle_fused_ms / r4.cycle_prefetch_ms,
         );
     }
-    Ok(rows)
+    Ok((rows, sweeps))
 }
 
 fn write_json(
     scale: Scale,
     sampler: &SamplerRow,
     rows: &[ThreadRow],
+    sweeps: &SweepCounts,
     n_params: usize,
 ) -> anyhow::Result<PathBuf> {
     let mut threads = BTreeMap::new();
     for r in rows {
         let mut o = BTreeMap::new();
         o.insert("perturb_ms".to_string(), Json::Num(r.perturb_ms));
+        o.insert("perturb_dual_ms".to_string(), Json::Num(r.perturb_dual_ms));
         o.insert("step_ms".to_string(), Json::Num(r.step_ms));
         o.insert("cycle_ms".to_string(), Json::Num(r.cycle_ms));
         o.insert("cycle_fused_ms".to_string(), Json::Num(r.cycle_fused_ms));
+        o.insert("cycle_prefetch_ms".to_string(), Json::Num(r.cycle_prefetch_ms));
         threads.insert(r.threads.to_string(), Json::Obj(o));
     }
     let speedup = |f: fn(&ThreadRow) -> f64| -> Json {
@@ -275,9 +377,40 @@ fn write_json(
     if let Some(c) = canon {
         root.insert("cycle_ms_unfused".to_string(), Json::Num(c.cycle_ms));
         root.insert("cycle_ms_fused".to_string(), Json::Num(c.cycle_fused_ms));
+        root.insert("cycle_ms_prefetch".to_string(), Json::Num(c.cycle_prefetch_ms));
+        // the PR-over-PR headline: fused-step-cycle speedup of the 2-sweep
+        // cross-step pipeline over the 3-sweep fused protocol
+        root.insert(
+            "prefetch_speedup_vs_fused".to_string(),
+            Json::Num(c.cycle_fused_ms / c.cycle_prefetch_ms),
+        );
+        root.insert(
+            "dual_axpy_speedup".to_string(),
+            Json::Num(c.perturb_ms / c.perturb_dual_ms),
+        );
+        // effective θ-arena bandwidth: each counted sweep reads+writes the
+        // full f32 arena (8 bytes/element); state/cache traffic excluded —
+        // see the DESIGN.md §Perf sweep-accounting table for the math
+        let gb = |sw: u64, ms: f64| Json::Num(sw as f64 * n_params as f64 * 8.0 / (ms / 1e3) / 1e9);
+        let mut bw = BTreeMap::new();
+        bw.insert("unfused".to_string(), gb(sweeps.unfused, c.cycle_ms));
+        bw.insert("fused".to_string(), gb(sweeps.fused, c.cycle_fused_ms));
+        bw.insert("prefetch".to_string(), gb(sweeps.prefetch, c.cycle_prefetch_ms));
+        root.insert("arena_gb_s".to_string(), Json::Obj(bw));
     }
-    root.insert("arena_sweeps_per_step_unfused".to_string(), Json::Num(SWEEPS_UNFUSED));
-    root.insert("arena_sweeps_per_step_fused".to_string(), Json::Num(SWEEPS_FUSED));
+    // measured by the instrumented ParamSet sweep counter, not assumed
+    let mut sw = BTreeMap::new();
+    sw.insert("unfused".to_string(), Json::Num(sweeps.unfused as f64));
+    sw.insert("fused".to_string(), Json::Num(sweeps.fused as f64));
+    sw.insert("prefetch".to_string(), Json::Num(sweeps.prefetch as f64));
+    root.insert("sweeps_per_step".to_string(), Json::Obj(sw));
+    // PR 2 schema compat: the flat unfused/fused keys predate the
+    // structured object; new protocols live only in `sweeps_per_step`
+    root.insert(
+        "arena_sweeps_per_step_unfused".to_string(),
+        Json::Num(sweeps.unfused as f64),
+    );
+    root.insert("arena_sweeps_per_step_fused".to_string(), Json::Num(sweeps.fused as f64));
     root.insert("threads".to_string(), Json::Obj(threads));
     root.insert("speedup_4t".to_string(), Json::Obj(sp));
 
@@ -419,9 +552,9 @@ fn main() -> anyhow::Result<()> {
     // enough iterations that the CI gate's v2-vs-v1 comparison is not at
     // the mercy of one noisy fill on a shared runner
     let sampler = sampler_section(iters.max(5));
-    let rows = host_section(scale, iters)?;
+    let (rows, sweeps) = host_section(scale, iters)?;
     let n_params = synth_sizes(scale).iter().sum();
-    write_json(scale, &sampler, &rows, n_params)?;
+    write_json(scale, &sampler, &rows, &sweeps, n_params)?;
 
     if Runtime::default_dir().join("manifest.json").exists() {
         pjrt_section(match scale {

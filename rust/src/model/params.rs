@@ -100,6 +100,11 @@ pub struct ParamSet {
     /// manifest's per-variant flags; protocols like linear probing narrow
     /// it further at runtime (`restrict_to_layers`).
     pub train_mask: Vec<bool>,
+    /// Arena-sweep odometer: incremented once per θ-mutating full pass
+    /// (perturbations, cached/seeded updates, dual-stream kernels). The
+    /// step-protocol cost model — and the `sweeps_per_step` bench gate — is
+    /// counted here rather than estimated (DESIGN.md §Perf).
+    sweeps: u64,
 }
 
 impl ParamSet {
@@ -107,7 +112,7 @@ impl ParamSet {
     pub fn from_flat(spec: Arc<VariantSpec>, data: Vec<f32>) -> ParamSet {
         assert_eq!(data.len(), spec.n_params, "arena length != spec.n_params");
         let train_mask = spec.params.iter().map(|p| p.trainable).collect();
-        ParamSet { spec, data, train_mask }
+        ParamSet { spec, data, train_mask, sweeps: 0 }
     }
 
     /// Build from per-array vectors (test/checkpoint convenience); the
@@ -174,6 +179,7 @@ impl ParamSet {
             spec: self.spec.clone(),
             data: vec![0f32; self.data.len()],
             train_mask: self.train_mask.clone(),
+            sweeps: 0,
         }
     }
 
@@ -183,7 +189,17 @@ impl ParamSet {
             spec: self.spec.clone(),
             data: vec![value; self.data.len()],
             train_mask: self.train_mask.clone(),
+            sweeps: 0,
         }
+    }
+
+    /// θ-mutating arena sweeps performed so far (see the field docs).
+    pub fn sweep_count(&self) -> u64 {
+        self.sweeps
+    }
+
+    pub fn reset_sweep_count(&mut self) {
+        self.sweeps = 0;
     }
 
     /// The whole arena (manifest byte order).
@@ -269,6 +285,7 @@ impl ParamSet {
     /// frozen segments are skipped outright — no draws are generated for
     /// them, and the perturbation applied elsewhere is unaffected.
     pub fn perturb_trainable(&mut self, seed: u64, scale: f32) {
+        self.sweeps += 1;
         let spec = &self.spec;
         let mask = &self.train_mask;
         self.data
@@ -282,6 +299,37 @@ impl ParamSet {
                             seed,
                             seg.global.start as u64,
                             scale,
+                            &mut chunk[seg.local.clone()],
+                        );
+                    }
+                }
+            });
+    }
+
+    /// One-sweep composition of two seeded perturbations:
+    /// `theta += scale_a·z(seed_a)` then `theta += scale_b·z(seed_b)` per
+    /// trainable element (two separate adds, so the result is bitwise the
+    /// two-[`perturb_trainable`] sequence). Both streams come from the
+    /// dual-seed block kernel (`znorm::axpy2_normal_at`), and θ crosses
+    /// memory once — the primitive behind protocol transitions that would
+    /// otherwise pay two arena sweeps (e.g. an unperturb+reperturb pair).
+    pub fn perturb_trainable2(&mut self, seed_a: u64, scale_a: f32, seed_b: u64, scale_b: f32) {
+        self.sweeps += 1;
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        self.data
+            .par_chunks_mut(SHARD_SIZE)
+            .enumerate()
+            .for_each(|(s, chunk)| {
+                let base = s * SHARD_SIZE;
+                for seg in segments_in(spec, base, chunk.len()) {
+                    if mask[seg.array] {
+                        znorm::axpy2_normal_at(
+                            seed_a,
+                            seed_b,
+                            seg.global.start as u64,
+                            scale_a,
+                            scale_b,
                             &mut chunk[seg.local.clone()],
                         );
                     }
@@ -385,6 +433,7 @@ impl ParamSet {
     where
         F: Fn(&ShardSeg, &mut [f32], &[f32]) + Sync,
     {
+        self.sweeps += 1;
         let (g_all, seed) = resolve_src(src, self.data.len());
         let spec = &self.spec;
         let mask = &self.train_mask;
@@ -414,6 +463,7 @@ impl ParamSet {
         F: Fn(&ShardSeg, &mut [f32], &mut [f32], &[f32]) + Sync,
     {
         assert_eq!(s1.data.len(), self.data.len(), "state arena layout mismatch");
+        self.sweeps += 1;
         let (g_all, seed) = resolve_src(src, self.data.len());
         let spec = &self.spec;
         let mask = &self.train_mask;
@@ -450,6 +500,7 @@ impl ParamSet {
     {
         assert_eq!(s1.data.len(), self.data.len(), "state arena layout mismatch");
         assert_eq!(s2.data.len(), self.data.len(), "state arena layout mismatch");
+        self.sweeps += 1;
         let (g_all, seed) = resolve_src(src, self.data.len());
         let spec = &self.spec;
         let mask = &self.train_mask;
@@ -474,6 +525,189 @@ impl ParamSet {
                 }
             });
     }
+
+    /// Dual-stream variant of [`update_shards`] for the cross-step fused
+    /// pipeline (§Perf): the visitor receives the NEXT step's z alongside
+    /// the current gradient basis — `f(seg, θ_seg, g_seg, z_next_seg)` — so
+    /// a single sweep can apply restore + update + next-step perturbation.
+    /// `z_next` is the stateless stream of `next_seed`; when `capture` is
+    /// given, the draws of every active shard are stored into it seed-keyed
+    /// (zeros in inactive shards — bitwise what [`Self::perturb_fill_cache`]
+    /// records) so the next step's probe passes reuse them without
+    /// regeneration. With a [`GradSource::Seeded`] source both streams come
+    /// out of the dual-seed block kernel (`znorm::fill_normal_at2`),
+    /// amortizing the hash+Φ⁻¹ pipeline across the two chains.
+    pub fn update_shards_dual<F>(
+        &mut self,
+        src: GradSource<'_>,
+        next_seed: u64,
+        capture: Option<&mut ZCache>,
+        f: F,
+    ) where
+        F: Fn(&ShardSeg, &mut [f32], &[f32], &[f32]) + Sync,
+    {
+        self.sweeps += 1;
+        let n = self.data.len();
+        let (g_all, seed) = resolve_src(src, n);
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        match capture {
+            Some(cache) => {
+                cache.data.resize(n, 0.0);
+                cache.filled = true;
+                cache.seed = next_seed;
+                self.data
+                    .par_chunks_mut(SHARD_SIZE)
+                    .zip(cache.data.par_chunks_mut(SHARD_SIZE))
+                    .enumerate()
+                    .for_each_init(Vec::new, |scratch, (s, (th, zc))| {
+                        let base = s * SHARD_SIZE;
+                        let segs = segments_in(spec, base, th.len());
+                        if !segs.iter().any(|g| mask[g.array]) {
+                            zc.fill(0.0);
+                            return;
+                        }
+                        let g = dual_g(g_all, seed, next_seed, base, th.len(), zc, scratch);
+                        for seg in &segs {
+                            if !mask[seg.array] {
+                                continue;
+                            }
+                            let r = seg.local.clone();
+                            f(seg, &mut th[r.clone()], &g[r.clone()], &zc[r]);
+                        }
+                    });
+            }
+            None => {
+                self.data
+                    .par_chunks_mut(SHARD_SIZE)
+                    .enumerate()
+                    .for_each_init(
+                        || (Vec::new(), Vec::new()),
+                        |(scratch, zn), (s, th)| {
+                            let base = s * SHARD_SIZE;
+                            let segs = segments_in(spec, base, th.len());
+                            if !segs.iter().any(|g| mask[g.array]) {
+                                return;
+                            }
+                            zn.resize(th.len(), 0.0);
+                            let g = dual_g(g_all, seed, next_seed, base, th.len(), zn, scratch);
+                            for seg in &segs {
+                                if !mask[seg.array] {
+                                    continue;
+                                }
+                                let r = seg.local.clone();
+                                f(seg, &mut th[r.clone()], &g[r.clone()], &zn[r]);
+                            }
+                        },
+                    );
+            }
+        }
+    }
+
+    /// Like [`update_shards_dual`] with two same-layout state arenas
+    /// (momentum and Hessian/second moment):
+    /// `f(seg, θ, s1, s2, g_seg, z_next_seg)`.
+    pub fn update_shards2_dual<F>(
+        &mut self,
+        s1: &mut ParamSet,
+        s2: &mut ParamSet,
+        src: GradSource<'_>,
+        next_seed: u64,
+        capture: Option<&mut ZCache>,
+        f: F,
+    ) where
+        F: Fn(&ShardSeg, &mut [f32], &mut [f32], &mut [f32], &[f32], &[f32]) + Sync,
+    {
+        assert_eq!(s1.data.len(), self.data.len(), "state arena layout mismatch");
+        assert_eq!(s2.data.len(), self.data.len(), "state arena layout mismatch");
+        self.sweeps += 1;
+        let n = self.data.len();
+        let (g_all, seed) = resolve_src(src, n);
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        match capture {
+            Some(cache) => {
+                cache.data.resize(n, 0.0);
+                cache.filled = true;
+                cache.seed = next_seed;
+                self.data
+                    .par_chunks_mut(SHARD_SIZE)
+                    .zip(s1.data.par_chunks_mut(SHARD_SIZE))
+                    .zip(s2.data.par_chunks_mut(SHARD_SIZE))
+                    .zip(cache.data.par_chunks_mut(SHARD_SIZE))
+                    .enumerate()
+                    .for_each_init(Vec::new, |scratch, (s, (((th, a), b), zc))| {
+                        let base = s * SHARD_SIZE;
+                        let segs = segments_in(spec, base, th.len());
+                        if !segs.iter().any(|g| mask[g.array]) {
+                            zc.fill(0.0);
+                            return;
+                        }
+                        let g = dual_g(g_all, seed, next_seed, base, th.len(), zc, scratch);
+                        for seg in &segs {
+                            if !mask[seg.array] {
+                                continue;
+                            }
+                            let r = seg.local.clone();
+                            f(
+                                seg,
+                                &mut th[r.clone()],
+                                &mut a[r.clone()],
+                                &mut b[r.clone()],
+                                &g[r.clone()],
+                                &zc[r],
+                            );
+                        }
+                    });
+            }
+            None => {
+                self.data
+                    .par_chunks_mut(SHARD_SIZE)
+                    .zip(s1.data.par_chunks_mut(SHARD_SIZE))
+                    .zip(s2.data.par_chunks_mut(SHARD_SIZE))
+                    .enumerate()
+                    .for_each_init(
+                        || (Vec::new(), Vec::new()),
+                        |(scratch, zn), (s, ((th, a), b))| {
+                            let base = s * SHARD_SIZE;
+                            let segs = segments_in(spec, base, th.len());
+                            if !segs.iter().any(|g| mask[g.array]) {
+                                return;
+                            }
+                            zn.resize(th.len(), 0.0);
+                            let g = dual_g(g_all, seed, next_seed, base, th.len(), zn, scratch);
+                            for seg in &segs {
+                                if !mask[seg.array] {
+                                    continue;
+                                }
+                                let r = seg.local.clone();
+                                f(
+                                    seg,
+                                    &mut th[r.clone()],
+                                    &mut a[r.clone()],
+                                    &mut b[r.clone()],
+                                    &g[r.clone()],
+                                    &zn[r],
+                                );
+                            }
+                        },
+                    );
+            }
+        }
+    }
+}
+
+/// A cross-step prefetch request threaded through an optimizer's fused
+/// step (`Optimizer::step_zo_fused_prefetch`): after the update, the same
+/// sweep applies `θ += scale · z(seed)` — the NEXT step's perturbation —
+/// optionally capturing the draws seed-keyed into a rotating cache buffer.
+pub struct PrefetchSpec<'a> {
+    /// the next step's z seed
+    pub seed: u64,
+    /// the perturbation scale (the trainer passes +ε)
+    pub scale: f32,
+    /// where to record the next step's draws for its probe passes
+    pub capture: Option<&'a mut ZCache>,
 }
 
 /// Validate a gradient source against the arena length; returns the full
@@ -488,6 +722,33 @@ fn resolve_src(src: GradSource<'_>, n: usize) -> (Option<&[f32]>, u64) {
         GradSource::Exact(g) => {
             assert_eq!(g.data.len(), n, "gradient arena layout mismatch");
             (Some(&g.data), 0)
+        }
+    }
+}
+
+/// Dual-stream shard resolution: fill `zdest` with the next step's z and
+/// return this step's gradient basis — a slice of the source arena, or
+/// (Seeded source) z regenerated into `scratch`, in which case BOTH streams
+/// come out of one interleaved `fill_normal_at2` pass. The single place the
+/// four `update_shards*_dual` visit arms share their z/g resolution.
+fn dual_g<'a>(
+    g_all: Option<&'a [f32]>,
+    seed: u64,
+    next_seed: u64,
+    base: usize,
+    len: usize,
+    zdest: &mut [f32],
+    scratch: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    match g_all {
+        Some(all) => {
+            znorm::fill_normal_at(next_seed, base as u64, zdest);
+            &all[base..base + len]
+        }
+        None => {
+            scratch.resize(len, 0.0);
+            znorm::fill_normal_at2(seed, next_seed, base as u64, scratch, zdest);
+            scratch
         }
     }
 }
@@ -522,10 +783,19 @@ fn shard_g<'a>(
 /// optimizer update. `TrainConfig::cache_z` controls the trade. The cache
 /// holds the full draws of every active shard (zeros in inactive shards),
 /// bitwise identical to a regeneration from the same seed.
+///
+/// Caches are **seed-keyed**: the filling pass records the generating seed,
+/// and every consuming path checks it (a recoverable error in the step
+/// entrypoints, a debug assertion in the sweep kernels) — a stale buffer
+/// can no longer be silently trusted. The cross-step pipeline keeps a
+/// rotating *pair* of these: the current step's draws feed the probe
+/// passes while the fused sweep captures the next step's draws into the
+/// other buffer, then the two swap (`train::ZoProtocol`).
 #[derive(Clone, Debug, Default)]
 pub struct ZCache {
     data: Vec<f32>,
     filled: bool,
+    seed: u64,
 }
 
 impl ZCache {
@@ -542,19 +812,34 @@ impl ZCache {
         self.filled
     }
 
+    /// The seed whose draws this cache holds (meaningful only when
+    /// [`Self::is_filled`]).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
     /// Whether this cache holds draws for `params`' arena layout — callers
     /// of the `Cached` paths check this to return a recoverable error
     /// instead of tripping the layout asserts.
     pub fn matches(&self, params: &ParamSet) -> bool {
         self.filled && self.data.len() == params.data.len()
     }
+
+    /// [`Self::matches`] plus the seed key: the cache holds exactly the
+    /// draws `seed` would regenerate for this layout.
+    pub fn matches_seed(&self, params: &ParamSet, seed: u64) -> bool {
+        self.matches(params) && self.seed == seed
+    }
 }
 
 impl ParamSet {
-    /// `theta += scale * z(seed)`, storing the generated z into `cache`.
+    /// `theta += scale * z(seed)`, storing the generated z into `cache`
+    /// (seed-keyed).
     pub fn perturb_fill_cache(&mut self, cache: &mut ZCache, seed: u64, scale: f32) {
+        self.sweeps += 1;
         cache.data.resize(self.data.len(), 0.0);
         cache.filled = true;
+        cache.seed = seed;
         let spec = &self.spec;
         let mask = &self.train_mask;
         self.data
@@ -581,10 +866,20 @@ impl ParamSet {
             });
     }
 
-    /// `theta += scale * z` using the cached draws (identical values to a
-    /// regeneration from the same seed — verified by tests).
-    pub fn perturb_from_cache(&mut self, cache: &ZCache, scale: f32) {
+    /// `theta += scale * z(seed)` using the cached draws (identical values
+    /// to a regeneration from the same seed — verified by tests). `seed` is
+    /// the seed the caller *believes* the cache holds; a mismatch means a
+    /// stale or mis-rotated buffer and is rejected by a debug assertion
+    /// rather than silently trusted.
+    pub fn perturb_from_cache(&mut self, cache: &ZCache, seed: u64, scale: f32) {
+        self.sweeps += 1;
         assert_eq!(cache.data.len(), self.data.len(), "z-cache layout mismatch");
+        debug_assert!(
+            cache.filled && cache.seed == seed,
+            "stale z-cache: holds seed {} (filled: {}), step wants {seed}",
+            cache.seed,
+            cache.filled,
+        );
         let spec = &self.spec;
         let mask = &self.train_mask;
         self.data
@@ -840,9 +1135,164 @@ mod tests {
         b.perturb_trainable(77, 1e-3);
         assert_eq!(a.flat(), b.flat());
         assert!(cache.is_filled());
-        a.perturb_from_cache(&cache, -1e-3);
+        assert_eq!(cache.seed(), 77);
+        assert!(cache.matches_seed(&a, 77));
+        assert!(!cache.matches_seed(&a, 78));
+        a.perturb_from_cache(&cache, 77, -1e-3);
         b.perturb_trainable(77, -1e-3);
         assert_eq!(a.flat(), b.flat());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "stale z-cache")]
+    fn stale_cache_seed_is_rejected() {
+        let mut p = ParamSet::synthetic(&[128], 1.0);
+        let mut cache = ZCache::default();
+        p.perturb_fill_cache(&mut cache, 5, 1e-3);
+        // consuming with the wrong seed key must trip the debug assertion
+        p.perturb_from_cache(&cache, 6, -1e-3);
+    }
+
+    #[test]
+    fn dual_perturb_matches_two_sweeps() {
+        let mut one = ParamSet::synthetic(&[SHARD_SIZE + 9, 555], 0.25);
+        let mut two = one.clone();
+        one.perturb_trainable(31, 1e-3);
+        one.perturb_trainable(32, -1e-3);
+        two.perturb_trainable2(31, 1e-3, 32, -1e-3);
+        assert_eq!(one.flat(), two.flat());
+        assert_eq!(one.sweep_count(), 2);
+        assert_eq!(two.sweep_count(), 1);
+    }
+
+    #[test]
+    fn dual_update_matches_update_then_perturb() {
+        // one dual-stream sweep == update_shards + perturb_trainable, and
+        // the captured draws are bitwise what perturb_fill_cache records
+        let base = ParamSet::synthetic(&[SHARD_SIZE - 3, 2 * SHARD_SIZE + 40, 77], 0.5);
+        let scale = -0.01f32;
+        let eps = 1e-3f32;
+        let (seed, next_seed) = (91u64, 92u64);
+        for cached_src in [false, true] {
+            let mut src_cache = ZCache::default();
+            let start = if cached_src {
+                // fill the cache, then cancel the perturbation with the
+                // exact cached inverse — all replicas share this state
+                let mut s = base.clone();
+                s.perturb_fill_cache(&mut src_cache, seed, eps);
+                s.perturb_from_cache(&src_cache, seed, -eps);
+                s
+            } else {
+                base.clone()
+            };
+            let mut one = start.clone();
+            let mut two = start.clone();
+            let mut three = start.clone();
+            let mk_src = || {
+                if cached_src {
+                    GradSource::Cached(&src_cache)
+                } else {
+                    GradSource::Seeded(seed)
+                }
+            };
+            one.update_shards(mk_src(), |_seg, th, z| {
+                for (x, zv) in th.iter_mut().zip(z) {
+                    *x += scale * zv;
+                }
+            });
+            one.perturb_trainable(next_seed, eps);
+
+            let mut captured = ZCache::default();
+            two.update_shards_dual(mk_src(), next_seed, Some(&mut captured), |_seg, th, z, zn| {
+                for (x, zv) in th.iter_mut().zip(z) {
+                    *x += scale * zv;
+                }
+                for (x, zv) in th.iter_mut().zip(zn) {
+                    *x += eps * zv;
+                }
+            });
+            assert_eq!(one.flat(), two.flat(), "cached_src {cached_src}");
+            assert!(captured.matches_seed(&two, next_seed));
+
+            // the captured draws equal a perturb_fill_cache of next_seed
+            let mut refc = ZCache::default();
+            let mut scratch = base.clone();
+            scratch.perturb_fill_cache(&mut refc, next_seed, eps);
+            assert_eq!(refc.data, captured.data, "cached_src {cached_src}");
+
+            // and the no-capture flavour agrees bitwise
+            three.update_shards_dual(mk_src(), next_seed, None, |_seg, th, z, zn| {
+                for (x, zv) in th.iter_mut().zip(z) {
+                    *x += scale * zv;
+                }
+                for (x, zv) in th.iter_mut().zip(zn) {
+                    *x += eps * zv;
+                }
+            });
+            assert_eq!(one.flat(), three.flat(), "no-capture, cached_src {cached_src}");
+        }
+    }
+
+    #[test]
+    fn dual_update2_matches_update2_then_perturb() {
+        let base = ParamSet::synthetic(&[SHARD_SIZE / 2, SHARD_SIZE + 11], 1.0);
+        let (seed, next_seed, eps) = (7u64, 8u64, 1e-3f32);
+        let mut one = base.clone();
+        let mut m1 = one.zeros_like();
+        let mut v1 = one.full_like(0.5);
+        one.update_shards2(&mut m1, &mut v1, GradSource::Seeded(seed), |_seg, th, m, v, z| {
+            for j in 0..th.len() {
+                m[j] = 0.9 * m[j] + z[j];
+                v[j] = 0.99 * v[j] + z[j] * z[j];
+                th[j] -= 0.01 * m[j] / (v[j] + 1e-8);
+            }
+        });
+        one.perturb_trainable(next_seed, eps);
+
+        let mut two = base.clone();
+        let mut m2 = two.zeros_like();
+        let mut v2 = two.full_like(0.5);
+        let mut captured = ZCache::default();
+        two.update_shards2_dual(
+            &mut m2,
+            &mut v2,
+            GradSource::Seeded(seed),
+            next_seed,
+            Some(&mut captured),
+            |_seg, th, m, v, z, zn| {
+                for j in 0..th.len() {
+                    m[j] = 0.9 * m[j] + z[j];
+                    v[j] = 0.99 * v[j] + z[j] * z[j];
+                    th[j] -= 0.01 * m[j] / (v[j] + 1e-8);
+                }
+                for (x, zv) in th.iter_mut().zip(zn) {
+                    *x += eps * zv;
+                }
+            },
+        );
+        assert_eq!(one.flat(), two.flat());
+        assert_eq!(m1.flat(), m2.flat());
+        assert_eq!(v1.flat(), v2.flat());
+        assert!(captured.matches_seed(&two, next_seed));
+    }
+
+    #[test]
+    fn sweep_counter_counts_mutating_passes() {
+        let mut p = ParamSet::synthetic(&[1000], 1.0);
+        assert_eq!(p.sweep_count(), 0);
+        p.perturb_trainable(1, 1e-3);
+        let mut cache = ZCache::default();
+        p.perturb_fill_cache(&mut cache, 2, 1e-3);
+        p.perturb_from_cache(&cache, 2, -1e-3);
+        p.update_shards(GradSource::Seeded(3), |_s, _t, _z| {});
+        p.update_shards_dual(GradSource::Seeded(4), 5, None, |_s, _t, _z, _zn| {});
+        assert_eq!(p.sweep_count(), 5);
+        // clones inherit the odometer reading; reset is per-instance
+        let q = p.clone();
+        assert_eq!(q.sweep_count(), 5);
+        p.reset_sweep_count();
+        assert_eq!(p.sweep_count(), 0);
     }
 
     #[test]

@@ -30,7 +30,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
-use crate::model::params::{GradSource, ParamSet};
+use crate::model::params::{GradSource, ParamSet, PrefetchSpec};
 use crate::optim::anneal::Anneal;
 use crate::optim::clip::{lambda_per_array, ClipPolicy};
 use crate::optim::{Optimizer, StepKind};
@@ -186,13 +186,17 @@ impl Helene {
     /// `Seeded`/`Cached` z, 1.0 for `Exact` gradients. A non-zero
     /// `restore_eps` first applies `θ += restore_eps·z` inside the same
     /// shard visit — the fused SPSA restore (`step_zo_fused`), arithmetic
-    /// identical to a separate restore sweep.
+    /// identical to a separate restore sweep. A `prefetch` additionally
+    /// applies the NEXT step's `+scale·z(seed)` after the update in the
+    /// same sweep (`step_zo_fused_prefetch`) via the dual-stream kernel —
+    /// again per-element identical to a separate perturb sweep.
     fn apply(
         &mut self,
         params: &mut ParamSet,
         src: GradSource<'_>,
         g_scale: f32,
         restore_eps: f32,
+        prefetch: Option<PrefetchSpec<'_>>,
     ) -> Result<()> {
         let (m, h) = match (&mut self.m, &mut self.h) {
             (Some(m), Some(h)) => (m, h),
@@ -221,7 +225,11 @@ impl Helene {
         // mirrors the L1 fused Pallas kernel
         // (python/compile/kernels/helene_update.py); tests/fused_kernel.rs
         // checks the two agree through the compiled artifact.
-        params.update_shards2(m, h, src, |seg, th, m_arr, h_arr, basis| {
+        let kernel = |seg: &crate::model::params::ShardSeg,
+                      th: &mut [f32],
+                      m_arr: &mut [f32],
+                      h_arr: &mut [f32],
+                      basis: &[f32]| {
             let lam = lambda[seg.array];
             let mut seg_clipped = 0u64;
             if restore_eps != 0.0 {
@@ -257,7 +265,28 @@ impl Helene {
                 clipped.fetch_add(seg_clipped, Ordering::Relaxed);
                 total.fetch_add(th.len() as u64, Ordering::Relaxed);
             }
-        });
+        };
+        match prefetch {
+            None => params.update_shards2(m, h, src, kernel),
+            Some(p) => {
+                let ps = p.scale;
+                params.update_shards2_dual(
+                    m,
+                    h,
+                    src,
+                    p.seed,
+                    p.capture,
+                    |seg, th, m_arr, h_arr, basis, zn| {
+                        kernel(seg, &mut *th, &mut *m_arr, &mut *h_arr, basis);
+                        // cross-step prefetch: the next step's +εz, the same
+                        // per-element op as a standalone perturb sweep
+                        for (x, zv) in th.iter_mut().zip(zn) {
+                            *x += ps * zv;
+                        }
+                    },
+                )
+            }
+        }
 
         self.clipped_elems += clipped.into_inner();
         self.total_elems += total.into_inner();
@@ -295,7 +324,7 @@ impl Optimizer for Helene {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0)
+        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0, None)
     }
 
     fn step_zo_cached(
@@ -306,7 +335,7 @@ impl Optimizer for Helene {
         cache: &crate::model::params::ZCache,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, Some(cache))?;
-        self.apply(params, src, g_scale, 0.0)
+        self.apply(params, src, g_scale, 0.0, None)
     }
 
     fn step_zo_fused(
@@ -318,14 +347,29 @@ impl Optimizer for Helene {
         cache: Option<&crate::model::params::ZCache>,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
-        self.apply(params, src, g_scale, eps)
+        self.apply(params, src, g_scale, eps, None)
+    }
+
+    fn step_zo_fused_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
+        self.apply(params, src, g_scale, eps, Some(prefetch))
     }
 
     fn step_fo(&mut self, params: &mut ParamSet, grads: &ParamSet) -> Result<()> {
         if !self.fo {
             bail!("helene: FO step requires with_fo_hessian()");
         }
-        self.apply(params, GradSource::Exact(grads), 1.0, 0.0)
+        self.apply(params, GradSource::Exact(grads), 1.0, 0.0, None)
     }
 
     fn state_bytes(&self) -> usize {

@@ -7,9 +7,11 @@
 //! shard-parallel `ParamSet::update_shards*` kernels (stateless v2
 //! z-stream, DESIGN.md §Sharding). With `TrainConfig::fuse_restore` the
 //! restore pass is folded into the update (`step_zo_fused`) — same
-//! arithmetic, one fewer arena sweep. First-order baselines receive the
-//! exact gradient from the compiled `loss_grad` entrypoint through
-//! `step_fo`.
+//! arithmetic, one fewer arena sweep — and with
+//! `TrainConfig::prefetch_perturb` the NEXT step's `+εz` rides in the same
+//! sweep too (`step_zo_fused_prefetch`), taking the steady state to two
+//! arena sweeps per step. First-order baselines receive the exact gradient
+//! from the compiled `loss_grad` entrypoint through `step_fo`.
 //!
 //! | paper name      | type                        | module        |
 //! |-----------------|-----------------------------|---------------|
@@ -56,6 +58,13 @@ pub fn zo_grad_src<'a>(
             anyhow::ensure!(
                 c.matches(params),
                 "{name}: z-cache not filled for this parameter layout"
+            );
+            // seed-keyed staleness check: a mis-rotated or leftover buffer
+            // would silently feed the wrong step's z into the update
+            debug_assert!(
+                c.seed() == seed,
+                "{name}: stale z-cache (holds seed {}, step wants {seed})",
+                c.seed(),
             );
             Ok(GradSource::Cached(c))
         }
@@ -114,9 +123,9 @@ pub trait Optimizer {
     /// is exactly "restore then step", so the fused path is bitwise
     /// identical to the unfused one (property-tested); the win is one fewer
     /// full arena sweep. The default does restore-then-step in two sweeps
-    /// so every optimizer in the zoo keeps working; HELENE, ZO-SGD and
-    /// ZO-Adam override it with a single-sweep kernel. On error the restore
-    /// may be left unapplied — callers abort the run in that case.
+    /// so every optimizer in the zoo keeps working; HELENE, ZO-SGD, ZO-Adam
+    /// and ZO-Sophia override it with a single-sweep kernel. On error the
+    /// restore may be left unapplied — callers abort the run in that case.
     fn step_zo_fused(
         &mut self,
         params: &mut ParamSet,
@@ -127,7 +136,7 @@ pub trait Optimizer {
     ) -> Result<()> {
         match zo_grad_src(self.name(), params, seed, cache)? {
             GradSource::Cached(c) => {
-                params.perturb_from_cache(c, eps);
+                params.perturb_from_cache(c, seed, eps);
                 self.step_zo_cached(params, g_scale, seed, c)
             }
             _ => {
@@ -135,6 +144,38 @@ pub trait Optimizer {
                 self.step_zo(params, g_scale, seed)
             }
         }
+    }
+
+    /// Cross-step fused step (§Perf, prefetch protocol): everything
+    /// [`Self::step_zo_fused`] does *plus* the NEXT step's `+ε·z(next_seed)`
+    /// perturbation, leaving `θ_{k+1} + εz_{k+1}` so the following probe
+    /// pair needs no opening perturb sweep — the trainer's steady state
+    /// drops to two arena sweeps per step. `next_cache`, when given,
+    /// captures the next step's draws seed-keyed for its probe passes (the
+    /// rotating-buffer half of `TrainConfig::cache_z`). Per-element
+    /// arithmetic is exactly restore → update → perturb, so the pipeline
+    /// stays bitwise identical to the unfused protocol (property-tested).
+    /// This default runs `step_zo_fused` then a separate prefetch sweep —
+    /// correct for every optimizer in the zoo; HELENE, ZO-SGD, ZO-Adam and
+    /// ZO-Sophia override it with a single dual-stream sweep
+    /// (`ParamSet::update_shards*_dual`).
+    #[allow(clippy::too_many_arguments)]
+    fn step_zo_fused_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        self.step_zo_fused(params, g_scale, seed, eps, cache)?;
+        match next_cache {
+            Some(nc) => params.perturb_fill_cache(nc, next_seed, eps),
+            None => params.perturb_trainable(next_seed, eps),
+        }
+        Ok(())
     }
 
     /// First-order step from exact gradients.

@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, Result};
 
-use crate::model::params::{GradSource, ParamSet};
+use crate::model::params::{GradSource, ParamSet, PrefetchSpec};
 use crate::optim::{Optimizer, StepKind};
 use crate::util::rng::{mix64, Pcg64};
 
@@ -83,6 +83,94 @@ impl ZoSophia {
             self.clip_triggers as f64 / self.update_elems as f64
         }
     }
+
+    /// Shared shard-parallel update. `seed` drives the GNB label-noise
+    /// draw even when the z basis comes from the cache; a non-zero
+    /// `restore_eps` folds the SPSA `θ += εz` restore into the same sweep
+    /// (`step_zo_fused`), and a `prefetch` additionally applies the next
+    /// step's `+εz` after the update (`step_zo_fused_prefetch`) — both
+    /// per-element identical to the separate sweeps.
+    fn apply(
+        &mut self,
+        params: &mut ParamSet,
+        src: GradSource<'_>,
+        seed: u64,
+        g_scale: f32,
+        restore_eps: f32,
+        prefetch: Option<PrefetchSpec<'_>>,
+    ) -> Result<()> {
+        let (m, h) = match (&mut self.m, &mut self.h) {
+            (Some(m), Some(h)) => (m, h),
+            _ => return Err(anyhow!("init not called")),
+        };
+        self.t += 1;
+        let refresh_h = self.t % self.hessian_every_k.max(1) == 1 % self.hessian_every_k.max(1);
+        // GNB label-sampling noise: one multiplicative draw per refresh
+        // (sampled labels perturb the whole mini-batch estimate coherently)
+        let noise_u = if refresh_h && self.label_noise > 0.0 {
+            let mut nrng = Pcg64::new_stream(mix64(seed, 0x50F1A), 1);
+            (1.0 + self.label_noise * nrng.next_normal()).max(0.0)
+        } else {
+            1.0
+        };
+
+        let (lr, beta1, beta2, gamma, eps, rho) =
+            (self.lr, self.beta1, self.beta2, self.gamma, self.eps, self.rho);
+        let batch_size = self.batch_size;
+        let triggers = AtomicU64::new(0);
+        let elems = AtomicU64::new(0);
+        let kernel = |th: &mut [f32], m_arr: &mut [f32], h_arr: &mut [f32], z: &[f32]| {
+            if restore_eps != 0.0 {
+                // fused +εz restore: same per-element op as the standalone
+                // restore sweep, so the fused path stays bitwise identical
+                for (x, zv) in th.iter_mut().zip(z) {
+                    *x += restore_eps * zv;
+                }
+            }
+            let mut seg_triggers = 0u64;
+            for j in 0..th.len() {
+                let g = g_scale * z[j];
+                m_arr[j] = beta1 * m_arr[j] + (1.0 - beta1) * g;
+                if refresh_h {
+                    let h_hat = batch_size * (g * noise_u) * (g * noise_u);
+                    h_arr[j] = beta2 * h_arr[j] + (1.0 - beta2) * h_hat;
+                }
+                // Sophia update: clip(m / max(γ h, ε), ρ)
+                let raw = m_arr[j] / (gamma * h_arr[j]).max(eps);
+                let clipped = raw.clamp(-rho, rho);
+                if raw != clipped {
+                    seg_triggers += 1;
+                }
+                th[j] -= lr * clipped;
+            }
+            triggers.fetch_add(seg_triggers, Ordering::Relaxed);
+            elems.fetch_add(th.len() as u64, Ordering::Relaxed);
+        };
+        match prefetch {
+            None => params.update_shards2(m, h, src, |_seg, th, m_arr, h_arr, z| {
+                kernel(th, m_arr, h_arr, z)
+            }),
+            Some(p) => {
+                let ps = p.scale;
+                params.update_shards2_dual(
+                    m,
+                    h,
+                    src,
+                    p.seed,
+                    p.capture,
+                    |_seg, th, m_arr, h_arr, z, zn| {
+                        kernel(&mut *th, &mut *m_arr, &mut *h_arr, z);
+                        for (x, zv) in th.iter_mut().zip(zn) {
+                            *x += ps * zv;
+                        }
+                    },
+                )
+            }
+        }
+        self.clip_triggers += triggers.into_inner();
+        self.update_elems += elems.into_inner();
+        Ok(())
+    }
 }
 
 impl Optimizer for ZoSophia {
@@ -105,49 +193,45 @@ impl Optimizer for ZoSophia {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        let (m, h) = match (&mut self.m, &mut self.h) {
-            (Some(m), Some(h)) => (m, h),
-            _ => return Err(anyhow!("init not called")),
-        };
-        self.t += 1;
-        let refresh_h = self.t % self.hessian_every_k.max(1) == 1 % self.hessian_every_k.max(1);
-        // GNB label-sampling noise: one multiplicative draw per refresh
-        // (sampled labels perturb the whole mini-batch estimate coherently)
-        let noise_u = if refresh_h && self.label_noise > 0.0 {
-            let mut nrng = Pcg64::new_stream(mix64(seed, 0x50F1A), 1);
-            (1.0 + self.label_noise * nrng.next_normal()).max(0.0)
-        } else {
-            1.0
-        };
+        self.apply(params, GradSource::Seeded(seed), seed, g_scale, 0.0, None)
+    }
 
-        let (lr, beta1, beta2, gamma, eps, rho) =
-            (self.lr, self.beta1, self.beta2, self.gamma, self.eps, self.rho);
-        let batch_size = self.batch_size;
-        let triggers = AtomicU64::new(0);
-        let elems = AtomicU64::new(0);
-        params.update_shards2(m, h, GradSource::Seeded(seed), |_seg, th, m_arr, h_arr, z| {
-            let mut seg_triggers = 0u64;
-            for j in 0..th.len() {
-                let g = g_scale * z[j];
-                m_arr[j] = beta1 * m_arr[j] + (1.0 - beta1) * g;
-                if refresh_h {
-                    let h_hat = batch_size * (g * noise_u) * (g * noise_u);
-                    h_arr[j] = beta2 * h_arr[j] + (1.0 - beta2) * h_hat;
-                }
-                // Sophia update: clip(m / max(γ h, ε), ρ)
-                let raw = m_arr[j] / (gamma * h_arr[j]).max(eps);
-                let clipped = raw.clamp(-rho, rho);
-                if raw != clipped {
-                    seg_triggers += 1;
-                }
-                th[j] -= lr * clipped;
-            }
-            triggers.fetch_add(seg_triggers, Ordering::Relaxed);
-            elems.fetch_add(th.len() as u64, Ordering::Relaxed);
-        });
-        self.clip_triggers += triggers.into_inner();
-        self.update_elems += elems.into_inner();
-        Ok(())
+    fn step_zo_cached(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        cache: &crate::model::params::ZCache,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, Some(cache))?;
+        self.apply(params, src, seed, g_scale, 0.0, None)
+    }
+
+    fn step_zo_fused(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        self.apply(params, src, seed, g_scale, eps, None)
+    }
+
+    fn step_zo_fused_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
+        self.apply(params, src, seed, g_scale, eps, Some(prefetch))
     }
 
     fn state_bytes(&self) -> usize {
@@ -209,6 +293,62 @@ mod tests {
         let clean = run(0.0);
         let noisy = run(0.8);
         assert!(clean.max_abs_diff(&noisy) > 0.0);
+    }
+
+    #[test]
+    fn fused_step_matches_restore_then_step() {
+        // the new single-sweep fused kernel must be bitwise the default
+        // restore-then-step sequence, trigger telemetry included
+        let eps = 1e-3f32;
+        let mut a = toy_params(&[300, 100]);
+        let mut b = toy_params(&[300, 100]);
+        let mut oa = ZoSophia::new(1e-3);
+        let mut ob = ZoSophia::new(1e-3);
+        oa.init(&a);
+        ob.init(&b);
+        for s in 0..4 {
+            let seed = 50 + s;
+            // park both replicas at θ − εz (the owed-restore probe state)
+            for p in [&mut a, &mut b] {
+                p.perturb_trainable(seed, eps);
+                p.perturb_trainable(seed, -2.0 * eps);
+            }
+            // a: separate restore sweep, then the plain step
+            a.perturb_trainable(seed, eps);
+            oa.step_zo(&mut a, 0.4, seed).unwrap();
+            // b: fused restore+update sweep
+            ob.step_zo_fused(&mut b, 0.4, seed, eps, None).unwrap();
+        }
+        assert_eq!(a.flat(), b.flat());
+        assert_eq!(oa.clip_triggers, ob.clip_triggers);
+        assert_eq!(oa.update_elems, ob.update_elems);
+    }
+
+    #[test]
+    fn prefetch_step_matches_step_then_perturb() {
+        let eps = 1e-3f32;
+        let (seed, next_seed) = (9u64, 10u64);
+        let mut a = toy_params(&[128, 64]);
+        let mut b = a.clone();
+        let mut oa = ZoSophia::new(1e-3);
+        let mut ob = ZoSophia::new(1e-3);
+        oa.init(&a);
+        ob.init(&b);
+        for p in [&mut a, &mut b] {
+            p.perturb_trainable(seed, eps);
+            p.perturb_trainable(seed, -2.0 * eps);
+        }
+        oa.step_zo_fused(&mut a, 0.7, seed, eps, None).unwrap();
+        a.perturb_trainable(next_seed, eps);
+        let mut captured = crate::model::params::ZCache::default();
+        ob.step_zo_fused_prefetch(&mut b, 0.7, seed, next_seed, eps, None, Some(&mut captured))
+            .unwrap();
+        assert_eq!(a.flat(), b.flat());
+        assert!(captured.matches_seed(&b, next_seed));
+        // the captured draws drive the next probe pass exactly
+        b.perturb_from_cache(&captured, next_seed, -eps);
+        a.perturb_trainable(next_seed, -eps);
+        assert_eq!(a.flat(), b.flat());
     }
 
     #[test]

@@ -19,6 +19,13 @@
 //! per step with bit-identical arithmetic (§Perf, property-tested in
 //! `tests/shard_determinism.rs`).
 //!
+//! The `*_preperturbed` variants additionally assume θ **arrives at
+//! `θ + εz`** — perturbed by the previous step's fused prefetch sweep
+//! (`Optimizer::step_zo_fused_prefetch`) or by a prologue perturb — so the
+//! opening `+εz` sweep disappears too: one probe pair costs a single
+//! `−2εz` arena sweep, and the steady-state step is two sweeps total
+//! (`train::ZoProtocol`).
+//!
 //! The estimator is generic over the loss oracle so the same code drives
 //! the PJRT model runner, the 2-D toy problems, and the unit tests.
 
@@ -66,15 +73,15 @@ where
     let loss_plus = match loss_fn(params) {
         Ok(l) => l,
         Err(e) => {
-            params.perturb_from_cache(cache, -eps);
+            params.perturb_from_cache(cache, seed, -eps);
             return Err(e);
         }
     };
-    params.perturb_from_cache(cache, -2.0 * eps);
+    params.perturb_from_cache(cache, seed, -2.0 * eps);
     let loss_minus = match loss_fn(params) {
         Ok(l) => l,
         Err(e) => {
-            params.perturb_from_cache(cache, eps);
+            params.perturb_from_cache(cache, seed, eps);
             return Err(e);
         }
     };
@@ -101,8 +108,95 @@ where
     F: FnMut(&ParamSet) -> Result<f32>,
 {
     let est = estimate_cached_unrestored(params, cache, seed, eps, loss_fn)?;
-    params.perturb_from_cache(cache, eps);
+    params.perturb_from_cache(cache, seed, eps);
     Ok(est)
+}
+
+/// Probe pair for the cross-step prefetch protocol: `params` must arrive
+/// **already at `θ + εz(seed)`** (left there by the previous step's fused
+/// prefetch sweep, or by a prologue perturb at a run boundary). L⁺ is
+/// measured immediately, one `−2εz` sweep reaches the L⁻ point, and on
+/// success `params` is left at `θ − εz` with the `+εz` restore owed to the
+/// optimizer step — two probe losses for a single arena sweep. On error
+/// `params` is returned to the unperturbed θ (up to the usual f32 re-add
+/// drift) and the caller must abandon the pipeline.
+pub fn estimate_preperturbed<F>(
+    params: &mut ParamSet,
+    seed: u64,
+    eps: f32,
+    mut loss_fn: F,
+) -> Result<SpsaEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    debug_assert!(eps > 0.0);
+    let loss_plus = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            params.perturb_trainable(seed, -eps); // unwind the prefetch
+            return Err(e);
+        }
+    };
+    params.perturb_trainable(seed, -2.0 * eps);
+    let loss_minus = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            params.perturb_trainable(seed, eps);
+            return Err(e);
+        }
+    };
+    Ok(SpsaEstimate {
+        g_scale: (loss_plus - loss_minus) / (2.0 * eps),
+        seed,
+        loss_plus,
+        loss_minus,
+    })
+}
+
+/// Cached flavour of [`estimate_preperturbed`]: the draws of `seed` must
+/// already sit in `cache` — captured by the previous step's fused prefetch
+/// sweep or by the prologue `perturb_fill_cache`. The seed key is checked
+/// up front (a mis-rotated buffer is a recoverable error, caught before
+/// anything touches θ); the `−2εz` sweep then reuses the cached draws.
+pub fn estimate_cached_preperturbed<F>(
+    params: &mut ParamSet,
+    cache: &crate::model::params::ZCache,
+    seed: u64,
+    eps: f32,
+    mut loss_fn: F,
+) -> Result<SpsaEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    debug_assert!(eps > 0.0);
+    anyhow::ensure!(
+        cache.matches_seed(params, seed),
+        "z-cache does not hold the draws of seed {seed} for this layout \
+         (holds seed {}, filled: {})",
+        cache.seed(),
+        cache.is_filled(),
+    );
+    let loss_plus = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            params.perturb_from_cache(cache, seed, -eps);
+            return Err(e);
+        }
+    };
+    params.perturb_from_cache(cache, seed, -2.0 * eps);
+    let loss_minus = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            params.perturb_from_cache(cache, seed, eps);
+            return Err(e);
+        }
+    };
+    Ok(SpsaEstimate {
+        g_scale: (loss_plus - loss_minus) / (2.0 * eps),
+        seed,
+        loss_plus,
+        loss_minus,
+    })
 }
 
 /// Probe pair **without the restore pass** (seeded-regeneration flavour of
@@ -287,6 +381,70 @@ mod tests {
         let _ = estimate_cached(&mut p, &mut cache, 5, 1e-3, quad_loss).unwrap();
         assert_eq!(p.array(0), orig.array(0));
         assert!(p.max_abs_diff(&orig) < 1e-6); // restored overall
+    }
+
+    #[test]
+    fn preperturbed_matches_unrestored_probe_pair() {
+        // starting from θ + εz, the preperturbed pair produces the exact
+        // estimate of the classic pair and parks θ at the same −ε point
+        let eps = 1e-3f32;
+        let mut a = toy_params(&[100, 28]);
+        let mut b = toy_params(&[100, 28]);
+        let ea = estimate_unrestored(&mut a, 13, eps, quad_loss).unwrap();
+        b.perturb_trainable(13, eps); // the prologue / previous prefetch
+        let eb = estimate_preperturbed(&mut b, 13, eps, quad_loss).unwrap();
+        assert_eq!(ea.g_scale, eb.g_scale);
+        assert_eq!(ea.loss_plus, eb.loss_plus);
+        assert_eq!(ea.loss_minus, eb.loss_minus);
+        assert_eq!(a.flat(), b.flat());
+    }
+
+    #[test]
+    fn cached_preperturbed_matches_seeded_preperturbed() {
+        let eps = 1e-3f32;
+        let mut a = toy_params(&[64, 40]);
+        let mut b = a.clone();
+        a.perturb_trainable(21, eps);
+        let mut cache = crate::model::params::ZCache::default();
+        b.perturb_fill_cache(&mut cache, 21, eps);
+        assert_eq!(a.flat(), b.flat());
+        let ea = estimate_preperturbed(&mut a, 21, eps, quad_loss).unwrap();
+        let eb = estimate_cached_preperturbed(&mut b, &cache, 21, eps, quad_loss).unwrap();
+        assert_eq!(ea.g_scale, eb.g_scale);
+        assert_eq!(a.flat(), b.flat());
+    }
+
+    #[test]
+    fn cached_preperturbed_rejects_wrong_seed() {
+        let eps = 1e-3f32;
+        let mut p = toy_params(&[32]);
+        let mut cache = crate::model::params::ZCache::default();
+        p.perturb_fill_cache(&mut cache, 5, eps);
+        let before = p.clone();
+        // asking for seed 6 against a seed-5 cache is a recoverable error
+        // and must not touch θ
+        assert!(estimate_cached_preperturbed(&mut p, &cache, 6, eps, quad_loss).is_err());
+        assert_eq!(p.flat(), before.flat());
+    }
+
+    #[test]
+    fn preperturbed_failing_oracle_restores_params() {
+        let eps = 1e-3f32;
+        for fail_at in [1usize, 2] {
+            let mut p = toy_params(&[48]);
+            let orig = p.clone();
+            p.perturb_trainable(3, eps);
+            let mut calls = 0;
+            let r = estimate_preperturbed(&mut p, 3, eps, |_| {
+                calls += 1;
+                if calls == fail_at {
+                    anyhow::bail!("boom")
+                }
+                Ok(1.0)
+            });
+            assert!(r.is_err());
+            assert!(p.max_abs_diff(&orig) < 1e-6, "fail_at {fail_at}");
+        }
     }
 
     #[test]

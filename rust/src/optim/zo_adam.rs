@@ -5,7 +5,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::model::params::{GradSource, ParamSet};
+use crate::model::params::{GradSource, ParamSet, PrefetchSpec};
 use crate::optim::{Optimizer, StepKind};
 
 /// ZO-Adam (and AdamW with decoupled weight decay).
@@ -43,13 +43,16 @@ impl ZoAdam {
 
     /// Shared shard-parallel update; a non-zero `restore_eps` folds the
     /// SPSA `θ += εz` restore into the same sweep (`step_zo_fused`), with
-    /// per-element arithmetic identical to a separate restore pass.
+    /// per-element arithmetic identical to a separate restore pass; a
+    /// `prefetch` additionally applies the next step's `+εz` after the
+    /// update in the same sweep (`step_zo_fused_prefetch`).
     fn apply(
         &mut self,
         params: &mut ParamSet,
         src: GradSource<'_>,
         g_scale: f32,
         restore_eps: f32,
+        prefetch: Option<PrefetchSpec<'_>>,
     ) -> Result<()> {
         let (m, v) = match (&mut self.m, &mut self.v) {
             (Some(m), Some(v)) => (m, v),
@@ -60,7 +63,7 @@ impl ZoAdam {
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
         let (lr, beta1, beta2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
         let (decoupled, wd) = (self.decoupled, self.weight_decay);
-        params.update_shards2(m, v, src, |_seg, th, m_arr, v_arr, z| {
+        let kernel = |th: &mut [f32], m_arr: &mut [f32], v_arr: &mut [f32], z: &[f32]| {
             if restore_eps != 0.0 {
                 for (x, zv) in th.iter_mut().zip(z) {
                     *x += restore_eps * zv;
@@ -77,7 +80,28 @@ impl ZoAdam {
                 }
                 th[j] -= lr * m_hat / (v_hat.sqrt() + eps);
             }
-        });
+        };
+        match prefetch {
+            None => params.update_shards2(m, v, src, |_seg, th, m_arr, v_arr, z| {
+                kernel(th, m_arr, v_arr, z)
+            }),
+            Some(p) => {
+                let ps = p.scale;
+                params.update_shards2_dual(
+                    m,
+                    v,
+                    src,
+                    p.seed,
+                    p.capture,
+                    |_seg, th, m_arr, v_arr, z, zn| {
+                        kernel(&mut *th, &mut *m_arr, &mut *v_arr, z);
+                        for (x, zv) in th.iter_mut().zip(zn) {
+                            *x += ps * zv;
+                        }
+                    },
+                )
+            }
+        }
         Ok(())
     }
 }
@@ -102,7 +126,18 @@ impl Optimizer for ZoAdam {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0)
+        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0, None)
+    }
+
+    fn step_zo_cached(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        cache: &crate::model::params::ZCache,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, Some(cache))?;
+        self.apply(params, src, g_scale, 0.0, None)
     }
 
     fn step_zo_fused(
@@ -114,7 +149,22 @@ impl Optimizer for ZoAdam {
         cache: Option<&crate::model::params::ZCache>,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
-        self.apply(params, src, g_scale, eps)
+        self.apply(params, src, g_scale, eps, None)
+    }
+
+    fn step_zo_fused_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
+        self.apply(params, src, g_scale, eps, Some(prefetch))
     }
 
     fn state_bytes(&self) -> usize {

@@ -65,13 +65,13 @@ impl Optimizer for ZoSgd {
         &mut self,
         params: &mut ParamSet,
         g_scale: f32,
-        _seed: u64,
+        seed: u64,
         cache: &crate::model::params::ZCache,
     ) -> Result<()> {
         if !cache.matches(params) {
             bail!("zo-sgd: z-cache not filled for this parameter layout");
         }
-        params.perturb_from_cache(cache, -self.lr * g_scale);
+        params.perturb_from_cache(cache, seed, -self.lr * g_scale);
         Ok(())
     }
 
@@ -91,6 +91,33 @@ impl Optimizer for ZoSgd {
             for (x, zv) in th.iter_mut().zip(z) {
                 *x += eps * zv;
                 *x += scale * zv;
+            }
+        });
+        Ok(())
+    }
+
+    fn step_zo_fused_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        // single dual-stream sweep: restore + MeZO update on z_k, then the
+        // next step's +εz on z_{k+1} — per-element identical to the three
+        // separate sweeps
+        let scale = -self.lr * g_scale;
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        params.update_shards_dual(src, next_seed, next_cache, |_seg, th, z, zn| {
+            for (x, zv) in th.iter_mut().zip(z) {
+                *x += eps * zv;
+                *x += scale * zv;
+            }
+            for (x, zv) in th.iter_mut().zip(zn) {
+                *x += eps * zv;
             }
         });
         Ok(())

@@ -3,8 +3,12 @@
 //!
 //! Per step the trainer dispatches on `Optimizer::kind()`:
 //!
-//! * `Zo` — MeZO protocol: SPSA probe pair through the compiled `loss`
-//!   entrypoint (Pallas graph), then `step_zo(g_scale, seed)`.
+//! * `Zo` — MeZO protocol driven by [`ZoProtocol`]: SPSA probe pair
+//!   through the compiled `loss` entrypoint (Pallas graph), then the
+//!   optimizer update. Under the default `(prefetch_perturb, fuse_restore,
+//!   cache_z)` the steady-state step is the two-sweep cross-step pipeline
+//!   (§Perf); eval points are scheduled as pipeline boundaries so they see
+//!   pristine θ, bitwise identical to the classic protocol.
 //! * `Fo` — one `loss_grad` execution, then `step_fo(grads)`.
 //! * `ForwardGrad` — seeded tangent, one `loss_jvp` execution, then
 //!   `step_zo(jvp, seed)` (the update regenerates the same tangent).
@@ -52,6 +56,15 @@ pub struct TrainConfig {
     /// (`Optimizer::step_zo_fused`): one fewer full arena sweep per step
     /// with bit-identical arithmetic (§Perf)
     pub fuse_restore: bool,
+    /// cross-step perturb fusion (§Perf, requires `fuse_restore`): the
+    /// fused update sweep also applies the NEXT step's `+εz`
+    /// (`Optimizer::step_zo_fused_prefetch`), so the steady-state step is
+    /// `[fused sweep] → L⁺ → [−2εz sweep] → L⁻` — exactly two arena
+    /// sweeps — with prologue/epilogue sweeps only at run boundaries and
+    /// eval points (which need unperturbed θ). Bit-identical to the
+    /// unfused protocol; composes with `cache_z` via a rotating seed-keyed
+    /// cache pair. Ignored for optimizers that want a post-step check.
+    pub prefetch_perturb: bool,
     /// learning-rate schedule applied multiplicatively to the optimizer lr
     pub lr_schedule: Option<schedule::LrSchedule>,
 }
@@ -70,6 +83,7 @@ impl Default for TrainConfig {
             metric: Metric::Accuracy,
             cache_z: true,
             fuse_restore: true,
+            prefetch_perturb: true,
             lr_schedule: None,
         }
     }
@@ -89,9 +103,8 @@ pub struct TrainReport {
 }
 
 /// One ZO probe pair under the configured `(fuse_restore, cache_z)`
-/// strategy. With `fuse_restore` the `+εz` restore is left owed to
-/// [`zo_step`]. Shared by [`Trainer::run_with_params`] and [`run_lm`] so
-/// the dispatch cannot drift between the two loops.
+/// strategy — the classic (non-prefetch) path of [`ZoProtocol`]. With
+/// `fuse_restore` the `+εz` restore is left owed to [`zo_step`].
 fn zo_estimate<F>(
     cfg: &TrainConfig,
     params: &mut ParamSet,
@@ -128,6 +141,207 @@ fn zo_step(
         opt.step_zo_cached(params, est.g_scale, est.seed, zcache)
     } else {
         opt.step_zo(params, est.g_scale, est.seed)
+    }
+}
+
+/// The per-step ZO protocol driver: owns the state the §Perf cross-step
+/// pipeline threads between steps — the rotating pair of seed-keyed
+/// z-caches and the pending `+εz` perturbation — and dispatches every step
+/// according to `(prefetch_perturb, fuse_restore, cache_z)`. Both training
+/// loops ([`Trainer::run_with_params`] and [`run_lm`]) and the pipeline
+/// property tests drive this exact state machine, so the dispatch cannot
+/// drift between them.
+///
+/// In prefetch mode the steady-state invariant is: θ enters [`Self::step`]
+/// at `θ_k + εz_k` (applied by the previous step's fused sweep), and the
+/// step runs `L⁺ → [−2εz_k sweep] → L⁻ → [fused restore+update+(+εz_{k+1})
+/// sweep]` — two arena sweeps. A step flagged as a `boundary` (eval point,
+/// final step, or anything else that needs pristine θ afterwards) skips the
+/// prefetch and leaves unperturbed θ, bitwise identical to the classic
+/// protocol's post-step state; the following step re-perturbs in its
+/// prologue. Mutating `params`' train mask mid-run is only sound at such a
+/// boundary (a pending perturbation could otherwise not be restored for
+/// newly frozen segments).
+pub struct ZoProtocol<'a> {
+    cfg: &'a TrainConfig,
+    /// draws of the current step's seed (`cache_z`)
+    cur: crate::model::params::ZCache,
+    /// capture buffer for the next step's draws; swapped with `cur` after
+    /// every prefetching step
+    next: crate::model::params::ZCache,
+    /// seed whose `+εz` perturbation θ currently carries
+    pending: Option<u64>,
+}
+
+impl<'a> ZoProtocol<'a> {
+    pub fn new(cfg: &'a TrainConfig) -> Self {
+        Self {
+            cfg,
+            cur: crate::model::params::ZCache::default(),
+            next: crate::model::params::ZCache::default(),
+            pending: None,
+        }
+    }
+
+    /// Whether the cross-step pipeline is active for this optimizer.
+    /// Post-check optimizers (ZO-SGD-Cons) evaluate the loss at the
+    /// freshly updated θ every step, so every step would be a boundary —
+    /// they run the classic fused/unfused protocol instead.
+    fn prefetching(&self, opt: &dyn Optimizer) -> bool {
+        self.cfg.prefetch_perturb && self.cfg.fuse_restore && !opt.wants_post_check()
+    }
+
+    /// The seed of the prefetched perturbation θ currently carries, if any
+    /// (None ⟺ θ is pristine).
+    pub fn pending(&self) -> Option<u64> {
+        self.pending
+    }
+
+    /// One full ZO step: probe pair plus optimizer update. `step_seed` /
+    /// `next_seed` are this and the next step's z seeds; `boundary` must be
+    /// true when pristine θ is needed after this step.
+    pub fn step<F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        loss_fn: F,
+    ) -> Result<spsa::SpsaEstimate>
+    where
+        F: FnMut(&ParamSet) -> Result<f32>,
+    {
+        self.step_inner(opt, params, step_seed, next_seed, boundary, None, loss_fn)
+    }
+
+    /// [`Self::step`] with the probe-pair and update times recorded under
+    /// the `spsa_probes` / `optimizer_step` buckets.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_timed<F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        timing: &mut TimingBreakdown,
+        loss_fn: F,
+    ) -> Result<spsa::SpsaEstimate>
+    where
+        F: FnMut(&ParamSet) -> Result<f32>,
+    {
+        self.step_inner(opt, params, step_seed, next_seed, boundary, Some(timing), loss_fn)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step_inner<F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        mut timing: Option<&mut TimingBreakdown>,
+        loss_fn: F,
+    ) -> Result<spsa::SpsaEstimate>
+    where
+        F: FnMut(&ParamSet) -> Result<f32>,
+    {
+        let cfg = self.cfg;
+        if !self.prefetching(opt) {
+            let t = Timer::start();
+            let est = zo_estimate(cfg, params, &mut self.cur, step_seed, loss_fn)?;
+            if let Some(tm) = timing.as_deref_mut() {
+                tm.add("spsa_probes", t.seconds());
+            }
+            let t = Timer::start();
+            zo_step(cfg, opt, params, &self.cur, &est)?;
+            if let Some(tm) = timing {
+                tm.add("optimizer_step", t.seconds());
+            }
+            return Ok(est);
+        }
+
+        // prologue: at a run boundary θ arrives pristine — apply this
+        // step's +εz here. In the steady state θ arrives pre-perturbed by
+        // the previous step's fused sweep and no sweep is spent.
+        match self.pending {
+            // hard error, not a debug assert: accepting a drifted seed
+            // would subtract −2εz(step_seed) from a θ that carries
+            // +εz(other) and silently corrupt every following step. The
+            // check runs BEFORE clearing `pending` so an erroring caller
+            // can still unwind the perturbation via [`Self::finish`];
+            // past it, any later error path (the estimators) restores
+            // pristine θ itself, so clearing is correct.
+            Some(s) => {
+                anyhow::ensure!(
+                    s == step_seed,
+                    "prefetch pipeline seed drift: θ carries +εz of seed {s}, step wants {step_seed}"
+                );
+                self.pending = None;
+            }
+            None => {
+                if cfg.cache_z {
+                    params.perturb_fill_cache(&mut self.cur, step_seed, cfg.spsa_eps);
+                } else {
+                    params.perturb_trainable(step_seed, cfg.spsa_eps);
+                }
+            }
+        }
+
+        let t = Timer::start();
+        let est = if cfg.cache_z {
+            spsa::estimate_cached_preperturbed(params, &self.cur, step_seed, cfg.spsa_eps, loss_fn)?
+        } else {
+            spsa::estimate_preperturbed(params, step_seed, cfg.spsa_eps, loss_fn)?
+        };
+        if let Some(tm) = timing.as_deref_mut() {
+            tm.add("spsa_probes", t.seconds());
+        }
+
+        let t = Timer::start();
+        let cache = if cfg.cache_z { Some(&self.cur) } else { None };
+        if boundary {
+            // epilogue: restore+update only — pristine θ for the eval /
+            // run end; the next step (if any) re-perturbs in its prologue
+            opt.step_zo_fused(params, est.g_scale, est.seed, cfg.spsa_eps, cache)?;
+        } else {
+            let capture = if cfg.cache_z { Some(&mut self.next) } else { None };
+            opt.step_zo_fused_prefetch(
+                params,
+                est.g_scale,
+                est.seed,
+                next_seed,
+                cfg.spsa_eps,
+                cache,
+                capture,
+            )?;
+            if cfg.cache_z {
+                std::mem::swap(&mut self.cur, &mut self.next);
+            }
+            self.pending = Some(next_seed);
+        }
+        if let Some(tm) = timing {
+            tm.add("optimizer_step", t.seconds());
+        }
+        Ok(est)
+    }
+
+    /// Tear down a pipeline cut short mid-flight (e.g. a wall-clock cap):
+    /// removes a pending `+εz` so callers see unperturbed θ. Re-adding
+    /// `−εz` costs one rounding per element — the same ulp drift bound as
+    /// the classic restore. Planned exits never need this: eval points and
+    /// the final step are scheduled as boundaries and leave θ pristine
+    /// bitwise.
+    pub fn finish(&mut self, params: &mut ParamSet) {
+        if let Some(seed) = self.pending.take() {
+            if self.cur.matches_seed(params, seed) {
+                params.perturb_from_cache(&self.cur, seed, -self.cfg.spsa_eps);
+            } else {
+                params.perturb_trainable(seed, -self.cfg.spsa_eps);
+            }
+        }
     }
 }
 
@@ -169,7 +383,7 @@ impl Trainer {
 
         let dims = &runner.spec.dims;
         let mut batcher = Batcher::new(&data.train, dims.batch, dims.max_seq, cfg.seed, true);
-        let mut zcache = crate::model::params::ZCache::default();
+        let mut proto = ZoProtocol::new(cfg);
         let mut history = History::default();
         let mut timing = TimingBreakdown::default();
         let run_timer = Timer::start();
@@ -180,24 +394,21 @@ impl Trainer {
         for step in 1..=cfg.steps {
             let batch = batcher.next_batch();
             let step_seed = mix64(cfg.seed, step as u64);
+            let next_seed = mix64(cfg.seed, step as u64 + 1);
+            // eval points need pristine θ: the protocol schedules them as
+            // pipeline boundaries (epilogue before, prologue after)
+            let eval_point = step % cfg.eval_every == 0 || step == cfg.steps;
             if let Some(sched) = &cfg.lr_schedule {
                 opt.set_lr(base_lr * sched.factor(step));
             }
 
             let loss = match opt.kind() {
                 StepKind::Zo => {
-                    // probe pair; with fuse_restore the +εz restore is owed
-                    // to the optimizer step instead of swept separately
-                    let t = Timer::start();
-                    let est = zo_estimate(cfg, params, &mut zcache, step_seed, |p| {
-                        runner.loss(p, &batch)
-                    })
-                    .context("SPSA estimate")?;
-                    timing.add("spsa_probes", t.seconds());
-
-                    let t = Timer::start();
-                    zo_step(cfg, opt, params, &zcache, &est)?;
-                    timing.add("optimizer_step", t.seconds());
+                    let est = proto
+                        .step_timed(opt, params, step_seed, next_seed, eval_point, &mut timing, |p| {
+                            runner.loss(p, &batch)
+                        })
+                        .context("ZO step (probe pair + update)")?;
 
                     if opt.wants_post_check() {
                         let t = Timer::start();
@@ -231,7 +442,7 @@ impl Trainer {
             };
 
             let mut dev_metric = None;
-            if step % cfg.eval_every == 0 || step == cfg.steps {
+            if eval_point {
                 let t = Timer::start();
                 let n = cfg.eval_examples.min(data.dev.len());
                 let m = self.eval_metric(runner, params, &data.dev[..n], data.n_classes)?;
@@ -260,6 +471,8 @@ impl Trainer {
                 }
             }
         }
+        // an unplanned break (wall-clock cap) may leave a prefetched +εz
+        proto.finish(params);
 
         let t = Timer::start();
         let test_metric =
@@ -312,7 +525,7 @@ pub fn run_lm(
     let mut params = runner.load_init_params()?;
     opt.configure_batch(dims.batch);
     opt.init(&params);
-    let mut zcache = crate::model::params::ZCache::default();
+    let mut proto = ZoProtocol::new(cfg);
     let mut history = History::default();
     let timer = Timer::start();
     for (step, tokens) in batches.iter().enumerate().map(|(i, b)| (i + 1, b)) {
@@ -323,12 +536,13 @@ pub fn run_lm(
             seq: dims.max_seq,
         };
         let step_seed = mix64(cfg.seed, step as u64);
+        let next_seed = mix64(cfg.seed, step as u64 + 1);
+        let boundary = step == batches.len(); // final θ must be pristine
         let loss = match opt.kind() {
             StepKind::Zo => {
-                let est = zo_estimate(cfg, &mut params, &mut zcache, step_seed, |p| {
+                let est = proto.step(opt, &mut params, step_seed, next_seed, boundary, |p| {
                     runner.loss(p, &batch)
                 })?;
-                zo_step(cfg, opt, &mut params, &zcache, &est)?;
                 est.loss()
             }
             StepKind::Fo => {
@@ -351,6 +565,7 @@ pub fn run_lm(
             }
         }
     }
+    proto.finish(&mut params);
     Ok(history)
 }
 
@@ -363,8 +578,45 @@ mod tests {
         let c = TrainConfig::default();
         assert!(c.steps > 0);
         assert!(c.spsa_eps > 0.0);
-        // §Perf defaults: z-cache on, restore folded into the update sweep
-        assert!(c.cache_z && c.fuse_restore);
+        // §Perf defaults: z-cache on, restore folded into the update
+        // sweep, next-step perturb prefetched in the same sweep
+        assert!(c.cache_z && c.fuse_restore && c.prefetch_perturb);
         assert_eq!(c.metric, Metric::Accuracy);
+    }
+
+    #[test]
+    fn protocol_steady_state_runs_two_sweeps_and_boundaries_are_pristine() {
+        use crate::model::params::ParamSet;
+        use crate::optim::helene::Helene;
+        use crate::util::rng::mix64;
+
+        let quad = |p: &ParamSet| Ok(p.flat().iter().map(|x| x * x).sum::<f32>());
+        for cache_z in [true, false] {
+            let cfg = TrainConfig { cache_z, ..Default::default() };
+            let mut proto = ZoProtocol::new(&cfg);
+            let mut params = ParamSet::synthetic(&[4000, 2000], 0.5);
+            let mut opt = Helene::paper_defaults().with_lr(1e-3);
+            opt.init(&params);
+            for step in 1..=5u64 {
+                let boundary = step == 3 || step == 5;
+                let before = params.sweep_count();
+                proto
+                    .step(
+                        &mut opt,
+                        &mut params,
+                        mix64(0, step),
+                        mix64(0, step + 1),
+                        boundary,
+                        quad,
+                    )
+                    .unwrap();
+                let sweeps = params.sweep_count() - before;
+                // steady state: −2ε probe + fused dual sweep = 2; a step
+                // entered from a boundary pays one prologue perturb more
+                let expect = if step == 1 || step == 4 { 3 } else { 2 };
+                assert_eq!(sweeps, expect, "step {step} (cache_z {cache_z})");
+                assert_eq!(proto.pending().is_none(), boundary, "step {step}");
+            }
+        }
     }
 }

@@ -190,6 +190,58 @@ pub fn fill_normal_at(seed: u64, start: u64, out: &mut [f32]) {
     }
 }
 
+/// Dual-seed bulk kernel: `a[i] = z_{seed_a}[start + i]` and
+/// `b[i] = z_{seed_b}[start + i]` in one pass — the generation primitive of
+/// the cross-step fused pipeline, where one sweep needs both the current
+/// step's z (restore + gradient basis) and the next step's z (prefetch
+/// perturbation). Both streams are hashed and evaluated inside the same
+/// [`BLOCK`]-wide chunk, so the two independent mix64+Φ⁻¹ chains interleave
+/// and the loop/branch overhead is paid once instead of twice. Per-element
+/// arithmetic is untouched: each output is **bitwise identical** to what
+/// two separate [`fill_normal_at`] calls produce (property the dual-stream
+/// kernel tests pin).
+pub fn fill_normal_at2(seed_a: u64, seed_b: u64, start: u64, a: &mut [f32], b: &mut [f32]) {
+    assert_eq!(a.len(), b.len(), "dual-stream fill length mismatch");
+    let mut base = start;
+    let mut ca = a.chunks_exact_mut(BLOCK);
+    let mut cb = b.chunks_exact_mut(BLOCK);
+    for (chunk_a, chunk_b) in (&mut ca).zip(&mut cb) {
+        let mut x = [0f64; 2 * BLOCK];
+        let mut w = [0f64; 2 * BLOCK];
+        for l in 0..BLOCK {
+            let (xl, wl) = draw_xw(zbits(seed_a, base + l as u64));
+            x[l] = xl;
+            w[l] = wl;
+            let (xl, wl) = draw_xw(zbits(seed_b, base + l as u64));
+            x[BLOCK + l] = xl;
+            w[BLOCK + l] = wl;
+        }
+        let mut any_tail = false;
+        for l in 0..BLOCK {
+            chunk_a[l] = z_central(w[l], x[l]);
+            chunk_b[l] = z_central(w[BLOCK + l], x[BLOCK + l]);
+            any_tail |= w[l] >= W_SPLIT || w[BLOCK + l] >= W_SPLIT;
+        }
+        if any_tail {
+            for l in 0..2 * BLOCK {
+                if w[l] >= W_SPLIT {
+                    let v = z_tail(w[l], x[l]);
+                    if l < BLOCK {
+                        chunk_a[l] = v;
+                    } else {
+                        chunk_b[l - BLOCK] = v;
+                    }
+                }
+            }
+        }
+        base += BLOCK as u64;
+    }
+    for (i, (va, vb)) in ca.into_remainder().iter_mut().zip(cb.into_remainder()).enumerate() {
+        *va = normal_at(seed_a, base + i as u64);
+        *vb = normal_at(seed_b, base + i as u64);
+    }
+}
+
 /// Fused generate+AXPY: `out[i] += scale · z[start + i]`. The z values are
 /// the same bitwise as [`fill_normal_at`]'s; generation runs through an
 /// L1-resident staging buffer so the AXPY pass never touches DRAM twice.
@@ -203,6 +255,38 @@ pub fn axpy_normal_at(seed: u64, start: u64, scale: f32, out: &mut [f32]) {
         fill_normal_at(seed, base, &mut buf[..n]);
         for (x, z) in head.iter_mut().zip(&buf[..n]) {
             *x += scale * z;
+        }
+        base += n as u64;
+        rest = tail;
+    }
+}
+
+/// Dual-seed fused generate+AXPY: `out[i] += scale_a · z_{seed_a}[start+i]`
+/// followed by `out[i] += scale_b · z_{seed_b}[start+i]` — **two separate
+/// adds per element**, so the result is bitwise identical to two sequential
+/// [`axpy_normal_at`] sweeps, while both streams come out of one
+/// [`fill_normal_at2`] pass through an L1-resident staging pair and `out`
+/// crosses memory once instead of twice. This is the one-sweep form of a
+/// restore+re-perturb (or unperturb+reperturb) pair with distinct seeds.
+pub fn axpy2_normal_at(
+    seed_a: u64,
+    seed_b: u64,
+    start: u64,
+    scale_a: f32,
+    scale_b: f32,
+    out: &mut [f32],
+) {
+    let mut buf_a = [0f32; 256];
+    let mut buf_b = [0f32; 256];
+    let mut base = start;
+    let mut rest = out;
+    while !rest.is_empty() {
+        let n = rest.len().min(256);
+        let (head, tail) = rest.split_at_mut(n);
+        fill_normal_at2(seed_a, seed_b, base, &mut buf_a[..n], &mut buf_b[..n]);
+        for (x, (za, zb)) in head.iter_mut().zip(buf_a[..n].iter().zip(&buf_b[..n])) {
+            *x += scale_a * za;
+            *x += scale_b * zb;
         }
         base += n as u64;
         rest = tail;
@@ -281,6 +365,57 @@ mod tests {
         axpy_normal_at(5, 123, 0.25, &mut acc);
         for j in 0..777 {
             assert_eq!(acc[j], 1.5 + 0.25 * z[j], "element {j}");
+        }
+    }
+
+    #[test]
+    fn dual_fill_bitwise_matches_two_single_fills() {
+        // fill_normal_at2 interleaves generation but must not change a
+        // single bit of either stream, at any (mis)alignment or length
+        for &(start, len) in &[(0u64, 333usize), (1_000_003, 256), (77, 7), (5, 16)] {
+            let mut a1 = vec![0f32; len];
+            let mut b1 = vec![0f32; len];
+            fill_normal_at(11, start, &mut a1);
+            fill_normal_at(22, start, &mut b1);
+            let mut a2 = vec![0f32; len];
+            let mut b2 = vec![0f32; len];
+            fill_normal_at2(11, 22, start, &mut a2, &mut b2);
+            for j in 0..len {
+                assert_eq!(a1[j].to_bits(), a2[j].to_bits(), "stream a at {j} (start {start})");
+                assert_eq!(b1[j].to_bits(), b2[j].to_bits(), "stream b at {j} (start {start})");
+            }
+        }
+    }
+
+    #[test]
+    fn dual_fill_exercises_tail_lanes() {
+        // large enough that both streams hit the tail branch; the dual
+        // kernel's per-block tail patch must agree with the single kernel's
+        let n = 500_000usize;
+        let mut a1 = vec![0f32; n];
+        let mut b1 = vec![0f32; n];
+        fill_normal_at(3, 0, &mut a1);
+        fill_normal_at(4, 0, &mut b1);
+        assert!(a1.iter().any(|&x| x.abs() > 3.5));
+        assert!(b1.iter().any(|&x| x.abs() > 3.5));
+        let mut a2 = vec![0f32; n];
+        let mut b2 = vec![0f32; n];
+        fill_normal_at2(3, 4, 0, &mut a2, &mut b2);
+        assert!(a1.iter().zip(&a2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(b1.iter().zip(&b2).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn axpy2_matches_two_sequential_axpys() {
+        // the dual AXPY applies two separate adds per element, so it is
+        // bitwise the two-sweep composition (order matters in f32: a-then-b)
+        let mut one = vec![0.75f32; 700];
+        axpy_normal_at(11, 400, 0.5, &mut one);
+        axpy_normal_at(22, 400, -0.25, &mut one);
+        let mut two = vec![0.75f32; 700];
+        axpy2_normal_at(11, 22, 400, 0.5, -0.25, &mut two);
+        for j in 0..700 {
+            assert_eq!(one[j].to_bits(), two[j].to_bits(), "element {j}");
         }
     }
 

@@ -4,8 +4,11 @@
 //! function of `(seed, flat-position)` — never of scheduling, shard
 //! partitioning, or the train mask — so any operation must be **bitwise
 //! identical** across rayon pool sizes, the MeZO perturb/restore identity
-//! must hold on multi-shard arenas, and the fused restore+update path must
-//! be bitwise equal to the unfused restore-then-step sequence.
+//! must hold on multi-shard arenas, the fused restore+update path must be
+//! bitwise equal to the unfused restore-then-step sequence, and the
+//! cross-step prefetch pipeline (§Perf, `train::ZoProtocol`) must be
+//! bitwise equal to the naive 4-sweep reference — parameters *and* losses,
+//! through eval boundaries and mid-run mask changes, at any thread count.
 
 use helene::model::params::{ParamSet, ZCache, SHARD_SIZE};
 use helene::optim::helene::Helene;
@@ -13,7 +16,9 @@ use helene::optim::sophia::ZoSophia;
 use helene::optim::zo_adam::ZoAdam;
 use helene::optim::zo_sgd::{ZoSgd, ZoSgdMomentum};
 use helene::optim::{spsa, Optimizer};
+use helene::train::{TrainConfig, ZoProtocol};
 use helene::util::prop::{forall, Gen};
+use helene::util::rng::mix64;
 
 /// Run `f` inside a dedicated rayon pool of `threads` workers.
 fn with_pool<T: Send>(threads: usize, f: impl FnOnce() -> T + Send) -> T {
@@ -133,20 +138,21 @@ fn prop_zcache_path_bitwise_matches_regeneration() {
 fn prop_fused_step_bitwise_matches_unfused() {
     // θ after (unrestored probes + step_zo_fused) must equal θ after
     // (restored probes + step_zo) bit-for-bit: the fusion only merges
-    // sweeps, never changes per-element arithmetic. Covers the three
+    // sweeps, never changes per-element arithmetic. Covers the four
     // specialized optimizers and one default-impl optimizer, with the
     // z-cache both on and off.
     forall("fused-vs-unfused", |g| {
         let base = gen_multi_shard(g);
         let seed = g.u64();
         let eps = g.f32_in(1e-5, 1e-2);
-        let which = g.usize_in(0, 4);
+        let which = g.usize_in(0, 5);
         let cached = g.bool();
         let mk = |w: usize| -> Box<dyn Optimizer> {
             match w {
                 0 => Box::new(Helene::paper_defaults().with_lr(1e-3)),
                 1 => Box::new(ZoAdam::new(1e-3, true)),
                 2 => Box::new(ZoSgd::new(1e-3)),
+                3 => Box::new(ZoSophia::new(1e-3)),
                 _ => Box::new(ZoSgdMomentum::new(1e-3, 0.9)), // default-impl path
             }
         };
@@ -241,6 +247,174 @@ fn freezing_one_shard_leaves_other_shards_draws_unchanged() {
     partial.perturb_trainable(5, 0.1);
     assert_eq!(all.array(1), partial.array(1), "shard 1 draws shifted");
     assert!(partial.array(0).iter().all(|&x| x == 1.0), "frozen shard moved");
+}
+
+// ---------------------------------------------------------------------------
+// Cross-step prefetch pipeline (§Perf): two sweeps per steady-state step,
+// bitwise identical to the naive 4-sweep reference.
+
+/// The quadratic oracle the pipeline properties probe (minimum away from
+/// the arena values so gradients are non-trivial).
+fn pipe_loss(q: &ParamSet) -> anyhow::Result<f32> {
+    Ok(q.flat().iter().map(|x| (x - 0.3) * (x - 0.3)).sum::<f32>())
+}
+
+fn pipe_opt(which: usize) -> Box<dyn Optimizer> {
+    match which {
+        0 => Box::new(Helene::paper_defaults().with_lr(1e-3)),
+        1 => Box::new(ZoAdam::new(1e-3, true)),
+        2 => Box::new(ZoSgd::new(1e-3)),
+        3 => Box::new(ZoSophia::new(1e-3)),
+        _ => Box::new(ZoSgdMomentum::new(1e-3, 0.9)), // default-impl path
+    }
+}
+
+const PIPE_STEPS: u64 = 6;
+const PIPE_EVAL_AT: u64 = 3; // eval break + train_only_layers narrowing here
+const PIPE_MASK: &[&str] = &["layer0", "layer2", "layer3"];
+
+/// The naive 4-sweep reference: perturb +εz → L⁺ → −2εz → L⁻ → restore →
+/// plain seeded step; the eval reads pristine θ after the step, and the
+/// mask narrows right after the eval. Returns final θ plus every recorded
+/// loss (per-step SPSA losses and the eval loss).
+fn run_naive_reference(
+    base: &ParamSet,
+    which: usize,
+    run_seed: u64,
+    eps: f32,
+) -> Result<(ParamSet, Vec<f32>), String> {
+    let mut p = base.clone();
+    let mut opt = pipe_opt(which);
+    opt.init(&p);
+    let mut losses = Vec::new();
+    for step in 1..=PIPE_STEPS {
+        let seed = mix64(run_seed, step);
+        let est = spsa::estimate_with(&mut p, seed, eps, pipe_loss).map_err(|e| e.to_string())?;
+        opt.step_zo(&mut p, est.g_scale, est.seed).map_err(|e| e.to_string())?;
+        losses.push(est.loss());
+        if step == PIPE_EVAL_AT {
+            losses.push(pipe_loss(&p).unwrap()); // eval on pristine θ
+            p.restrict_to_layers(PIPE_MASK).map_err(|e| e.to_string())?;
+        }
+    }
+    Ok((p, losses))
+}
+
+/// The cross-step pipeline through `train::ZoProtocol`: the eval step and
+/// the final step are boundaries; everything between runs the two-sweep
+/// steady state (asserted via the instrumented sweep counter for the
+/// single-sweep optimizers).
+fn run_prefetch_pipeline(
+    base: &ParamSet,
+    which: usize,
+    run_seed: u64,
+    eps: f32,
+    cache_z: bool,
+) -> Result<(ParamSet, Vec<f32>), String> {
+    let cfg = TrainConfig {
+        spsa_eps: eps,
+        seed: run_seed,
+        cache_z,
+        fuse_restore: true,
+        prefetch_perturb: true,
+        ..Default::default()
+    };
+    let mut proto = ZoProtocol::new(&cfg);
+    let mut p = base.clone();
+    let mut opt = pipe_opt(which);
+    opt.init(&p);
+    let mut losses = Vec::new();
+    for step in 1..=PIPE_STEPS {
+        let boundary = step == PIPE_EVAL_AT || step == PIPE_STEPS;
+        let entered_pristine = proto.pending().is_none();
+        let before = p.sweep_count();
+        let est = proto
+            .step(
+                opt.as_mut(),
+                &mut p,
+                mix64(run_seed, step),
+                mix64(run_seed, step + 1),
+                boundary,
+                pipe_loss,
+            )
+            .map_err(|e| e.to_string())?;
+        losses.push(est.loss());
+        if which < 4 {
+            // single-sweep optimizers: 2 sweeps/step, +1 prologue sweep
+            // when the previous step was a boundary
+            let expect = if entered_pristine { 3 } else { 2 };
+            let got = p.sweep_count() - before;
+            if got != expect {
+                return Err(format!("step {step}: {got} sweeps, expected {expect}"));
+            }
+        }
+        if step == PIPE_EVAL_AT {
+            if proto.pending().is_some() {
+                return Err("eval boundary left a pending perturbation".into());
+            }
+            losses.push(pipe_loss(&p).unwrap());
+            p.restrict_to_layers(PIPE_MASK).map_err(|e| e.to_string())?;
+        }
+    }
+    proto.finish(&mut p);
+    Ok((p, losses))
+}
+
+#[test]
+fn prop_prefetch_pipeline_bitwise_matches_naive_reference() {
+    // N steps of the full cross-step pipeline — prologue, steady state,
+    // an eval break with a train_only_layers narrowing, epilogue — must
+    // reproduce the naive 4-sweep protocol bit-for-bit: final parameters
+    // AND every loss, for every covered optimizer, z-cache on and off.
+    // (24 explicit cases: each runs 12 full multi-shard training steps.)
+    helene::util::prop::forall_seeded("prefetch-pipeline-vs-naive", 0x5EED_CAFE, 24, |g| {
+        let base = gen_multi_shard(g);
+        let run_seed = g.u64();
+        let eps = g.f32_in(1e-5, 1e-2);
+        let which = g.usize_in(0, 5);
+        let cache_z = g.bool();
+        let (p_ref, l_ref) = run_naive_reference(&base, which, run_seed, eps)?;
+        let (p_pipe, l_pipe) = run_prefetch_pipeline(&base, which, run_seed, eps, cache_z)?;
+        if l_ref != l_pipe {
+            return Err(format!(
+                "losses diverged for optimizer {which} (cache_z {cache_z}): {l_ref:?} vs {l_pipe:?}"
+            ));
+        }
+        if p_ref.flat() != p_pipe.flat() {
+            return Err(format!(
+                "final params diverged for optimizer {which} (cache_z {cache_z})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prefetch_pipeline_bitwise_identical_across_thread_counts() {
+    // the dual-stream sweep keeps the thread-count invariance: the whole
+    // N-step pipeline (eval break and mask change included) is bitwise
+    // identical across 1/2/4/8-worker pools (12 explicit cases: each runs
+    // the 6-step pipeline under four different pools)
+    helene::util::prop::forall_seeded("prefetch-pipeline-thread-invariance", 0x7EED_5EED, 12, |g| {
+        let base = gen_multi_shard(g);
+        let run_seed = g.u64();
+        let eps = g.f32_in(1e-4, 1e-2);
+        let which = g.usize_in(0, 5); // include the default-impl optimizer
+        let cache_z = g.bool();
+        let run = |threads: usize| -> Result<(ParamSet, Vec<f32>), String> {
+            with_pool(threads, || run_prefetch_pipeline(&base, which, run_seed, eps, cache_z))
+        };
+        let (p1, l1) = run(1)?;
+        for threads in [2, 4, 8] {
+            let (pt, lt) = run(threads)?;
+            if p1.flat() != pt.flat() || l1 != lt {
+                return Err(format!(
+                    "pipeline differs at {threads} threads (optimizer {which}, cache_z {cache_z})"
+                ));
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
