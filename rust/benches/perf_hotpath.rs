@@ -30,7 +30,7 @@ use std::time::Instant;
 
 use helene::bench::{Bench, Scale};
 use helene::data::batcher::Batcher;
-use helene::model::params::{ParamSet, ZCache, SHARD_SIZE};
+use helene::model::params::{Codec, ParamSet, ZCache, SHARD_SIZE};
 use helene::optim::helene::Helene;
 use helene::optim::{spsa, Optimizer};
 use helene::runtime::{lit_f32, ModelRunner, Runtime};
@@ -81,6 +81,117 @@ struct SweepCounts {
     unfused: u64,
     fused: u64,
     prefetch: u64,
+}
+
+/// The bf16-codec steady-state measurements: same prefetch protocol, half
+/// the bytes per element. `bytes/step = sweeps × n × 2 × bytes_per_elem`
+/// (each counted sweep reads and writes the θ arena once) — the measured
+/// sweep count and the storage width are both real, so the CI gate
+/// `bytes_per_step.bf16 ≤ 0.6 × bytes_per_step.f32` fails if either the
+/// bf16 protocol regresses to extra sweeps or the arena silently widens.
+struct Bf16Stats {
+    cycle_prefetch_ms_1t: f64,
+    cycle_prefetch_ms_4t: f64,
+    sweeps_prefetch: u64,
+    deterministic: bool,
+}
+
+/// One steady-state prefetch cycle on a bf16 clone of the synthetic arena:
+/// timing at 1/4 threads, the instrumented sweep count, and a 1-vs-8-thread
+/// bitwise (arena bits) determinism check within the bf16 mode.
+fn bf16_section(base: &ParamSet, iters: usize) -> anyhow::Result<Bf16Stats> {
+    let base16 = base.clone().with_codec(Codec::Bf16);
+    let n = base16.n_params();
+    println!(
+        "== bf16 arena: {} params, {} B/elem stored (f32 compute, round-on-store) ==",
+        n,
+        base16.codec().bytes_per_elem()
+    );
+    let mut cycle = [0f64; 2];
+    for (slot, &t) in [1usize, 4].iter().enumerate() {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(t).build()?;
+        let mut params = base16.clone();
+        let mut opt = Helene::paper_defaults().with_lr(1e-3);
+        opt.configure_batch(8);
+        opt.init(&params);
+        let mut cur = ZCache::default();
+        let mut nextc = ZCache::default();
+        let mut seed = 1000u64;
+        cycle[slot] = pool.install(|| {
+            params.perturb_fill_cache(&mut cur, seed + 1, 1e-3); // prologue
+            let ms = 1000.0 * time(1, iters, || {
+                seed += 1;
+                let est = spsa::estimate_cached_preperturbed(
+                    &mut params, &cur, seed, 1e-3, |_| Ok(0.0),
+                )
+                .unwrap();
+                opt.step_zo_fused_prefetch(
+                    &mut params, est.g_scale, est.seed, seed + 1, 1e-3,
+                    Some(&cur), Some(&mut nextc),
+                )
+                .unwrap();
+                std::mem::swap(&mut cur, &mut nextc);
+            });
+            params.perturb_from_cache(&cur, seed + 1, -1e-3); // epilogue
+            ms
+        });
+        println!("  prefetch-cycle @{t}t: {:.2} ms", cycle[slot]);
+    }
+
+    // measured sweeps per steady-state step (the bytes/step numerator)
+    let sweeps_prefetch = {
+        let mut p = base16.clone();
+        let mut opt = Helene::paper_defaults().with_lr(1e-3);
+        opt.configure_batch(8);
+        opt.init(&p);
+        let mut zc = ZCache::default();
+        let mut nextc = ZCache::default();
+        p.perturb_fill_cache(&mut zc, 3, 1e-3);
+        p.reset_sweep_count();
+        let est = spsa::estimate_cached_preperturbed(&mut p, &zc, 3, 1e-3, |_| Ok(0.0))?;
+        opt.step_zo_fused_prefetch(&mut p, est.g_scale, est.seed, 4, 1e-3, Some(&zc), Some(&mut nextc))?;
+        p.sweep_count()
+    };
+
+    // 1-vs-8-thread bitwise invariance *within* the bf16 mode: staging is
+    // shard-local and rounding is per-element, so the stored bits cannot
+    // depend on the pool size
+    let run_in = |threads: usize| -> anyhow::Result<ParamSet> {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
+        let mut p = base16.clone();
+        let mut opt = Helene::paper_defaults().with_lr(1e-3);
+        opt.init(&p);
+        let mut zc = ZCache::default();
+        let mut nextc = ZCache::default();
+        pool.install(|| {
+            p.perturb_fill_cache(&mut zc, 500, 1e-3);
+            for s in 500..502u64 {
+                let est =
+                    spsa::estimate_cached_preperturbed(&mut p, &zc, s, 1e-3, |_| Ok(0.0))
+                        .unwrap();
+                opt.step_zo_fused_prefetch(
+                    &mut p, est.g_scale, est.seed, s + 1, 1e-3, Some(&zc), Some(&mut nextc),
+                )
+                .unwrap();
+                std::mem::swap(&mut zc, &mut nextc);
+            }
+        });
+        Ok(p)
+    };
+    let deterministic = run_in(1)?.bits_eq(&run_in(8)?);
+    println!(
+        "  bf16 sweeps/step {}  determinism 1 vs 8 threads: {}",
+        sweeps_prefetch,
+        if deterministic { "bitwise identical" } else { "MISMATCH" }
+    );
+    anyhow::ensure!(deterministic, "bf16 thread-count determinism violated");
+
+    Ok(Bf16Stats {
+        cycle_prefetch_ms_1t: cycle[0],
+        cycle_prefetch_ms_4t: cycle[1],
+        sweeps_prefetch,
+        deterministic,
+    })
 }
 
 struct SamplerRow {
@@ -325,6 +436,7 @@ fn write_json(
     sampler: &SamplerRow,
     rows: &[ThreadRow],
     sweeps: &SweepCounts,
+    bf16: &Bf16Stats,
     n_params: usize,
 ) -> anyhow::Result<PathBuf> {
     let mut threads = BTreeMap::new();
@@ -361,9 +473,10 @@ fn write_json(
     root.insert("n_params".to_string(), Json::Num(n_params as f64));
     root.insert("shard_size".to_string(), Json::Num(SHARD_SIZE as f64));
     root.insert("z_stream".to_string(), Json::Str("v2-stateless".into()));
-    // written only after the bitwise thread-invariance check passed (the
-    // bench hard-errors otherwise); CI gates on this field
-    root.insert("deterministic".to_string(), Json::Bool(true));
+    // written only after the bitwise thread-invariance checks passed — the
+    // f32 host section AND the bf16 section both hard-error otherwise; CI
+    // gates on this field
+    root.insert("deterministic".to_string(), Json::Bool(bf16.deterministic));
     root.insert("sampler_n".to_string(), Json::Num(sampler.n as f64));
     root.insert(
         "normal_fill_ns_per_elem_v1".to_string(),
@@ -389,15 +502,52 @@ fn write_json(
             Json::Num(c.perturb_ms / c.perturb_dual_ms),
         );
         // effective θ-arena bandwidth: each counted sweep reads+writes the
-        // full f32 arena (8 bytes/element); state/cache traffic excluded —
-        // see the DESIGN.md §Perf sweep-accounting table for the math
+        // full arena (2 × bytes/elem of the codec); state/cache traffic
+        // excluded — see the DESIGN.md §Perf sweep-accounting table
         let gb = |sw: u64, ms: f64| Json::Num(sw as f64 * n_params as f64 * 8.0 / (ms / 1e3) / 1e9);
         let mut bw = BTreeMap::new();
         bw.insert("unfused".to_string(), gb(sweeps.unfused, c.cycle_ms));
         bw.insert("fused".to_string(), gb(sweeps.fused, c.cycle_fused_ms));
         bw.insert("prefetch".to_string(), gb(sweeps.prefetch, c.cycle_prefetch_ms));
+        bw.insert(
+            "prefetch_bf16".to_string(),
+            Json::Num(
+                bf16.sweeps_prefetch as f64 * n_params as f64 * 4.0
+                    / (bf16.cycle_prefetch_ms_4t / 1e3)
+                    / 1e9,
+            ),
+        );
         root.insert("arena_gb_s".to_string(), Json::Obj(bw));
+        root.insert(
+            "cycle_ms_prefetch_bf16".to_string(),
+            Json::Num(bf16.cycle_prefetch_ms_4t),
+        );
+        // wall-clock headline: the half-width arena against the f32 one at
+        // equal thread count (measured, not asserted)
+        root.insert(
+            "bf16_prefetch_speedup_vs_f32".to_string(),
+            Json::Num(c.cycle_prefetch_ms / bf16.cycle_prefetch_ms_4t),
+        );
+        // bytes moved per steady-state step: measured sweeps × arena bytes
+        // read+written per sweep. The CI gate asserts bf16 ≤ 0.6 × f32.
+        let mut bps = BTreeMap::new();
+        bps.insert(
+            "f32".to_string(),
+            Json::Num(sweeps.prefetch as f64 * n_params as f64 * 8.0),
+        );
+        bps.insert(
+            "bf16".to_string(),
+            Json::Num(bf16.sweeps_prefetch as f64 * n_params as f64 * 4.0),
+        );
+        root.insert("bytes_per_step".to_string(), Json::Obj(bps));
     }
+    root.insert(
+        "cycle_ms_prefetch_bf16_1t".to_string(),
+        Json::Num(bf16.cycle_prefetch_ms_1t),
+    );
+    let mut sw16 = BTreeMap::new();
+    sw16.insert("prefetch".to_string(), Json::Num(bf16.sweeps_prefetch as f64));
+    root.insert("sweeps_per_step_bf16".to_string(), Json::Obj(sw16));
     // measured by the instrumented ParamSet sweep counter, not assumed
     let mut sw = BTreeMap::new();
     sw.insert("unfused".to_string(), Json::Num(sweeps.unfused as f64));
@@ -553,8 +703,9 @@ fn main() -> anyhow::Result<()> {
     // the mercy of one noisy fill on a shared runner
     let sampler = sampler_section(iters.max(5));
     let (rows, sweeps) = host_section(scale, iters)?;
+    let bf16 = bf16_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), iters)?;
     let n_params = synth_sizes(scale).iter().sum();
-    write_json(scale, &sampler, &rows, &sweeps, n_params)?;
+    write_json(scale, &sampler, &rows, &sweeps, &bf16, n_params)?;
 
     if Runtime::default_dir().join("manifest.json").exists() {
         pjrt_section(match scale {

@@ -187,6 +187,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(t) = args.get("target") {
         tc.target_metric = Some(t.parse()?);
     }
+    // θ-arena storage codec: --codec bf16 / `train.codec = "bf16"` halves
+    // the bytes every sweep moves (DESIGN.md §Precision); default keeps
+    // the manifest's per-variant codec
+    let codec_str = args.str("codec", &cfg_file.str("train.codec", ""));
+    if !codec_str.is_empty() {
+        tc.codec = Some(helene::model::params::Codec::parse(&codec_str)?);
+    }
     let mut opt: Box<dyn optim::Optimizer> = if lp {
         tc.train_only_layers = Some(vec!["head".to_string()]);
         optim::by_name("fo-adam", lr)?

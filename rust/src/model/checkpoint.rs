@@ -1,18 +1,25 @@
 //! Checkpointing: ParamSet (+ optional optimizer state) ↔ disk.
 //!
-//! Format: a small JSON header (model, variant, step, array count/sizes)
-//! followed by raw little-endian f32 payload — same byte convention as the
-//! artifact params.bin, so a checkpoint of the init params is byte-identical
-//! to the shipped file.
+//! Format: a small JSON header (model, variant, step, set names + codecs)
+//! followed by each set's raw little-endian payload **in its storage
+//! codec** — f32 sets keep the artifact params.bin byte convention (so an
+//! f32 checkpoint of the init params has a byte-identical payload to the
+//! shipped file), bf16 sets write their 2-byte bit patterns directly. The
+//! arena bits ARE the payload, so a save → load round trip reproduces the
+//! stored θ bit-exactly in either codec; headers without the `codecs`
+//! field (pre-v3 checkpoints) decode as all-f32, unchanged. A bf16
+//! checkpoint loads into an f32 run by widening after load
+//! (`ParamSet::convert_codec`) — lossless, since every bf16 value is an
+//! f32.
 
 use std::io::{Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::manifest::VariantSpec;
-use crate::model::params::{decode_f32_le, encode_f32_le, ParamSet};
+use crate::model::params::{Codec, ParamSet};
 use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"HELENE1\n";
@@ -40,6 +47,17 @@ pub fn save(
                 .collect(),
         ),
     );
+    // per-set storage codec, aligned with "sets" (arena format v3; loaders
+    // treat an absent field as all-f32 for pre-v3 files)
+    header.insert(
+        "codecs".to_string(),
+        Json::Arr(
+            std::iter::once(params)
+                .chain(extra.iter().map(|(_, s)| *s))
+                .map(|s| Json::Str(s.codec().name().to_string()))
+                .collect(),
+        ),
+    );
     let header_text = Json::Obj(header).to_string();
 
     let mut f = std::fs::File::create(path)
@@ -51,8 +69,9 @@ pub fn save(
         if set.n_params() != params.n_params() {
             bail!("extra state set has mismatched layout");
         }
-        // the flat arena IS the payload byte layout: one bulk LE write
-        f.write_all(&encode_f32_le(set.flat()))?;
+        // the arena IS the payload byte layout (in the set's codec):
+        // one bulk LE write
+        f.write_all(&set.payload())?;
     }
     Ok(())
 }
@@ -96,17 +115,32 @@ pub fn load(
         .iter()
         .filter_map(|x| x.as_str().map(str::to_string))
         .collect();
+    // per-set codecs (v3); pre-v3 checkpoints have no field → all f32
+    let codecs: Vec<Codec> = match header.get("codecs").and_then(|c| c.as_arr()) {
+        Some(arr) => arr
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .ok_or_else(|| anyhow!("checkpoint codecs entry is not a string"))
+                    .and_then(Codec::parse)
+            })
+            .collect::<Result<_>>()?,
+        None => vec![Codec::F32; set_names.len()],
+    };
+    if codecs.len() != set_names.len() {
+        bail!("checkpoint codecs ({}) / sets ({}) mismatch", codecs.len(), set_names.len());
+    }
 
-    let mut read_set = |spec: &Arc<VariantSpec>| -> Result<ParamSet> {
-        let mut bytes = vec![0u8; 4 * spec.n_params];
+    let mut read_set = |spec: &Arc<VariantSpec>, codec: Codec| -> Result<ParamSet> {
+        let mut bytes = vec![0u8; codec.bytes_per_elem() * spec.n_params];
         f.read_exact(&mut bytes)?;
-        Ok(ParamSet::from_flat(spec.clone(), decode_f32_le(&bytes)))
+        ParamSet::from_payload(spec.clone(), codec, &bytes)
     };
 
-    let params = read_set(&spec)?;
+    let params = read_set(&spec, codecs.first().copied().unwrap_or(Codec::F32))?;
     let mut extras = Vec::new();
-    for name in set_names.iter().skip(1) {
-        extras.push((name.clone(), read_set(&spec)?));
+    for (name, &codec) in set_names.iter().zip(&codecs).skip(1) {
+        extras.push((name.clone(), read_set(&spec, codec)?));
     }
     Ok((step, params, extras))
 }
@@ -129,6 +163,7 @@ mod tests {
             dims: ModelDims { vocab: 1, d_model: 1, n_heads: 1, n_layers: 1, d_ff: 1, max_seq: 1, n_classes: 1, batch: 1, lora_rank: 1, prefix_len: 1 },
             params_bin: "x".into(),
             n_params: 7,
+            codec: Codec::F32,
             params,
             entrypoints: BTreeMap::new(),
         });
@@ -148,6 +183,66 @@ mod tests {
         assert_eq!(extras.len(), 1);
         assert_eq!(extras[0].0, "momentum");
         assert_eq!(extras[0].1.flat(), m.flat());
+    }
+
+    #[test]
+    fn bf16_round_trip_is_bit_exact_and_widens_losslessly() {
+        // bf16 storage: the arena bits are the payload, so save → load
+        // reproduces them exactly; widening the loaded set to f32 equals
+        // widening the original (lossless embed).
+        let p = toy().with_codec(Codec::Bf16);
+        let m = p.full_like(0.5); // state stays f32
+        let dir = std::env::temp_dir().join("helene_ckpt_bf16");
+        let path = dir.join("ckpt.bin");
+        save(&path, 7, &p, &[("momentum", &m)]).unwrap();
+        let (step, p2, extras) = load(&path, p.spec.clone()).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(p2.codec(), Codec::Bf16);
+        assert_eq!(p2.bits().unwrap(), p.bits().unwrap());
+        assert!(p2.bits_eq(&p));
+        // extras stayed f32 and exact
+        assert_eq!(extras[0].1.codec(), Codec::F32);
+        assert_eq!(extras[0].1.flat(), m.flat());
+        // loading into an f32 run: widen — every value survives exactly
+        let wide = p2.with_codec(Codec::F32);
+        assert_eq!(wide.flat(), &p.flat_f32()[..]);
+        // and rounding straight back is the identity (round-trip exactness)
+        assert!(wide.with_codec(Codec::Bf16).bits_eq(&p));
+    }
+
+    #[test]
+    fn f32_payload_unchanged_by_codec_header() {
+        // the v3 header addition must not disturb the f32 payload bytes:
+        // the payload section still equals encode_f32_le(flat)
+        let p = toy();
+        let dir = std::env::temp_dir().join("helene_ckpt_v3pay");
+        let path = dir.join("ckpt.bin");
+        save(&path, 1, &p, &[]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let payload = &bytes[bytes.len() - 4 * p.n_params()..];
+        assert_eq!(payload, &crate::model::params::encode_f32_le(p.flat())[..]);
+
+        // a pre-v3 file (header without "codecs") must load as all-f32:
+        // hand-assemble one with the legacy header fields
+        let mut header = std::collections::BTreeMap::new();
+        header.insert("model".to_string(), Json::Str(p.spec.model.clone()));
+        header.insert("variant".to_string(), Json::Str(p.spec.variant.clone()));
+        header.insert("step".to_string(), Json::Num(9.0));
+        header.insert("n_params".to_string(), Json::Num(p.n_params() as f64));
+        header.insert("sets".to_string(), Json::Arr(vec![Json::Str("params".into())]));
+        let htext = Json::Obj(header).to_string();
+        let legacy = dir.join("legacy.bin");
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(htext.len() as u64).to_le_bytes());
+        out.extend_from_slice(htext.as_bytes());
+        out.extend_from_slice(&p.payload());
+        std::fs::write(&legacy, out).unwrap();
+        let (step, p2, extras) = load(&legacy, p.spec.clone()).unwrap();
+        assert_eq!(step, 9);
+        assert_eq!(p2.codec(), Codec::F32);
+        assert_eq!(p2.flat(), p.flat());
+        assert!(extras.is_empty());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::model::params::Codec;
 use crate::util::json::Json;
 
 /// Model kind, mirroring python `ModelConfig.kind`.
@@ -79,6 +80,13 @@ pub struct VariantSpec {
     pub dims: ModelDims,
     pub params_bin: String,
     pub n_params: usize,
+    /// Default θ-arena storage codec for this variant (arena format v3 —
+    /// DESIGN.md §Precision). The manifest's optional per-variant `"codec"`
+    /// field; absent = `f32`, the v2 behaviour, so every existing manifest
+    /// parses unchanged. `params_bin` payloads are always f32 regardless —
+    /// a bf16 default rounds once at load. `TrainConfig::codec` overrides
+    /// this per run.
+    pub codec: Codec,
     pub params: Vec<ParamInfo>,
     pub entrypoints: BTreeMap<String, EntrypointInfo>,
 }
@@ -211,6 +219,10 @@ impl Manifest {
                     dims: dims.clone(),
                     params_bin: v.req("params_bin")?.as_str().unwrap_or_default().to_string(),
                     n_params: v.req("n_params")?.as_usize().unwrap_or(0),
+                    codec: match v.get("codec").and_then(|c| c.as_str()) {
+                        None => Codec::F32,
+                        Some(s) => Codec::parse(s)?,
+                    },
                     params,
                     entrypoints,
                 };
@@ -281,6 +293,7 @@ mod tests {
             },
             params_bin: "toy.bin".into(),
             n_params: 12,
+            codec: Codec::F32,
             params: vec![
                 ParamInfo { name: "embed.tok".into(), shape: vec![2, 2], layer: "embed".into(), trainable: true, offset: 0, size: 4 },
                 ParamInfo { name: "block0.attn.wq".into(), shape: vec![2, 2], layer: "block0.attn".into(), trainable: true, offset: 4, size: 4 },

@@ -13,6 +13,17 @@
 //! arena sweeps per step. First-order baselines receive the exact gradient
 //! from the compiled `loss_grad` entrypoint through `step_fo`.
 //!
+//! **Arena codecs** (DESIGN.md §Precision): every update runs through the
+//! `ParamSet::update_shards*` kernels, so the zoo is codec-agnostic — a
+//! bf16 θ-arena is widened shard-by-shard into an f32 stage, the optimizer
+//! arithmetic below runs unchanged, and θ′ is rounded once at the store.
+//! Sweep count is also the *rounded-store* count in bf16 mode, which is
+//! why the single-sweep fused overrides (HELENE/ZO-SGD/ZO-Adam/ZO-Sophia)
+//! matter beyond bandwidth: the default `step_zo_fused` pays an extra
+//! restore sweep, i.e. one extra bf16 rounding per element per step, and
+//! the §Precision drift bounds quote the single-sweep figures. Optimizer
+//! state (m/h/v) stays f32 for every codec.
+//!
 //! | paper name      | type                        | module        |
 //! |-----------------|-----------------------------|---------------|
 //! | HELENE          | [`helene::Helene`]          | `helene.rs`   |

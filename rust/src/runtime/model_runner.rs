@@ -100,11 +100,13 @@ impl<'rt> ModelRunner<'rt> {
             params.n_arrays() * (1 + tangents.is_some() as usize) + 2,
         );
         for (i, p) in self.spec.params.iter().enumerate() {
-            out.push(lit_f32(params.array(i), &p.shape)?);
+            // array_f32 widens bf16 arenas on the way to the device — the
+            // compiled graphs always consume f32 literals
+            out.push(lit_f32(&params.array_f32(i), &p.shape)?);
         }
         if let Some(t) = tangents {
             for (i, p) in self.spec.params.iter().enumerate() {
-                out.push(lit_f32(t.array(i), &p.shape)?);
+                out.push(lit_f32(&t.array_f32(i), &p.shape)?);
             }
         }
         out.push(lit_i32(&batch.tokens, &[batch.batch, batch.seq])?);
@@ -133,14 +135,14 @@ impl<'rt> ModelRunner<'rt> {
         {
             let mut cache = self.frozen_cache.borrow_mut();
             for (i, p) in self.spec.params.iter().enumerate() {
-                let arr = params.array(i);
+                let arr = params.array_f32(i);
                 if params.is_trainable(i) {
-                    owned.push(Rc::new(self.rt.stage_f32(arr, &p.shape)?));
+                    owned.push(Rc::new(self.rt.stage_f32(&arr, &p.shape)?));
                 } else {
                     let buf = match cache.get(&i) {
                         Some(b) => b.clone(),
                         None => {
-                            let b = Rc::new(self.rt.stage_f32(arr, &p.shape)?);
+                            let b = Rc::new(self.rt.stage_f32(&arr, &p.shape)?);
                             cache.insert(i, b.clone());
                             b
                         }

@@ -67,6 +67,13 @@ pub struct TrainConfig {
     pub prefetch_perturb: bool,
     /// learning-rate schedule applied multiplicatively to the optimizer lr
     pub lr_schedule: Option<schedule::LrSchedule>,
+    /// θ-arena storage codec override (DESIGN.md §Precision). `None` keeps
+    /// the parameters' current codec (the manifest's per-variant default);
+    /// `Some(Bf16)` stores θ in bfloat16 — every sweep moves half the
+    /// bytes, kernels compute in f32 and round once per store, and the
+    /// bitwise pipeline-vs-naive invariant is replaced by the documented
+    /// per-step drift bound. Optimizer state stays f32 either way.
+    pub codec: Option<crate::model::params::Codec>,
 }
 
 impl Default for TrainConfig {
@@ -85,6 +92,7 @@ impl Default for TrainConfig {
             fuse_restore: true,
             prefetch_perturb: true,
             lr_schedule: None,
+            codec: None,
         }
     }
 }
@@ -378,6 +386,11 @@ impl Trainer {
             let refs: Vec<&str> = layers.iter().map(|s| s.as_str()).collect();
             params.restrict_to_layers(&refs)?;
         }
+        // codec conversion happens at the run boundary, before any state
+        // allocation or sweep — a bf16 run rounds θ exactly once here
+        if let Some(codec) = cfg.codec {
+            params.convert_codec(codec);
+        }
         opt.configure_batch(runner.spec.dims.batch);
         opt.init(params);
 
@@ -523,6 +536,9 @@ pub fn run_lm(
 ) -> Result<History> {
     let dims = &runner.spec.dims;
     let mut params = runner.load_init_params()?;
+    if let Some(codec) = cfg.codec {
+        params.convert_codec(codec);
+    }
     opt.configure_batch(dims.batch);
     opt.init(&params);
     let mut proto = ZoProtocol::new(cfg);
@@ -582,40 +598,47 @@ mod tests {
         // sweep, next-step perturb prefetched in the same sweep
         assert!(c.cache_z && c.fuse_restore && c.prefetch_perturb);
         assert_eq!(c.metric, Metric::Accuracy);
+        // precision default: keep the manifest codec (f32 unless a variant
+        // opts into bf16)
+        assert!(c.codec.is_none());
     }
 
     #[test]
     fn protocol_steady_state_runs_two_sweeps_and_boundaries_are_pristine() {
-        use crate::model::params::ParamSet;
+        use crate::model::params::{Codec, ParamSet};
         use crate::optim::helene::Helene;
         use crate::util::rng::mix64;
 
-        let quad = |p: &ParamSet| Ok(p.flat().iter().map(|x| x * x).sum::<f32>());
-        for cache_z in [true, false] {
-            let cfg = TrainConfig { cache_z, ..Default::default() };
-            let mut proto = ZoProtocol::new(&cfg);
-            let mut params = ParamSet::synthetic(&[4000, 2000], 0.5);
-            let mut opt = Helene::paper_defaults().with_lr(1e-3);
-            opt.init(&params);
-            for step in 1..=5u64 {
-                let boundary = step == 3 || step == 5;
-                let before = params.sweep_count();
-                proto
-                    .step(
-                        &mut opt,
-                        &mut params,
-                        mix64(0, step),
-                        mix64(0, step + 1),
-                        boundary,
-                        quad,
-                    )
-                    .unwrap();
-                let sweeps = params.sweep_count() - before;
-                // steady state: −2ε probe + fused dual sweep = 2; a step
-                // entered from a boundary pays one prologue perturb more
-                let expect = if step == 1 || step == 4 { 3 } else { 2 };
-                assert_eq!(sweeps, expect, "step {step} (cache_z {cache_z})");
-                assert_eq!(proto.pending().is_none(), boundary, "step {step}");
+        // the sweep accounting is a protocol property, independent of the
+        // arena storage codec — assert it in both f32 and bf16 modes
+        let quad = |p: &ParamSet| Ok(p.flat_f32().iter().map(|x| x * x).sum::<f32>());
+        for codec in [Codec::F32, Codec::Bf16] {
+            for cache_z in [true, false] {
+                let cfg = TrainConfig { cache_z, ..Default::default() };
+                let mut proto = ZoProtocol::new(&cfg);
+                let mut params = ParamSet::synthetic(&[4000, 2000], 0.5).with_codec(codec);
+                let mut opt = Helene::paper_defaults().with_lr(1e-3);
+                opt.init(&params);
+                for step in 1..=5u64 {
+                    let boundary = step == 3 || step == 5;
+                    let before = params.sweep_count();
+                    proto
+                        .step(
+                            &mut opt,
+                            &mut params,
+                            mix64(0, step),
+                            mix64(0, step + 1),
+                            boundary,
+                            quad,
+                        )
+                        .unwrap();
+                    let sweeps = params.sweep_count() - before;
+                    // steady state: −2ε probe + fused dual sweep = 2; a step
+                    // entered from a boundary pays one prologue perturb more
+                    let expect = if step == 1 || step == 4 { 3 } else { 2 };
+                    assert_eq!(sweeps, expect, "step {step} (cache_z {cache_z}, {codec:?})");
+                    assert_eq!(proto.pending().is_none(), boundary, "step {step}");
+                }
             }
         }
     }

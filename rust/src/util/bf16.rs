@@ -1,0 +1,247 @@
+//! bfloat16 storage codec: the element format behind `Codec::Bf16`
+//! (DESIGN.md §Precision).
+//!
+//! bf16 is the top 16 bits of an IEEE-754 binary32: 1 sign bit, the full
+//! 8-bit exponent, 7 stored significand bits. Consequences the arena code
+//! relies on:
+//!
+//! * **Widening is exact.** `widen(b) = from_bits(b << 16)` embeds every
+//!   bf16 value (normals, subnormals, ±0, ±∞, NaNs) into f32 without
+//!   rounding — bf16 subnormals land on f32 subnormals with the same value.
+//! * **Round-trip is the identity.** `round(widen(b)) == b` for every one
+//!   of the 2¹⁶ bit patterns except signalling NaNs (which are quietened —
+//!   [`round`] sets the quiet bit, matching hardware bf16 conversions).
+//!   Pinned exhaustively in the tests below. This is what lets the staged
+//!   sweep kernels write back *untouched* (frozen / inactive) elements
+//!   through the widen→store path without perturbing a single bit.
+//! * **Rounding is round-to-nearest-even** on the 16 dropped bits, the same
+//!   tie rule as every IEEE operation, so `round` commutes with negation
+//!   and is monotone. Overflow saturates the exponent into ±∞ exactly when
+//!   the value is ≥ the largest finite bf16 plus half an ulp (so
+//!   `f32::MAX` rounds to +∞ — the nearest representable).
+//!
+//! The arena contract is **widen-on-load / round-on-store with f32
+//! accumulate throughout**: no arithmetic ever happens in bf16, values are
+//! widened into an f32 staging slice (or register), updated with the exact
+//! per-element f32 ops of the f32 codec, and rounded once on the way back.
+//! One store costs at most half a bf16 ulp, i.e. `2⁻⁹·|x|` relative for
+//! normal `x` — the δ that DESIGN.md §Precision's drift bounds are built
+//! from.
+
+/// Exact widening: bf16 bits → the f32 with the same value.
+#[inline]
+pub fn widen(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round-to-nearest-even f32 → bf16 bits.
+///
+/// The carry trick: adding `0x7FFF + lsb` to the f32 bits rounds the
+/// dropped 16 bits to nearest with ties to even (the carry propagates into
+/// the exponent on overflow, which is exactly IEEE round-to-∞-on-overflow).
+/// NaNs are handled first — the bit-add could otherwise carry a NaN into
+/// ±∞ — and are quietened (quiet bit `0x0040`), preserving sign and the
+/// high payload bits.
+#[inline]
+pub fn round(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if (bits & 0x7FFF_FFFF) > 0x7F80_0000 {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + lsb) >> 16) as u16
+}
+
+/// Widen a bf16 slice into an f32 slice (the load half of a staged sweep).
+#[inline]
+pub fn widen_slice(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "widen length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = widen(s);
+    }
+}
+
+/// Round an f32 slice back into bf16 bits (the store half of a staged
+/// sweep) — one RNE rounding per element, the single rounded store the
+/// store-once protocol allows per sweep.
+#[inline]
+pub fn store_slice(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "store length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = round(s);
+    }
+}
+
+/// Fused `out[i] = round(widen(out[i]) + scale · z[i])`: the cached-draw
+/// AXPY against a bf16 arena — widen-on-load, one f32 multiply-add
+/// (bitwise the f32 codec's `*x += scale * zv`), one rounded store.
+#[inline]
+pub fn axpy(out: &mut [u16], z: &[f32], scale: f32) {
+    for (x, zv) in out.iter_mut().zip(z) {
+        let mut v = widen(*x);
+        v += scale * zv;
+        *x = round(v);
+    }
+}
+
+/// Dual-stream fused AXPY:
+/// `out[i] = round(widen(out[i]) + sa·za[i] + sb·zb[i])` — two separate f32
+/// adds in a-then-b order, **one** rounded store (the store-once form of a
+/// two-perturbation composition; within half an ulp of applying [`axpy`]
+/// twice, which would round twice).
+#[inline]
+pub fn axpy2(out: &mut [u16], za: &[f32], zb: &[f32], sa: f32, sb: f32) {
+    for (x, (a, b)) in out.iter_mut().zip(za.iter().zip(zb)) {
+        let mut v = widen(*x);
+        v += sa * a;
+        v += sb * b;
+        *x = round(v);
+    }
+}
+
+/// Bulk little-endian u16 encode (the bf16 checkpoint payload convention —
+/// the arena bits ARE the payload, so a bf16 save/load round trip is
+/// bit-exact by construction).
+pub fn encode_u16_le(vals: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 * vals.len());
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Bulk little-endian u16 decode (inverse of [`encode_u16_le`]).
+pub fn decode_u16_le(bytes: &[u8]) -> Vec<u16> {
+    assert_eq!(bytes.len() % 2, 0, "u16 payload length {} not a multiple of 2", bytes.len());
+    bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_nan_bits(b: u16) -> bool {
+        (b & 0x7F80) == 0x7F80 && (b & 0x007F) != 0
+    }
+
+    #[test]
+    fn round_trip_exact_for_all_bf16_patterns() {
+        // Exhaustive over the full 2^16 pattern space: widening then
+        // rounding must reproduce the input bits — except signalling NaNs,
+        // which are quietened (quiet bit set, sign + payload preserved).
+        for b in 0..=u16::MAX {
+            let w = widen(b);
+            let back = round(w);
+            if is_nan_bits(b) {
+                assert!(w.is_nan(), "{b:#06x} widened to non-NaN {w}");
+                assert_eq!(back, b | 0x0040, "NaN {b:#06x} mishandled");
+            } else {
+                assert_eq!(back, b, "{b:#06x} → {w} → {back:#06x}");
+                // and the widened value is numerically faithful: re-widening
+                // the round-trip gives the same f32 bits
+                assert_eq!(widen(back).to_bits(), w.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // Hand-computed half-way cases: f32 bit pattern XXXX_8000 with the
+        // low 15 bits clear sits exactly between bf16 neighbours XXXX and
+        // XXXX+1; RNE keeps the even one.
+        let cases: &[(u32, u16)] = &[
+            // 1.0 + 2⁻⁸ (midpoint of [1.0, 1.0078125]): down to even 0x3F80
+            (0x3F80_8000, 0x3F80),
+            // 1.0078125 + 2⁻⁸ midpoint: up to even 0x3F82
+            (0x3F81_8000, 0x3F82),
+            // same two ties, negative sign: RNE commutes with negation
+            (0xBF80_8000, 0xBF80),
+            (0xBF81_8000, 0xBF82),
+            // subnormal tie: 2⁻¹³⁴ is halfway between 0 and the smallest
+            // bf16 subnormal 2⁻¹³³ → down to even 0
+            (0x0000_8000, 0x0000),
+            // 1.5·2⁻¹³³ halfway between subnormals 1 and 2 → even 2
+            (0x0001_8000, 0x0002),
+            // largest-finite tie: halfway between 0x7F7F and 2¹²⁸ → ∞
+            // (even side: exponent pattern 0x7F80)
+            (0x7F7F_8000, 0x7F80),
+        ];
+        for &(bits, expect) in cases {
+            assert_eq!(round(f32::from_bits(bits)), expect, "bits {bits:#010x}");
+        }
+        // one ulp either side of a tie breaks toward the nearer value
+        assert_eq!(round(f32::from_bits(0x3F80_8001)), 0x3F81);
+        assert_eq!(round(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+    }
+
+    #[test]
+    fn specials_and_boundaries() {
+        assert_eq!(round(0.0), 0x0000);
+        assert_eq!(round(-0.0), 0x8000);
+        assert_eq!(round(f32::INFINITY), 0x7F80);
+        assert_eq!(round(f32::NEG_INFINITY), 0xFF80);
+        assert_eq!(round(1.0), 0x3F80);
+        assert_eq!(round(-2.0), 0xC000);
+        // carry across the significand into the exponent: 1.99999988 → 2.0
+        assert_eq!(round(f32::from_bits(0x3FFF_FFFF)), 0x4000);
+        // f32::MAX is past the last finite tie point → +∞
+        assert_eq!(round(f32::MAX), 0x7F80);
+        assert_eq!(round(f32::MIN), 0xFF80);
+        // NaN stays NaN, quietened, sign preserved
+        assert!(widen(round(f32::NAN)).is_nan());
+        let neg_nan = f32::from_bits(0xFFC0_1234);
+        let r = round(neg_nan);
+        assert!(is_nan_bits(r) && (r & 0x8000) != 0);
+        // smallest bf16 subnormal widens to exactly 2⁻¹³³
+        assert_eq!(widen(0x0001), 2f32.powi(-133));
+        // below half of it underflows to zero
+        assert_eq!(round(2f32.powi(-135)), 0x0000);
+    }
+
+    #[test]
+    fn rounding_error_within_half_ulp() {
+        // |widen(round(x)) − x| ≤ ulp(x)/2 ≤ 2⁻⁸·|x| for normal-range x
+        // (the worst case sits just above a binade bottom, where
+        // ulp/2 = |x|/256) — the δ the §Precision drift bounds use.
+        let mut x = 1.1754944e-38f32; // ~ f32::MIN_POSITIVE
+        while x < 1e38 {
+            for v in [x, -x, x * 1.3, x * 1.9] {
+                let err = (widen(round(v)) - v).abs();
+                assert!(
+                    err <= v.abs() / 256.0 + f32::MIN_POSITIVE,
+                    "x {v}: err {err}"
+                );
+            }
+            x *= 97.0;
+        }
+        // and the worst case is achievable: the tie just above 1.0 errs by
+        // exactly 2⁻⁸ = 1/256 of the value (up to the tie's own magnitude)
+        let tie = f32::from_bits(0x3F80_8000);
+        assert!((widen(round(tie)) - tie).abs() > tie / 260.0);
+    }
+
+    #[test]
+    fn axpy_matches_scalar_reference() {
+        let z: Vec<f32> = (0..300).map(|i| ((i * 37 % 100) as f32 - 50.0) / 25.0).collect();
+        let mut bits: Vec<u16> = (0..300).map(|i| round((i as f32 - 150.0) / 40.0)).collect();
+        let reference: Vec<u16> = bits
+            .iter()
+            .zip(&z)
+            .map(|(&b, &zv)| round(widen(b) + 0.125 * zv))
+            .collect();
+        axpy(&mut bits, &z, 0.125);
+        assert_eq!(bits, reference);
+    }
+
+    #[test]
+    fn u16_payload_round_trip() {
+        let vals: Vec<u16> = vec![0, 1, 0x3F80, 0x7F80, 0x8000, 0xFFFF, 0x1234];
+        let bytes = encode_u16_le(&vals);
+        assert_eq!(bytes.len(), 2 * vals.len());
+        assert_eq!(decode_u16_le(&bytes), vals);
+        assert_eq!(&bytes[4..6], &0x3F80u16.to_le_bytes());
+    }
+}

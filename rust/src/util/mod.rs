@@ -1,5 +1,6 @@
-//! Shared substrates: RNG, JSON, metrics, property-testing.
+//! Shared substrates: RNG, JSON, metrics, property-testing, storage codecs.
 
+pub mod bf16;
 pub mod json;
 pub mod metrics;
 pub mod prop;

@@ -293,6 +293,57 @@ pub fn axpy2_normal_at(
     }
 }
 
+/// [`axpy_normal_at`] against a **bf16 arena** (`Codec::Bf16`, DESIGN.md
+/// §Precision): per element, widen-on-load, the identical f32 accumulate
+/// `x + scale·z`, and exactly one round-to-nearest-even on store. The z
+/// values are bitwise [`fill_normal_at`]'s; generation runs through the
+/// same L1-resident staging buffer, so the bf16 arena crosses memory once
+/// at 2 bytes/element each way — half the f32 kernel's sweep traffic.
+pub fn axpy_normal_bf16(seed: u64, start: u64, scale: f32, out: &mut [u16]) {
+    use crate::util::bf16;
+    let mut buf = [0f32; 256];
+    let mut base = start;
+    let mut rest = out;
+    while !rest.is_empty() {
+        let n = rest.len().min(256);
+        let (head, tail) = rest.split_at_mut(n);
+        fill_normal_at(seed, base, &mut buf[..n]);
+        bf16::axpy(head, &buf[..n], scale);
+        base += n as u64;
+        rest = tail;
+    }
+}
+
+/// Dual-seed flavour of [`axpy_normal_bf16`]: both streams from one
+/// [`fill_normal_at2`] pass, **two separate f32 adds** per element in
+/// a-then-b order (the accumulate order of [`axpy2_normal_at`]) and **one**
+/// rounded store. Note the deliberate asymmetry with the f32 codec: two
+/// sequential [`axpy_normal_bf16`] sweeps would round twice, so this fused
+/// kernel is the store-once form — per element within half a bf16 ulp of
+/// the two-sweep composition, not bitwise equal to it (§Precision).
+pub fn axpy2_normal_bf16(
+    seed_a: u64,
+    seed_b: u64,
+    start: u64,
+    scale_a: f32,
+    scale_b: f32,
+    out: &mut [u16],
+) {
+    use crate::util::bf16;
+    let mut buf_a = [0f32; 256];
+    let mut buf_b = [0f32; 256];
+    let mut base = start;
+    let mut rest = out;
+    while !rest.is_empty() {
+        let n = rest.len().min(256);
+        let (head, tail) = rest.split_at_mut(n);
+        fill_normal_at2(seed_a, seed_b, base, &mut buf_a[..n], &mut buf_b[..n]);
+        bf16::axpy2(head, &buf_a[..n], &buf_b[..n], scale_a, scale_b);
+        base += n as u64;
+        rest = tail;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -416,6 +467,48 @@ mod tests {
         axpy2_normal_at(11, 22, 400, 0.5, -0.25, &mut two);
         for j in 0..700 {
             assert_eq!(one[j].to_bits(), two[j].to_bits(), "element {j}");
+        }
+    }
+
+    #[test]
+    fn axpy_bf16_matches_widen_accumulate_round_reference() {
+        use crate::util::bf16;
+        let mut z = vec![0f32; 777];
+        fill_normal_at(5, 123, &mut z);
+        let start: Vec<u16> = (0..777).map(|i| bf16::round((i as f32 - 388.0) / 200.0)).collect();
+        let mut acc = start.clone();
+        axpy_normal_bf16(5, 123, 0.25, &mut acc);
+        for j in 0..777 {
+            let expect = bf16::round(bf16::widen(start[j]) + 0.25 * z[j]);
+            assert_eq!(acc[j], expect, "element {j}");
+        }
+    }
+
+    #[test]
+    fn axpy2_bf16_is_store_once() {
+        use crate::util::bf16;
+        // one fused dual-stream pass: widen, a-then-b f32 adds, ONE round —
+        // check against the scalar reference, and that it stays within one
+        // bf16 ulp of the two-sweep (twice-rounded) composition
+        let mut za = vec![0f32; 700];
+        let mut zb = vec![0f32; 700];
+        fill_normal_at2(11, 22, 400, &mut za, &mut zb);
+        let start: Vec<u16> = (0..700).map(|i| bf16::round(0.75 + (i as f32) * 1e-3)).collect();
+        let mut fused = start.clone();
+        axpy2_normal_bf16(11, 22, 400, 0.5, -0.25, &mut fused);
+        let mut twice = start.clone();
+        axpy_normal_bf16(11, 400, 0.5, &mut twice);
+        axpy_normal_bf16(22, 400, -0.25, &mut twice);
+        for j in 0..700 {
+            let mut v = bf16::widen(start[j]);
+            v += 0.5 * za[j];
+            v += -0.25 * zb[j];
+            assert_eq!(fused[j], bf16::round(v), "element {j}");
+            let gap = (bf16::widen(fused[j]) - bf16::widen(twice[j])).abs();
+            // ≤ the sum of the roundings the twice-path pays extra: bound by
+            // one ulp at the largest magnitude the chain visits (≤ 4 here)
+            let ulp = bf16::widen(fused[j]).abs().max(4.0) / 128.0;
+            assert!(gap <= ulp, "element {j}: fused vs twice-rounded gap {gap}");
         }
     }
 

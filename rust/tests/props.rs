@@ -40,6 +40,7 @@ fn gen_params(g: &mut Gen) -> ParamSet {
         },
         params_bin: "none".into(),
         n_params: offset,
+        codec: helene::model::params::Codec::F32,
         params: params.clone(),
         entrypoints: BTreeMap::new(),
     });
