@@ -26,12 +26,16 @@ use crate::util::metrics::MeanStd;
 /// Bench scale from the environment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scale {
+    /// CI smoke scale: smallest fixtures, seconds-long runs
     Smoke,
+    /// interactive default scale
     Default,
+    /// full paper-table scale
     Full,
 }
 
 impl Scale {
+    /// Resolve the scale from HELENE_BENCH_SCALE (default: Default).
     pub fn detect() -> Scale {
         match std::env::var("HELENE_BENCH_SCALE").as_deref() {
             Ok("smoke") => Scale::Smoke,
@@ -58,6 +62,7 @@ impl Scale {
         }
     }
 
+    /// The seed set benches average over at this scale.
     pub fn seeds(self) -> Vec<u64> {
         match self {
             Scale::Smoke => vec![0],
@@ -131,13 +136,16 @@ pub fn speedup_target(task: &str) -> f32 {
 
 /// One bench context: runtime + scale + report sink.
 pub struct Bench {
+    /// the runtime over the artifact directory
     pub rt: Runtime,
+    /// the detected bench scale
     pub scale: Scale,
     name: String,
     csv_rows: RefCell<Vec<(String, Vec<String>)>>,
 }
 
 impl Bench {
+    /// Bring up a bench harness (runtime + reports dir) for `name`.
     pub fn new(name: &str) -> Result<Bench> {
         // benches default to the oracle-attention twin graphs: identical
         // numerics, no interpret-mode serial-loop tax (DESIGN.md §Perf)
@@ -202,6 +210,7 @@ impl Bench {
         Ok(MeanStd::of(&accs))
     }
 
+    /// Zero-shot metric of the init params on a task (table baselines).
     pub fn zero_shot(&self, model: &str, variant: &str, task_name: &str) -> Result<f64> {
         let runner = ModelRunner::new(&self.rt, model, variant)?;
         let dims = runner.spec.dims.clone();
@@ -216,11 +225,12 @@ impl Bench {
         self.csv_rows.borrow_mut().push((label.to_string(), cells));
     }
 
+    /// Print a table header row.
     pub fn header(&self, cols: &[&str]) {
         println!("  {:<24} {}", "", cols.join("  "));
     }
 
-    /// Flush rows to reports/<bench>.csv.
+    /// Flush rows to `reports/<bench>.csv`.
     pub fn finish(&self, header: &[&str]) -> Result<()> {
         let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
             .join("reports")

@@ -17,6 +17,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse the TOML-lite text into a flat key map.
     pub fn parse(text: &str) -> Result<Config> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
@@ -48,6 +49,7 @@ impl Config {
         Ok(Config { values })
     }
 
+    /// Parse a config file from disk.
     pub fn load(path: &Path) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
@@ -63,20 +65,24 @@ impl Config {
         Ok(())
     }
 
+    /// Raw string value for `section.key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// String value with a default.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Required string value (missing key is an error).
     pub fn req_str(&self, key: &str) -> Result<String> {
         self.get(key)
             .map(|s| s.to_string())
             .ok_or_else(|| anyhow!("missing required config key {key:?}"))
     }
 
+    /// f64 value with a default; a non-numeric value is an error.
     pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -84,10 +90,12 @@ impl Config {
         }
     }
 
+    /// f32 value with a default ([`Self::f64`] narrowed).
     pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
         Ok(self.f64(key, default as f64)? as f32)
     }
 
+    /// usize value with a default; a non-integer value is an error.
     pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -95,6 +103,7 @@ impl Config {
         }
     }
 
+    /// u64 value with a default; a non-integer value is an error.
     pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -102,6 +111,7 @@ impl Config {
         }
     }
 
+    /// bool value with a default (`true/1/yes` and `false/0/no`).
     pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
             None => Ok(default),
@@ -124,6 +134,7 @@ impl Config {
             .unwrap_or_default()
     }
 
+    /// All `section.key` names in the config.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
     }

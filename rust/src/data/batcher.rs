@@ -11,9 +11,13 @@ use crate::util::rng::Pcg64;
 /// One fixed-size batch, row-major tokens.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Batch {
-    pub tokens: Vec<i32>, // len = batch * seq
-    pub labels: Vec<i32>, // len = batch
+    /// token ids, row-major (len = batch × seq)
+    pub tokens: Vec<i32>,
+    /// gold labels (len = batch; empty for LM batches)
+    pub labels: Vec<i32>,
+    /// batch size
     pub batch: usize,
+    /// sequence length
     pub seq: usize,
 }
 
@@ -29,6 +33,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Build a batcher over `examples` with fixed (batch, seq) shape.
     pub fn new(examples: &[Example], batch: usize, seq: usize, seed: u64, shuffle: bool) -> Self {
         assert!(!examples.is_empty(), "empty split");
         assert!(examples.iter().all(|e| e.tokens.len() == seq), "seq mismatch");
@@ -71,10 +76,12 @@ impl Batcher {
         self.examples.len().div_ceil(self.batch)
     }
 
+    /// Number of source examples.
     pub fn len(&self) -> usize {
         self.examples.len()
     }
 
+    /// Whether there are no source examples.
     pub fn is_empty(&self) -> bool {
         self.examples.is_empty()
     }

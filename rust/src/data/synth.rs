@@ -16,29 +16,38 @@
 
 use crate::util::rng::{mix64, Pcg64};
 
+/// Padding token id (shared across all synthetic tasks).
 pub const PAD: i32 = 0;
+/// Segment-separator token id (paired-shape tasks).
 pub const SEP: i32 = 1;
 const MARKER_BAND: usize = 48; // tokens 2..50 reserved for class markers
 
 /// Single-sequence vs paired-segment task shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TaskShape {
+    /// one sequence per example (e.g. sentiment)
     Single,
+    /// two segments joined by [`SEP`] (e.g. NLI pairs)
     Pair,
 }
 
 /// One labelled example.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Example {
+    /// token ids (unpadded)
     pub tokens: Vec<i32>,
+    /// gold class label
     pub label: i32,
 }
 
 /// Generator specification for one synthetic task.
 #[derive(Clone, Debug)]
 pub struct GenSpec {
+    /// task name (paper table key)
     pub name: &'static str,
+    /// single vs paired sequence shape
     pub shape: TaskShape,
+    /// number of classes
     pub n_classes: usize,
     /// markers planted per segment at signal = 1.0
     pub markers_per_seq: usize,
@@ -50,20 +59,24 @@ pub struct GenSpec {
 }
 
 impl GenSpec {
+    /// A generator spec with default signal/domain/marker settings.
     pub fn new(name: &'static str, shape: TaskShape, n_classes: usize) -> Self {
         Self { name, shape, n_classes, markers_per_seq: 6, signal: 1.0, domains: 1 }
     }
 
+    /// Set the class-signal strength (separability of the task).
     pub fn with_signal(mut self, signal: f64) -> Self {
         self.signal = signal;
         self
     }
 
+    /// Set the number of vocabulary domains examples are drawn from.
     pub fn with_domains(mut self, domains: usize) -> Self {
         self.domains = domains;
         self
     }
 
+    /// Set how many marker tokens encode the class signal.
     pub fn with_markers(mut self, m: usize) -> Self {
         self.markers_per_seq = m;
         self
@@ -73,10 +86,15 @@ impl GenSpec {
 /// A materialised dataset with deterministic splits.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// task name
     pub name: String,
+    /// number of classes
     pub n_classes: usize,
+    /// few-shot training split
     pub train: Vec<Example>,
+    /// development split (model selection / early stopping)
     pub dev: Vec<Example>,
+    /// held-out test split
     pub test: Vec<Example>,
 }
 
@@ -107,6 +125,7 @@ impl Dataset {
         Dataset { name: spec.name.to_string(), n_classes: spec.n_classes, train, dev, test }
     }
 
+    /// Accuracy of always predicting the most frequent test label.
     pub fn majority_class_acc(&self) -> f32 {
         let mut counts = vec![0usize; self.n_classes];
         for e in &self.test {

@@ -32,6 +32,11 @@
 //! println!("dev acc {:?}", report.history.best_acc());
 //! ```
 
+// Every public item carries documentation; the doc CI job builds with
+// RUSTDOCFLAGS="-D warnings", which turns this lint (and broken intra-doc
+// links) into a gate.
+#![warn(missing_docs)]
+
 pub mod bench;
 pub mod config;
 pub mod data;

@@ -136,6 +136,9 @@ train options:
   --seed S       run seed (default 0)
   --target F     early-stop dev metric target (speedup measurement)
   --lp           linear probing (train head only, fo-adam)
+  --tiled-sweeps N  tiled θ-streaming: sweep + staged upload in N-shard
+                 tiles (overlapped; 0/absent = monolithic uploads)
+  --codec C      θ-arena storage codec: f32 | bf16 (default: manifest)
   --config PATH  TOML-lite config file (CLI flags win)
 
 sweep: grid-search lr on dev (paper protocol):
@@ -193,6 +196,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let codec_str = args.str("codec", &cfg_file.str("train.codec", ""));
     if !codec_str.is_empty() {
         tc.codec = Some(helene::model::params::Codec::parse(&codec_str)?);
+    }
+    // tiled θ-streaming: --tiled-sweeps N / `train.tiled_sweeps = N` runs
+    // the probe and fused sweeps tile-by-tile (N shards per tile) against
+    // the staged-upload loss oracle (DESIGN.md §Runtime); 0 = monolithic
+    let tiled = args.usize("tiled-sweeps", cfg_file.usize("train.tiled_sweeps", 0)?)?;
+    if tiled > 0 {
+        tc.tiled_sweeps = Some(tiled);
     }
     let mut opt: Box<dyn optim::Optimizer> = if lp {
         tc.train_only_layers = Some(vec!["head".to_string()]);

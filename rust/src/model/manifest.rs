@@ -16,8 +16,11 @@ use crate::util::json::Json;
 /// Model kind, mirroring python `ModelConfig.kind`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelKind {
+    /// encoder classifier (RoBERTa-style suite)
     Cls,
+    /// decoder with a classification head (OPT-style suite)
     Dec,
+    /// pure language model (next-token loss only)
     Lm,
 }
 
@@ -40,45 +43,70 @@ impl ModelKind {
 /// Static dims of a compiled model.
 #[derive(Clone, Debug)]
 pub struct ModelDims {
+    /// vocabulary size
     pub vocab: usize,
+    /// residual width
     pub d_model: usize,
+    /// attention heads
     pub n_heads: usize,
+    /// transformer layers
     pub n_layers: usize,
+    /// feed-forward width
     pub d_ff: usize,
+    /// compiled sequence length
     pub max_seq: usize,
+    /// classifier head width
     pub n_classes: usize,
+    /// compiled batch size
     pub batch: usize,
+    /// LoRA adapter rank (lora variants)
     pub lora_rank: usize,
+    /// prefix length (prefix-tuning variants)
     pub prefix_len: usize,
 }
 
 /// One named parameter array (manifest order = execution order).
 #[derive(Clone, Debug)]
 pub struct ParamInfo {
+    /// array name (python parameter path)
     pub name: String,
+    /// array shape
     pub shape: Vec<usize>,
+    /// layer group this array belongs to (clipping / freezing granule)
     pub layer: String,
+    /// whether the variant trains this array by default
     pub trainable: bool,
+    /// element offset in the flat arena
     pub offset: usize,
+    /// element count
     pub size: usize,
 }
 
 /// One compiled entrypoint.
 #[derive(Clone, Debug)]
 pub struct EntrypointInfo {
+    /// HLO text artifact file name
     pub file: String,
+    /// positional input names
     pub inputs: Vec<String>,
+    /// output tuple element names
     pub outputs: Vec<String>,
 }
 
 /// One (model, variant) compilation unit.
 #[derive(Clone, Debug)]
 pub struct VariantSpec {
+    /// model family name
     pub model: String,
+    /// tuning variant (ft / lora / prefix)
     pub variant: String,
+    /// model kind (entrypoint signature family)
     pub kind: ModelKind,
+    /// compiled static dimensions
     pub dims: ModelDims,
+    /// initial-parameter payload file (always f32)
     pub params_bin: String,
+    /// total scalar parameter count
     pub n_params: usize,
     /// Default θ-arena storage codec for this variant (arena format v3 —
     /// DESIGN.md §Precision). The manifest's optional per-variant `"codec"`
@@ -87,11 +115,14 @@ pub struct VariantSpec {
     /// a bf16 default rounds once at load. `TrainConfig::codec` overrides
     /// this per run.
     pub codec: Codec,
+    /// parameter arrays in manifest (= arena) order
     pub params: Vec<ParamInfo>,
+    /// compiled entrypoints by name
     pub entrypoints: BTreeMap<String, EntrypointInfo>,
 }
 
 impl VariantSpec {
+    /// Look up a compiled entrypoint by name.
     pub fn entrypoint(&self, name: &str) -> Result<&EntrypointInfo> {
         self.entrypoints
             .get(name)
@@ -129,20 +160,27 @@ impl VariantSpec {
 /// A fused optimizer kernel artifact (L1 ablation path).
 #[derive(Clone, Debug)]
 pub struct FusedKernelInfo {
+    /// element count the kernel was compiled for
     pub n: usize,
+    /// fused HELENE update artifact
     pub update_file: String,
+    /// EMA-only artifact (ablation)
     pub ema_file: String,
 }
 
 /// The whole artifact directory.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// the artifact directory the manifest was loaded from
     pub dir: PathBuf,
+    /// all (model, variant) compilation units
     pub variants: BTreeMap<(String, String), VariantSpec>,
+    /// fused optimizer kernel artifacts
     pub fused: Vec<FusedKernelInfo>,
 }
 
 impl Manifest {
+    /// Parse `manifest.json` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -243,6 +281,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), variants, fused })
     }
 
+    /// Look up one (model, variant) spec.
     pub fn variant(&self, model: &str, variant: &str) -> Result<&VariantSpec> {
         self.variants
             .get(&(model.to_string(), variant.to_string()))
@@ -250,6 +289,7 @@ impl Manifest {
                 self.variants.keys().collect::<Vec<_>>()))
     }
 
+    /// Distinct model family names, sorted.
     pub fn models(&self) -> Vec<&str> {
         let mut names: Vec<&str> = self.variants.keys().map(|(m, _)| m.as_str()).collect();
         names.dedup();

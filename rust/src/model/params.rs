@@ -66,7 +66,9 @@ use crate::util::znorm;
 ///   one rounded store per sweep (store-once θ′ semantics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Codec {
+    /// plain f32 storage, 4 bytes/element (the historical arena format)
     F32,
+    /// bfloat16 bit patterns, 2 bytes/element (widen-on-load, round-on-store)
     Bf16,
 }
 
@@ -224,6 +226,86 @@ fn with_shard_f32<E: Element>(
 /// position-pure), so it can be retuned without invalidating seeds.
 pub const SHARD_SIZE: usize = 16_384;
 
+/// How the θ arena is cut into tiles for the tiled θ-streaming execution
+/// path (DESIGN.md §Runtime): a tile is a contiguous, shard-aligned run of
+/// [`SHARD_SIZE`]-element shards, the granule at which a sweep's output is
+/// handed to a staged-upload consumer (`runtime::StagedThetaSink`) so the
+/// next tile's sweep can overlap the previous tile's upload.
+///
+/// Tiling is pure scheduling: per-element arithmetic, z draws and (for
+/// bf16) rounding points are identical to the monolithic sweep, so a full
+/// tile cover is **bitwise** the corresponding whole-arena kernel call —
+/// for any tile size, in either codec (property-tested in
+/// `rust/tests/shard_determinism.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileSpec {
+    shards_per_tile: usize,
+}
+
+impl TileSpec {
+    /// A tile of `shards` consecutive shards (clamped to ≥ 1). Small tiles
+    /// maximize sweep/upload overlap and cache residency; large tiles
+    /// amortize per-tile dispatch. The bench's default of 4 shards keeps a
+    /// tile L2-resident (256 KiB of f32).
+    pub fn by_shards(shards: usize) -> TileSpec {
+        TileSpec { shards_per_tile: shards.max(1) }
+    }
+
+    /// One tile covering the whole arena — the degenerate tiling whose
+    /// single stage call is exactly the monolithic upload.
+    pub fn whole_arena() -> TileSpec {
+        TileSpec { shards_per_tile: usize::MAX }
+    }
+
+    /// Shards per tile.
+    pub fn shards_per_tile(self) -> usize {
+        self.shards_per_tile
+    }
+
+    /// Elements per (non-final) tile.
+    pub fn tile_elems(self) -> usize {
+        self.shards_per_tile.saturating_mul(SHARD_SIZE)
+    }
+}
+
+/// One tile of the θ arena: a contiguous element range whose start is
+/// [`SHARD_SIZE`]-aligned (only the arena's final tile may end short).
+/// Produced by [`ParamSet::theta_tiles`] in arena order; consumed by the
+/// per-tile sweep kernels and `runtime::StagedThetaSink::stage_tile`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ThetaTile {
+    /// position of this tile in the cover (0-based, arena order)
+    pub index: usize,
+    /// global element range in the flat arena
+    pub range: Range<usize>,
+}
+
+/// Owned iterator over a tile cover of the arena (holds no borrow, so the
+/// tile loop can mutate the `ParamSet` it came from). Yields tiles in
+/// arena order, exactly tiling `[0, n_params)`.
+#[derive(Clone, Debug)]
+pub struct TileIter {
+    n: usize,
+    tile_elems: usize,
+    next_start: usize,
+    index: usize,
+}
+
+impl Iterator for TileIter {
+    type Item = ThetaTile;
+
+    fn next(&mut self) -> Option<ThetaTile> {
+        if self.next_start >= self.n {
+            return None;
+        }
+        let end = self.n.min(self.next_start.saturating_add(self.tile_elems));
+        let tile = ThetaTile { index: self.index, range: self.next_start..end };
+        self.next_start = end;
+        self.index += 1;
+        Some(tile)
+    }
+}
+
 /// One maximal run of a single parameter array inside one shard. Shard
 /// visitors receive these so per-array metadata (layer-wise λ, masks,
 /// telemetry) can be resolved without a search.
@@ -269,9 +351,23 @@ pub enum GradSource<'a> {
     Exact(&'a ParamSet),
 }
 
+impl GradSource<'_> {
+    /// A fresh borrow of the same source. Sweep kernels consume a
+    /// `GradSource` per call, so the tiled loops reborrow one resolved
+    /// source for each per-tile call instead of re-validating the cache.
+    pub fn reborrow(&self) -> GradSource<'_> {
+        match self {
+            GradSource::Seeded(s) => GradSource::Seeded(*s),
+            GradSource::Cached(c) => GradSource::Cached(c),
+            GradSource::Exact(p) => GradSource::Exact(p),
+        }
+    }
+}
+
 /// Host-side parameters for one (model, variant).
 #[derive(Clone, Debug)]
 pub struct ParamSet {
+    /// the manifest layout this arena instantiates (array offsets/sizes)
     pub spec: Arc<VariantSpec>,
     /// flat contiguous arena, `spec.n_params` long, manifest element order,
     /// stored in the set's [`Codec`]
@@ -283,8 +379,14 @@ pub struct ParamSet {
     /// Arena-sweep odometer: incremented once per θ-mutating full pass
     /// (perturbations, cached/seeded updates, dual-stream kernels). The
     /// step-protocol cost model — and the `sweeps_per_step` bench gate — is
-    /// counted here rather than estimated (DESIGN.md §Perf).
+    /// counted here rather than estimated (DESIGN.md §Perf). Tile-granular
+    /// kernels accumulate into `tile_progress` instead and roll it over
+    /// into one counted sweep per full arena cover, so a tiled sweep and
+    /// its monolithic twin read the same odometer.
     sweeps: u64,
+    /// Elements swept by per-tile kernels since the last full cover (see
+    /// the `sweeps` field docs).
+    tile_progress: usize,
 }
 
 impl ParamSet {
@@ -293,7 +395,7 @@ impl ParamSet {
     pub fn from_flat(spec: Arc<VariantSpec>, data: Vec<f32>) -> ParamSet {
         assert_eq!(data.len(), spec.n_params, "arena length != spec.n_params");
         let train_mask = spec.params.iter().map(|p| p.trainable).collect();
-        ParamSet { spec, arena: Arena::F32(data), train_mask, sweeps: 0 }
+        ParamSet { spec, arena: Arena::F32(data), train_mask, sweeps: 0, tile_progress: 0 }
     }
 
     /// Build from raw bf16 bits in manifest layout (codec `Bf16` — the
@@ -301,7 +403,7 @@ impl ParamSet {
     pub fn from_bits(spec: Arc<VariantSpec>, bits: Vec<u16>) -> ParamSet {
         assert_eq!(bits.len(), spec.n_params, "arena length != spec.n_params");
         let train_mask = spec.params.iter().map(|p| p.trainable).collect();
-        ParamSet { spec, arena: Arena::Bf16(bits), train_mask, sweeps: 0 }
+        ParamSet { spec, arena: Arena::Bf16(bits), train_mask, sweeps: 0, tile_progress: 0 }
     }
 
     /// Build from per-array vectors (test/checkpoint convenience); the
@@ -377,6 +479,7 @@ impl ParamSet {
             arena: Arena::F32(vec![0f32; self.arena.len()]),
             train_mask: self.train_mask.clone(),
             sweeps: 0,
+            tile_progress: 0,
         }
     }
 
@@ -388,6 +491,7 @@ impl ParamSet {
             arena: Arena::F32(vec![value; self.arena.len()]),
             train_mask: self.train_mask.clone(),
             sweeps: 0,
+            tile_progress: 0,
         }
     }
 
@@ -480,8 +584,62 @@ impl ParamSet {
         self.sweeps
     }
 
+    /// Zero the sweep odometer (and any partial tiled-cover progress).
     pub fn reset_sweep_count(&mut self) {
         self.sweeps = 0;
+        self.tile_progress = 0;
+    }
+
+    /// Tiled-kernel odometer bookkeeping: a full tile cover of the arena
+    /// counts as exactly one sweep, matching the monolithic kernels.
+    fn note_tile_swept(&mut self, len: usize) {
+        self.tile_progress += len;
+        if self.tile_progress >= self.arena.len() {
+            self.tile_progress -= self.arena.len();
+            self.sweeps += 1;
+        }
+    }
+
+    /// Validate a tile against this arena: shard-aligned start, in-bounds
+    /// end. Tiles from [`Self::theta_tiles`] satisfy this by construction;
+    /// a hand-built tile that doesn't is a caller bug.
+    fn check_tile(&self, tile: &ThetaTile) {
+        assert_eq!(tile.range.start % SHARD_SIZE, 0, "tile start not shard-aligned");
+        assert!(
+            tile.range.start <= tile.range.end && tile.range.end <= self.arena.len(),
+            "tile {:?} out of bounds for arena of {}",
+            tile.range,
+            self.arena.len()
+        );
+    }
+
+    /// The tiles covering this arena under `spec`, in arena order (an
+    /// owned iterator — the tile loop is free to mutate `self`).
+    pub fn theta_tiles(&self, spec: TileSpec) -> TileIter {
+        TileIter {
+            n: self.arena.len(),
+            tile_elems: spec.tile_elems(),
+            next_start: 0,
+            index: 0,
+        }
+    }
+
+    /// Number of tiles [`Self::theta_tiles`] yields under `spec`.
+    pub fn n_tiles(&self, spec: TileSpec) -> usize {
+        self.arena.len().div_ceil(spec.tile_elems())
+    }
+
+    /// One tile's **values** as f32, codec-independent: borrowed for the
+    /// f32 codec, a widened (lossless) copy for bf16 — the per-tile twin
+    /// of [`Self::flat_f32`], and the form a tile crosses the staged-upload
+    /// boundary in (codec widening happens here, on the host side).
+    pub fn tile_f32(&self, tile: &ThetaTile) -> Cow<'_, [f32]> {
+        self.check_tile(tile);
+        let r = tile.range.clone();
+        match &self.arena {
+            Arena::F32(v) => Cow::Borrowed(&v[r]),
+            Arena::Bf16(v) => Cow::Owned(v[r].iter().map(|&b| bf16::widen(b)).collect()),
+        }
     }
 
     /// The whole arena as f32 (manifest element order). **F32 codec only**
@@ -518,6 +676,7 @@ impl ParamSet {
         &self.flat()[p.offset..p.offset + p.size]
     }
 
+    /// Mutable f32 view of array `i` (F32 codec only, like [`Self::flat_mut`]).
     pub fn array_mut(&mut self, i: usize) -> &mut [f32] {
         let p = &self.spec.params[i];
         let (offset, size) = (p.offset, p.size);
@@ -553,14 +712,17 @@ impl ParamSet {
         Ok(())
     }
 
+    /// Whether array `idx` is trainable under the effective mask.
     pub fn is_trainable(&self, idx: usize) -> bool {
         self.train_mask[idx]
     }
 
+    /// Number of parameter arrays in the manifest layout.
     pub fn n_arrays(&self) -> usize {
         self.spec.params.len()
     }
 
+    /// Total scalar parameter count (the arena length).
     pub fn n_params(&self) -> usize {
         self.spec.n_params
     }
@@ -604,15 +766,15 @@ impl ParamSet {
         let spec = &self.spec;
         let mask = &self.train_mask;
         match &mut self.arena {
-            Arena::F32(v) => perturb_impl(v, spec, mask, seed, scale),
-            Arena::Bf16(v) => perturb_impl(v, spec, mask, seed, scale),
+            Arena::F32(v) => perturb_impl(v, 0, spec, mask, seed, scale),
+            Arena::Bf16(v) => perturb_impl(v, 0, spec, mask, seed, scale),
         }
     }
 
     /// One-sweep composition of two seeded perturbations:
     /// `theta += scale_a·z(seed_a)` then `theta += scale_b·z(seed_b)` per
     /// trainable element — two separate f32 adds, so on the f32 codec the
-    /// result is bitwise the two-[`perturb_trainable`] sequence. On bf16
+    /// result is bitwise the two-[`Self::perturb_trainable`] sequence. On bf16
     /// it is the *store-once* form (one rounding instead of two — within
     /// half an ulp of the two-sweep composition, DESIGN.md §Precision).
     /// Both streams come from the dual-seed block kernel
@@ -745,7 +907,7 @@ impl ParamSet {
         }
     }
 
-    /// Like [`update_shards`] with one same-layout state arena (momentum).
+    /// Like [`Self::update_shards`] with one same-layout state arena (momentum).
     /// State arenas are always f32 — only θ is codec-typed.
     pub fn update_shards1<F>(&mut self, s1: &mut ParamSet, src: GradSource<'_>, f: F)
     where
@@ -763,7 +925,7 @@ impl ParamSet {
         }
     }
 
-    /// Like [`update_shards`] with two same-layout state arenas (m and h/v).
+    /// Like [`Self::update_shards`] with two same-layout state arenas (m and h/v).
     pub fn update_shards2<F>(
         &mut self,
         s1: &mut ParamSet,
@@ -787,7 +949,7 @@ impl ParamSet {
         }
     }
 
-    /// Dual-stream variant of [`update_shards`] for the cross-step fused
+    /// Dual-stream variant of [`Self::update_shards`] for the cross-step fused
     /// pipeline (§Perf): the visitor receives the NEXT step's z alongside
     /// the current gradient basis — `f(seg, θ_seg, g_seg, z_next_seg)` — so
     /// a single sweep can apply restore + update + next-step perturbation.
@@ -814,12 +976,12 @@ impl ParamSet {
         let mask = &self.train_mask;
         let cap = prep_capture(capture, n, next_seed);
         match &mut self.arena {
-            Arena::F32(v) => dual0_impl(v, spec, mask, g_all, seed, next_seed, cap, f),
-            Arena::Bf16(v) => dual0_impl(v, spec, mask, g_all, seed, next_seed, cap, f),
+            Arena::F32(v) => dual0_impl(v, 0, spec, mask, g_all, seed, next_seed, cap, f),
+            Arena::Bf16(v) => dual0_impl(v, 0, spec, mask, g_all, seed, next_seed, cap, f),
         }
     }
 
-    /// Like [`update_shards_dual`] with two same-layout state arenas
+    /// Like [`Self::update_shards_dual`] with two same-layout state arenas
     /// (momentum and Hessian/second moment):
     /// `f(seg, θ, s1, s2, g_seg, z_next_seg)`.
     pub fn update_shards2_dual<F>(
@@ -844,8 +1006,162 @@ impl ParamSet {
         let b = s2.state_f32_mut();
         let cap = prep_capture(capture, n, next_seed);
         match &mut self.arena {
-            Arena::F32(v) => dual2_impl(v, a, b, spec, mask, g_all, seed, next_seed, cap, f),
-            Arena::Bf16(v) => dual2_impl(v, a, b, spec, mask, g_all, seed, next_seed, cap, f),
+            Arena::F32(v) => dual2_impl(v, 0, a, b, spec, mask, g_all, seed, next_seed, cap, f),
+            Arena::Bf16(v) => dual2_impl(v, 0, a, b, spec, mask, g_all, seed, next_seed, cap, f),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Tile-granular sweep kernels (DESIGN.md §Runtime, tiled θ-streaming).
+    // Each is the restriction of its whole-arena twin to one shard-aligned
+    // tile: identical per-element arithmetic, z draws and (bf16) rounding
+    // points, so a full tile cover is bitwise the monolithic sweep. The
+    // sweep odometer advances by one per cover, not per tile.
+
+    /// Per-tile [`Self::perturb_trainable`]: `θ[j] += scale · z(seed)[j]`
+    /// for the trainable elements of `tile` only. Covering every tile of
+    /// [`Self::theta_tiles`] once equals one monolithic perturb bitwise.
+    pub fn perturb_tile(&mut self, tile: &ThetaTile, seed: u64, scale: f32) {
+        self.check_tile(tile);
+        self.note_tile_swept(tile.range.len());
+        let r = tile.range.clone();
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        match &mut self.arena {
+            Arena::F32(v) => perturb_impl(&mut v[r.clone()], r.start, spec, mask, seed, scale),
+            Arena::Bf16(v) => perturb_impl(&mut v[r.clone()], r.start, spec, mask, seed, scale),
+        }
+    }
+
+    /// Per-tile [`Self::perturb_from_cache`]: the cached-draw AXPY over one
+    /// tile. The cache must span the full arena (it is indexed globally);
+    /// the seed key is checked exactly like the monolithic kernel.
+    pub fn perturb_tile_from_cache(
+        &mut self,
+        tile: &ThetaTile,
+        cache: &ZCache,
+        seed: u64,
+        scale: f32,
+    ) {
+        self.check_tile(tile);
+        assert_eq!(cache.data.len(), self.arena.len(), "z-cache layout mismatch");
+        debug_assert!(
+            cache.filled && cache.seed == seed,
+            "stale z-cache: holds seed {} (filled: {}), step wants {seed}",
+            cache.seed,
+            cache.filled,
+        );
+        self.note_tile_swept(tile.range.len());
+        let r = tile.range.clone();
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        let cdata = &cache.data[r.clone()];
+        match &mut self.arena {
+            Arena::F32(v) => from_cache_impl(&mut v[r.clone()], r.start, cdata, spec, mask, scale),
+            Arena::Bf16(v) => from_cache_impl(&mut v[r.clone()], r.start, cdata, spec, mask, scale),
+        }
+    }
+
+    /// Per-tile [`Self::perturb_fill_cache`]: perturb one tile while
+    /// recording its draws into the (arena-sized, seed-keyed) cache. The
+    /// cache is re-keyed at a cover's first tile but reports
+    /// [`ZCache::is_filled`] only once every tile has been visited — it
+    /// then holds bitwise what the monolithic fill records; a cover
+    /// aborted mid-way leaves an unfilled cache that every seed-keyed
+    /// guard rejects.
+    pub fn perturb_tile_fill_cache(
+        &mut self,
+        tile: &ThetaTile,
+        cache: &mut ZCache,
+        seed: u64,
+        scale: f32,
+    ) {
+        self.check_tile(tile);
+        self.note_tile_swept(tile.range.len());
+        let n = self.arena.len();
+        cache.advance_tiled_fill(n, seed, &tile.range);
+        let r = tile.range.clone();
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        let cdata = &mut cache.data[r.clone()];
+        match &mut self.arena {
+            Arena::F32(v) => {
+                fill_cache_impl(&mut v[r.clone()], r.start, cdata, spec, mask, seed, scale)
+            }
+            Arena::Bf16(v) => {
+                fill_cache_impl(&mut v[r.clone()], r.start, cdata, spec, mask, seed, scale)
+            }
+        }
+    }
+
+    /// Per-tile [`Self::update_shards_dual`]: the dual-stream
+    /// restore+update+prefetch sweep restricted to one tile, so a staged
+    /// consumer can upload tile *t* while tile *t+1* is being produced.
+    /// `capture`, when given, records the tile's slice of the next step's
+    /// draws (zeros in inactive shards); after a full cover it holds
+    /// bitwise what the monolithic sweep captures, keyed to `next_seed`.
+    pub fn update_tile_dual<F>(
+        &mut self,
+        tile: &ThetaTile,
+        src: GradSource<'_>,
+        next_seed: u64,
+        capture: Option<&mut ZCache>,
+        f: F,
+    ) where
+        F: Fn(&ShardSeg, &mut [f32], &[f32], &[f32]) + Sync,
+    {
+        self.check_tile(tile);
+        self.note_tile_swept(tile.range.len());
+        let n = self.arena.len();
+        let (g_all, seed) = resolve_src(src, n);
+        let r = tile.range.clone();
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        let cap = prep_capture_tile(capture, n, next_seed, &r);
+        match &mut self.arena {
+            Arena::F32(v) => {
+                dual0_impl(&mut v[r.clone()], r.start, spec, mask, g_all, seed, next_seed, cap, f)
+            }
+            Arena::Bf16(v) => {
+                dual0_impl(&mut v[r.clone()], r.start, spec, mask, g_all, seed, next_seed, cap, f)
+            }
+        }
+    }
+
+    /// Per-tile [`Self::update_shards2_dual`] (two same-layout f32 state
+    /// arenas, e.g. momentum and Hessian): the optimizer half of the tiled
+    /// θ-streaming step for the two-state zoo members.
+    pub fn update_tile2_dual<F>(
+        &mut self,
+        tile: &ThetaTile,
+        s1: &mut ParamSet,
+        s2: &mut ParamSet,
+        src: GradSource<'_>,
+        next_seed: u64,
+        capture: Option<&mut ZCache>,
+        f: F,
+    ) where
+        F: Fn(&ShardSeg, &mut [f32], &mut [f32], &mut [f32], &[f32], &[f32]) + Sync,
+    {
+        assert_eq!(s1.arena.len(), self.arena.len(), "state arena layout mismatch");
+        assert_eq!(s2.arena.len(), self.arena.len(), "state arena layout mismatch");
+        self.check_tile(tile);
+        self.note_tile_swept(tile.range.len());
+        let n = self.arena.len();
+        let (g_all, seed) = resolve_src(src, n);
+        let r = tile.range.clone();
+        let spec = &self.spec;
+        let mask = &self.train_mask;
+        let a = &mut s1.state_f32_mut()[r.clone()];
+        let b = &mut s2.state_f32_mut()[r.clone()];
+        let cap = prep_capture_tile(capture, n, next_seed, &r);
+        match &mut self.arena {
+            Arena::F32(v) => dual2_impl(
+                &mut v[r.clone()], r.start, a, b, spec, mask, g_all, seed, next_seed, cap, f,
+            ),
+            Arena::Bf16(v) => dual2_impl(
+                &mut v[r.clone()], r.start, a, b, spec, mask, g_all, seed, next_seed, cap, f,
+            ),
         }
     }
 }
@@ -858,22 +1174,42 @@ fn prep_capture(capture: Option<&mut ZCache>, n: usize, next_seed: u64) -> Optio
         cache.data.resize(n, 0.0);
         cache.filled = true;
         cache.seed = next_seed;
+        cache.fill_progress = 0;
         cache.data.as_mut_slice()
+    })
+}
+
+/// Tile flavour of [`prep_capture`]: re-keys the buffer at a cover's
+/// first tile, marks it filled only when the cover completes
+/// ([`ZCache::advance_tiled_fill`]), and returns the tile's capture slice.
+fn prep_capture_tile<'c>(
+    capture: Option<&'c mut ZCache>,
+    n: usize,
+    next_seed: u64,
+    range: &Range<usize>,
+) -> Option<&'c mut [f32]> {
+    capture.map(|cache| {
+        cache.advance_tiled_fill(n, next_seed, range);
+        &mut cache.data[range.clone()]
     })
 }
 
 /// Seeded perturb sweep over one codec: `θ[j] += scale · z(seed)[j]` per
 /// trainable element, one rounded store per element for lossy codecs
-/// (`Element::axpy_normal`).
+/// (`Element::axpy_normal`). `base0` is the global arena offset of
+/// `data[0]` — 0 for a whole-arena sweep, the tile start for a tile sweep
+/// (shard-aligned, so the chunking reproduces the global shard boundaries
+/// and every position hashes identically).
 fn perturb_impl<E: Element>(
     data: &mut [E],
+    base0: usize,
     spec: &VariantSpec,
     mask: &[bool],
     seed: u64,
     scale: f32,
 ) {
     data.par_chunks_mut(SHARD_SIZE).enumerate().for_each(|(s, chunk)| {
-        let base = s * SHARD_SIZE;
+        let base = base0 + s * SHARD_SIZE;
         for seg in segments_in(spec, base, chunk.len()) {
             if mask[seg.array] {
                 E::axpy_normal(seed, seg.global.start as u64, scale, &mut chunk[seg.local.clone()]);
@@ -1020,6 +1356,7 @@ fn update2_impl<E: Element, F>(
 #[allow(clippy::too_many_arguments)]
 fn dual0_impl<E: Element, F>(
     data: &mut [E],
+    base0: usize,
     spec: &VariantSpec,
     mask: &[bool],
     g_all: Option<&[f32]>,
@@ -1038,7 +1375,7 @@ fn dual0_impl<E: Element, F>(
                 .for_each_init(
                     || (Vec::new(), Vec::new()),
                     |(scratch, stage), (s, (chunk, zc))| {
-                        let base = s * SHARD_SIZE;
+                        let base = base0 + s * SHARD_SIZE;
                         let segs = segments_in(spec, base, chunk.len());
                         if !segs.iter().any(|g| mask[g.array]) {
                             zc.fill(0.0);
@@ -1061,7 +1398,7 @@ fn dual0_impl<E: Element, F>(
             data.par_chunks_mut(SHARD_SIZE).enumerate().for_each_init(
                 || (Vec::new(), Vec::new(), Vec::new()),
                 |(scratch, zn, stage), (s, chunk)| {
-                    let base = s * SHARD_SIZE;
+                    let base = base0 + s * SHARD_SIZE;
                     let segs = segments_in(spec, base, chunk.len());
                     if !segs.iter().any(|g| mask[g.array]) {
                         return;
@@ -1086,6 +1423,7 @@ fn dual0_impl<E: Element, F>(
 #[allow(clippy::too_many_arguments)]
 fn dual2_impl<E: Element, F>(
     data: &mut [E],
+    base0: usize,
     s1: &mut [f32],
     s2: &mut [f32],
     spec: &VariantSpec,
@@ -1108,7 +1446,7 @@ fn dual2_impl<E: Element, F>(
                 .for_each_init(
                     || (Vec::new(), Vec::new()),
                     |(scratch, stage), (s, (((chunk, a), b), zc))| {
-                        let base = s * SHARD_SIZE;
+                        let base = base0 + s * SHARD_SIZE;
                         let segs = segments_in(spec, base, chunk.len());
                         if !segs.iter().any(|g| mask[g.array]) {
                             zc.fill(0.0);
@@ -1142,7 +1480,7 @@ fn dual2_impl<E: Element, F>(
                 .for_each_init(
                     || (Vec::new(), Vec::new(), Vec::new()),
                     |(scratch, zn, stage), (s, ((chunk, a), b))| {
-                        let base = s * SHARD_SIZE;
+                        let base = base0 + s * SHARD_SIZE;
                         let segs = segments_in(spec, base, chunk.len());
                         if !segs.iter().any(|g| mask[g.array]) {
                             return;
@@ -1274,6 +1612,9 @@ pub struct ZCache {
     data: Vec<f32>,
     filled: bool,
     seed: u64,
+    /// elements written by an in-flight tiled fill cover (0 when no cover
+    /// is open); `filled` only flips once a cover completes
+    fill_progress: usize,
 }
 
 impl ZCache {
@@ -1286,6 +1627,7 @@ impl ZCache {
         self.data.get(global)
     }
 
+    /// Whether the cache currently holds a complete set of draws.
     pub fn is_filled(&self) -> bool {
         self.filled
     }
@@ -1309,6 +1651,25 @@ impl ZCache {
     pub fn matches_seed(&self, params: &ParamSet, seed: u64) -> bool {
         self.matches(params) && self.seed == seed
     }
+
+    /// Tiled-fill bookkeeping: a cover re-keys the cache to `seed` at its
+    /// first tile but only marks it filled once the whole arena is
+    /// covered — a sweep aborted mid-cover leaves `filled == false`, so
+    /// every seed-keyed guard rejects the partial buffer loudly instead
+    /// of trusting a mix of two generations' draws.
+    fn advance_tiled_fill(&mut self, n: usize, seed: u64, range: &Range<usize>) {
+        if range.start == 0 {
+            self.data.resize(n, 0.0);
+            self.seed = seed;
+            self.filled = false;
+            self.fill_progress = 0;
+        }
+        self.fill_progress += range.len();
+        if self.fill_progress >= n {
+            self.filled = true;
+            self.fill_progress = 0;
+        }
+    }
 }
 
 impl ParamSet {
@@ -1319,12 +1680,13 @@ impl ParamSet {
         cache.data.resize(self.arena.len(), 0.0);
         cache.filled = true;
         cache.seed = seed;
+        cache.fill_progress = 0;
         let spec = &self.spec;
         let mask = &self.train_mask;
         let cdata = cache.data.as_mut_slice();
         match &mut self.arena {
-            Arena::F32(v) => fill_cache_impl(v, cdata, spec, mask, seed, scale),
-            Arena::Bf16(v) => fill_cache_impl(v, cdata, spec, mask, seed, scale),
+            Arena::F32(v) => fill_cache_impl(v, 0, cdata, spec, mask, seed, scale),
+            Arena::Bf16(v) => fill_cache_impl(v, 0, cdata, spec, mask, seed, scale),
         }
     }
 
@@ -1346,8 +1708,8 @@ impl ParamSet {
         let mask = &self.train_mask;
         let cdata = cache.data.as_slice();
         match &mut self.arena {
-            Arena::F32(v) => from_cache_impl(v, cdata, spec, mask, scale),
-            Arena::Bf16(v) => from_cache_impl(v, cdata, spec, mask, scale),
+            Arena::F32(v) => from_cache_impl(v, 0, cdata, spec, mask, scale),
+            Arena::Bf16(v) => from_cache_impl(v, 0, cdata, spec, mask, scale),
         }
     }
 }
@@ -1357,6 +1719,7 @@ impl ParamSet {
 /// trainable segment — in place for f32, widen+add+round for bf16.
 fn fill_cache_impl<E: Element>(
     data: &mut [E],
+    base0: usize,
     cdata: &mut [f32],
     spec: &VariantSpec,
     mask: &[bool],
@@ -1367,7 +1730,7 @@ fn fill_cache_impl<E: Element>(
         .zip(cdata.par_chunks_mut(SHARD_SIZE))
         .enumerate()
         .for_each(|(s, (th, zc))| {
-            let base = s * SHARD_SIZE;
+            let base = base0 + s * SHARD_SIZE;
             let segs = segments_in(spec, base, th.len());
             if !segs.iter().any(|g| mask[g.array]) {
                 zc.fill(0.0);
@@ -1387,6 +1750,7 @@ fn fill_cache_impl<E: Element>(
 /// `perturb_from_cache` over one codec (cached-draw AXPY sweep).
 fn from_cache_impl<E: Element>(
     data: &mut [E],
+    base0: usize,
     cdata: &[f32],
     spec: &VariantSpec,
     mask: &[bool],
@@ -1396,7 +1760,7 @@ fn from_cache_impl<E: Element>(
         .zip(cdata.par_chunks(SHARD_SIZE))
         .enumerate()
         .for_each(|(s, (th, zc))| {
-            let base = s * SHARD_SIZE;
+            let base = base0 + s * SHARD_SIZE;
             for seg in segments_in(spec, base, th.len()) {
                 if !mask[seg.array] {
                     continue;
@@ -1982,5 +2346,239 @@ mod tests {
     fn flat_panics_on_bf16() {
         let p = ParamSet::synthetic(&[64], 1.0).with_codec(Codec::Bf16);
         let _ = p.flat();
+    }
+
+    // -----------------------------------------------------------------
+    // Tiled θ-streaming battery (DESIGN.md §Runtime): tile covers are
+    // bitwise the monolithic sweeps, for any tile size and codec.
+
+    /// The tile sizes the properties sweep: single shard, an odd multiple,
+    /// and the degenerate whole-arena tiling.
+    fn tile_specs() -> [TileSpec; 3] {
+        [TileSpec::by_shards(1), TileSpec::by_shards(3), TileSpec::whole_arena()]
+    }
+
+    #[test]
+    fn theta_tiles_cover_the_arena_in_order() {
+        let p = ParamSet::synthetic(&[2 * SHARD_SIZE + 17, SHARD_SIZE - 5, 333], 0.0);
+        for spec in tile_specs() {
+            let tiles: Vec<ThetaTile> = p.theta_tiles(spec).collect();
+            assert_eq!(tiles.len(), p.n_tiles(spec));
+            let mut pos = 0usize;
+            for (i, t) in tiles.iter().enumerate() {
+                assert_eq!(t.index, i);
+                assert_eq!(t.range.start, pos, "gap before tile {i}");
+                assert_eq!(t.range.start % SHARD_SIZE, 0, "tile {i} misaligned");
+                assert!(!t.range.is_empty(), "empty tile {i}");
+                pos = t.range.end;
+            }
+            assert_eq!(pos, p.n_params(), "cover incomplete");
+        }
+        assert_eq!(p.n_tiles(TileSpec::whole_arena()), 1);
+        assert_eq!(p.n_tiles(TileSpec::by_shards(1)), p.n_shards());
+        // by_shards(0) clamps to 1 shard per tile
+        assert_eq!(TileSpec::by_shards(0).shards_per_tile(), 1);
+    }
+
+    #[test]
+    fn perturb_tile_cover_matches_monolithic_bitwise() {
+        for codec in [Codec::F32, Codec::Bf16] {
+            let base =
+                ParamSet::synthetic(&[SHARD_SIZE + 123, 2 * SHARD_SIZE, 777], 0.5).with_codec(codec);
+            let mut mono = base.clone();
+            mono.perturb_trainable(42, 1e-2);
+            for spec in tile_specs() {
+                let mut tiled = base.clone();
+                for tile in tiled.theta_tiles(spec) {
+                    tiled.perturb_tile(&tile, 42, 1e-2);
+                }
+                assert!(tiled.bits_eq(&mono), "{codec:?} {spec:?}");
+                // a full cover counts as exactly one sweep
+                assert_eq!(tiled.sweep_count(), 1, "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_odometer_counts_covers_not_tiles() {
+        let mut p = ParamSet::synthetic(&[3 * SHARD_SIZE + 9], 1.0);
+        let spec = TileSpec::by_shards(1);
+        let tiles: Vec<ThetaTile> = p.theta_tiles(spec).collect();
+        assert!(tiles.len() > 2);
+        // partial cover: no sweep counted yet
+        p.perturb_tile(&tiles[0], 7, 1e-3);
+        p.perturb_tile(&tiles[1], 7, 1e-3);
+        assert_eq!(p.sweep_count(), 0);
+        for t in &tiles[2..] {
+            p.perturb_tile(t, 7, 1e-3);
+        }
+        assert_eq!(p.sweep_count(), 1);
+        // two more full covers through different tile kernels
+        let cache = {
+            let mut c = ZCache::default();
+            let mut scratch = p.clone();
+            scratch.perturb_fill_cache(&mut c, 8, 1e-3);
+            c
+        };
+        for t in &tiles {
+            p.perturb_tile_from_cache(t, &cache, 8, 1e-3);
+        }
+        assert_eq!(p.sweep_count(), 2);
+        p.reset_sweep_count();
+        assert_eq!(p.sweep_count(), 0);
+    }
+
+    #[test]
+    fn tiled_fill_and_from_cache_match_monolithic() {
+        let base = ParamSet::synthetic(&[SHARD_SIZE - 3, SHARD_SIZE + 40, 512], 0.25);
+        let mut mono = base.clone();
+        let mut mono_cache = ZCache::default();
+        mono.perturb_fill_cache(&mut mono_cache, 9, 1e-3);
+        for spec in tile_specs() {
+            let mut tiled = base.clone();
+            let mut cache = ZCache::default();
+            for tile in tiled.theta_tiles(spec) {
+                tiled.perturb_tile_fill_cache(&tile, &mut cache, 9, 1e-3);
+            }
+            assert!(tiled.bits_eq(&mono), "{spec:?}");
+            assert!(cache.matches_seed(&tiled, 9));
+            assert_eq!(cache.data, mono_cache.data, "{spec:?}");
+            // and the cached inverse, tile by tile, restores like the
+            // monolithic cached restore
+            let mut back = tiled.clone();
+            for tile in back.theta_tiles(spec) {
+                back.perturb_tile_from_cache(&tile, &cache, 9, -1e-3);
+            }
+            let mut mono_back = mono.clone();
+            mono_back.perturb_from_cache(&mono_cache, 9, -1e-3);
+            assert!(back.bits_eq(&mono_back), "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn tiled_dual_update_matches_monolithic_and_captures_identically() {
+        let scale = -0.01f32;
+        let eps = 1e-3f32;
+        let (seed, next_seed) = (91u64, 92u64);
+        let body = move |_seg: &ShardSeg, th: &mut [f32], z: &[f32], zn: &[f32]| {
+            for (x, zv) in th.iter_mut().zip(z) {
+                *x += scale * zv;
+            }
+            for (x, zv) in th.iter_mut().zip(zn) {
+                *x += eps * zv;
+            }
+        };
+        for codec in [Codec::F32, Codec::Bf16] {
+            let base =
+                ParamSet::synthetic(&[SHARD_SIZE + 11, 2 * SHARD_SIZE - 7, 450], 0.5)
+                    .with_codec(codec);
+            let mut mono = base.clone();
+            let mut mono_cap = ZCache::default();
+            mono.update_shards_dual(GradSource::Seeded(seed), next_seed, Some(&mut mono_cap), body);
+            for spec in tile_specs() {
+                let mut tiled = base.clone();
+                let mut cap = ZCache::default();
+                let src = GradSource::Seeded(seed);
+                for tile in tiled.theta_tiles(spec) {
+                    tiled.update_tile_dual(&tile, src.reborrow(), next_seed, Some(&mut cap), body);
+                }
+                assert!(tiled.bits_eq(&mono), "{codec:?} {spec:?}");
+                assert_eq!(cap.data, mono_cap.data, "{codec:?} {spec:?}");
+                assert!(cap.matches_seed(&tiled, next_seed));
+                assert_eq!(tiled.sweep_count(), 1, "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_dual2_update_matches_monolithic_with_states() {
+        let base = ParamSet::synthetic(&[SHARD_SIZE / 2, SHARD_SIZE + 11, 600], 1.0);
+        let (seed, next_seed, eps) = (7u64, 8u64, 1e-3f32);
+        let body = move |_seg: &ShardSeg,
+                         th: &mut [f32],
+                         m: &mut [f32],
+                         v: &mut [f32],
+                         z: &[f32],
+                         zn: &[f32]| {
+            for j in 0..th.len() {
+                m[j] = 0.9 * m[j] + z[j];
+                v[j] = 0.99 * v[j] + z[j] * z[j];
+                th[j] -= 0.01 * m[j] / (v[j] + 1e-8);
+            }
+            for (x, zv) in th.iter_mut().zip(zn) {
+                *x += eps * zv;
+            }
+        };
+        let mut mono = base.clone();
+        let mut m1 = mono.zeros_like();
+        let mut v1 = mono.full_like(0.5);
+        let mut mono_cap = ZCache::default();
+        mono.update_shards2_dual(
+            &mut m1, &mut v1, GradSource::Seeded(seed), next_seed, Some(&mut mono_cap), body,
+        );
+        for spec in tile_specs() {
+            let mut tiled = base.clone();
+            let mut m2 = tiled.zeros_like();
+            let mut v2 = tiled.full_like(0.5);
+            let mut cap = ZCache::default();
+            let src = GradSource::Seeded(seed);
+            for tile in tiled.theta_tiles(spec) {
+                tiled.update_tile2_dual(
+                    &tile, &mut m2, &mut v2, src.reborrow(), next_seed, Some(&mut cap), body,
+                );
+            }
+            assert!(tiled.bits_eq(&mono), "{spec:?}");
+            assert!(m2.bits_eq(&m1) && v2.bits_eq(&v1), "{spec:?}");
+            assert_eq!(cap.data, mono_cap.data, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn partial_tile_fill_cover_leaves_cache_unfilled() {
+        // a fill cover re-keys the cache at tile 0 but must not report
+        // filled until the cover completes — an aborted staged sweep may
+        // not leave a trustable-looking cache holding mixed generations
+        let mut p = ParamSet::synthetic(&[3 * SHARD_SIZE], 1.0);
+        let tiles: Vec<ThetaTile> = p.theta_tiles(TileSpec::by_shards(1)).collect();
+        let mut cache = ZCache::default();
+        // a previous complete generation under another seed
+        p.perturb_fill_cache(&mut cache, 5, 1e-3);
+        assert!(cache.matches_seed(&p, 5));
+        // partial cover under the new seed: rejected by every guard
+        p.perturb_tile_fill_cache(&tiles[0], &mut cache, 6, 1e-3);
+        assert!(!cache.is_filled());
+        assert!(!cache.matches_seed(&p, 6) && !cache.matches_seed(&p, 5));
+        // completing the cover flips it filled under the new key
+        for t in &tiles[1..] {
+            p.perturb_tile_fill_cache(t, &mut cache, 6, 1e-3);
+        }
+        assert!(cache.matches_seed(&p, 6));
+        // same contract for the dual-sweep capture path
+        let mut cap = ZCache::default();
+        let src = GradSource::Seeded(7);
+        p.update_tile_dual(&tiles[0], src.reborrow(), 8, Some(&mut cap), |_s, _t, _z, _zn| {});
+        assert!(!cap.is_filled());
+        for t in &tiles[1..] {
+            p.update_tile_dual(t, src.reborrow(), 8, Some(&mut cap), |_s, _t, _z, _zn| {});
+        }
+        assert!(cap.matches_seed(&p, 8));
+    }
+
+    #[test]
+    fn tile_f32_widens_like_flat_f32() {
+        let p = ParamSet::synthetic(&[SHARD_SIZE + 200], 1.37).with_codec(Codec::Bf16);
+        let all = p.flat_f32();
+        for tile in p.theta_tiles(TileSpec::by_shards(1)) {
+            let tv = p.tile_f32(&tile);
+            assert_eq!(&all[tile.range.clone()], &tv[..]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not shard-aligned")]
+    fn misaligned_tile_rejected() {
+        let mut p = ParamSet::synthetic(&[SHARD_SIZE * 2], 1.0);
+        let bad = ThetaTile { index: 0, range: 7..SHARD_SIZE };
+        p.perturb_tile(&bad, 1, 1e-3);
     }
 }

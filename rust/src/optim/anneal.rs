@@ -12,11 +12,14 @@
 /// Annealing schedule, single hyper-parameter `t_anneal` (the paper's T).
 #[derive(Clone, Copy, Debug)]
 pub struct Anneal {
+    /// EMA decay β₁
     pub beta1: f32,
+    /// annealing time constant T
     pub t_anneal: f32,
 }
 
 impl Anneal {
+    /// An annealing schedule with decay `beta1` and time constant `t_anneal`.
     pub fn new(beta1: f32, t_anneal: f32) -> Self {
         assert!((0.0..1.0).contains(&beta1), "beta1 in [0,1)");
         assert!(t_anneal > 0.0);

@@ -23,8 +23,14 @@ use crate::model::params::SHARD_SIZE;
 /// Per-layer clipping threshold policy.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClipPolicy {
+    /// one λ shared by every layer (the paper's default, λ = 1)
     Constant(f32),
-    LayerScaled { r: f32 },
+    /// λ_i = r / (2·width_i): Theorem 1's width-scaled thresholds
+    LayerScaled {
+        /// the numerator r of the width-scaled rule
+        r: f32,
+    },
+    /// explicit λ per layer group, in manifest layer order
     PerLayer(Vec<f32>),
 }
 
@@ -93,7 +99,9 @@ pub fn lambda_per_array(policy: &ClipPolicy, spec: &VariantSpec) -> Result<Vec<f
 /// sharding plan both need the group ↔ shard correspondence).
 #[derive(Clone, Debug)]
 pub struct LayerSpans {
+    /// layer group name
     pub layer: String,
+    /// resolved clipping threshold λ for this group
     pub lambda: f32,
     /// maximal contiguous element ranges in the flat arena
     pub elem_ranges: Vec<Range<usize>>,

@@ -16,10 +16,12 @@ pub struct FoSgd {
 }
 
 impl FoSgd {
+    /// Plain SGD with learning rate `lr`.
     pub fn new(lr: f32) -> Self {
         Self { lr, weight_decay: 0.0 }
     }
 
+    /// Add (coupled) weight decay.
     pub fn with_weight_decay(mut self, wd: f32) -> Self {
         self.weight_decay = wd;
         self
@@ -73,6 +75,7 @@ pub struct FoAdam {
 }
 
 impl FoAdam {
+    /// Adam with the textbook defaults and learning rate `lr`.
     pub fn new(lr: f32) -> Self {
         Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0, t: 0, m: None, v: None }
     }

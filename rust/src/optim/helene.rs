@@ -48,15 +48,20 @@ pub enum MomentumMode {
     Annealed,
 }
 
+/// HELENE hyper-parameters (paper Algorithm 1 symbols).
 #[derive(Clone, Debug)]
 pub struct HeleneConfig {
+    /// learning rate η
     pub lr: f32,
+    /// momentum EMA decay β₁
     pub beta1: f32,
+    /// Hessian EMA decay β₂
     pub beta2: f32,
     /// γ scaling of the clipped Hessian in the denominator
     pub gamma: f32,
     /// ε numerical floor in the denominator
     pub eps: f32,
+    /// decoupled weight-decay coefficient
     pub weight_decay: f32,
     /// T in the annealing schedule
     pub t_anneal: f32,
@@ -64,7 +69,9 @@ pub struct HeleneConfig {
     pub hessian_every_k: usize,
     /// mini-batch size B in the A-GNB estimator
     pub batch_size: f32,
+    /// layer-wise clipping threshold policy (λ resolution)
     pub clip: ClipPolicy,
+    /// momentum accumulation mode (Figure 5 ladder)
     pub momentum: MomentumMode,
     /// disable the preconditioner entirely (ablation: denom = 1)
     pub use_hessian: bool,
@@ -119,6 +126,7 @@ pub fn from_config(cfg: &crate::config::Config, lr: f32) -> anyhow::Result<Helen
 
 /// The HELENE optimizer.
 pub struct Helene {
+    /// the hyper-parameters this instance runs with
     pub cfg: HeleneConfig,
     t: usize,
     m: Option<ParamSet>,
@@ -129,10 +137,12 @@ pub struct Helene {
     /// elements whose h fell below λ at the last Hessian refresh (per-run
     /// clip telemetry, cf. §B.3's trigger counting for Sophia)
     pub clipped_elems: u64,
+    /// elements visited by Hessian-floor checks (clip_fraction denominator)
     pub total_elems: u64,
 }
 
 impl Helene {
+    /// A HELENE instance over explicit hyper-parameters.
     pub fn new(cfg: HeleneConfig) -> Self {
         Self { cfg, t: 0, m: None, h: None, lambda: Vec::new(), fo: false, clipped_elems: 0, total_elems: 0 }
     }
@@ -145,21 +155,25 @@ impl Helene {
         Self::new(HeleneConfig::default())
     }
 
+    /// Override the learning rate.
     pub fn with_lr(mut self, lr: f32) -> Self {
         self.cfg.lr = lr;
         self
     }
 
+    /// Override the layer-wise clipping policy.
     pub fn with_clip(mut self, clip: ClipPolicy) -> Self {
         self.cfg.clip = clip;
         self
     }
 
+    /// Override the momentum mode (Figure 5 ablation).
     pub fn with_momentum(mut self, m: MomentumMode) -> Self {
         self.cfg.momentum = m;
         self
     }
 
+    /// Disable the preconditioner (ablation: denominator = 1).
     pub fn without_hessian(mut self) -> Self {
         self.cfg.use_hessian = false;
         self
@@ -189,7 +203,11 @@ impl Helene {
     /// identical to a separate restore sweep. A `prefetch` additionally
     /// applies the NEXT step's `+scale·z(seed)` after the update in the
     /// same sweep (`step_zo_fused_prefetch`) via the dual-stream kernel —
-    /// again per-element identical to a separate perturb sweep.
+    /// again per-element identical to a separate perturb sweep. A `staged`
+    /// request (requires `prefetch`) runs that dual-stream sweep
+    /// tile-by-tile, staging each finished tile into the sink
+    /// (`step_zo_fused_prefetch_staged`) — same arithmetic, pure
+    /// scheduling change.
     fn apply(
         &mut self,
         params: &mut ParamSet,
@@ -197,6 +215,7 @@ impl Helene {
         g_scale: f32,
         restore_eps: f32,
         prefetch: Option<PrefetchSpec<'_>>,
+        staged: Option<crate::optim::StagedSweep<'_>>,
     ) -> Result<()> {
         let (m, h) = match (&mut self.m, &mut self.h) {
             (Some(m), Some(h)) => (m, h),
@@ -267,24 +286,31 @@ impl Helene {
             }
         };
         match prefetch {
-            None => params.update_shards2(m, h, src, kernel),
+            None => {
+                debug_assert!(staged.is_none(), "staged sweeps require a prefetch");
+                params.update_shards2(m, h, src, kernel)
+            }
             Some(p) => {
                 let ps = p.scale;
-                params.update_shards2_dual(
-                    m,
-                    h,
-                    src,
-                    p.seed,
-                    p.capture,
-                    |seg, th, m_arr, h_arr, basis, zn| {
-                        kernel(seg, &mut *th, &mut *m_arr, &mut *h_arr, basis);
-                        // cross-step prefetch: the next step's +εz, the same
-                        // per-element op as a standalone perturb sweep
-                        for (x, zv) in th.iter_mut().zip(zn) {
-                            *x += ps * zv;
-                        }
-                    },
-                )
+                // cross-step prefetch: the next step's +εz, the same
+                // per-element op as a standalone perturb sweep
+                let dual = |seg: &crate::model::params::ShardSeg,
+                            th: &mut [f32],
+                            m_arr: &mut [f32],
+                            h_arr: &mut [f32],
+                            basis: &[f32],
+                            zn: &[f32]| {
+                    kernel(seg, &mut *th, &mut *m_arr, &mut *h_arr, basis);
+                    for (x, zv) in th.iter_mut().zip(zn) {
+                        *x += ps * zv;
+                    }
+                };
+                match staged {
+                    None => params.update_shards2_dual(m, h, src, p.seed, p.capture, dual),
+                    Some(sw) => crate::optim::staged_dual2_sweep(
+                        params, m, h, src, p.seed, p.capture, sw, dual,
+                    )?,
+                }
             }
         }
 
@@ -324,7 +350,7 @@ impl Optimizer for Helene {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0, None)
+        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0, None, None)
     }
 
     fn step_zo_cached(
@@ -335,7 +361,7 @@ impl Optimizer for Helene {
         cache: &crate::model::params::ZCache,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, Some(cache))?;
-        self.apply(params, src, g_scale, 0.0, None)
+        self.apply(params, src, g_scale, 0.0, None, None)
     }
 
     fn step_zo_fused(
@@ -347,7 +373,7 @@ impl Optimizer for Helene {
         cache: Option<&crate::model::params::ZCache>,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
-        self.apply(params, src, g_scale, eps, None)
+        self.apply(params, src, g_scale, eps, None, None)
     }
 
     fn step_zo_fused_prefetch(
@@ -362,14 +388,38 @@ impl Optimizer for Helene {
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
         let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
-        self.apply(params, src, g_scale, eps, Some(prefetch))
+        self.apply(params, src, g_scale, eps, Some(prefetch), None)
+    }
+
+    fn step_zo_fused_prefetch_staged(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+        tiles: crate::model::params::TileSpec,
+        sink: &mut dyn crate::runtime::StagedThetaSink,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
+        self.apply(
+            params,
+            src,
+            g_scale,
+            eps,
+            Some(prefetch),
+            Some(crate::optim::StagedSweep { tiles, sink }),
+        )
     }
 
     fn step_fo(&mut self, params: &mut ParamSet, grads: &ParamSet) -> Result<()> {
         if !self.fo {
             bail!("helene: FO step requires with_fo_hessian()");
         }
-        self.apply(params, GradSource::Exact(grads), 1.0, 0.0, None)
+        self.apply(params, GradSource::Exact(grads), 1.0, 0.0, None, None)
     }
 
     fn state_bytes(&self) -> usize {

@@ -10,8 +10,13 @@
 //! arithmetic, one fewer arena sweep — and with
 //! `TrainConfig::prefetch_perturb` the NEXT step's `+εz` rides in the same
 //! sweep too (`step_zo_fused_prefetch`), taking the steady state to two
-//! arena sweeps per step. First-order baselines receive the exact gradient
-//! from the compiled `loss_grad` entrypoint through `step_fo`.
+//! arena sweeps per step. Under `TrainConfig::tiled_sweeps` the fused
+//! prefetch sweep additionally runs **tile-by-tile** against a
+//! staged-upload loss oracle (`step_zo_fused_prefetch_staged`, DESIGN.md
+//! §Runtime) — HELENE, ZO-SGD, ZO-Adam and ZO-Sophia stream each finished
+//! tile while sweeping the next; everyone else inherits a
+//! sweep-then-stream default. First-order baselines receive the exact
+//! gradient from the compiled `loss_grad` entrypoint through `step_fo`.
 //!
 //! **Arena codecs** (DESIGN.md §Precision): every update runs through the
 //! `ParamSet::update_shards*` kernels, so the zoo is codec-agnostic — a
@@ -51,7 +56,53 @@ pub mod zo_sgd;
 
 use anyhow::Result;
 
-use crate::model::params::{GradSource, ParamSet, ZCache};
+use crate::model::params::{GradSource, ParamSet, ShardSeg, TileSpec, ZCache};
+use crate::runtime::StagedThetaSink;
+
+/// A staged-sweep request threaded through an optimizer's tiled fused
+/// step (DESIGN.md §Runtime): the fused restore+update+prefetch sweep
+/// runs tile-by-tile under `tiles`, handing each finished tile to `sink`
+/// so its upload overlaps the next tile's sweep.
+pub struct StagedSweep<'a> {
+    /// the tile cover to sweep in
+    pub tiles: TileSpec,
+    /// where finished tiles are staged
+    pub sink: &'a mut dyn StagedThetaSink,
+}
+
+/// The shared body of the two-state staged overrides (HELENE / ZO-Adam /
+/// ZO-Sophia): run one dual-stream `update_tile2_dual` sweep tile-by-tile
+/// under `sw.tiles`, staging each finished tile into `sw.sink` — so the
+/// sink contract (one generation, arena order, abort-on-error) lives in
+/// exactly one place instead of drifting across optimizers.
+pub(crate) fn staged_dual2_sweep<F>(
+    params: &mut ParamSet,
+    s1: &mut ParamSet,
+    s2: &mut ParamSet,
+    src: GradSource<'_>,
+    next_seed: u64,
+    mut capture: Option<&mut ZCache>,
+    sw: StagedSweep<'_>,
+    f: F,
+) -> Result<()>
+where
+    F: Fn(&ShardSeg, &mut [f32], &mut [f32], &mut [f32], &[f32], &[f32]) + Sync,
+{
+    sw.sink.begin_theta(params)?;
+    for tile in params.theta_tiles(sw.tiles) {
+        params.update_tile2_dual(
+            &tile,
+            s1,
+            s2,
+            src.reborrow(),
+            next_seed,
+            capture.as_deref_mut(),
+            &f,
+        );
+        sw.sink.stage_tile(&tile, &params.tile_f32(&tile))?;
+    }
+    sw.sink.finish_theta()
+}
 
 /// Resolve a ZO step's gradient basis: the z-cache when provided (validated
 /// against the parameter layout — a recoverable error, never the layout
@@ -187,6 +238,35 @@ pub trait Optimizer {
             None => params.perturb_trainable(next_seed, eps),
         }
         Ok(())
+    }
+
+    /// Tiled θ-streaming flavour of [`Self::step_zo_fused_prefetch`]
+    /// (DESIGN.md §Runtime): identical restore+update+prefetch arithmetic,
+    /// but executed tile-by-tile under `tiles`, streaming every finished
+    /// tile into `sink` — the next loss execution's staged upload — so the
+    /// upload of tile *t* overlaps the sweep of tile *t+1*. Bitwise
+    /// identical to the monolithic step for any tile size (tiling is pure
+    /// scheduling; property-tested). This default runs the monolithic step
+    /// and then streams the whole generation — correct for every optimizer
+    /// in the zoo, with staged consumption but no sweep/upload overlap;
+    /// HELENE, ZO-SGD, ZO-Adam and ZO-Sophia override it with a true
+    /// per-tile dual-stream sweep (`ParamSet::update_tile{,2}_dual`).
+    /// Sink errors abort the step like a failed fused sweep.
+    #[allow(clippy::too_many_arguments)]
+    fn step_zo_fused_prefetch_staged(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+        tiles: TileSpec,
+        sink: &mut dyn StagedThetaSink,
+    ) -> Result<()> {
+        self.step_zo_fused_prefetch(params, g_scale, seed, next_seed, eps, cache, next_cache)?;
+        crate::runtime::stream_theta(params, tiles, sink)
     }
 
     /// First-order step from exact gradients.

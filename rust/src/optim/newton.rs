@@ -12,6 +12,9 @@ use anyhow::{anyhow, Result};
 use crate::model::params::{GradSource, ParamSet};
 use crate::optim::{Optimizer, StepKind};
 
+/// Diagonal-Newton ZO baseline: precondition by the raw z²-weighted
+/// curvature estimate, no floor — the unstable reference HELENE's λ-clip
+/// fixes (Figures 1-2).
 pub struct ZoNewton {
     lr: f32,
     eps: f32,
@@ -20,6 +23,7 @@ pub struct ZoNewton {
 }
 
 impl ZoNewton {
+    /// Diagonal ZO-Newton with learning rate `lr`.
     pub fn new(lr: f32) -> Self {
         Self { lr, eps: 1e-12, batch_size: 8.0, h: None }
     }

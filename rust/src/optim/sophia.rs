@@ -25,27 +25,38 @@ use crate::model::params::{GradSource, ParamSet, PrefetchSpec};
 use crate::optim::{Optimizer, StepKind};
 use crate::util::rng::{mix64, Pcg64};
 
+/// ZO-Sophia: clipped second-order update from a GNB diagonal Hessian
+/// EMA, driven by the SPSA gradient estimate (Table 3 baseline).
 pub struct ZoSophia {
+    /// learning rate η
     pub lr: f32,
+    /// momentum EMA decay β₁
     pub beta1: f32,
+    /// Hessian EMA decay β₂
     pub beta2: f32,
+    /// γ scaling of the Hessian in the denominator
     pub gamma: f32,
+    /// numerical floor in the denominator
     pub eps: f32,
     /// update clip radius (Sophia uses ρ = 1)
     pub rho: f32,
+    /// Hessian refresh period k
     pub hessian_every_k: usize,
+    /// mini-batch size B in the GNB estimator
     pub batch_size: f32,
     /// emulate GNB's sampled-label noise on the Hessian estimate
     pub label_noise: f32,
     t: usize,
     m: Option<ParamSet>,
     h: Option<ParamSet>,
-    /// §B.3 telemetry: elements clamped at ±ρ / total updated, per window
+    /// §B.3 telemetry: elements clamped at ±ρ in the counting window
     pub clip_triggers: u64,
+    /// §B.3 telemetry: total elements updated in the counting window
     pub update_elems: u64,
 }
 
 impl ZoSophia {
+    /// ZO-Sophia with the paper's defaults and learning rate `lr`.
     pub fn new(lr: f32) -> Self {
         Self {
             lr,
@@ -65,6 +76,7 @@ impl ZoSophia {
         }
     }
 
+    /// Disable the GNB sampled-label noise emulation.
     pub fn without_label_noise(mut self) -> Self {
         self.label_noise = 0.0;
         self
@@ -76,6 +88,7 @@ impl ZoSophia {
         self.update_elems = 0;
     }
 
+    /// Fraction of updated elements clamped at ±ρ in the current window.
     pub fn trigger_rate(&self) -> f64 {
         if self.update_elems == 0 {
             0.0
@@ -98,6 +111,7 @@ impl ZoSophia {
         g_scale: f32,
         restore_eps: f32,
         prefetch: Option<PrefetchSpec<'_>>,
+        staged: Option<crate::optim::StagedSweep<'_>>,
     ) -> Result<()> {
         let (m, h) = match (&mut self.m, &mut self.h) {
             (Some(m), Some(h)) => (m, h),
@@ -147,24 +161,31 @@ impl ZoSophia {
             elems.fetch_add(th.len() as u64, Ordering::Relaxed);
         };
         match prefetch {
-            None => params.update_shards2(m, h, src, |_seg, th, m_arr, h_arr, z| {
-                kernel(th, m_arr, h_arr, z)
-            }),
+            None => {
+                debug_assert!(staged.is_none(), "staged sweeps require a prefetch");
+                params.update_shards2(m, h, src, |_seg, th, m_arr, h_arr, z| {
+                    kernel(th, m_arr, h_arr, z)
+                })
+            }
             Some(p) => {
                 let ps = p.scale;
-                params.update_shards2_dual(
-                    m,
-                    h,
-                    src,
-                    p.seed,
-                    p.capture,
-                    |_seg, th, m_arr, h_arr, z, zn| {
-                        kernel(&mut *th, &mut *m_arr, &mut *h_arr, z);
-                        for (x, zv) in th.iter_mut().zip(zn) {
-                            *x += ps * zv;
-                        }
-                    },
-                )
+                let dual = |_seg: &crate::model::params::ShardSeg,
+                            th: &mut [f32],
+                            m_arr: &mut [f32],
+                            h_arr: &mut [f32],
+                            z: &[f32],
+                            zn: &[f32]| {
+                    kernel(&mut *th, &mut *m_arr, &mut *h_arr, z);
+                    for (x, zv) in th.iter_mut().zip(zn) {
+                        *x += ps * zv;
+                    }
+                };
+                match staged {
+                    None => params.update_shards2_dual(m, h, src, p.seed, p.capture, dual),
+                    Some(sw) => crate::optim::staged_dual2_sweep(
+                        params, m, h, src, p.seed, p.capture, sw, dual,
+                    )?,
+                }
             }
         }
         self.clip_triggers += triggers.into_inner();
@@ -193,7 +214,7 @@ impl Optimizer for ZoSophia {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        self.apply(params, GradSource::Seeded(seed), seed, g_scale, 0.0, None)
+        self.apply(params, GradSource::Seeded(seed), seed, g_scale, 0.0, None, None)
     }
 
     fn step_zo_cached(
@@ -204,7 +225,7 @@ impl Optimizer for ZoSophia {
         cache: &crate::model::params::ZCache,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, Some(cache))?;
-        self.apply(params, src, seed, g_scale, 0.0, None)
+        self.apply(params, src, seed, g_scale, 0.0, None, None)
     }
 
     fn step_zo_fused(
@@ -216,7 +237,7 @@ impl Optimizer for ZoSophia {
         cache: Option<&crate::model::params::ZCache>,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
-        self.apply(params, src, seed, g_scale, eps, None)
+        self.apply(params, src, seed, g_scale, eps, None, None)
     }
 
     fn step_zo_fused_prefetch(
@@ -231,7 +252,32 @@ impl Optimizer for ZoSophia {
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
         let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
-        self.apply(params, src, seed, g_scale, eps, Some(prefetch))
+        self.apply(params, src, seed, g_scale, eps, Some(prefetch), None)
+    }
+
+    fn step_zo_fused_prefetch_staged(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+        tiles: crate::model::params::TileSpec,
+        sink: &mut dyn crate::runtime::StagedThetaSink,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
+        self.apply(
+            params,
+            src,
+            seed,
+            g_scale,
+            eps,
+            Some(prefetch),
+            Some(crate::optim::StagedSweep { tiles, sink }),
+        )
     }
 
     fn state_bytes(&self) -> usize {

@@ -40,7 +40,9 @@ pub struct SpsaEstimate {
     pub g_scale: f32,
     /// seed that regenerates this step's z
     pub seed: u64,
+    /// loss at the +ε probe point
     pub loss_plus: f32,
+    /// loss at the −ε probe point
     pub loss_minus: f32,
 }
 
@@ -188,6 +190,82 @@ where
         Ok(l) => l,
         Err(e) => {
             params.perturb_from_cache(cache, seed, eps);
+            return Err(e);
+        }
+    };
+    Ok(SpsaEstimate {
+        g_scale: (loss_plus - loss_minus) / (2.0 * eps),
+        seed,
+        loss_plus,
+        loss_minus,
+    })
+}
+
+/// Tiled flavour of the pre-perturbed probe pair (DESIGN.md §Runtime,
+/// tiled θ-streaming): θ must arrive at `θ + εz(seed)` **with that
+/// generation already staged in `sink`** (by the previous step's staged
+/// fused sweep or a staged prologue). L⁺ executes from the staged
+/// generation via `exec`; the `−2εz` sweep then runs **tile-by-tile**,
+/// streaming each tile into `sink` as soon as it is produced — on an
+/// async upload path tile *t+1*'s sweep overlaps tile *t*'s upload, and
+/// on the host the stage copy reads the cache-hot tile — and L⁻ executes
+/// from the freshly staged `θ − εz`. `cache` selects the cached-draw or
+/// seeded-regeneration sweep (`TrainConfig::cache_z`); arithmetic is
+/// bitwise the monolithic [`estimate_cached_preperturbed`] /
+/// [`estimate_preperturbed`] pair for any tile size.
+///
+/// On an `exec` error θ is restored to the unperturbed point exactly like
+/// the monolithic estimators; a `sink` error aborts mid-sweep and the
+/// caller must abandon the run (same contract as a failed fused sweep).
+pub fn estimate_staged_preperturbed<S, F>(
+    params: &mut ParamSet,
+    cache: Option<&crate::model::params::ZCache>,
+    seed: u64,
+    eps: f32,
+    tiles: crate::model::params::TileSpec,
+    sink: &mut S,
+    mut exec: F,
+) -> Result<SpsaEstimate>
+where
+    S: crate::runtime::StagedThetaSink + ?Sized,
+    F: FnMut(&mut S) -> Result<f32>,
+{
+    debug_assert!(eps > 0.0);
+    if let Some(c) = cache {
+        anyhow::ensure!(
+            c.matches_seed(params, seed),
+            "z-cache does not hold the draws of seed {seed} for this layout \
+             (holds seed {}, filled: {})",
+            c.seed(),
+            c.is_filled(),
+        );
+    }
+    let loss_plus = match exec(sink) {
+        Ok(l) => l,
+        Err(e) => {
+            match cache {
+                Some(c) => params.perturb_from_cache(c, seed, -eps),
+                None => params.perturb_trainable(seed, -eps),
+            }
+            return Err(e);
+        }
+    };
+    sink.begin_theta(params)?;
+    for tile in params.theta_tiles(tiles) {
+        match cache {
+            Some(c) => params.perturb_tile_from_cache(&tile, c, seed, -2.0 * eps),
+            None => params.perturb_tile(&tile, seed, -2.0 * eps),
+        }
+        sink.stage_tile(&tile, &params.tile_f32(&tile))?;
+    }
+    sink.finish_theta()?;
+    let loss_minus = match exec(sink) {
+        Ok(l) => l,
+        Err(e) => {
+            match cache {
+                Some(c) => params.perturb_from_cache(c, seed, eps),
+                None => params.perturb_trainable(seed, eps),
+            }
             return Err(e);
         }
     };
@@ -445,6 +523,92 @@ mod tests {
             assert!(r.is_err());
             assert!(p.max_abs_diff(&orig) < 1e-6, "fail_at {fail_at}");
         }
+    }
+
+    #[test]
+    fn staged_preperturbed_matches_monolithic_and_executes_from_stage() {
+        use crate::model::params::{TileSpec, ZCache};
+        use crate::runtime::{stream_theta, HostThetaStage};
+        let eps = 1e-3f32;
+        let flatq = |p: &ParamSet| Ok(p.flat().iter().map(|x| x * x).sum::<f32>());
+        for cached in [true, false] {
+            for tiles in [TileSpec::by_shards(1), TileSpec::whole_arena()] {
+                // monolithic reference
+                let mut a = toy_params(&[100, 28]);
+                let mut ca = ZCache::default();
+                a.perturb_fill_cache(&mut ca, 21, eps);
+                let ea = if cached {
+                    estimate_cached_preperturbed(&mut a, &ca, 21, eps, flatq).unwrap()
+                } else {
+                    estimate_preperturbed(&mut a, 21, eps, flatq).unwrap()
+                };
+
+                // staged path: every loss reads the STAGED bytes, proving
+                // the sink holds exactly θ at both probe points
+                let mut b = toy_params(&[100, 28]);
+                let mut cb = ZCache::default();
+                b.perturb_fill_cache(&mut cb, 21, eps);
+                let mut sink = HostThetaStage::default();
+                stream_theta(&b, tiles, &mut sink).unwrap();
+                let cache = if cached { Some(&cb) } else { None };
+                let eb = estimate_staged_preperturbed(
+                    &mut b, cache, 21, eps, tiles, &mut sink,
+                    |s: &mut HostThetaStage| Ok(s.values().iter().map(|x| x * x).sum::<f32>()),
+                )
+                .unwrap();
+                assert_eq!(ea.g_scale, eb.g_scale, "cached {cached}");
+                assert_eq!(ea.loss_plus, eb.loss_plus);
+                assert_eq!(ea.loss_minus, eb.loss_minus);
+                assert_eq!(a.flat(), b.flat()); // both parked at θ − εz
+            }
+        }
+    }
+
+    #[test]
+    fn staged_preperturbed_failing_exec_restores_params() {
+        use crate::model::params::{TileSpec, ZCache};
+        use crate::runtime::{stream_theta, HostThetaStage};
+        let eps = 1e-3f32;
+        for fail_at in [1usize, 2] {
+            let mut p = toy_params(&[48]);
+            let orig = p.clone();
+            let mut cache = ZCache::default();
+            p.perturb_fill_cache(&mut cache, 3, eps);
+            let mut sink = HostThetaStage::default();
+            stream_theta(&p, TileSpec::by_shards(1), &mut sink).unwrap();
+            let mut calls = 0;
+            let r = estimate_staged_preperturbed(
+                &mut p, Some(&cache), 3, eps, TileSpec::by_shards(1), &mut sink,
+                |_s: &mut HostThetaStage| {
+                    calls += 1;
+                    if calls == fail_at {
+                        anyhow::bail!("boom")
+                    }
+                    Ok(1.0)
+                },
+            );
+            assert!(r.is_err());
+            assert!(p.max_abs_diff(&orig) < 1e-6, "fail_at {fail_at}");
+        }
+    }
+
+    #[test]
+    fn staged_preperturbed_rejects_wrong_seed() {
+        use crate::model::params::{TileSpec, ZCache};
+        use crate::runtime::{stream_theta, HostThetaStage};
+        let eps = 1e-3f32;
+        let mut p = toy_params(&[32]);
+        let mut cache = ZCache::default();
+        p.perturb_fill_cache(&mut cache, 5, eps);
+        let mut sink = HostThetaStage::default();
+        stream_theta(&p, TileSpec::whole_arena(), &mut sink).unwrap();
+        let before = p.clone();
+        let r = estimate_staged_preperturbed(
+            &mut p, Some(&cache), 6, eps, TileSpec::whole_arena(), &mut sink,
+            |_s: &mut HostThetaStage| Ok(1.0),
+        );
+        assert!(r.is_err());
+        assert_eq!(p.flat(), before.flat());
     }
 
     #[test]

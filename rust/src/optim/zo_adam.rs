@@ -22,6 +22,7 @@ pub struct ZoAdam {
 }
 
 impl ZoAdam {
+    /// ZO-Adam (`decoupled = false`) or ZO-AdamW (`decoupled = true`).
     pub fn new(lr: f32, decoupled: bool) -> Self {
         Self {
             lr,
@@ -36,6 +37,7 @@ impl ZoAdam {
         }
     }
 
+    /// Override the weight-decay coefficient.
     pub fn with_weight_decay(mut self, wd: f32) -> Self {
         self.weight_decay = wd;
         self
@@ -53,6 +55,7 @@ impl ZoAdam {
         g_scale: f32,
         restore_eps: f32,
         prefetch: Option<PrefetchSpec<'_>>,
+        staged: Option<crate::optim::StagedSweep<'_>>,
     ) -> Result<()> {
         let (m, v) = match (&mut self.m, &mut self.v) {
             (Some(m), Some(v)) => (m, v),
@@ -82,24 +85,31 @@ impl ZoAdam {
             }
         };
         match prefetch {
-            None => params.update_shards2(m, v, src, |_seg, th, m_arr, v_arr, z| {
-                kernel(th, m_arr, v_arr, z)
-            }),
+            None => {
+                debug_assert!(staged.is_none(), "staged sweeps require a prefetch");
+                params.update_shards2(m, v, src, |_seg, th, m_arr, v_arr, z| {
+                    kernel(th, m_arr, v_arr, z)
+                })
+            }
             Some(p) => {
                 let ps = p.scale;
-                params.update_shards2_dual(
-                    m,
-                    v,
-                    src,
-                    p.seed,
-                    p.capture,
-                    |_seg, th, m_arr, v_arr, z, zn| {
-                        kernel(&mut *th, &mut *m_arr, &mut *v_arr, z);
-                        for (x, zv) in th.iter_mut().zip(zn) {
-                            *x += ps * zv;
-                        }
-                    },
-                )
+                let dual = |_seg: &crate::model::params::ShardSeg,
+                            th: &mut [f32],
+                            m_arr: &mut [f32],
+                            v_arr: &mut [f32],
+                            z: &[f32],
+                            zn: &[f32]| {
+                    kernel(&mut *th, &mut *m_arr, &mut *v_arr, z);
+                    for (x, zv) in th.iter_mut().zip(zn) {
+                        *x += ps * zv;
+                    }
+                };
+                match staged {
+                    None => params.update_shards2_dual(m, v, src, p.seed, p.capture, dual),
+                    Some(sw) => crate::optim::staged_dual2_sweep(
+                        params, m, v, src, p.seed, p.capture, sw, dual,
+                    )?,
+                }
             }
         }
         Ok(())
@@ -126,7 +136,7 @@ impl Optimizer for ZoAdam {
     }
 
     fn step_zo(&mut self, params: &mut ParamSet, g_scale: f32, seed: u64) -> Result<()> {
-        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0, None)
+        self.apply(params, GradSource::Seeded(seed), g_scale, 0.0, None, None)
     }
 
     fn step_zo_cached(
@@ -137,7 +147,7 @@ impl Optimizer for ZoAdam {
         cache: &crate::model::params::ZCache,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, Some(cache))?;
-        self.apply(params, src, g_scale, 0.0, None)
+        self.apply(params, src, g_scale, 0.0, None, None)
     }
 
     fn step_zo_fused(
@@ -149,7 +159,7 @@ impl Optimizer for ZoAdam {
         cache: Option<&crate::model::params::ZCache>,
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
-        self.apply(params, src, g_scale, eps, None)
+        self.apply(params, src, g_scale, eps, None, None)
     }
 
     fn step_zo_fused_prefetch(
@@ -164,7 +174,31 @@ impl Optimizer for ZoAdam {
     ) -> Result<()> {
         let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
         let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
-        self.apply(params, src, g_scale, eps, Some(prefetch))
+        self.apply(params, src, g_scale, eps, Some(prefetch), None)
+    }
+
+    fn step_zo_fused_prefetch_staged(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+        tiles: crate::model::params::TileSpec,
+        sink: &mut dyn crate::runtime::StagedThetaSink,
+    ) -> Result<()> {
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
+        self.apply(
+            params,
+            src,
+            g_scale,
+            eps,
+            Some(prefetch),
+            Some(crate::optim::StagedSweep { tiles, sink }),
+        )
     }
 
     fn state_bytes(&self) -> usize {
@@ -191,6 +225,7 @@ pub struct ZoLion {
 }
 
 impl ZoLion {
+    /// ZO-Lion with the reference defaults and learning rate `lr`.
     pub fn new(lr: f32) -> Self {
         Self { lr, beta1: 0.9, beta2: 0.99, weight_decay: 0.0, m: None }
     }

@@ -24,6 +24,7 @@ pub struct ZoSgd {
 }
 
 impl ZoSgd {
+    /// MeZO / ZO-SGD with learning rate `lr`.
     pub fn new(lr: f32) -> Self {
         Self { lr, forward_grad: false }
     }
@@ -123,6 +124,44 @@ impl Optimizer for ZoSgd {
         Ok(())
     }
 
+    fn step_zo_fused_prefetch_staged(
+        &mut self,
+        params: &mut ParamSet,
+        g_scale: f32,
+        seed: u64,
+        next_seed: u64,
+        eps: f32,
+        cache: Option<&crate::model::params::ZCache>,
+        mut next_cache: Option<&mut crate::model::params::ZCache>,
+        tiles: crate::model::params::TileSpec,
+        sink: &mut dyn crate::runtime::StagedThetaSink,
+    ) -> Result<()> {
+        // the dual-stream sweep of step_zo_fused_prefetch, tile-by-tile:
+        // each finished tile is staged while the next tile is swept
+        let scale = -self.lr * g_scale;
+        let src = crate::optim::zo_grad_src(self.name(), params, seed, cache)?;
+        sink.begin_theta(params)?;
+        for tile in params.theta_tiles(tiles) {
+            params.update_tile_dual(
+                &tile,
+                src.reborrow(),
+                next_seed,
+                next_cache.as_deref_mut(),
+                |_seg, th, z, zn| {
+                    for (x, zv) in th.iter_mut().zip(z) {
+                        *x += eps * zv;
+                        *x += scale * zv;
+                    }
+                    for (x, zv) in th.iter_mut().zip(zn) {
+                        *x += eps * zv;
+                    }
+                },
+            );
+            sink.stage_tile(&tile, &params.tile_f32(&tile))?;
+        }
+        sink.finish_theta()
+    }
+
     fn state_bytes(&self) -> usize {
         0 // MeZO's selling point: zero optimizer state
     }
@@ -144,6 +183,7 @@ pub struct ZoSgdMomentum {
 }
 
 impl ZoSgdMomentum {
+    /// Heavy-ball ZO-SGD with learning rate `lr` and momentum `mu`.
     pub fn new(lr: f32, mu: f32) -> Self {
         Self { lr, mu, m: None }
     }
@@ -191,11 +231,14 @@ impl Optimizer for ZoSgdMomentum {
 pub struct ZoSgdCons {
     lr: f32,
     last: Option<(f32, u64)>, // (g_scale, seed) of the pending step
+    /// steps kept (post-check loss did not increase)
     pub accepted: u64,
+    /// steps reverted by the post-check
     pub reverted: u64,
 }
 
 impl ZoSgdCons {
+    /// Conservative ZO-SGD with learning rate `lr`.
     pub fn new(lr: f32) -> Self {
         Self { lr, last: None, accepted: 0, reverted: 0 }
     }
@@ -255,6 +298,7 @@ pub struct ZoSgdSign {
 }
 
 impl ZoSgdSign {
+    /// ZO-signSGD with learning rate `lr`.
     pub fn new(lr: f32) -> Self {
         Self { lr }
     }

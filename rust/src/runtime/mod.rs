@@ -17,15 +17,148 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::model::manifest::Manifest;
+use crate::model::params::{ParamSet, ThetaTile, TileSpec};
 
 pub use model_runner::ModelRunner;
+
+/// A consumer of tiled θ uploads — the staged-upload half of the tiled
+/// θ-streaming execution path (DESIGN.md §Runtime).
+///
+/// The producer (a tiled sweep in `train::ZoProtocol` /
+/// `Optimizer::step_zo_fused_prefetch_staged`) streams one **generation**
+/// of θ per loss execution: `begin_theta`, then `stage_tile` for every
+/// tile of a [`TileSpec`] cover **in arena order, exactly once each**,
+/// then `finish_theta`. Values arrive as f32 — codec widening happens on
+/// the host side of this boundary (`ParamSet::tile_f32`), so the consumer
+/// is codec-agnostic. A new `begin_theta` discards whatever generation the
+/// sink held; the staged generation stays valid (and is what the loss
+/// executable must consume) until the next `begin_theta`.
+///
+/// Failure semantics: an error from any method aborts the step — the
+/// producer makes no attempt to roll the sweep back tile-by-tile, exactly
+/// like a failed fused optimizer sweep, and the caller abandons the run.
+///
+/// Implementors: [`HostThetaStage`] (a host-side staging arena — the bench
+/// and property-test oracle) and `ModelRunner`'s
+/// [`model_runner::RunnerThetaSink`] (stages into the runner, whose
+/// `loss_staged` then executes from the staged generation; with the
+/// vendored xla-stub the staging is host-side, and on a real PJRT backend
+/// this handle is where the double-buffered device upload slots in).
+pub trait StagedThetaSink {
+    /// Open a new θ generation for `params`' layout, discarding any
+    /// previously staged tiles.
+    fn begin_theta(&mut self, params: &ParamSet) -> Result<()>;
+    /// Accept the values of one tile (in arena order, exactly once per
+    /// generation).
+    fn stage_tile(&mut self, tile: &ThetaTile, values: &[f32]) -> Result<()>;
+    /// Close the generation; fails if the cover is incomplete.
+    fn finish_theta(&mut self) -> Result<()>;
+}
+
+/// Host-side staging arena implementing [`StagedThetaSink`]: one
+/// contiguous f32 buffer in arena layout, filled tile-by-tile. This is
+/// the overlap bench's upload target and the property tests' oracle (a
+/// loss computed from [`Self::values`] proves the staged bytes really are
+/// θ); `ModelRunner` embeds one as its staging area.
+#[derive(Clone, Debug, Default)]
+pub struct HostThetaStage {
+    data: Vec<f32>,
+    /// elements staged so far in the open generation; == `n` once complete
+    filled: usize,
+    n: usize,
+    complete: bool,
+}
+
+impl HostThetaStage {
+    /// Open a generation sized for `params` (the trait's `begin_theta`).
+    pub fn begin(&mut self, params: &ParamSet) -> Result<()> {
+        self.n = params.n_params();
+        self.data.resize(self.n, 0.0);
+        self.filled = 0;
+        self.complete = false;
+        Ok(())
+    }
+
+    /// Accept one tile (the trait's `stage_tile`): enforces the in-order,
+    /// exactly-once, in-bounds contract.
+    pub fn stage(&mut self, tile: &ThetaTile, values: &[f32]) -> Result<()> {
+        if tile.range.start != self.filled {
+            bail!(
+                "staged tile out of order: tile starts at {}, stage filled to {}",
+                tile.range.start,
+                self.filled
+            );
+        }
+        if tile.range.end > self.n || tile.range.len() != values.len() {
+            bail!(
+                "staged tile shape mismatch: range {:?} ({} values) against arena of {}",
+                tile.range,
+                values.len(),
+                self.n
+            );
+        }
+        self.data[tile.range.clone()].copy_from_slice(values);
+        self.filled = tile.range.end;
+        Ok(())
+    }
+
+    /// Close the generation (the trait's `finish_theta`).
+    pub fn finish(&mut self) -> Result<()> {
+        if self.filled != self.n {
+            bail!("staged θ incomplete: {} of {} elements", self.filled, self.n);
+        }
+        self.complete = true;
+        Ok(())
+    }
+
+    /// Whether a complete generation is staged.
+    pub fn is_complete(&self) -> bool {
+        self.complete
+    }
+
+    /// The staged θ values in arena layout (meaningful once
+    /// [`Self::is_complete`]).
+    pub fn values(&self) -> &[f32] {
+        &self.data[..self.n]
+    }
+}
+
+impl StagedThetaSink for HostThetaStage {
+    fn begin_theta(&mut self, params: &ParamSet) -> Result<()> {
+        self.begin(params)
+    }
+
+    fn stage_tile(&mut self, tile: &ThetaTile, values: &[f32]) -> Result<()> {
+        self.stage(tile, values)
+    }
+
+    fn finish_theta(&mut self) -> Result<()> {
+        self.finish()
+    }
+}
+
+/// Stream one full θ generation into a sink with no sweep to overlap —
+/// the monolithic-upload fallback (non-prefetch optimizers in tiled mode,
+/// and the default `Optimizer::step_zo_fused_prefetch_staged`).
+pub fn stream_theta<S: StagedThetaSink + ?Sized>(
+    params: &ParamSet,
+    tiles: TileSpec,
+    sink: &mut S,
+) -> Result<()> {
+    sink.begin_theta(params)?;
+    for tile in params.theta_tiles(tiles) {
+        sink.stage_tile(&tile, &params.tile_f32(&tile))?;
+    }
+    sink.finish_theta()
+}
 
 /// PJRT client + compiled-executable cache over an artifact directory.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// the parsed artifact manifest (models, variants, entrypoints)
     pub manifest: Manifest,
     dir: PathBuf,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
@@ -56,6 +189,7 @@ impl Runtime {
             .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
     }
 
+    /// The underlying PJRT client.
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
@@ -129,10 +263,13 @@ impl Runtime {
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
+    /// Executables compiled so far (tests assert no recompilation in the
+    /// training loop).
     pub fn compilations(&self) -> usize {
         self.compilations.get()
     }
 
+    /// Executions dispatched so far.
     pub fn executions(&self) -> usize {
         self.executions.get()
     }
@@ -189,5 +326,47 @@ mod tests {
     #[test]
     fn lit_shape_mismatch_rejected() {
         assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn host_stage_accepts_ordered_cover_and_matches_theta() {
+        use crate::model::params::SHARD_SIZE;
+        let p = ParamSet::synthetic(&[SHARD_SIZE + 100, 2 * SHARD_SIZE, 77], 0.5);
+        let mut stage = HostThetaStage::default();
+        let tiles = TileSpec::by_shards(1);
+        stream_theta(&p, tiles, &mut stage).unwrap();
+        assert!(stage.is_complete());
+        assert_eq!(stage.values(), &p.flat_f32()[..]);
+        // a fresh generation resets completeness until the cover closes
+        stage.begin(&p).unwrap();
+        assert!(!stage.is_complete());
+        stream_theta(&p, TileSpec::whole_arena(), &mut stage).unwrap();
+        assert!(stage.is_complete());
+    }
+
+    #[test]
+    fn host_stage_rejects_out_of_order_and_incomplete() {
+        use crate::model::params::SHARD_SIZE;
+        let p = ParamSet::synthetic(&[3 * SHARD_SIZE], 1.0);
+        let tiles: Vec<_> = p.theta_tiles(TileSpec::by_shards(1)).collect();
+        let mut stage = HostThetaStage::default();
+        stage.begin(&p).unwrap();
+        // skipping tile 0 violates the in-order contract
+        assert!(stage.stage(&tiles[1], &p.tile_f32(&tiles[1])).is_err());
+        stage.stage(&tiles[0], &p.tile_f32(&tiles[0])).unwrap();
+        // wrong value count for the tile
+        assert!(stage.stage(&tiles[1], &[0.0; 3]).is_err());
+        // closing before the cover completes fails
+        assert!(stage.finish().is_err());
+        assert!(!stage.is_complete());
+    }
+
+    #[test]
+    fn host_stage_widens_bf16_tiles() {
+        use crate::model::params::Codec;
+        let p = ParamSet::synthetic(&[5000], 1.37).with_codec(Codec::Bf16);
+        let mut stage = HostThetaStage::default();
+        stream_theta(&p, TileSpec::whole_arena(), &mut stage).unwrap();
+        assert_eq!(stage.values(), &p.flat_f32()[..]);
     }
 }

@@ -12,21 +12,30 @@
 //! on the §Perf fast path: *frozen* parameter arrays are staged to device
 //! buffers once and reused every call, so PEFT runs only re-upload the
 //! (tiny) trainable arrays + batch data each step.
+//!
+//! The tiled θ-streaming path (DESIGN.md §Runtime) replaces the per-call
+//! θ marshal entirely: the training protocol streams sweep output
+//! tile-by-tile into [`ModelRunner::theta_sink`] while the sweep runs, and
+//! [`ModelRunner::loss_staged`] executes the `loss` entrypoint from that
+//! staged generation.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::data::batcher::Batch;
 use crate::model::manifest::VariantSpec;
-use crate::model::params::ParamSet;
-use crate::runtime::{lit_f32, lit_i32, scalar_f32, Runtime};
+use crate::model::params::{ParamSet, ThetaTile};
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, HostThetaStage, Runtime, StagedThetaSink};
 
+/// Typed executor for one (model, variant)'s entrypoints (see module docs).
 pub struct ModelRunner<'rt> {
+    /// the runtime the entrypoints execute on
     pub rt: &'rt Runtime,
+    /// the (model, variant) layout this runner marshals
     pub spec: Arc<VariantSpec>,
     /// device-resident frozen params, keyed by array index
     frozen_cache: RefCell<HashMap<usize, Rc<xla::PjRtBuffer>>>,
@@ -35,9 +44,16 @@ pub struct ModelRunner<'rt> {
     /// numerics, faster on CPU where interpret-mode Pallas pays a serial
     /// grid-loop tax (DESIGN.md §Perf). Defaults from HELENE_REF_ATTN.
     ref_graph: bool,
+    /// staging arena for the tiled θ-streaming path: filled tile-by-tile
+    /// through [`RunnerThetaSink`], consumed by [`Self::loss_staged`].
+    /// Persistent across steps — in the steady state a step's fused sweep
+    /// stages the NEXT step's θ generation here while this step's upload
+    /// is (conceptually) still in flight.
+    staging: RefCell<HostThetaStage>,
 }
 
 impl<'rt> ModelRunner<'rt> {
+    /// Bind `model.variant` from the runtime's manifest.
     pub fn new(rt: &'rt Runtime, model: &str, variant: &str) -> Result<ModelRunner<'rt>> {
         let spec = Arc::new(rt.manifest.variant(model, variant)?.clone());
         let ref_graph = std::env::var("HELENE_REF_ATTN").map_or(false, |v| v != "0");
@@ -47,6 +63,7 @@ impl<'rt> ModelRunner<'rt> {
             frozen_cache: RefCell::new(HashMap::new()),
             buffer_mode: false,
             ref_graph,
+            staging: RefCell::new(HostThetaStage::default()),
         })
     }
 
@@ -71,8 +88,57 @@ impl<'rt> ModelRunner<'rt> {
         self.spec.entrypoint(base)
     }
 
+    /// Load the shipped initial parameters for this variant.
     pub fn load_init_params(&self) -> Result<ParamSet> {
         ParamSet::load_init(self.spec.clone(), &self.rt.manifest.dir)
+    }
+
+    /// A staged-upload handle into this runner's persistent staging arena
+    /// (the `StagedThetaSink` the tiled training protocol drives). Handles
+    /// are cheap and stateless — the staged generation lives in the runner,
+    /// so it survives across steps exactly as the steady-state pipeline
+    /// requires.
+    pub fn theta_sink(&self) -> RunnerThetaSink<'_, 'rt> {
+        RunnerThetaSink { runner: self }
+    }
+
+    /// Mini-batch loss executed from the **staged** θ generation (tiled
+    /// θ-streaming path): the parameter literals are marshalled from the
+    /// runner's staging arena — filled tile-by-tile via [`Self::theta_sink`]
+    /// while the producing sweep was still running — instead of from a
+    /// `ParamSet`. Fails if no complete generation is staged. The frozen
+    /// buffer cache is not consulted: a staged generation re-uploads every
+    /// array (composing the two is the ROADMAP's double-buffered-upload
+    /// follow-up).
+    pub fn loss_staged(&self, batch: &Batch) -> Result<f32> {
+        self.check_batch(batch)?;
+        ensure!(
+            !self.buffer_mode,
+            "loss_staged does not compose with the frozen-buffer cache yet \
+             (a staged generation re-uploads every array; composing the two \
+             is the ROADMAP's double-buffered-upload item) — run tiled \
+             sweeps without enable_buffer_cache"
+        );
+        let stage = self.staging.borrow();
+        ensure!(
+            stage.is_complete(),
+            "no complete θ generation staged — stream tiles through theta_sink() first"
+        );
+        let data = stage.values();
+        ensure!(
+            data.len() == self.spec.n_params,
+            "staged θ has {} elements, variant wants {}",
+            data.len(),
+            self.spec.n_params
+        );
+        let ep = self.pick("loss")?;
+        let mut args = Vec::with_capacity(self.spec.params.len() + 2);
+        for p in self.spec.params.iter() {
+            args.push(lit_f32(&data[p.offset..p.offset + p.size], &p.shape)?);
+        }
+        self.push_batch_args(&mut args, batch, true)?;
+        let out = self.rt.execute(&ep.file, &args)?;
+        scalar_f32(&out[0])
     }
 
     fn check_batch(&self, batch: &Batch) -> Result<()> {
@@ -109,11 +175,24 @@ impl<'rt> ModelRunner<'rt> {
                 out.push(lit_f32(&t.array_f32(i), &p.shape)?);
             }
         }
+        self.push_batch_args(&mut out, batch, with_labels)?;
+        Ok(out)
+    }
+
+    /// The batch tail of the positional calling convention (tokens, then
+    /// labels when the model kind takes them) — shared by [`Self::args`]
+    /// and the staged path so the convention lives in one place.
+    fn push_batch_args(
+        &self,
+        out: &mut Vec<xla::Literal>,
+        batch: &Batch,
+        with_labels: bool,
+    ) -> Result<()> {
         out.push(lit_i32(&batch.tokens, &[batch.batch, batch.seq])?);
         if with_labels && self.spec.kind.has_labels() {
             out.push(lit_i32(&batch.labels, &[batch.batch])?);
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Mini-batch loss via the ZO (Pallas-kernel) graph.
@@ -256,5 +335,35 @@ impl<'rt> ModelRunner<'rt> {
             labels.extend_from_slice(&b.labels[..take]);
         }
         Ok((preds, labels))
+    }
+}
+
+/// Borrowed [`StagedThetaSink`] handle over a [`ModelRunner`]: tiles land
+/// in the runner's persistent staging arena, from which
+/// [`ModelRunner::loss_staged`] marshals the loss executable's parameter
+/// literals. With the vendored xla-stub the staging is purely host-side;
+/// on a real PJRT backend this is the insertion point for per-array device
+/// buffers created as their bytes arrive (double-buffered upload).
+pub struct RunnerThetaSink<'a, 'rt> {
+    runner: &'a ModelRunner<'rt>,
+}
+
+impl StagedThetaSink for RunnerThetaSink<'_, '_> {
+    fn begin_theta(&mut self, params: &ParamSet) -> Result<()> {
+        ensure!(
+            params.n_params() == self.runner.spec.n_params,
+            "staged θ layout mismatch: params have {} elements, variant wants {}",
+            params.n_params(),
+            self.runner.spec.n_params
+        );
+        self.runner.staging.borrow_mut().begin(params)
+    }
+
+    fn stage_tile(&mut self, tile: &ThetaTile, values: &[f32]) -> Result<()> {
+        self.runner.staging.borrow_mut().stage(tile, values)
+    }
+
+    fn finish_theta(&mut self) -> Result<()> {
+        self.runner.staging.borrow_mut().finish()
     }
 }

@@ -13,15 +13,20 @@ use crate::data::synth::{Dataset, GenSpec, TaskShape};
 /// reports macro-F1 over buckets, everything else is accuracy).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Metric {
+    /// fraction of exact label matches
     Accuracy,
+    /// unweighted mean of per-class F1 scores
     MacroF1,
 }
 
 /// A registered task.
 #[derive(Clone, Debug)]
 pub struct Task {
+    /// task name (CLI / table key)
     pub name: &'static str,
+    /// synthetic-data generator spec
     pub spec: GenSpec,
+    /// the metric the paper reports for this task
     pub metric: Metric,
 }
 

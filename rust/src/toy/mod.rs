@@ -38,11 +38,13 @@ impl Default for Toy2d {
 }
 
 impl Toy2d {
+    /// L(x, y) = (x² − 1)² + ½·c·y².
     pub fn loss(&self, p: [f32; 2]) -> f32 {
         let [x, y] = p;
         (x * x - 1.0).powi(2) + 0.5 * self.c * y * y
     }
 
+    /// Exact gradient ∇L.
     pub fn grad(&self, p: [f32; 2]) -> [f32; 2] {
         let [x, y] = p;
         [4.0 * x * x * x - 4.0 * x, self.c * y]
@@ -54,6 +56,7 @@ impl Toy2d {
         [12.0 * x * x - 4.0, self.c]
     }
 
+    /// The two global minima (±1, 0).
     pub fn minima(&self) -> [[f32; 2]; 2] {
         [[-1.0, 0.0], [1.0, 0.0]]
     }
@@ -70,16 +73,21 @@ impl Toy2d {
 /// One optimizer trajectory on the toy problem.
 #[derive(Clone, Debug)]
 pub struct Trajectory {
+    /// method name (see [`ToyMethod::name`])
     pub name: &'static str,
+    /// visited (x, y) points, start included
     pub points: Vec<[f32; 2]>,
+    /// loss at each visited point
     pub losses: Vec<f32>,
 }
 
 impl Trajectory {
+    /// Loss at the last visited point.
     pub fn final_loss(&self) -> f32 {
         *self.losses.last().unwrap()
     }
 
+    /// Whether the trajectory blew up (non-finite or huge loss).
     pub fn diverged(&self) -> bool {
         self.losses.iter().any(|l| !l.is_finite() || *l > 1e6)
     }
@@ -88,17 +96,24 @@ impl Trajectory {
 /// Which native method to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ToyMethod {
+    /// plain gradient descent
     Gd,
+    /// Adam (first-moment/second-moment preconditioning)
     Adam,
+    /// diagonal Newton (no floor — the unstable reference)
     Newton,
+    /// Sophia (clipped second-order update)
     Sophia,
+    /// HELENE (λ-floored second-order update)
     Helene,
 }
 
 impl ToyMethod {
+    /// Every method, in the Figures 1-2 presentation order.
     pub const ALL: [ToyMethod; 5] =
         [ToyMethod::Gd, ToyMethod::Adam, ToyMethod::Newton, ToyMethod::Sophia, ToyMethod::Helene];
 
+    /// Canonical lower-case method name (CSV/report key).
     pub fn name(self) -> &'static str {
         match self {
             ToyMethod::Gd => "gd",
@@ -113,15 +128,20 @@ impl ToyMethod {
 /// Hyper-parameters for the toy runs (paper-style defaults).
 #[derive(Clone, Debug)]
 pub struct ToyConfig {
+    /// optimization steps per method
     pub steps: usize,
+    /// common start point
     pub start: [f32; 2],
+    /// learning rate shared by all methods
     pub lr: f32,
     /// gradient-noise scale σ: each observed gradient is g + σ·ξ, modelling
     /// the mini-batch / SPSA noise the real setting has
     pub noise: f32,
+    /// noise stream seed
     pub seed: u64,
-    /// HELENE Hessian floor λ and Sophia update clip ρ
+    /// HELENE Hessian floor λ
     pub lambda: f32,
+    /// Sophia update clip ρ
     pub rho: f32,
 }
 

@@ -8,7 +8,11 @@
 //!   optimizer update. Under the default `(prefetch_perturb, fuse_restore,
 //!   cache_z)` the steady-state step is the two-sweep cross-step pipeline
 //!   (§Perf); eval points are scheduled as pipeline boundaries so they see
-//!   pristine θ, bitwise identical to the classic protocol.
+//!   pristine θ, bitwise identical to the classic protocol. With
+//!   `TrainConfig::tiled_sweeps` the same state machine runs through
+//!   [`ZoProtocol::step_staged`] instead: every sweep streams its tiles
+//!   into the runner's staged-upload sink while it runs, and the loss
+//!   executes from the staged θ generation (DESIGN.md §Runtime).
 //! * `Fo` — one `loss_grad` execution, then `step_fo(grads)`.
 //! * `ForwardGrad` — seeded tangent, one `loss_jvp` execution, then
 //!   `step_zo(jvp, seed)` (the update regenerates the same tangent).
@@ -24,10 +28,10 @@ use anyhow::{Context, Result};
 
 use crate::data::batcher::Batcher;
 use crate::data::synth::Dataset;
-use crate::model::params::ParamSet;
+use crate::model::params::{ParamSet, TileSpec};
 use crate::optim::spsa;
 use crate::optim::{Optimizer, StepKind};
-use crate::runtime::ModelRunner;
+use crate::runtime::{stream_theta, ModelRunner, StagedThetaSink};
 use crate::tasks::{score, Metric};
 use crate::util::metrics::{History, TimingBreakdown, Timer};
 use crate::util::rng::mix64;
@@ -35,10 +39,13 @@ use crate::util::rng::mix64;
 /// Training-run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// training steps
     pub steps: usize,
     /// SPSA perturbation scale ε (MeZO default 1e-3)
     pub spsa_eps: f32,
+    /// run seed (data order and the per-step z seeds derive from it)
     pub seed: u64,
+    /// evaluate the dev metric every this many steps
     pub eval_every: usize,
     /// dev examples used per evaluation (cost control on 1 core)
     pub eval_examples: usize,
@@ -48,6 +55,7 @@ pub struct TrainConfig {
     pub max_wall_s: Option<f64>,
     /// restrict training to these layer groups (linear probing = ["head"])
     pub train_only_layers: Option<Vec<String>>,
+    /// the dev/test metric to score with
     pub metric: Metric,
     /// reuse the step's z draws across the SPSA probe passes (one extra
     /// trainable-sized buffer; ~2 RNG passes saved per step — §Perf)
@@ -74,6 +82,16 @@ pub struct TrainConfig {
     /// bitwise pipeline-vs-naive invariant is replaced by the documented
     /// per-step drift bound. Optimizer state stays f32 either way.
     pub codec: Option<crate::model::params::Codec>,
+    /// Tiled θ-streaming execution (DESIGN.md §Runtime): `Some(k)` runs
+    /// the `−2εz` and fused `restore+update+εz′` sweeps tile-by-tile in
+    /// tiles of `k` shards, streaming each finished tile into the loss
+    /// oracle's staged upload ([`crate::runtime::StagedThetaSink`]) so the
+    /// upload of tile *t* overlaps the sweep of tile *t+1* — steady-state
+    /// wall-clock approaches `max(sweep, upload+exec)` per phase instead
+    /// of their sum. Bitwise identical trajectories to the monolithic
+    /// protocol for any tile size (tiling is pure scheduling;
+    /// property-tested). `None` (default) keeps the monolithic uploads.
+    pub tiled_sweeps: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -93,6 +111,7 @@ impl Default for TrainConfig {
             prefetch_perturb: true,
             lr_schedule: None,
             codec: None,
+            tiled_sweeps: None,
         }
     }
 }
@@ -100,13 +119,19 @@ impl Default for TrainConfig {
 /// Result of one training run.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// per-step loss / metric / wall-time records
     pub history: History,
     /// first step at which the dev metric reached the target
     pub steps_to_target: Option<usize>,
+    /// dev metric at the last eval point
     pub final_dev_metric: f32,
+    /// test metric of the final parameters
     pub test_metric: f32,
+    /// total wall-clock seconds
     pub wall_s: f64,
+    /// named wall-time buckets (§Perf)
     pub timing: TimingBreakdown,
+    /// optimizer name the run used
     pub optimizer: String,
 }
 
@@ -182,6 +207,7 @@ pub struct ZoProtocol<'a> {
 }
 
 impl<'a> ZoProtocol<'a> {
+    /// A fresh protocol (no pending perturbation, empty caches).
     pub fn new(cfg: &'a TrainConfig) -> Self {
         Self {
             cfg,
@@ -336,6 +362,168 @@ impl<'a> ZoProtocol<'a> {
         Ok(est)
     }
 
+    /// One full ZO step through the **tiled θ-streaming** path (DESIGN.md
+    /// §Runtime, `TrainConfig::tiled_sweeps`): identical per-element
+    /// arithmetic and sweep accounting to [`Self::step`], but every θ
+    /// generation the loss oracle consumes is streamed into `sink`
+    /// tile-by-tile **while the producing sweep is still running** —
+    /// prologue perturb, `−2εz` probe sweep, and the optimizer's fused
+    /// prefetch sweep all hand tiles to the staged upload as they finish.
+    /// `exec` executes the loss from the sink's staged generation (e.g.
+    /// `ModelRunner::loss_staged`); in the steady state L⁺ needs no upload
+    /// work at all — its generation was staged by the previous step's
+    /// fused sweep. A protocol instance must be driven through either
+    /// this entry or [`Self::step`] consistently: the sink's staged
+    /// generation is part of the cross-step state.
+    ///
+    /// Optimizers outside the prefetch pipeline (post-check members) run
+    /// the classic protocol against the staged oracle — each probe streams
+    /// θ in full before executing (staged consumption, no overlap).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_staged<S, F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        tiles: TileSpec,
+        sink: &mut S,
+        exec: F,
+    ) -> Result<spsa::SpsaEstimate>
+    where
+        S: StagedThetaSink,
+        F: FnMut(&mut S) -> Result<f32>,
+    {
+        self.step_staged_inner(opt, params, step_seed, next_seed, boundary, tiles, sink, None, exec)
+    }
+
+    /// [`Self::step_staged`] with the probe-pair and update times recorded
+    /// under the `spsa_probes` / `optimizer_step` buckets.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_staged_timed<S, F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        tiles: TileSpec,
+        sink: &mut S,
+        timing: &mut TimingBreakdown,
+        exec: F,
+    ) -> Result<spsa::SpsaEstimate>
+    where
+        S: StagedThetaSink,
+        F: FnMut(&mut S) -> Result<f32>,
+    {
+        self.step_staged_inner(
+            opt, params, step_seed, next_seed, boundary, tiles, sink, Some(timing), exec,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step_staged_inner<S, F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        tiles: TileSpec,
+        sink: &mut S,
+        mut timing: Option<&mut TimingBreakdown>,
+        mut exec: F,
+    ) -> Result<spsa::SpsaEstimate>
+    where
+        S: StagedThetaSink,
+        F: FnMut(&mut S) -> Result<f32>,
+    {
+        let cfg = self.cfg;
+        if !self.prefetching(opt) {
+            // classic protocol against the staged oracle: every probe
+            // streams θ in full, then executes from the staged generation
+            let t = Timer::start();
+            let est = zo_estimate(cfg, params, &mut self.cur, step_seed, |p| {
+                stream_theta(p, tiles, sink)?;
+                exec(sink)
+            })?;
+            if let Some(tm) = timing.as_deref_mut() {
+                tm.add("spsa_probes", t.seconds());
+            }
+            let t = Timer::start();
+            zo_step(cfg, opt, params, &self.cur, &est)?;
+            if let Some(tm) = timing {
+                tm.add("optimizer_step", t.seconds());
+            }
+            return Ok(est);
+        }
+
+        // prologue: same seed-drift contract as the monolithic step; at a
+        // boundary entry the +εz perturb runs tile-by-tile, staging the
+        // L⁺ generation while it is produced
+        match self.pending {
+            Some(s) => {
+                anyhow::ensure!(
+                    s == step_seed,
+                    "prefetch pipeline seed drift: θ carries +εz of seed {s}, step wants {step_seed}"
+                );
+                self.pending = None;
+            }
+            None => {
+                sink.begin_theta(params)?;
+                for tile in params.theta_tiles(tiles) {
+                    if cfg.cache_z {
+                        params.perturb_tile_fill_cache(&tile, &mut self.cur, step_seed, cfg.spsa_eps);
+                    } else {
+                        params.perturb_tile(&tile, step_seed, cfg.spsa_eps);
+                    }
+                    sink.stage_tile(&tile, &params.tile_f32(&tile))?;
+                }
+                sink.finish_theta()?;
+            }
+        }
+
+        let t = Timer::start();
+        let cache_opt = if cfg.cache_z { Some(&self.cur) } else { None };
+        let est = spsa::estimate_staged_preperturbed(
+            params, cache_opt, step_seed, cfg.spsa_eps, tiles, sink, &mut exec,
+        )?;
+        if let Some(tm) = timing.as_deref_mut() {
+            tm.add("spsa_probes", t.seconds());
+        }
+
+        let t = Timer::start();
+        let cache = if cfg.cache_z { Some(&self.cur) } else { None };
+        if boundary {
+            // epilogue: restore+update only, monolithic — pristine θ for
+            // the eval / run end, and nothing to overlap (the next loss
+            // generation, if any, is staged by the next step's prologue)
+            opt.step_zo_fused(params, est.g_scale, est.seed, cfg.spsa_eps, cache)?;
+        } else {
+            let capture = if cfg.cache_z { Some(&mut self.next) } else { None };
+            opt.step_zo_fused_prefetch_staged(
+                params,
+                est.g_scale,
+                est.seed,
+                next_seed,
+                cfg.spsa_eps,
+                cache,
+                capture,
+                tiles,
+                sink,
+            )?;
+            if cfg.cache_z {
+                std::mem::swap(&mut self.cur, &mut self.next);
+            }
+            self.pending = Some(next_seed);
+        }
+        if let Some(tm) = timing {
+            tm.add("optimizer_step", t.seconds());
+        }
+        Ok(est)
+    }
+
     /// Tear down a pipeline cut short mid-flight (e.g. a wall-clock cap):
     /// removes a pending `+εz` so callers see unperturbed θ. Re-adding
     /// `−εz` costs one rounding per element — the same ulp drift bound as
@@ -353,11 +541,14 @@ impl<'a> ZoProtocol<'a> {
     }
 }
 
+/// The training-loop coordinator (see module docs).
 pub struct Trainer {
+    /// the run configuration
     pub cfg: TrainConfig,
 }
 
 impl Trainer {
+    /// A trainer over `cfg`.
     pub fn new(cfg: TrainConfig) -> Self {
         Self { cfg }
     }
@@ -374,6 +565,7 @@ impl Trainer {
         self.run_with_params(runner, data, opt, &mut params)
     }
 
+    /// Train `params` in place (the general entry [`Self::run`] wraps).
     pub fn run_with_params(
         &self,
         runner: &ModelRunner,
@@ -417,11 +609,25 @@ impl Trainer {
 
             let loss = match opt.kind() {
                 StepKind::Zo => {
-                    let est = proto
-                        .step_timed(opt, params, step_seed, next_seed, eval_point, &mut timing, |p| {
-                            runner.loss(p, &batch)
-                        })
-                        .context("ZO step (probe pair + update)")?;
+                    // tiled mode streams every θ generation through the
+                    // runner's staged-upload sink; the monolithic path
+                    // marshals θ per loss call as before
+                    let est = if let Some(shards) = cfg.tiled_sweeps {
+                        let tiles = TileSpec::by_shards(shards);
+                        let mut sink = runner.theta_sink();
+                        proto
+                            .step_staged_timed(
+                                opt, params, step_seed, next_seed, eval_point, tiles, &mut sink,
+                                &mut timing, |_s| runner.loss_staged(&batch),
+                            )
+                            .context("tiled ZO step (staged probe pair + update)")?
+                    } else {
+                        proto
+                            .step_timed(opt, params, step_seed, next_seed, eval_point, &mut timing, |p| {
+                                runner.loss(p, &batch)
+                            })
+                            .context("ZO step (probe pair + update)")?
+                    };
 
                     if opt.wants_post_check() {
                         let t = Timer::start();
@@ -556,9 +762,17 @@ pub fn run_lm(
         let boundary = step == batches.len(); // final θ must be pristine
         let loss = match opt.kind() {
             StepKind::Zo => {
-                let est = proto.step(opt, &mut params, step_seed, next_seed, boundary, |p| {
-                    runner.loss(p, &batch)
-                })?;
+                let est = if let Some(shards) = cfg.tiled_sweeps {
+                    let tiles = TileSpec::by_shards(shards);
+                    let mut sink = runner.theta_sink();
+                    proto.step_staged(opt, &mut params, step_seed, next_seed, boundary, tiles, &mut sink, |_s| {
+                        runner.loss_staged(&batch)
+                    })?
+                } else {
+                    proto.step(opt, &mut params, step_seed, next_seed, boundary, |p| {
+                        runner.loss(p, &batch)
+                    })?
+                };
                 est.loss()
             }
             StepKind::Fo => {
@@ -601,6 +815,67 @@ mod tests {
         // precision default: keep the manifest codec (f32 unless a variant
         // opts into bf16)
         assert!(c.codec.is_none());
+        // execution default: monolithic uploads (tiled streaming opt-in)
+        assert!(c.tiled_sweeps.is_none());
+    }
+
+    #[test]
+    fn staged_protocol_matches_monolithic_and_keeps_sweep_accounting() {
+        use crate::model::params::{Codec, ParamSet};
+        use crate::optim::helene::Helene;
+        use crate::runtime::HostThetaStage;
+        use crate::util::rng::mix64;
+
+        // the staged protocol must reproduce the monolithic pipeline's
+        // losses and θ bitwise while reading every loss from the STAGED
+        // generation, and its sweep accounting must be unchanged
+        let quad = |p: &ParamSet| Ok(p.flat_f32().iter().map(|x| x * x).sum::<f32>());
+        for codec in [Codec::F32, Codec::Bf16] {
+            for cache_z in [true, false] {
+                let cfg = TrainConfig { cache_z, ..Default::default() };
+                let base = ParamSet::synthetic(&[4000, 2000], 0.5).with_codec(codec);
+
+                let mut mono = base.clone();
+                let mut proto_m = ZoProtocol::new(&cfg);
+                let mut opt_m = Helene::paper_defaults().with_lr(1e-3);
+                opt_m.init(&mono);
+                let mut losses_m = Vec::new();
+
+                let mut tiled = base.clone();
+                let mut proto_t = ZoProtocol::new(&cfg);
+                let mut opt_t = Helene::paper_defaults().with_lr(1e-3);
+                opt_t.init(&tiled);
+                let mut sink = HostThetaStage::default();
+                let tiles = TileSpec::by_shards(1);
+                let mut losses_t = Vec::new();
+
+                for step in 1..=5u64 {
+                    let boundary = step == 3 || step == 5;
+                    let em = proto_m
+                        .step(&mut opt_m, &mut mono, mix64(0, step), mix64(0, step + 1), boundary, quad)
+                        .unwrap();
+                    losses_m.push(em.loss());
+
+                    let before = tiled.sweep_count();
+                    let et = proto_t
+                        .step_staged(
+                            &mut opt_t, &mut tiled, mix64(0, step), mix64(0, step + 1), boundary,
+                            tiles, &mut sink,
+                            |s: &mut HostThetaStage| {
+                                Ok(s.values().iter().map(|x| x * x).sum::<f32>())
+                            },
+                        )
+                        .unwrap();
+                    losses_t.push(et.loss());
+                    let sweeps = tiled.sweep_count() - before;
+                    let expect = if step == 1 || step == 4 { 3 } else { 2 };
+                    assert_eq!(sweeps, expect, "step {step} ({codec:?}, cache_z {cache_z})");
+                    assert_eq!(proto_t.pending().is_none(), boundary);
+                }
+                assert_eq!(losses_m, losses_t, "{codec:?} cache_z {cache_z}");
+                assert!(mono.bits_eq(&tiled), "{codec:?} cache_z {cache_z}");
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 /// LR schedule over a fixed step budget.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Schedule {
+    /// constant lr over the whole budget
     Constant,
     /// linear decay from lr to `end_factor`·lr over the budget
     Linear { end_factor: f32 },
@@ -17,13 +18,16 @@ pub enum Schedule {
 /// Schedule + warmup wrapper: multiply the base lr by `factor(step)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LrSchedule {
+    /// the decay shape
     pub schedule: Schedule,
     /// linear warmup steps from 0 → lr
     pub warmup: usize,
+    /// total step budget the decay spans
     pub total_steps: usize,
 }
 
 impl LrSchedule {
+    /// A constant schedule (factor 1.0 everywhere, no warmup).
     pub fn constant(total_steps: usize) -> Self {
         Self { schedule: Schedule::Constant, warmup: 0, total_steps }
     }

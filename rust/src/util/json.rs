@@ -8,19 +8,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A JSON value (numbers held as f64).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any number
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object (sorted keys — serialization is stable)
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with its byte position.
 #[derive(Debug)]
 pub struct JsonError {
+    /// what went wrong
     pub msg: String,
+    /// byte offset in the input
     pub pos: usize,
 }
 
@@ -33,6 +43,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -46,6 +57,7 @@ impl Json {
 
     // -- typed accessors (used by the manifest loader) --
 
+    /// Object member by key (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -53,11 +65,13 @@ impl Json {
         }
     }
 
+    /// Required object member (missing key is an error).
     pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
         self.get(key)
             .ok_or_else(|| anyhow::anyhow!("missing key {key:?} in json object"))
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -65,6 +79,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -72,10 +87,12 @@ impl Json {
         }
     }
 
+    /// The numeric payload truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -83,6 +100,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -90,6 +108,7 @@ impl Json {
         }
     }
 
+    /// The member map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),

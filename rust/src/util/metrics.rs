@@ -12,27 +12,35 @@ use std::time::Instant;
 /// One logged training step.
 #[derive(Clone, Debug)]
 pub struct StepRecord {
+    /// 1-based step index
     pub step: usize,
+    /// training loss reported for the step
     pub loss: f32,
+    /// dev metric, when the step was an eval point
     pub dev_acc: Option<f32>,
+    /// wall-clock seconds since the run started
     pub wall_s: f64,
 }
 
 /// Loss/accuracy history of one run.
 #[derive(Clone, Debug, Default)]
 pub struct History {
+    /// logged steps, in order
     pub records: Vec<StepRecord>,
 }
 
 impl History {
+    /// Append one step record.
     pub fn push(&mut self, step: usize, loss: f32, dev_acc: Option<f32>, wall_s: f64) {
         self.records.push(StepRecord { step, loss, dev_acc, wall_s });
     }
 
+    /// Loss of the last logged step.
     pub fn final_loss(&self) -> Option<f32> {
         self.records.last().map(|r| r.loss)
     }
 
+    /// Best dev metric seen across eval points.
     pub fn best_acc(&self) -> Option<f32> {
         self.records.iter().filter_map(|r| r.dev_acc).fold(None, |acc, a| {
             Some(acc.map_or(a, |b: f32| b.max(a)))
@@ -62,6 +70,7 @@ impl History {
         Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
     }
 
+    /// Write the history as `step,loss,dev_acc,wall_s` CSV.
     pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             fs::create_dir_all(dir)?;
@@ -80,12 +89,16 @@ impl History {
 /// runs" everywhere.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MeanStd {
+    /// sample mean
     pub mean: f64,
+    /// population standard deviation
     pub std: f64,
+    /// sample count
     pub n: usize,
 }
 
 impl MeanStd {
+    /// Mean ± std of a sample (NaN for an empty sample).
     pub fn of(xs: &[f64]) -> MeanStd {
         let n = xs.len();
         if n == 0 {
@@ -109,10 +122,12 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start the clock.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Seconds elapsed since [`Self::start`].
     pub fn seconds(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
@@ -126,6 +141,7 @@ pub struct TimingBreakdown {
 }
 
 impl TimingBreakdown {
+    /// Add `seconds` to the named bucket.
     pub fn add(&mut self, name: &str, seconds: f64) {
         if let Some(b) = self.buckets.iter_mut().find(|b| b.0 == name) {
             b.1 += seconds;
@@ -135,14 +151,17 @@ impl TimingBreakdown {
         }
     }
 
+    /// Sum over all buckets.
     pub fn total(&self) -> f64 {
         self.buckets.iter().map(|b| b.1).sum()
     }
 
+    /// Total seconds and call count of one bucket.
     pub fn get(&self, name: &str) -> Option<(f64, usize)> {
         self.buckets.iter().find(|b| b.0 == name).map(|b| (b.1, b.2))
     }
 
+    /// Render the buckets as an aligned table, largest first.
     pub fn report(&self) -> String {
         let total = self.total().max(1e-12);
         let mut rows: Vec<&(String, f64, usize)> = self.buckets.iter().collect();

@@ -21,31 +21,38 @@ pub fn default_cases() -> usize {
 /// Random-input generator handed to properties.
 pub struct Gen {
     rng: Pcg64,
+    /// the 0-based case index this generator belongs to
     pub case: usize,
 }
 
 impl Gen {
+    /// Generator for one property case (seeded, replayable).
     pub fn new(seed: u64, case: usize) -> Self {
         Self { rng: Pcg64::new_stream(seed, case as u64), case }
     }
 
+    /// Uniform u64.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Uniform usize in `[lo, hi)`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         debug_assert!(lo < hi);
         lo + self.rng.next_below((hi - lo) as u64) as usize
     }
 
+    /// Uniform f32 in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.rng.next_f32() * (hi - lo)
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.next_f64() * (hi - lo)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
@@ -61,10 +68,12 @@ impl Gen {
         }
     }
 
+    /// `len` uniform f32 values in `[lo, hi)`.
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
         (0..len).map(|_| self.f32_in(lo, hi)).collect()
     }
 
+    /// `len` standard-normal draws.
     pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
         let mut v = vec![0.0; len];
         self.rng.fill_normal(&mut v);
@@ -92,6 +101,8 @@ fn prop_seed(name: &str) -> u64 {
     h
 }
 
+/// [`forall`] with an explicit seed and case count (heavier properties
+/// pin both so runtime stays bounded and failures replay exactly).
 pub fn forall_seeded<F>(name: &str, seed: u64, cases: usize, prop: F)
 where
     F: Fn(&mut Gen) -> Result<(), String>,
@@ -112,6 +123,7 @@ pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
     diff <= atol + rtol * b.abs().max(a.abs())
 }
 
+/// Elementwise [`close`] over two slices with index-reporting errors.
 pub fn all_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
     if a.len() != b.len() {
         return Err(format!("length mismatch {} vs {}", a.len(), b.len()));

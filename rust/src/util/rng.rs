@@ -59,6 +59,7 @@ impl Pcg64 {
         Self::new(mix64(seed, mix64(stream, STREAM_TAG)))
     }
 
+    /// Next raw 64-bit output (PCG XSL-RR 128/64).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -188,10 +189,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// A SplitMix64 stream from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);

@@ -34,6 +34,15 @@
 //! retained v1 Ziggurat oracle is property-tested (moments, tail mass, and a
 //! two-sample KS bound in `util/rng.rs` + `tests/`).
 //!
+//! Every entry point is **position-offset**: the bulk kernels
+//! ([`fill_normal_at`], [`fill_normal_at2`]) and the fused AXPYs
+//! ([`axpy_normal_at`], [`axpy2_normal_at`], and their bf16 twins) all
+//! take an explicit stream `start`, and values never depend on block
+//! alignment or slice length. That is what makes the tiled θ-streaming
+//! sweeps (DESIGN.md §Runtime) free: a tile-granular kernel passes its
+//! global tile offset and draws exactly the monolithic sweep's values —
+//! no replay, no per-tile state, bitwise identical for any tile size.
+//!
 //! This module is the single source of truth for the v2 derivation rule;
 //! DESIGN.md §Sharding documents the stream-format break vs v1 (goldens and
 //! recorded traces regenerated).

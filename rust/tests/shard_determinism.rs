@@ -11,7 +11,8 @@
 //! through eval boundaries and mid-run mask changes, at any thread count.
 
 use helene::model::checkpoint;
-use helene::model::params::{Codec, ParamSet, ZCache, SHARD_SIZE};
+use helene::model::params::{Codec, ParamSet, TileSpec, ZCache, SHARD_SIZE};
+use helene::runtime::HostThetaStage;
 use helene::optim::helene::Helene;
 use helene::optim::sophia::ZoSophia;
 use helene::optim::zo_adam::ZoAdam;
@@ -362,6 +363,201 @@ fn run_prefetch_pipeline(
     }
     proto.finish(&mut p);
     Ok((p, losses))
+}
+
+/// The tiled θ-streaming pipeline (`ZoProtocol::step_staged`,
+/// `TrainConfig::tiled_sweeps`): identical protocol schedule to
+/// [`run_prefetch_pipeline`], but every sweep runs tile-by-tile against a
+/// [`HostThetaStage`] staged-upload sink — and, crucially, **every probe
+/// loss is computed from the STAGED bytes**, not from `params`, so any
+/// divergence between the staged generation and θ shows up as a loss
+/// mismatch against the monolithic run.
+fn run_staged_pipeline(
+    base: &ParamSet,
+    which: usize,
+    run_seed: u64,
+    eps: f32,
+    cache_z: bool,
+    tiles: TileSpec,
+) -> Result<(ParamSet, Vec<f32>), String> {
+    let cfg = TrainConfig {
+        spsa_eps: eps,
+        seed: run_seed,
+        cache_z,
+        fuse_restore: true,
+        prefetch_perturb: true,
+        tiled_sweeps: Some(tiles.shards_per_tile()),
+        ..Default::default()
+    };
+    let mut proto = ZoProtocol::new(&cfg);
+    let mut p = base.clone();
+    let mut opt = pipe_opt(which);
+    opt.init(&p);
+    let mut sink = HostThetaStage::default();
+    let mut losses = Vec::new();
+    for step in 1..=PIPE_STEPS {
+        let boundary = step == PIPE_EVAL_AT || step == PIPE_STEPS;
+        let entered_pristine = proto.pending().is_none();
+        let before = p.sweep_count();
+        let est = proto
+            .step_staged(
+                opt.as_mut(),
+                &mut p,
+                mix64(run_seed, step),
+                mix64(run_seed, step + 1),
+                boundary,
+                tiles,
+                &mut sink,
+                |s: &mut HostThetaStage| {
+                    Ok(s.values().iter().map(|x| (x - 0.3) * (x - 0.3)).sum::<f32>())
+                },
+            )
+            .map_err(|e| e.to_string())?;
+        losses.push(est.loss());
+        if which < 4 {
+            // the tiled odometer must agree with the monolithic pipeline:
+            // 2 sweeps/step steady state, +1 prologue after a boundary
+            let expect = if entered_pristine { 3 } else { 2 };
+            let got = p.sweep_count() - before;
+            if got != expect {
+                return Err(format!("step {step}: {got} sweeps, expected {expect}"));
+            }
+        }
+        if step == PIPE_EVAL_AT {
+            if proto.pending().is_some() {
+                return Err("eval boundary left a pending perturbation".into());
+            }
+            losses.push(pipe_loss(&p).unwrap());
+            p.restrict_to_layers(PIPE_MASK).map_err(|e| e.to_string())?;
+        }
+    }
+    proto.finish(&mut p);
+    Ok((p, losses))
+}
+
+/// The tile sizes the staged properties sweep: one shard, an odd
+/// multiple, and the degenerate whole-arena tiling.
+fn prop_tiles(g: &mut Gen) -> TileSpec {
+    match g.usize_in(0, 3) {
+        0 => TileSpec::by_shards(1),
+        1 => TileSpec::by_shards(3),
+        _ => TileSpec::whole_arena(),
+    }
+}
+
+#[test]
+fn prop_staged_pipeline_bitwise_matches_monolithic_pipeline() {
+    // Tiling is pure scheduling: for BOTH codecs the tiled pipeline must
+    // reproduce the monolithic prefetch pipeline bit-for-bit — final θ
+    // bits AND every loss (the staged losses are computed from the sink,
+    // so this also proves every staged generation was exactly θ). Through
+    // prefetch-pipeline-vs-naive above, the f32 tiled trajectory is
+    // transitively bitwise the naive 4-sweep protocol too. Covers all
+    // five optimizers (4 = the default-impl staged path), z-cache on/off,
+    // tile sizes {1 shard, odd multiple, whole arena}, eval boundary +
+    // mid-run mask narrowing included. (20 explicit cases.)
+    helene::util::prop::forall_seeded("staged-pipeline-vs-monolithic", 0x71_1ED5EED, 20, |g| {
+        let base = gen_multi_shard(g);
+        let base = if g.bool() { base.with_codec(Codec::Bf16) } else { base };
+        let run_seed = g.u64();
+        let eps = g.f32_in(1e-4, 1e-2);
+        let which = g.usize_in(0, 5);
+        let cache_z = g.bool();
+        let tiles = prop_tiles(g);
+        let (p_mono, l_mono) = run_prefetch_pipeline(&base, which, run_seed, eps, cache_z)?;
+        let (p_tile, l_tile) = run_staged_pipeline(&base, which, run_seed, eps, cache_z, tiles)?;
+        if l_mono != l_tile {
+            return Err(format!(
+                "losses diverged for optimizer {which} ({:?}, cache_z {cache_z}, {tiles:?}): \
+                 {l_mono:?} vs {l_tile:?}",
+                base.codec()
+            ));
+        }
+        if !p_mono.bits_eq(&p_tile) {
+            return Err(format!(
+                "final params diverged for optimizer {which} ({:?}, cache_z {cache_z}, {tiles:?})",
+                base.codec()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_staged_pipeline_bitwise_identical_across_thread_counts() {
+    // the per-tile sweeps keep the thread-count invariance: the whole
+    // tiled N-step pipeline (staged losses included) is bitwise identical
+    // across 1/2/4/8-worker pools (8 explicit cases)
+    helene::util::prop::forall_seeded("staged-pipeline-thread-invariance", 0x71_1ED7EAD, 8, |g| {
+        let base = gen_multi_shard(g);
+        let run_seed = g.u64();
+        let eps = g.f32_in(1e-4, 1e-2);
+        let which = g.usize_in(0, 5);
+        let cache_z = g.bool();
+        let tiles = prop_tiles(g);
+        let run = |threads: usize| -> Result<(ParamSet, Vec<f32>), String> {
+            with_pool(threads, || run_staged_pipeline(&base, which, run_seed, eps, cache_z, tiles))
+        };
+        let (p1, l1) = run(1)?;
+        for threads in [2, 4, 8] {
+            let (pt, lt) = run(threads)?;
+            if !p1.bits_eq(&pt) || l1 != lt {
+                return Err(format!(
+                    "staged pipeline differs at {threads} threads (optimizer {which}, {tiles:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn staged_pipeline_with_post_check_optimizer_falls_back_to_classic() {
+    // post-check members (ZO-SGD-Cons) are outside the prefetch pipeline;
+    // in tiled mode they run the classic protocol against the staged
+    // oracle — trajectories must match the plain classic run bitwise
+    use helene::optim::zo_sgd::ZoSgdCons;
+    let base = {
+        let mut g = Gen::new(0xC0_115EED, 0);
+        gen_multi_shard(&mut g)
+    };
+    let cfg = TrainConfig { spsa_eps: 1e-3, seed: 9, ..Default::default() };
+    let run = |staged: bool| -> (ParamSet, Vec<f32>) {
+        let mut proto = ZoProtocol::new(&cfg);
+        let mut p = base.clone();
+        let mut opt = ZoSgdCons::new(1e-3);
+        opt.init(&p);
+        let mut sink = HostThetaStage::default();
+        let mut losses = Vec::new();
+        for step in 1..=4u64 {
+            let est = if staged {
+                proto
+                    .step_staged(
+                        &mut opt,
+                        &mut p,
+                        mix64(9, step),
+                        mix64(9, step + 1),
+                        step == 4,
+                        TileSpec::by_shards(1),
+                        &mut sink,
+                        |s: &mut HostThetaStage| {
+                            Ok(s.values().iter().map(|x| (x - 0.3) * (x - 0.3)).sum::<f32>())
+                        },
+                    )
+                    .unwrap()
+            } else {
+                proto
+                    .step(&mut opt, &mut p, mix64(9, step), mix64(9, step + 1), step == 4, pipe_loss)
+                    .unwrap()
+            };
+            losses.push(est.loss());
+        }
+        (p, losses)
+    };
+    let (p_classic, l_classic) = run(false);
+    let (p_staged, l_staged) = run(true);
+    assert_eq!(l_classic, l_staged);
+    assert!(p_classic.bits_eq(&p_staged));
 }
 
 #[test]

@@ -16,13 +16,21 @@
 //! to execute compiled HLO artifacts; the API surface is signature-compatible
 //! with the subset the repo uses (see DESIGN.md §Runtime).
 
+// The stub is part of the workspace doc build (`cargo doc --workspace`
+// under -D warnings), so its public surface is documented like the main
+// crate's.
+#![warn(missing_docs)]
+
 use std::fmt;
 use std::path::Path;
 
 /// Stub error type (`std::error::Error + Send + Sync`, so `?` lifts it into
 /// `anyhow::Error` at the call sites).
 #[derive(Debug)]
-pub struct Error(pub String);
+pub struct Error(
+    /// human-readable failure description
+    pub String,
+);
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -32,6 +40,7 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+/// Stub result alias (mirrors the real crate's signatures).
 pub type Result<T> = std::result::Result<T, Error>;
 
 fn err<T>(msg: impl Into<String>) -> Result<T> {
@@ -44,11 +53,14 @@ const NO_BACKEND: &str = "PJRT backend unavailable (built against the vendored x
 /// Element dtypes the repo marshals.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ElementType {
+    /// 32-bit float
     F32,
+    /// 32-bit signed integer
     S32,
 }
 
 impl ElementType {
+    /// Bytes per element (both supported dtypes are 4-byte).
     pub fn byte_size(self) -> usize {
         4
     }
@@ -56,8 +68,11 @@ impl ElementType {
 
 /// Native scalar types a [`Literal`] can hold.
 pub trait Element: Copy + Default {
+    /// The dtype tag this native type marshals as.
     const TYPE: ElementType;
+    /// Decode from little-endian bytes.
     fn from_le(bytes: [u8; 4]) -> Self;
+    /// Encode to little-endian bytes.
     fn to_le(self) -> [u8; 4];
 }
 
@@ -90,6 +105,7 @@ pub struct Literal {
 }
 
 impl Literal {
+    /// Build a literal from a shape and raw little-endian bytes.
     pub fn create_from_shape_and_untyped_data(
         ty: ElementType,
         dims: &[usize],
@@ -106,18 +122,22 @@ impl Literal {
         Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
     }
 
+    /// Total element count (shape product).
     pub fn element_count(&self) -> usize {
         self.dims.iter().product()
     }
 
+    /// The literal's dtype.
     pub fn element_type(&self) -> ElementType {
         self.ty
     }
 
+    /// The literal's dimensions.
     pub fn shape(&self) -> &[usize] {
         &self.dims
     }
 
+    /// Decode all elements as `T` (dtype-checked).
     pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
         if T::TYPE != self.ty {
             return err(format!("literal is {:?}, asked for {:?}", self.ty, T::TYPE));
@@ -129,6 +149,7 @@ impl Literal {
             .collect())
     }
 
+    /// Decode element 0 as `T` (dtype-checked; scalars path).
     pub fn get_first_element<T: Element>(&self) -> Result<T> {
         if T::TYPE != self.ty {
             return err(format!("literal is {:?}, asked for {:?}", self.ty, T::TYPE));
@@ -150,10 +171,12 @@ impl Literal {
 /// Parsed HLO module (the stub only checks the file is readable).
 #[derive(Clone, Debug)]
 pub struct HloModuleProto {
+    /// the HLO text as read from disk
     pub text: String,
 }
 
 impl HloModuleProto {
+    /// Read an HLO-text artifact (the stub only checks readability).
     pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
         let path = path.as_ref();
         match std::fs::read_to_string(path) {
@@ -170,6 +193,7 @@ pub struct XlaComputation {
 }
 
 impl XlaComputation {
+    /// Wrap a parsed module as a computation handle.
     pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
         XlaComputation { _proto: proto.clone() }
     }
@@ -182,6 +206,7 @@ pub struct PjRtBuffer {
 }
 
 impl PjRtBuffer {
+    /// Copy the (host-backed) buffer back into a literal.
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Ok(self.lit.clone())
     }
@@ -194,6 +219,7 @@ pub struct PjRtLoadedExecutable {
 }
 
 impl PjRtLoadedExecutable {
+    /// Execute on device buffers — unreachable through the stub client.
     pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
         err(NO_BACKEND)
     }
@@ -207,14 +233,17 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// Bring up the CPU PJRT client — always errors in the stub.
     pub fn cpu() -> Result<PjRtClient> {
         err(NO_BACKEND)
     }
 
+    /// Compile a computation — unreachable through the stub client.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         err(NO_BACKEND)
     }
 
+    /// Stage a literal as a (host-backed) device buffer.
     pub fn buffer_from_host_literal(
         &self,
         _device: Option<usize>,
@@ -223,6 +252,9 @@ impl PjRtClient {
         Ok(PjRtBuffer { lit: lit.clone() })
     }
 
+    /// Stage raw host data as a (host-backed) device buffer. This is the
+    /// upload primitive the tiled θ-streaming path marshals through; real
+    /// builds hit the same signature on the native crate.
     pub fn buffer_from_host_buffer<T: Element>(
         &self,
         data: &[T],
@@ -236,10 +268,12 @@ impl PjRtClient {
         Ok(PjRtBuffer { lit: Literal::create_from_shape_and_untyped_data(T::TYPE, dims, &bytes)? })
     }
 
+    /// Backend platform name ("stub").
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Number of devices (0: the stub has no backend).
     pub fn device_count(&self) -> usize {
         0
     }
