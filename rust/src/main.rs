@@ -138,7 +138,12 @@ train options:
   --lp           linear probing (train head only, fo-adam)
   --tiled-sweeps N  tiled θ-streaming: sweep + staged upload in N-shard
                  tiles (overlapped; 0/absent = monolithic uploads)
+  --probes Q     batched ZO estimator: Q probe losses per step sharing one
+                 baseline, q+1 sweeps/step instead of 2 per probe
+                 (default 1; monolithic only, ZO optimizers only)
   --codec C      θ-arena storage codec: f32 | bf16 (default: manifest)
+  --eps-floor    clamp ε up to mean|θ|/256 when the bf16 codec would
+                 round the perturbation away (DESIGN.md §Precision)
   --config PATH  TOML-lite config file (CLI flags win)
 
 sweep: grid-search lr on dev (paper protocol):
@@ -204,6 +209,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     if tiled > 0 {
         tc.tiled_sweeps = Some(tiled);
     }
+    // multi-probe batched estimator: --probes Q / `train.probes = Q` runs
+    // Q one-sided probes sharing a baseline per step (q+1 sweeps, i.e.
+    // 1 + 1/q per probe; DESIGN.md §Perf). 1 = classic two-point SPSA
+    tc.probes = args.usize("probes", cfg_file.usize("train.probes", 1)?)?;
+    // bf16 ε-floor opt-in: clamp spsa_eps up to mean|θ|/256 so the probe
+    // perturbation survives a bf16 round-trip (DESIGN.md §Precision)
+    tc.eps_floor =
+        args.get("eps-floor").is_some() || cfg_file.u64("train.eps_floor", 0)? != 0;
     let mut opt: Box<dyn optim::Optimizer> = if lp {
         tc.train_only_layers = Some(vec!["head".to_string()]);
         optim::by_name("fo-adam", lr)?

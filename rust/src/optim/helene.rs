@@ -318,6 +318,103 @@ impl Helene {
         self.total_elems += total.into_inner();
         Ok(())
     }
+
+    /// Multi-probe update core (DESIGN.md §Perf): the gradient is the
+    /// combined q-probe basis `gz = Σᵢ gᵢ·zᵢ`, materialised per shard by
+    /// the k-seed kernels, so the A-GNB accumulation and the layer-wise
+    /// clipping consume all q probes in ONE pass — t advances once, m
+    /// receives one annealed injection of the averaged gradient, and the
+    /// Hessian refresh sees `ĥ = B·gz⊙gz`. θ arrives pristine (the multi
+    /// estimator restores it), so no fused restore is owed; `prefetch`
+    /// optionally arms the next step's probe 0 in the same sweep.
+    fn apply_multi(
+        &mut self,
+        params: &mut ParamSet,
+        probes: &[(u64, f32)],
+        prefetch: Option<PrefetchSpec<'_>>,
+    ) -> Result<()> {
+        let (m, h) = match (&mut self.m, &mut self.h) {
+            (Some(m), Some(h)) => (m, h),
+            _ => bail!("Helene::init not called"),
+        };
+        self.t += 1;
+        let t = self.t;
+        let alpha = match self.cfg.momentum {
+            MomentumMode::None => 1.0,
+            MomentumMode::Ema => 1.0 - self.cfg.beta1,
+            MomentumMode::Biased => 1.0,
+            MomentumMode::Annealed => {
+                Anneal::new(self.cfg.beta1, self.cfg.t_anneal).alpha(t)
+            }
+        };
+        let beta1 = if self.cfg.momentum == MomentumMode::None { 0.0 } else { self.cfg.beta1 };
+        let cfg = self.cfg.clone();
+        let refresh_h = cfg.use_hessian && t % cfg.hessian_every_k.max(1) == 1 % cfg.hessian_every_k.max(1);
+
+        let clipped = AtomicU64::new(0);
+        let total = AtomicU64::new(0);
+        let lambda = &self.lambda;
+
+        let kernel = |seg: &crate::model::params::ShardSeg,
+                      th: &mut [f32],
+                      m_arr: &mut [f32],
+                      h_arr: &mut [f32],
+                      gz: &[f32]| {
+            let lam = lambda[seg.array];
+            let mut seg_clipped = 0u64;
+            for j in 0..th.len() {
+                let g = gz[j];
+                m_arr[j] = beta1 * m_arr[j] + alpha * g;
+                if refresh_h {
+                    let h_hat = cfg.batch_size * g * g;
+                    h_arr[j] = cfg.beta2 * h_arr[j] + (1.0 - cfg.beta2) * h_hat;
+                }
+                let denom = if cfg.use_hessian {
+                    let hv = h_arr[j];
+                    if hv < lam {
+                        seg_clipped += 1;
+                    }
+                    cfg.gamma * hv.max(lam) + cfg.eps
+                } else {
+                    1.0
+                };
+                th[j] -= cfg.lr * cfg.weight_decay * th[j];
+                th[j] -= cfg.lr * m_arr[j] / denom;
+            }
+            if cfg.use_hessian {
+                clipped.fetch_add(seg_clipped, Ordering::Relaxed);
+                total.fetch_add(th.len() as u64, Ordering::Relaxed);
+            }
+        };
+        match prefetch {
+            None => params.update_shards2_multi(m, h, probes, kernel),
+            Some(p) => {
+                let ps = p.scale;
+                params.update_shards2_multi_dual(
+                    m,
+                    h,
+                    probes,
+                    p.seed,
+                    p.capture,
+                    |seg: &crate::model::params::ShardSeg,
+                     th: &mut [f32],
+                     m_arr: &mut [f32],
+                     h_arr: &mut [f32],
+                     gz: &[f32],
+                     zn: &[f32]| {
+                        kernel(seg, &mut *th, &mut *m_arr, &mut *h_arr, gz);
+                        for (x, zv) in th.iter_mut().zip(zn) {
+                            *x += ps * zv;
+                        }
+                    },
+                )
+            }
+        }
+
+        self.clipped_elems += clipped.into_inner();
+        self.total_elems += total.into_inner();
+        Ok(())
+    }
 }
 
 impl Optimizer for Helene {
@@ -413,6 +510,22 @@ impl Optimizer for Helene {
             Some(prefetch),
             Some(crate::optim::StagedSweep { tiles, sink }),
         )
+    }
+
+    fn step_zo_multi(&mut self, params: &mut ParamSet, probes: &[(u64, f32)]) -> Result<()> {
+        self.apply_multi(params, probes, None)
+    }
+
+    fn step_zo_multi_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        probes: &[(u64, f32)],
+        next_seed: u64,
+        eps: f32,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
+        self.apply_multi(params, probes, Some(prefetch))
     }
 
     fn step_fo(&mut self, params: &mut ParamSet, grads: &ParamSet) -> Result<()> {
@@ -574,6 +687,69 @@ mod tests {
         let empty = crate::model::params::ZCache::default();
         assert!(opt.step_zo_cached(&mut p, 0.1, 1, &empty).is_err());
         assert!(empty.z(0..4).is_none());
+    }
+
+    #[test]
+    fn multi_single_probe_matches_step_zo_bitwise() {
+        // q = 1 through the k-seed path is the same per-element arithmetic
+        // as the classic single-seed step (0 + g·z == g·z for the nonzero
+        // z-stream), so the trajectories must agree bitwise
+        let mut p1 = toy_params(&[200, 120]);
+        let mut p2 = toy_params(&[200, 120]);
+        let mut o1 = Helene::paper_defaults().with_lr(5e-3);
+        let mut o2 = Helene::paper_defaults().with_lr(5e-3);
+        o1.init(&p1);
+        o2.init(&p2);
+        for s in 0..3 {
+            o1.step_zo(&mut p1, 0.4, 40 + s).unwrap();
+            o2.step_zo_multi(&mut p2, &[(40 + s, 0.4)]).unwrap();
+        }
+        assert_eq!(p1.max_abs_diff(&p2), 0.0);
+        assert_eq!(o1.clip_fraction(), o2.clip_fraction());
+    }
+
+    #[test]
+    fn multi_probe_equals_exact_combined_basis() {
+        // the q-probe step consumes gz = Σᵢ gᵢ·zᵢ in one pass — exactly a
+        // first-order step on the materialised combined basis: one t
+        // advance, one momentum injection, one A-GNB refresh on gz⊙gz
+        let probes = [(11u64, 0.3f32), (12u64, -0.2f32)];
+        let mut p1 = toy_params(&[100, 60]);
+        let mut p2 = toy_params(&[100, 60]);
+        let mut gz = p1.zeros_like();
+        for &(seed, g) in &probes {
+            p1.visit_z(seed, |i, z| {
+                for (x, zv) in gz.array_mut(i).iter_mut().zip(z) {
+                    *x += g * zv;
+                }
+            });
+        }
+        let mut o1 = Helene::paper_defaults().with_lr(5e-3);
+        let mut o2 = Helene::paper_defaults().with_lr(5e-3).with_fo_hessian();
+        o1.init(&p1);
+        o2.init(&p2);
+        o1.step_zo_multi(&mut p1, &probes).unwrap();
+        o2.step_fo(&mut p2, &gz).unwrap();
+        assert_eq!(p1.max_abs_diff(&p2), 0.0);
+        assert_eq!(o1.clip_fraction(), o2.clip_fraction());
+    }
+
+    #[test]
+    fn multi_prefetch_matches_separate_perturb_and_captures() {
+        let probes = [(21u64, 0.25f32), (22u64, 0.1f32)];
+        let mut p1 = toy_params(&[150, 90]);
+        let mut p2 = toy_params(&[150, 90]);
+        let mut o1 = Helene::paper_defaults().with_lr(5e-3);
+        let mut o2 = Helene::paper_defaults().with_lr(5e-3);
+        o1.init(&p1);
+        o2.init(&p2);
+        o1.step_zo_multi(&mut p1, &probes).unwrap();
+        p1.perturb_trainable(999, 1e-3);
+        let mut cache = crate::model::params::ZCache::default();
+        o2.step_zo_multi_prefetch(&mut p2, &probes, 999, 1e-3, Some(&mut cache))
+            .unwrap();
+        assert_eq!(p1.max_abs_diff(&p2), 0.0);
+        assert!(cache.matches_seed(&p2, 999));
     }
 
     #[test]

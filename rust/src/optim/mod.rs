@@ -15,7 +15,12 @@
 //! staged-upload loss oracle (`step_zo_fused_prefetch_staged`, DESIGN.md
 //! §Runtime) — HELENE, ZO-SGD, ZO-Adam and ZO-Sophia stream each finished
 //! tile while sweeping the next; everyone else inherits a
-//! sweep-then-stream default. First-order baselines receive the exact
+//! sweep-then-stream default. Under `TrainConfig::probes` > 1 the trainer
+//! feeds a whole batch of one-sided probe scalars at once
+//! (`step_zo_multi{,_prefetch}`, DESIGN.md §Perf): the k-seed kernels
+//! apply the combined basis `Σᵢ gᵢ·z(seedᵢ)` in a single sweep, taking
+//! the steady state to q+1 sweeps per step — 1 + 1/q per probe.
+//! First-order baselines receive the exact
 //! gradient from the compiled `loss_grad` entrypoint through `step_fo`.
 //!
 //! **Arena codecs** (DESIGN.md §Precision): every update runs through the
@@ -267,6 +272,48 @@ pub trait Optimizer {
     ) -> Result<()> {
         self.step_zo_fused_prefetch(params, g_scale, seed, next_seed, eps, cache, next_cache)?;
         crate::runtime::stream_theta(params, tiles, sink)
+    }
+
+    /// Multi-probe zeroth-order step (DESIGN.md §Perf): apply the averaged
+    /// q-probe update `Δθ ∝ Σᵢ gᵢ·z(seedᵢ)` where `probes` holds the
+    /// `(seedᵢ, gᵢ)` pairs of `spsa::SpsaMultiEstimate::averaged_probes`.
+    /// θ must arrive **pristine** — the multi estimator restores it before
+    /// handing over. This default applies the probes as q sequential
+    /// `step_zo` calls: exact for linear updates (ZO-SGD) but it advances
+    /// a stateful optimizer's moments q times; HELENE, ZO-SGD and ZO-Adam
+    /// override it with a single k-seed fused sweep that consumes all q
+    /// probes in one moment update (`ParamSet::update_shards*_multi`).
+    fn step_zo_multi(&mut self, params: &mut ParamSet, probes: &[(u64, f32)]) -> Result<()> {
+        for &(seed, g) in probes {
+            self.step_zo(params, g, seed)?;
+        }
+        Ok(())
+    }
+
+    /// Multi-probe step plus next-step prefetch: everything
+    /// [`Self::step_zo_multi`] does *and* the next step's
+    /// `+ε·z(next_seed)` perturbation, leaving `θ′ + εz` so the following
+    /// multi estimate needs no opening perturb sweep — the q-probe steady
+    /// state of `train::ZoProtocol` is q+1 sweeps per step (1 + 1/q per
+    /// probe). `next_cache`, when given, captures the next step's probe-0
+    /// draws seed-keyed for its probe passes. This default runs the multi
+    /// step then a separate prefetch sweep; the fused overrides fold the
+    /// prefetch stream into the same sweep
+    /// (`ParamSet::update_shards*_multi_dual`).
+    fn step_zo_multi_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        probes: &[(u64, f32)],
+        next_seed: u64,
+        eps: f32,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        self.step_zo_multi(params, probes)?;
+        match next_cache {
+            Some(nc) => params.perturb_fill_cache(nc, next_seed, eps),
+            None => params.perturb_trainable(next_seed, eps),
+        }
+        Ok(())
     }
 
     /// First-order step from exact gradients.

@@ -26,6 +26,13 @@
 //! `−2εz` arena sweep, and the steady-state step is two sweeps total
 //! (`train::ZoProtocol`).
 //!
+//! [`estimate_multi_preperturbed`] batches q **one-sided** probes against a
+//! shared baseline: q−1 fused seed-transition sweeps plus one restore sweep
+//! produce q probe losses and the baseline, and the fused multi update
+//! sweep closes the step at q+1 sweeps total — 1 + 1/q amortized sweeps
+//! per probe, below the two-sweeps-per-probe floor of the pairwise
+//! protocol (DESIGN.md §Perf, `TrainConfig::probes`).
+//!
 //! The estimator is generic over the loss oracle so the same code drives
 //! the PJRT model runner, the 2-D toy problems, and the unit tests.
 
@@ -331,6 +338,177 @@ where
     Ok(est)
 }
 
+/// One q-probe batched SPSA measurement (multi-probe protocol, DESIGN.md
+/// §Perf). Each probe i is a **one-sided** difference against a shared
+/// baseline:
+///
+/// ```text
+/// g_i = (L(θ + εz_i) − L(θ)) / ε
+/// ```
+///
+/// so q probes cost q+1 probe losses and — via the seed-transition chain
+/// of [`estimate_multi_preperturbed`] — q+1 arena sweeps instead of the
+/// 2q sweeps of q independent two-point pairs. The per-probe scalars are
+/// stored **raw**; the trainer divides by q via
+/// [`averaged_probes`](SpsaMultiEstimate::averaged_probes) so the
+/// combined update estimates the same gradient a single probe does, with
+/// the variance reduced by the averaging.
+#[derive(Clone, Debug)]
+pub struct SpsaMultiEstimate {
+    /// `(seed_i, g_i)` per probe — raw one-sided projections, **not** yet
+    /// divided by q. `seed_0` is the step seed itself ([`probe_seed`]),
+    /// so q = 1 rides the same prefetch perturbation as the classic
+    /// single-probe protocol.
+    pub probes: Vec<(u64, f32)>,
+    /// Loss at each `θ + εz_i` probe point, in probe order.
+    pub losses: Vec<f32>,
+    /// Shared baseline loss L(θ) at the unperturbed point.
+    pub loss_base: f32,
+}
+
+impl SpsaMultiEstimate {
+    /// `(seed_i, g_i / q)` pairs — the coefficients of the averaged
+    /// q-probe gradient estimate `(1/q) Σᵢ gᵢ zᵢ`, ready to feed
+    /// `Optimizer::step_zo_multi`.
+    pub fn averaged_probes(&self) -> Vec<(u64, f32)> {
+        let inv_q = 1.0 / self.probes.len() as f32;
+        self.probes.iter().map(|&(s, g)| (s, g * inv_q)).collect()
+    }
+
+    /// The loss value reported for this step: the shared baseline L(θ) —
+    /// exact at the unperturbed point, unlike the two-point mean, which
+    /// is only O(ε²) close.
+    pub fn loss(&self) -> f32 {
+        self.loss_base
+    }
+}
+
+/// Seed of probe `i` within the step of seed `step_seed`. Probe 0 **is**
+/// the step seed, so the cross-step prefetch machinery — which perturbs
+/// `+εz(next_seed)` during the update sweep — arms the next step's probe
+/// 0 with no changes; further probes derive through `mix64`, giving each
+/// an independent z-stream (`znorm::zbits` avalanche).
+#[inline]
+pub fn probe_seed(step_seed: u64, i: usize) -> u64 {
+    if i == 0 {
+        step_seed
+    } else {
+        crate::util::rng::mix64(step_seed, i as u64)
+    }
+}
+
+/// q-probe batched estimate for the multi-probe steady state: `params`
+/// must arrive **already at `θ + εz(probe_seed(step_seed, 0))`** — left
+/// there by the previous step's fused multi prefetch sweep, or by a
+/// prologue perturb at a run boundary. The chain then runs
+///
+/// ```text
+/// L_0 at θ + εz_0                       (0 sweeps — prefetched)
+/// θ ← θ − εz_i + εz_{i+1} ;  L_{i+1}    (q−1 fused transition sweeps)
+/// θ ← θ − εz_{q−1}                      (1 sweep → pristine θ)
+/// L_base = L(θ)                         (shared baseline)
+/// ```
+///
+/// — q+1 probe losses for q arena sweeps; the fused multi update sweep
+/// (which also prefetches the next step's probe 0) closes the step at
+/// q+1 sweeps ≡ 1 + 1/q sweeps per probe (DESIGN.md §Perf).
+///
+/// Probe-loss hygiene: a non-finite loss (NaN/Inf) from the oracle
+/// aborts the step with a contextful error **before** the value can
+/// poison the gradient scalars or the optimizer moment state. On any
+/// error θ is restored to the pristine point (up to the usual f32 re-add
+/// drift) and the caller must abandon the pipeline.
+pub fn estimate_multi_preperturbed<F>(
+    params: &mut ParamSet,
+    step_seed: u64,
+    q: usize,
+    eps: f32,
+    mut loss_fn: F,
+) -> Result<SpsaMultiEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    debug_assert!(eps > 0.0);
+    anyhow::ensure!(q >= 1, "multi-probe estimate needs q >= 1 probes, got {q}");
+    let seeds: Vec<u64> = (0..q).map(|i| probe_seed(step_seed, i)).collect();
+    let mut losses = Vec::with_capacity(q);
+    for i in 0..q {
+        let l = match loss_fn(params) {
+            Ok(l) => l,
+            Err(e) => {
+                params.perturb_trainable(seeds[i], -eps); // unwind probe i
+                return Err(e.context(format!(
+                    "probe {i} of {q} (seed {}, step seed {step_seed})",
+                    seeds[i]
+                )));
+            }
+        };
+        if !l.is_finite() {
+            params.perturb_trainable(seeds[i], -eps);
+            anyhow::bail!(
+                "non-finite loss {l} at probe {i} of {q} (seed {}, step seed \
+                 {step_seed}): aborting the step before it poisons the \
+                 gradient estimate and optimizer state",
+                seeds[i]
+            );
+        }
+        losses.push(l);
+        if i + 1 < q {
+            // fused transition: retire probe i, arm probe i+1 — one sweep
+            params.perturb_trainable2(seeds[i], -eps, seeds[i + 1], eps);
+        } else {
+            params.perturb_trainable(seeds[i], -eps); // back to pristine θ
+        }
+    }
+    // θ is pristine here, so a failing/non-finite baseline owes no restore.
+    let loss_base = match loss_fn(params) {
+        Ok(l) => l,
+        Err(e) => {
+            return Err(e.context(format!("baseline probe (step seed {step_seed})")));
+        }
+    };
+    anyhow::ensure!(
+        loss_base.is_finite(),
+        "non-finite baseline loss {loss_base} (step seed {step_seed}): \
+         aborting the step before it poisons the gradient estimate",
+    );
+    let probes = seeds
+        .iter()
+        .zip(&losses)
+        .map(|(&s, &l)| (s, (l - loss_base) / eps))
+        .collect();
+    Ok(SpsaMultiEstimate { probes, losses, loss_base })
+}
+
+/// Cached flavour of [`estimate_multi_preperturbed`]: the draws of probe
+/// 0 (= `step_seed`) must already sit in `cache` — captured by the
+/// previous step's fused multi prefetch sweep or by the prologue
+/// `perturb_fill_cache`. The seed key is checked up front, so a
+/// mis-rotated buffer is a recoverable error caught before anything
+/// touches θ; the transition chain itself regenerates streams from their
+/// seeds, which the k-seed kernels fold into the same pass as the
+/// arithmetic.
+pub fn estimate_multi_cached_preperturbed<F>(
+    params: &mut ParamSet,
+    cache: &crate::model::params::ZCache,
+    step_seed: u64,
+    q: usize,
+    eps: f32,
+    loss_fn: F,
+) -> Result<SpsaMultiEstimate>
+where
+    F: FnMut(&ParamSet) -> Result<f32>,
+{
+    anyhow::ensure!(
+        cache.matches_seed(params, step_seed),
+        "z-cache does not hold the draws of seed {step_seed} for this layout \
+         (holds seed {}, filled: {})",
+        cache.seed(),
+        cache.is_filled(),
+    );
+    estimate_multi_preperturbed(params, step_seed, q, eps, loss_fn)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -617,5 +795,152 @@ mod tests {
         let a = estimate_with(&mut p, 1, 1e-3, quad_loss).unwrap();
         let b = estimate_with(&mut p, 2, 1e-3, quad_loss).unwrap();
         assert_ne!(a.g_scale, b.g_scale);
+    }
+
+    #[test]
+    fn multi_pipeline_matches_sequential_probes_on_scripted_oracle() {
+        // scripted oracle: losses come off a list, independent of θ, so
+        // the transition-chain pipeline and the naive perturb/eval/restore
+        // loop see identical values — g must match bitwise, and both
+        // walks must return θ to the pristine point (up to re-add drift).
+        let eps = 1e-3f32;
+        let script = [2.0f32, 1.5, 3.25, 0.75, 1.0];
+        for q in [1usize, 2, 4] {
+            let mut a = toy_params(&[100, 28]);
+            let orig = a.clone();
+            a.perturb_trainable(probe_seed(40, 0), eps); // prologue prefetch
+            let mut k = 0usize;
+            let est = estimate_multi_preperturbed(&mut a, 40, q, eps, |_| {
+                let l = script[k.min(q)]; // probes 0..q, then the baseline
+                k += 1;
+                Ok(l)
+            })
+            .unwrap();
+            assert_eq!(k, q + 1, "q+1 oracle calls for q probes");
+            assert_eq!(est.loss_base, script[q]);
+            assert_eq!(est.losses, script[..q].to_vec());
+
+            // naive reference: q sequential one-sided estimates sharing
+            // the same scripted baseline
+            let mut b = orig.clone();
+            for (i, &(seed, g)) in est.probes.iter().enumerate() {
+                assert_eq!(seed, probe_seed(40, i));
+                assert_eq!(g, (script[i] - script[q]) / eps, "probe {i}");
+                b.perturb_trainable(seed, eps);
+                b.perturb_trainable(seed, -eps);
+            }
+            let avg = est.averaged_probes();
+            for (&(_, g), &(_, ga)) in est.probes.iter().zip(&avg) {
+                assert_eq!(ga, g / q as f32);
+            }
+            assert!(a.max_abs_diff(&orig) < 1e-5, "pipeline drift q={q}");
+            assert!(b.max_abs_diff(&orig) < 1e-5, "naive drift q={q}");
+        }
+    }
+
+    #[test]
+    fn multi_probe_losses_are_the_real_probe_points() {
+        // on a real oracle, probe 0's loss is bitwise the loss at the
+        // prefetched θ + εz₀, and the baseline sits within drift of L(θ)
+        let eps = 1e-3f32;
+        let mut p = toy_params(&[64, 40]);
+        let orig = p.clone();
+        p.perturb_trainable(probe_seed(21, 0), eps);
+        let lp = quad_loss(&p).unwrap(); // loss at the armed probe-0 point
+        let est = estimate_multi_preperturbed(&mut p, 21, 3, eps, quad_loss).unwrap();
+        assert_eq!(est.losses[0], lp);
+        let l0 = quad_loss(&orig).unwrap();
+        assert!((est.loss() - l0).abs() < 0.01 * l0.max(1.0));
+        assert!(p.max_abs_diff(&orig) < 1e-5);
+        // each one-sided projection matches the quadratic's exact value
+        // zᵢᵀ∇L + (ε/2)·zᵢᵀHzᵢ (the O(ε) curvature bias a two-point
+        // estimate would cancel)
+        let cs = [1.0f32, 10.0];
+        for (i, &(seed, g)) in est.probes.iter().enumerate() {
+            let mut proj = 0f64;
+            let mut zhz = 0f64;
+            orig.visit_z(seed, |ai, z| {
+                for (x, zv) in orig.array(ai).iter().zip(z) {
+                    proj += (cs[ai % 2] * x * zv) as f64;
+                    zhz += (cs[ai % 2] * zv * zv) as f64;
+                }
+            });
+            let expect = proj + 0.5 * eps as f64 * zhz;
+            assert!(
+                (g as f64 - expect).abs() < 0.05 * expect.abs().max(1.0),
+                "probe {i}: one-sided {g} vs exact {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_nonfinite_loss_aborts_with_context_and_restores() {
+        let eps = 1e-3f32;
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for fail_at in [0usize, 1, 2] {
+                // fail_at 0/1 hit probes, 2 hits the baseline (q = 2)
+                let mut p = toy_params(&[48]);
+                let orig = p.clone();
+                p.perturb_trainable(probe_seed(7, 0), eps);
+                let mut calls = 0usize;
+                let r = estimate_multi_preperturbed(&mut p, 7, 2, eps, |_| {
+                    let l = if calls == fail_at { bad } else { 1.0 };
+                    calls += 1;
+                    Ok(l)
+                });
+                let err = format!("{:#}", r.unwrap_err());
+                assert!(err.contains("non-finite"), "{err}");
+                assert!(
+                    p.max_abs_diff(&orig) < 1e-5,
+                    "bad {bad}, fail_at {fail_at}: drift {}",
+                    p.max_abs_diff(&orig)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_failing_oracle_restores_and_names_the_probe() {
+        let eps = 1e-3f32;
+        for fail_at in [0usize, 1, 2] {
+            let mut p = toy_params(&[48]);
+            let orig = p.clone();
+            p.perturb_trainable(probe_seed(3, 0), eps);
+            let mut calls = 0usize;
+            let r = estimate_multi_preperturbed(&mut p, 3, 2, eps, |_| {
+                if calls == fail_at {
+                    anyhow::bail!("boom")
+                }
+                calls += 1;
+                Ok(1.0)
+            });
+            let err = format!("{:#}", r.unwrap_err());
+            assert!(err.contains("boom"), "{err}");
+            let tag = if fail_at == 2 { "baseline" } else { "probe" };
+            assert!(err.contains(tag), "fail_at {fail_at}: {err}");
+            assert!(p.max_abs_diff(&orig) < 1e-5, "fail_at {fail_at}");
+        }
+    }
+
+    #[test]
+    fn multi_cached_rejects_wrong_seed_and_accepts_right_one() {
+        let eps = 1e-3f32;
+        let mut p = toy_params(&[32]);
+        let mut cache = crate::model::params::ZCache::default();
+        p.perturb_fill_cache(&mut cache, 5, eps);
+        let before = p.clone();
+        let r = estimate_multi_cached_preperturbed(&mut p, &cache, 6, 2, eps, quad_loss);
+        assert!(r.is_err());
+        assert_eq!(p.flat(), before.flat());
+        let est =
+            estimate_multi_cached_preperturbed(&mut p, &cache, 5, 2, eps, quad_loss)
+                .unwrap();
+        assert_eq!(est.probes.len(), 2);
+    }
+
+    #[test]
+    fn multi_rejects_zero_probes() {
+        let mut p = toy_params(&[16]);
+        assert!(estimate_multi_preperturbed(&mut p, 1, 0, 1e-3, quad_loss).is_err());
     }
 }

@@ -114,6 +114,69 @@ impl ZoAdam {
         }
         Ok(())
     }
+
+    /// Multi-probe update core (DESIGN.md §Perf): the gradient is the
+    /// combined q-probe basis `gz = Σᵢ gᵢ·zᵢ` built per shard by the
+    /// k-seed kernels, so both Adam moments see one EMA update of the
+    /// averaged gradient and t advances once per multi step. θ arrives
+    /// pristine (the multi estimator restores it), so no fused restore is
+    /// owed; `prefetch` arms the next step's probe 0 in the same sweep.
+    fn apply_multi(
+        &mut self,
+        params: &mut ParamSet,
+        probes: &[(u64, f32)],
+        prefetch: Option<PrefetchSpec<'_>>,
+    ) -> Result<()> {
+        let (m, v) = match (&mut self.m, &mut self.v) {
+            (Some(m), Some(v)) => (m, v),
+            _ => return Err(anyhow!("init not called")),
+        };
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let (lr, beta1, beta2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
+        let (decoupled, wd) = (self.decoupled, self.weight_decay);
+        let kernel = |th: &mut [f32], m_arr: &mut [f32], v_arr: &mut [f32], gz: &[f32]| {
+            for j in 0..th.len() {
+                let g = gz[j];
+                m_arr[j] = beta1 * m_arr[j] + (1.0 - beta1) * g;
+                v_arr[j] = beta2 * v_arr[j] + (1.0 - beta2) * g * g;
+                let m_hat = m_arr[j] / bc1;
+                let v_hat = v_arr[j] / bc2;
+                if decoupled {
+                    th[j] -= lr * wd * th[j];
+                }
+                th[j] -= lr * m_hat / (v_hat.sqrt() + eps);
+            }
+        };
+        match prefetch {
+            None => params.update_shards2_multi(m, v, probes, |_seg, th, m_arr, v_arr, gz| {
+                kernel(th, m_arr, v_arr, gz)
+            }),
+            Some(p) => {
+                let ps = p.scale;
+                params.update_shards2_multi_dual(
+                    m,
+                    v,
+                    probes,
+                    p.seed,
+                    p.capture,
+                    |_seg: &crate::model::params::ShardSeg,
+                     th: &mut [f32],
+                     m_arr: &mut [f32],
+                     v_arr: &mut [f32],
+                     gz: &[f32],
+                     zn: &[f32]| {
+                        kernel(&mut *th, &mut *m_arr, &mut *v_arr, gz);
+                        for (x, zv) in th.iter_mut().zip(zn) {
+                            *x += ps * zv;
+                        }
+                    },
+                )
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Optimizer for ZoAdam {
@@ -199,6 +262,22 @@ impl Optimizer for ZoAdam {
             Some(prefetch),
             Some(crate::optim::StagedSweep { tiles, sink }),
         )
+    }
+
+    fn step_zo_multi(&mut self, params: &mut ParamSet, probes: &[(u64, f32)]) -> Result<()> {
+        self.apply_multi(params, probes, None)
+    }
+
+    fn step_zo_multi_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        probes: &[(u64, f32)],
+        next_seed: u64,
+        eps: f32,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        let prefetch = PrefetchSpec { seed: next_seed, scale: eps, capture: next_cache };
+        self.apply_multi(params, probes, Some(prefetch))
     }
 
     fn state_bytes(&self) -> usize {
@@ -330,6 +409,41 @@ mod tests {
         let mut lion = ZoLion::new(1e-3);
         lion.init(&p);
         assert_eq!(lion.state_bytes(), p.state_bytes());
+    }
+
+    #[test]
+    fn multi_single_probe_matches_step_zo_bitwise() {
+        // q = 1 through the k-seed path: 0 + g·z == g·z for the nonzero
+        // z-stream, so the Adam trajectory must agree bitwise
+        let mut a = toy_params(&[200, 120]);
+        let mut b = toy_params(&[200, 120]);
+        let mut o1 = ZoAdam::new(1e-3, true);
+        let mut o2 = ZoAdam::new(1e-3, true);
+        o1.init(&a);
+        o2.init(&b);
+        for s in 0..3 {
+            o1.step_zo(&mut a, 0.4, 50 + s).unwrap();
+            o2.step_zo_multi(&mut b, &[(50 + s, 0.4)]).unwrap();
+        }
+        assert_eq!(a.flat(), b.flat());
+    }
+
+    #[test]
+    fn multi_prefetch_matches_separate_perturb() {
+        let probes = [(31u64, 0.2f32), (32u64, -0.15f32)];
+        let mut a = toy_params(&[150, 90]);
+        let mut b = toy_params(&[150, 90]);
+        let mut o1 = ZoAdam::new(1e-3, false);
+        let mut o2 = ZoAdam::new(1e-3, false);
+        o1.init(&a);
+        o2.init(&b);
+        o1.step_zo_multi(&mut a, &probes).unwrap();
+        a.perturb_trainable(777, 1e-3);
+        let mut cache = crate::model::params::ZCache::default();
+        o2.step_zo_multi_prefetch(&mut b, &probes, 777, 1e-3, Some(&mut cache))
+            .unwrap();
+        assert_eq!(a.flat(), b.flat());
+        assert!(cache.matches_seed(&b, 777));
     }
 
     #[test]

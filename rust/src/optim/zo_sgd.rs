@@ -124,6 +124,40 @@ impl Optimizer for ZoSgd {
         Ok(())
     }
 
+    fn step_zo_multi(&mut self, params: &mut ParamSet, probes: &[(u64, f32)]) -> Result<()> {
+        // θ −= η · Σᵢ gᵢ·zᵢ — the combined q-probe basis applied by the
+        // k-seed perturb kernel in ONE sweep (per-element identical to q
+        // sequential single-seed updates; property-tested in params)
+        let scaled: Vec<(u64, f32)> =
+            probes.iter().map(|&(s, g)| (s, -self.lr * g)).collect();
+        params.perturb_trainable_k(&scaled);
+        Ok(())
+    }
+
+    fn step_zo_multi_prefetch(
+        &mut self,
+        params: &mut ParamSet,
+        probes: &[(u64, f32)],
+        next_seed: u64,
+        eps: f32,
+        next_cache: Option<&mut crate::model::params::ZCache>,
+    ) -> Result<()> {
+        // single dual-stream sweep: the combined q-probe update on
+        // Σᵢ gᵢ·zᵢ, then the next step's +εz on z' — the multi analog of
+        // step_zo_fused_prefetch (restore is not owed: the multi estimator
+        // returns θ pristine)
+        let lr = self.lr;
+        params.update_shards_multi_dual(probes, next_seed, next_cache, |_seg, th, gz, zn| {
+            for (x, gv) in th.iter_mut().zip(gz) {
+                *x -= lr * gv;
+            }
+            for (x, zv) in th.iter_mut().zip(zn) {
+                *x += eps * zv;
+            }
+        });
+        Ok(())
+    }
+
     fn step_zo_fused_prefetch_staged(
         &mut self,
         params: &mut ParamSet,
@@ -391,6 +425,43 @@ mod tests {
         opt.post_check(&mut p, 1.0, 0.5).unwrap(); // improved → keep
         assert_eq!(p.flat(), moved.flat());
         assert_eq!((opt.accepted, opt.reverted), (1, 1));
+    }
+
+    #[test]
+    fn multi_step_is_bitwise_sequential_probes() {
+        // the k-seed perturb kernel applies the probes as the same
+        // sequential per-element axpys the default trait body would
+        let probes = [(61u64, 0.3f32), (62, -0.2), (63, 0.05)];
+        let mut a = toy_params(&[200, 120]);
+        let mut b = toy_params(&[200, 120]);
+        let mut opt = ZoSgd::new(0.01);
+        opt.init(&a);
+        opt.step_zo_multi(&mut a, &probes).unwrap();
+        for &(seed, g) in &probes {
+            b.perturb_trainable(seed, -0.01 * g);
+        }
+        assert_eq!(a.flat(), b.flat());
+        assert_eq!(a.sweep_count(), 1, "one k-seed sweep for q probes");
+    }
+
+    #[test]
+    fn multi_prefetch_parks_theta_at_next_probe_point() {
+        let probes = [(71u64, 0.4f32), (72, 0.1)];
+        let mut a = toy_params(&[150, 90]);
+        let mut b = toy_params(&[150, 90]);
+        let mut opt = ZoSgd::new(0.01);
+        opt.init(&a);
+        let mut cache = crate::model::params::ZCache::default();
+        opt.step_zo_multi_prefetch(&mut a, &probes, 888, 1e-3, Some(&mut cache))
+            .unwrap();
+        // reference: combined-basis update then a separate perturb sweep
+        let mut opt2 = ZoSgd::new(0.01);
+        opt2.init(&b);
+        opt2.step_zo_multi(&mut b, &probes).unwrap();
+        b.perturb_trainable(888, 1e-3);
+        assert!(a.max_abs_diff(&b) < 1e-6, "drift {}", a.max_abs_diff(&b));
+        assert!(cache.matches_seed(&a, 888));
+        assert_eq!(a.sweep_count(), 1, "fused multi+prefetch is one sweep");
     }
 
     #[test]

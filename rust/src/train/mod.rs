@@ -92,6 +92,24 @@ pub struct TrainConfig {
     /// protocol for any tile size (tiling is pure scheduling;
     /// property-tested). `None` (default) keeps the monolithic uploads.
     pub tiled_sweeps: Option<usize>,
+    /// Number of SPSA probes per step, q (DESIGN.md §Perf). 1 (default)
+    /// runs the classic two-point pipeline. q > 1 switches the ZO loop to
+    /// the multi-probe batched estimator ([`ZoProtocol::step_multi`]):
+    /// q one-sided probe losses share one baseline, the optimizer consumes
+    /// all q probes in one fused k-seed sweep, and the steady-state cost
+    /// is q+1 arena sweeps per step — 1 + 1/q sweeps per probe, amortizing
+    /// below the classic two-sweeps-per-probe floor. The multi protocol
+    /// drives the monolithic sweep path only: `tiled_sweeps` requires
+    /// probes = 1, and post-check optimizers (ZO-SGD-Cons) are rejected
+    /// when probes > 1.
+    pub probes: usize,
+    /// Opt-in ε clamp for bf16 runs (DESIGN.md §Precision): one bf16
+    /// store rounds with relative error up to 2⁻⁹, so around parameter
+    /// magnitude M a perturbation ε < M/256 is at rounding-noise scale
+    /// and the SPSA difference signal drowns. When the bf16 codec is
+    /// active and `spsa_eps` < mean|θ|/256 the trainer always emits a
+    /// one-time warning; with this flag it also raises ε to that floor.
+    pub eps_floor: bool,
 }
 
 impl Default for TrainConfig {
@@ -112,8 +130,46 @@ impl Default for TrainConfig {
             lr_schedule: None,
             codec: None,
             tiled_sweeps: None,
+            probes: 1,
+            eps_floor: false,
         }
     }
+}
+
+/// DESIGN.md §Precision ε-floor heuristic: with a bf16 θ-arena, one store
+/// rounds with relative error up to 2⁻⁹ ≈ 1/256, so a perturbation below
+/// mean|θ|/256 sits at the same scale as the rounding noise and the SPSA
+/// difference signal drowns in it. When the heuristic trips, a one-time
+/// warning is printed; the clamped ε is returned only when the run opted
+/// in via [`TrainConfig::eps_floor`] (`None` otherwise, and always `None`
+/// for f32 arenas or an ε already at/above the floor).
+pub fn eps_floor_clamp(cfg: &TrainConfig, params: &ParamSet) -> Option<f32> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if params.codec() != crate::model::params::Codec::Bf16 {
+        return None;
+    }
+    let flat = params.flat_f32();
+    if flat.is_empty() {
+        return None;
+    }
+    let mean_abs =
+        (flat.iter().map(|x| x.abs() as f64).sum::<f64>() / flat.len() as f64) as f32;
+    let floor = mean_abs / 256.0;
+    if cfg.spsa_eps >= floor || floor <= 0.0 {
+        return None;
+    }
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "warning: spsa_eps {:.3e} is below the bf16 rounding floor mean|θ|/256 = {:.3e}: \
+             the SPSA difference signal is at rounding-noise scale (DESIGN.md §Precision); \
+             {} (TrainConfig::eps_floor)",
+            cfg.spsa_eps,
+            floor,
+            if cfg.eps_floor { "clamping ε to the floor" } else { "set eps_floor to clamp" },
+        );
+    }
+    cfg.eps_floor.then_some(floor)
 }
 
 /// Result of one training run.
@@ -362,6 +418,145 @@ impl<'a> ZoProtocol<'a> {
         Ok(est)
     }
 
+    /// One full **multi-probe** ZO step (`TrainConfig::probes` = q,
+    /// DESIGN.md §Perf): q one-sided probe losses plus a shared baseline
+    /// via `spsa::estimate_multi_*`, then one fused k-seed update through
+    /// `Optimizer::step_zo_multi{,_prefetch}` consuming the 1/q-averaged
+    /// probes. In the prefetch steady state the step costs q+1 arena
+    /// sweeps (1 + 1/q per probe); a step entered from a boundary pays
+    /// one prologue perturb more, exactly like the single-probe pipeline,
+    /// and a `boundary` step leaves pristine θ. Without the prefetch
+    /// pipeline (`prefetch_perturb`/`fuse_restore` off) the step runs a
+    /// prologue perturb + chain + separate update at q+2 sweeps. The
+    /// multi protocol drives the monolithic sweep path only
+    /// (`tiled_sweeps` applies at probes = 1) and cannot serve post-check
+    /// optimizers — the probe chain leaves no updated-θ loss to check.
+    pub fn step_multi<F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        loss_fn: F,
+    ) -> Result<spsa::SpsaMultiEstimate>
+    where
+        F: FnMut(&ParamSet) -> Result<f32>,
+    {
+        self.step_multi_inner(opt, params, step_seed, next_seed, boundary, None, loss_fn)
+    }
+
+    /// [`Self::step_multi`] with the probe-chain and update times recorded
+    /// under the `spsa_probes` / `optimizer_step` buckets.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_multi_timed<F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        timing: &mut TimingBreakdown,
+        loss_fn: F,
+    ) -> Result<spsa::SpsaMultiEstimate>
+    where
+        F: FnMut(&ParamSet) -> Result<f32>,
+    {
+        self.step_multi_inner(opt, params, step_seed, next_seed, boundary, Some(timing), loss_fn)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step_multi_inner<F>(
+        &mut self,
+        opt: &mut dyn Optimizer,
+        params: &mut ParamSet,
+        step_seed: u64,
+        next_seed: u64,
+        boundary: bool,
+        mut timing: Option<&mut TimingBreakdown>,
+        loss_fn: F,
+    ) -> Result<spsa::SpsaMultiEstimate>
+    where
+        F: FnMut(&ParamSet) -> Result<f32>,
+    {
+        let cfg = self.cfg;
+        let q = cfg.probes.max(1);
+        anyhow::ensure!(
+            !opt.wants_post_check(),
+            "{}: the multi-probe protocol (probes = {q}) cannot drive a post-check \
+             optimizer — run with probes = 1",
+            opt.name()
+        );
+        if !(cfg.prefetch_perturb && cfg.fuse_restore) {
+            // classic-shaped multi step: prologue perturb, q-probe chain,
+            // separate multi update — q+2 sweeps
+            let t = Timer::start();
+            params.perturb_trainable(step_seed, cfg.spsa_eps);
+            let est =
+                spsa::estimate_multi_preperturbed(params, step_seed, q, cfg.spsa_eps, loss_fn)?;
+            if let Some(tm) = timing.as_deref_mut() {
+                tm.add("spsa_probes", t.seconds());
+            }
+            let t = Timer::start();
+            opt.step_zo_multi(params, &est.averaged_probes())?;
+            if let Some(tm) = timing {
+                tm.add("optimizer_step", t.seconds());
+            }
+            return Ok(est);
+        }
+
+        // prologue: identical contract to the single-probe pipeline —
+        // probe 0's seed IS the step seed, so the prefetched +εz carries
+        // probe 0's perturbation
+        match self.pending {
+            Some(s) => {
+                anyhow::ensure!(
+                    s == step_seed,
+                    "prefetch pipeline seed drift: θ carries +εz of seed {s}, step wants {step_seed}"
+                );
+                self.pending = None;
+            }
+            None => {
+                if cfg.cache_z {
+                    params.perturb_fill_cache(&mut self.cur, step_seed, cfg.spsa_eps);
+                } else {
+                    params.perturb_trainable(step_seed, cfg.spsa_eps);
+                }
+            }
+        }
+
+        let t = Timer::start();
+        let est = if cfg.cache_z {
+            spsa::estimate_multi_cached_preperturbed(
+                params, &self.cur, step_seed, q, cfg.spsa_eps, loss_fn,
+            )?
+        } else {
+            spsa::estimate_multi_preperturbed(params, step_seed, q, cfg.spsa_eps, loss_fn)?
+        };
+        if let Some(tm) = timing.as_deref_mut() {
+            tm.add("spsa_probes", t.seconds());
+        }
+
+        let t = Timer::start();
+        let probes = est.averaged_probes();
+        if boundary {
+            // epilogue: update only — the chain already restored pristine
+            // θ, and the update sweep leaves it at the post-step point
+            opt.step_zo_multi(params, &probes)?;
+        } else {
+            let capture = if cfg.cache_z { Some(&mut self.next) } else { None };
+            opt.step_zo_multi_prefetch(params, &probes, next_seed, cfg.spsa_eps, capture)?;
+            if cfg.cache_z {
+                std::mem::swap(&mut self.cur, &mut self.next);
+            }
+            self.pending = Some(next_seed);
+        }
+        if let Some(tm) = timing {
+            tm.add("optimizer_step", t.seconds());
+        }
+        Ok(est)
+    }
+
     /// One full ZO step through the **tiled θ-streaming** path (DESIGN.md
     /// §Runtime, `TrainConfig::tiled_sweeps`): identical per-element
     /// arithmetic and sweep accounting to [`Self::step`], but every θ
@@ -573,15 +768,37 @@ impl Trainer {
         opt: &mut dyn Optimizer,
         params: &mut ParamSet,
     ) -> Result<TrainReport> {
-        let cfg = &self.cfg;
-        if let Some(layers) = &cfg.train_only_layers {
+        let mut cfg_run = self.cfg.clone();
+        if let Some(layers) = &cfg_run.train_only_layers {
             let refs: Vec<&str> = layers.iter().map(|s| s.as_str()).collect();
             params.restrict_to_layers(&refs)?;
         }
         // codec conversion happens at the run boundary, before any state
         // allocation or sweep — a bf16 run rounds θ exactly once here
-        if let Some(codec) = cfg.codec {
+        if let Some(codec) = cfg_run.codec {
             params.convert_codec(codec);
+        }
+        // ε-floor heuristic (DESIGN.md §Precision): checked after the codec
+        // conversion so mean|θ| reflects the arena the run actually sweeps
+        if let Some(eps) = eps_floor_clamp(&cfg_run, params) {
+            cfg_run.spsa_eps = eps;
+        }
+        let cfg = &cfg_run;
+        anyhow::ensure!(cfg.probes >= 1, "TrainConfig::probes must be >= 1");
+        if cfg.probes > 1 && opt.kind() == StepKind::Zo {
+            anyhow::ensure!(
+                !opt.wants_post_check(),
+                "{}: probes = {} requires an optimizer without a post-step check — \
+                 run ZO-SGD-Cons with probes = 1",
+                opt.name(),
+                cfg.probes
+            );
+            anyhow::ensure!(
+                cfg.tiled_sweeps.is_none(),
+                "tiled_sweeps drives the single-probe pipeline only — \
+                 run probes = {} without tiled_sweeps",
+                cfg.probes
+            );
         }
         opt.configure_batch(runner.spec.dims.batch);
         opt.init(params);
@@ -608,6 +825,18 @@ impl Trainer {
             }
 
             let loss = match opt.kind() {
+                StepKind::Zo if cfg.probes > 1 => {
+                    // multi-probe batched estimator: q one-sided probes +
+                    // shared baseline, one fused k-seed update sweep
+                    let est = proto
+                        .step_multi_timed(
+                            opt, params, step_seed, next_seed, eval_point, &mut timing, |p| {
+                                runner.loss(p, &batch)
+                            },
+                        )
+                        .context("multi-probe ZO step (probe chain + fused update)")?;
+                    est.loss()
+                }
                 StepKind::Zo => {
                     // tiled mode streams every θ generation through the
                     // runner's staged-upload sink; the monolithic path
@@ -742,8 +971,29 @@ pub fn run_lm(
 ) -> Result<History> {
     let dims = &runner.spec.dims;
     let mut params = runner.load_init_params()?;
-    if let Some(codec) = cfg.codec {
+    let mut cfg_run = cfg.clone();
+    if let Some(codec) = cfg_run.codec {
         params.convert_codec(codec);
+    }
+    // ε-floor heuristic (DESIGN.md §Precision), post codec conversion
+    if let Some(eps) = eps_floor_clamp(&cfg_run, &params) {
+        cfg_run.spsa_eps = eps;
+    }
+    let cfg = &cfg_run;
+    anyhow::ensure!(cfg.probes >= 1, "TrainConfig::probes must be >= 1");
+    if cfg.probes > 1 && opt.kind() == StepKind::Zo {
+        anyhow::ensure!(
+            !opt.wants_post_check(),
+            "{}: probes = {} requires an optimizer without a post-step check",
+            opt.name(),
+            cfg.probes
+        );
+        anyhow::ensure!(
+            cfg.tiled_sweeps.is_none(),
+            "tiled_sweeps drives the single-probe pipeline only — \
+             run probes = {} without tiled_sweeps",
+            cfg.probes
+        );
     }
     opt.configure_batch(dims.batch);
     opt.init(&params);
@@ -761,6 +1011,11 @@ pub fn run_lm(
         let next_seed = mix64(cfg.seed, step as u64 + 1);
         let boundary = step == batches.len(); // final θ must be pristine
         let loss = match opt.kind() {
+            StepKind::Zo if cfg.probes > 1 => proto
+                .step_multi(opt, &mut params, step_seed, next_seed, boundary, |p| {
+                    runner.loss(p, &batch)
+                })?
+                .loss(),
             StepKind::Zo => {
                 let est = if let Some(shards) = cfg.tiled_sweeps {
                     let tiles = TileSpec::by_shards(shards);
@@ -817,6 +1072,9 @@ mod tests {
         assert!(c.codec.is_none());
         // execution default: monolithic uploads (tiled streaming opt-in)
         assert!(c.tiled_sweeps.is_none());
+        // estimator default: single probe, no bf16 ε clamp
+        assert_eq!(c.probes, 1);
+        assert!(!c.eps_floor);
     }
 
     #[test]
@@ -876,6 +1134,93 @@ mod tests {
                 assert!(mono.bits_eq(&tiled), "{codec:?} cache_z {cache_z}");
             }
         }
+    }
+
+    #[test]
+    fn multi_protocol_amortizes_to_q_plus_one_sweeps() {
+        use crate::model::params::{Codec, ParamSet};
+        use crate::optim::helene::Helene;
+        use crate::util::rng::mix64;
+
+        // q-probe steady state: q estimator sweeps (q−1 transitions + final
+        // restore) + 1 fused update+prefetch sweep = q+1 per step, i.e.
+        // 1 + 1/q sweeps per probe; boundary-entered steps pay one
+        // prologue perturb more — the exact multi analog of the
+        // single-probe accounting asserted below
+        let quad = |p: &ParamSet| Ok(p.flat_f32().iter().map(|x| x * x).sum::<f32>());
+        for codec in [Codec::F32, Codec::Bf16] {
+            for cache_z in [true, false] {
+                for q in [2u64, 4] {
+                    let cfg = TrainConfig {
+                        cache_z,
+                        probes: q as usize,
+                        ..Default::default()
+                    };
+                    let mut proto = ZoProtocol::new(&cfg);
+                    let mut params =
+                        ParamSet::synthetic(&[4000, 2000], 0.5).with_codec(codec);
+                    let mut opt = Helene::paper_defaults().with_lr(1e-3);
+                    opt.init(&params);
+                    for step in 1..=5u64 {
+                        let boundary = step == 3 || step == 5;
+                        let before = params.sweep_count();
+                        let est = proto
+                            .step_multi(
+                                &mut opt,
+                                &mut params,
+                                mix64(0, step),
+                                mix64(0, step + 1),
+                                boundary,
+                                quad,
+                            )
+                            .unwrap();
+                        assert_eq!(est.probes.len(), q as usize);
+                        assert!(est.loss().is_finite());
+                        let sweeps = params.sweep_count() - before;
+                        let expect = if step == 1 || step == 4 { q + 2 } else { q + 1 };
+                        assert_eq!(
+                            sweeps, expect,
+                            "step {step} (q {q}, cache_z {cache_z}, {codec:?})"
+                        );
+                        assert_eq!(proto.pending().is_none(), boundary, "step {step}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_protocol_rejects_post_check_optimizers() {
+        use crate::model::params::ParamSet;
+        let quad = |p: &ParamSet| Ok(p.flat_f32().iter().map(|x| x * x).sum::<f32>());
+        let cfg = TrainConfig { probes: 2, ..Default::default() };
+        let mut proto = ZoProtocol::new(&cfg);
+        let mut params = ParamSet::synthetic(&[1000], 0.5);
+        let mut opt = crate::optim::zo_sgd::ZoSgdCons::new(1e-3);
+        opt.init(&params);
+        let err = proto
+            .step_multi(&mut opt, &mut params, 1, 2, false, quad)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("post-check"), "{err:#}");
+    }
+
+    #[test]
+    fn eps_floor_clamps_bf16_only_and_only_on_opt_in() {
+        use crate::model::params::{Codec, ParamSet};
+        let p_f32 = ParamSet::synthetic(&[1000], 0.5);
+        let p_bf16 = ParamSet::synthetic(&[1000], 0.5).with_codec(Codec::Bf16);
+        let mut cfg = TrainConfig { spsa_eps: 1e-5, ..Default::default() };
+        // f32 arena: the heuristic never applies
+        assert!(eps_floor_clamp(&cfg, &p_f32).is_none());
+        // bf16 without opt-in: warn only, no clamp
+        assert!(eps_floor_clamp(&cfg, &p_bf16).is_none());
+        // bf16 with opt-in: ε rises to mean|θ|/256 (0.5 is exact in bf16)
+        cfg.eps_floor = true;
+        let floor = eps_floor_clamp(&cfg, &p_bf16).unwrap();
+        assert!((floor - 0.5 / 256.0).abs() < 1e-7, "floor {floor}");
+        // ε already at/above the floor: untouched
+        cfg.spsa_eps = 1e-2;
+        assert!(eps_floor_clamp(&cfg, &p_bf16).is_none());
     }
 
     #[test]

@@ -99,6 +99,20 @@ pub fn axpy2(out: &mut [u16], za: &[f32], zb: &[f32], sa: f32, sb: f32) {
     }
 }
 
+/// The store-once protocol as a combinator: widen `out` into the
+/// caller-provided f32 staging slice `acc`, let `update` apply any number
+/// of exact f32 accumulations in place, then round **once** on the way
+/// back. [`axpy`] and [`axpy2`] are the fixed-arity special cases; the
+/// k-stream kernels (`znorm::axpy_normal_bf16_k`) use this form so the
+/// stream count can be a runtime value without paying one rounding per
+/// stream. `acc` must be exactly `out.len()` elements.
+#[inline]
+pub fn store_once(out: &mut [u16], acc: &mut [f32], update: impl FnOnce(&mut [f32])) {
+    widen_slice(out, acc);
+    update(acc);
+    store_slice(acc, out);
+}
+
 /// Bulk little-endian u16 encode (the bf16 checkpoint payload convention —
 /// the arena bits ARE the payload, so a bf16 save/load round trip is
 /// bit-exact by construction).
@@ -234,6 +248,40 @@ mod tests {
             .collect();
         axpy(&mut bits, &z, 0.125);
         assert_eq!(bits, reference);
+    }
+
+    #[test]
+    fn store_once_matches_fixed_arity_kernels() {
+        // the combinator with two in-order adds is bitwise axpy2, and with
+        // one add it is bitwise axpy — the fixed-arity kernels are special
+        // cases of the same widen → f32-accumulate → round-once protocol
+        let za: Vec<f32> = (0..300).map(|i| ((i * 37 % 100) as f32 - 50.0) / 25.0).collect();
+        let zb: Vec<f32> = (0..300).map(|i| ((i * 53 % 90) as f32 - 45.0) / 30.0).collect();
+        let start: Vec<u16> = (0..300).map(|i| round((i as f32 - 150.0) / 40.0)).collect();
+        let mut acc = vec![0f32; 300];
+
+        let mut a = start.clone();
+        store_once(&mut a, &mut acc, |acc| {
+            for (x, zv) in acc.iter_mut().zip(&za) {
+                *x += 0.125 * zv;
+            }
+        });
+        let mut a_ref = start.clone();
+        axpy(&mut a_ref, &za, 0.125);
+        assert_eq!(a, a_ref);
+
+        let mut b = start.clone();
+        store_once(&mut b, &mut acc, |acc| {
+            for (x, zv) in acc.iter_mut().zip(&za) {
+                *x += 0.5 * zv;
+            }
+            for (x, zv) in acc.iter_mut().zip(&zb) {
+                *x += -0.25 * zv;
+            }
+        });
+        let mut b_ref = start.clone();
+        axpy2(&mut b_ref, &za, &zb, 0.5, -0.25);
+        assert_eq!(b, b_ref);
     }
 
     #[test]

@@ -35,8 +35,9 @@
 //! two-sample KS bound in `util/rng.rs` + `tests/`).
 //!
 //! Every entry point is **position-offset**: the bulk kernels
-//! ([`fill_normal_at`], [`fill_normal_at2`]) and the fused AXPYs
-//! ([`axpy_normal_at`], [`axpy2_normal_at`], and their bf16 twins) all
+//! ([`fill_normal_at`], [`fill_normal_at2`], [`fill_normal_at_k`]) and the
+//! fused AXPYs ([`axpy_normal_at`], [`axpy2_normal_at`],
+//! [`axpy_normal_at_k`], and their bf16 twins) all
 //! take an explicit stream `start`, and values never depend on block
 //! alignment or slice length. That is what makes the tiled θ-streaming
 //! sweeps (DESIGN.md §Runtime) free: a tile-granular kernel passes its
@@ -251,6 +252,56 @@ pub fn fill_normal_at2(seed_a: u64, seed_b: u64, start: u64, a: &mut [f32], b: &
     }
 }
 
+/// k-seed bulk kernel: `outs[s][i] = z_{seeds[s]}[start + i]` for every
+/// stream `s` in one pass — the runtime-k generalization of
+/// [`fill_normal_at2`]. All k streams are hashed and evaluated per
+/// [`BLOCK`]-wide chunk (the per-chunk loop/branch overhead is paid once,
+/// not k times), and because every lane's mix64+Φ⁻¹ chain depends only on
+/// its own `(seed, position)`, each output stream is **bitwise identical**
+/// to a standalone [`fill_normal_at`] with that seed — at any k, any
+/// (mis)alignment, any length (property-tested for k ∈ {1, 2, 4, 8}).
+pub fn fill_normal_at_k(seeds: &[u64], start: u64, outs: &mut [&mut [f32]]) {
+    assert_eq!(seeds.len(), outs.len(), "k-stream fill seed/output count mismatch");
+    let Some(len) = outs.first().map(|o| o.len()) else { return };
+    for o in outs.iter() {
+        assert_eq!(o.len(), len, "k-stream fill length mismatch");
+    }
+    let full = len - len % BLOCK;
+    let mut base = start;
+    let mut off = 0usize;
+    while off < full {
+        for (&seed, out) in seeds.iter().zip(outs.iter_mut()) {
+            let chunk = &mut out[off..off + BLOCK];
+            let mut x = [0f64; BLOCK];
+            let mut w = [0f64; BLOCK];
+            for l in 0..BLOCK {
+                let (xl, wl) = draw_xw(zbits(seed, base + l as u64));
+                x[l] = xl;
+                w[l] = wl;
+            }
+            let mut any_tail = false;
+            for l in 0..BLOCK {
+                chunk[l] = z_central(w[l], x[l]);
+                any_tail |= w[l] >= W_SPLIT;
+            }
+            if any_tail {
+                for l in 0..BLOCK {
+                    if w[l] >= W_SPLIT {
+                        chunk[l] = z_tail(w[l], x[l]);
+                    }
+                }
+            }
+        }
+        base += BLOCK as u64;
+        off += BLOCK;
+    }
+    for i in off..len {
+        for (&seed, out) in seeds.iter().zip(outs.iter_mut()) {
+            out[i] = normal_at(seed, start + i as u64);
+        }
+    }
+}
+
 /// Fused generate+AXPY: `out[i] += scale · z[start + i]`. The z values are
 /// the same bitwise as [`fill_normal_at`]'s; generation runs through an
 /// L1-resident staging buffer so the AXPY pass never touches DRAM twice.
@@ -296,6 +347,33 @@ pub fn axpy2_normal_at(
         for (x, (za, zb)) in head.iter_mut().zip(buf_a[..n].iter().zip(&buf_b[..n])) {
             *x += scale_a * za;
             *x += scale_b * zb;
+        }
+        base += n as u64;
+        rest = tail;
+    }
+}
+
+/// k-seed fused generate+AXPY: for each stream `s` **in seed order**,
+/// `out[i] += scales[s] · z_{seeds[s]}[start + i]` — k separate f32 adds
+/// per element, so the result is **bitwise identical** to k sequential
+/// [`axpy_normal_at`] sweeps (the add order per element is the sweep
+/// order), while `out` crosses memory once instead of k times. This is the
+/// one-sweep form of a k-perturbation composition: the multi-probe
+/// estimator's combined update basis `Σᵢ gᵢ·zᵢ` is exactly this kernel on
+/// the per-probe g-scales.
+pub fn axpy_normal_at_k(seeds: &[u64], start: u64, scales: &[f32], out: &mut [f32]) {
+    assert_eq!(seeds.len(), scales.len(), "k-stream AXPY seed/scale count mismatch");
+    let mut buf = [0f32; 256];
+    let mut base = start;
+    let mut rest = out;
+    while !rest.is_empty() {
+        let n = rest.len().min(256);
+        let (head, tail) = rest.split_at_mut(n);
+        for (&seed, &scale) in seeds.iter().zip(scales) {
+            fill_normal_at(seed, base, &mut buf[..n]);
+            for (x, z) in head.iter_mut().zip(&buf[..n]) {
+                *x += scale * z;
+            }
         }
         base += n as u64;
         rest = tail;
@@ -348,6 +426,38 @@ pub fn axpy2_normal_bf16(
         let (head, tail) = rest.split_at_mut(n);
         fill_normal_at2(seed_a, seed_b, base, &mut buf_a[..n], &mut buf_b[..n]);
         bf16::axpy2(head, &buf_a[..n], &buf_b[..n], scale_a, scale_b);
+        base += n as u64;
+        rest = tail;
+    }
+}
+
+/// k-seed flavour of [`axpy_normal_bf16`]: widen-on-load, **k separate f32
+/// adds** per element in seed order (the accumulate order of
+/// [`axpy_normal_at_k`]) and **one** rounded store, via
+/// [`crate::util::bf16::store_once`]. Same deliberate asymmetry with the
+/// f32 codec as [`axpy2_normal_bf16`]: k sequential [`axpy_normal_bf16`]
+/// sweeps would round k times, so this fused kernel is the store-once form
+/// — per element within half a bf16 ulp of the k-sweep composition, not
+/// bitwise equal to it (§Precision). For k = 2 it is bitwise
+/// [`axpy2_normal_bf16`].
+pub fn axpy_normal_bf16_k(seeds: &[u64], start: u64, scales: &[f32], out: &mut [u16]) {
+    use crate::util::bf16;
+    assert_eq!(seeds.len(), scales.len(), "k-stream AXPY seed/scale count mismatch");
+    let mut zbuf = [0f32; 256];
+    let mut acc = [0f32; 256];
+    let mut base = start;
+    let mut rest = out;
+    while !rest.is_empty() {
+        let n = rest.len().min(256);
+        let (head, tail) = rest.split_at_mut(n);
+        bf16::store_once(head, &mut acc[..n], |acc| {
+            for (&seed, &scale) in seeds.iter().zip(scales) {
+                fill_normal_at(seed, base, &mut zbuf[..n]);
+                for (x, z) in acc.iter_mut().zip(&zbuf[..n]) {
+                    *x += scale * z;
+                }
+            }
+        });
         base += n as u64;
         rest = tail;
     }
@@ -518,6 +628,96 @@ mod tests {
             // one ulp at the largest magnitude the chain visits (≤ 4 here)
             let ulp = bf16::widen(fused[j]).abs().max(4.0) / 128.0;
             assert!(gap <= ulp, "element {j}: fused vs twice-rounded gap {gap}");
+        }
+    }
+
+    #[test]
+    fn k_fill_bitwise_matches_single_fills() {
+        // every stream of the k-seed kernel must be bitwise the single-seed
+        // kernel's, for all supported k, at any (mis)alignment and length
+        // (incl. a remainder-only case and a tail-exercising large case)
+        for &k in &[1usize, 2, 4, 8] {
+            let seeds: Vec<u64> = (0..k as u64).map(|i| 1000 + 7 * i).collect();
+            for &(start, len) in &[(0u64, 333usize), (1_000_003, 256), (77, 7), (5, 100_000)] {
+                let singles: Vec<Vec<f32>> = seeds
+                    .iter()
+                    .map(|&s| {
+                        let mut v = vec![0f32; len];
+                        fill_normal_at(s, start, &mut v);
+                        v
+                    })
+                    .collect();
+                let mut multi = vec![vec![0f32; len]; k];
+                let mut views: Vec<&mut [f32]> =
+                    multi.iter_mut().map(|v| v.as_mut_slice()).collect();
+                fill_normal_at_k(&seeds, start, &mut views);
+                for (s, (one, many)) in singles.iter().zip(&multi).enumerate() {
+                    assert!(
+                        one.iter().zip(many).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "k {k} stream {s} (start {start}, len {len})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_axpy_matches_sequential_axpys() {
+        // k separate adds per element in seed order: bitwise the k-sweep
+        // composition for every k
+        for &k in &[1usize, 2, 4, 8] {
+            let seeds: Vec<u64> = (0..k as u64).map(|i| 31 + 13 * i).collect();
+            let scales: Vec<f32> = (0..k).map(|i| 0.5 - 0.17 * i as f32).collect();
+            let mut one = vec![0.75f32; 700];
+            for (&s, &sc) in seeds.iter().zip(&scales) {
+                axpy_normal_at(s, 400, sc, &mut one);
+            }
+            let mut fused = vec![0.75f32; 700];
+            axpy_normal_at_k(&seeds, 400, &scales, &mut fused);
+            for j in 0..700 {
+                assert_eq!(one[j].to_bits(), fused[j].to_bits(), "k {k} element {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_axpy_bf16_is_store_once() {
+        use crate::util::bf16;
+        // widen, k f32 adds in seed order, ONE round — check against the
+        // scalar reference for every k, and bitwise axpy2 at k = 2
+        for &k in &[1usize, 2, 4, 8] {
+            let seeds: Vec<u64> = (0..k as u64).map(|i| 51 + 23 * i).collect();
+            let scales: Vec<f32> = (0..k).map(|i| 0.4 - 0.11 * i as f32).collect();
+            let zs: Vec<Vec<f32>> = seeds
+                .iter()
+                .map(|&s| {
+                    let mut v = vec![0f32; 700];
+                    fill_normal_at(s, 400, &mut v);
+                    v
+                })
+                .collect();
+            let start: Vec<u16> =
+                (0..700).map(|i| bf16::round(0.75 + (i as f32) * 1e-3)).collect();
+            let mut fused = start.clone();
+            axpy_normal_bf16_k(&seeds, 400, &scales, &mut fused);
+            for j in 0..700 {
+                let mut v = bf16::widen(start[j]);
+                for (z, &sc) in zs.iter().zip(&scales) {
+                    v += sc * z[j];
+                }
+                assert_eq!(fused[j], bf16::round(v), "k {k} element {j}");
+            }
+            if k == 2 {
+                let mut two = start.clone();
+                axpy2_normal_bf16(seeds[0], seeds[1], 400, scales[0], scales[1], &mut two);
+                assert_eq!(fused, two, "k = 2 must be bitwise the dual kernel");
+            }
+            if k == 1 {
+                // store-once at k = 1 degenerates to the single bf16 AXPY
+                let mut single = start.clone();
+                axpy_normal_bf16(seeds[0], 400, scales[0], &mut single);
+                assert_eq!(fused, single);
+            }
         }
     }
 

@@ -68,6 +68,67 @@ fn prop_perturb_bitwise_identical_across_thread_counts() {
 }
 
 #[test]
+fn prop_k_seed_perturb_matches_sequential_and_is_thread_invariant() {
+    forall("k-seed-perturb", |g| {
+        let base = gen_multi_shard(g);
+        let k = [1usize, 2, 4, 8][g.usize_in(0, 4)];
+        let step_seed = g.u64();
+        let probes: Vec<(u64, f32)> = (0..k)
+            .map(|i| (spsa::probe_seed(step_seed, i), g.f32_in(-1e-2, 1e-2)))
+            .collect();
+        for codec in [Codec::F32, Codec::Bf16] {
+            let arena = base.clone().with_codec(codec);
+            // single-seed reference: one sweep per probe seed
+            let mut seq = arena.clone();
+            for &(s, sc) in &probes {
+                seq.perturb_trainable(s, sc);
+            }
+            let run = |threads: usize| {
+                let mut p = arena.clone();
+                with_pool(threads, || p.perturb_trainable_k(&probes));
+                p
+            };
+            let single = run(1);
+            // the k-seed fused sweep is bitwise invariant across pool sizes
+            // in BOTH codecs (per-element rounding, shard-local staging)
+            for threads in [2, 4, 8] {
+                if !single.bits_eq(&run(threads)) {
+                    return Err(format!(
+                        "k={k} perturb differs at {threads} threads ({codec:?})"
+                    ));
+                }
+            }
+            match codec {
+                // f32: the fused k-stream accumulation is the same f32 op
+                // sequence as k single sweeps — bitwise equal
+                Codec::F32 => {
+                    if single.flat() != seq.flat() {
+                        return Err(format!("k={k} fused != sequential (f32)"));
+                    }
+                }
+                // bf16: one rounded store vs k — bounded by the §Precision
+                // per-store cost, (k+1)·M/256 with M from the fixture range
+                Codec::Bf16 => {
+                    let bound = (k as f32 + 1.0) * 2.5 / 256.0;
+                    let worst = single
+                        .flat_f32()
+                        .iter()
+                        .zip(seq.flat_f32().iter())
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0f32, f32::max);
+                    if worst > bound {
+                        return Err(format!(
+                            "k={k} bf16 fused drifted {worst} > {bound} from sequential"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_optimizer_steps_bitwise_identical_across_thread_counts() {
     forall("step-thread-invariance", |g| {
         let base = gen_multi_shard(g);
