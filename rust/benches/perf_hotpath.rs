@@ -30,7 +30,15 @@
 //!    per-probe wall-clock, and the q=4-vs-single-probe per-probe speedup
 //!    — emitting the CI-gated `sweeps_per_probe` (≤ 1.5 at q=4) and
 //!    `multiprobe_speedup` (≥ 1.0) fields.
-//! 5. **PJRT section** (skipped when `artifacts/` is absent): forward
+//! 5. **Distributed section** (always runs): the seed-and-scalar worker
+//!    tier (`helene::dist`) on a work-weighted separable oracle — wall
+//!    clock of a 1-worker vs 4-worker coordinator run, plus the bitwise
+//!    check of both against the single-process protocol. Emits the
+//!    CI-gated `dist_bitwise` flag (must be true) and the informational
+//!    `dist_speedup` (loss-evaluation parallelism is real only when the
+//!    oracle's FLOPs dominate; on a 2-core runner the speedup is modest
+//!    and not gated).
+//! 6. **PJRT section** (skipped when `artifacts/` is absent): forward
 //!    passes, the buffered fast path, the fused L1 update kernel and
 //!    loss_grad — the per-step cost structure DESIGN.md §Perf documents.
 
@@ -673,6 +681,106 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<(Vec<ThreadRow>, S
     Ok((rows, sweeps))
 }
 
+/// §Distributed bench outcome: 1-worker vs N-worker coordinator wall
+/// clock and the bitwise cross-check against the single-process protocol.
+struct DistBenchStats {
+    t1_ms: f64,
+    tn_ms: f64,
+    workers: usize,
+    steps: usize,
+    bitwise: bool,
+}
+
+impl DistBenchStats {
+    fn speedup(&self) -> f64 {
+        self.t1_ms / self.tn_ms
+    }
+}
+
+/// Distributed seed-and-scalar tier: run the same trajectory through the
+/// single-process `ZoProtocol`, a 1-worker coordinator and an N-worker
+/// coordinator over a work-weighted [`SepQuadOracle`]; assert nothing
+/// here (CI gates on the emitted `dist_bitwise`), just measure and
+/// cross-check.
+fn dist_section(base: &ParamSet, scale: Scale) -> anyhow::Result<DistBenchStats> {
+    use helene::dist::{
+        Coordinator, DistConfig, SepQuadOracle, ShardLossOracle, WorkerFactory,
+    };
+    use helene::optim::zo_sgd::ZoSgd;
+    use helene::train::{TrainConfig, ZoProtocol};
+    use helene::util::rng::mix64;
+
+    let steps = match scale {
+        Scale::Smoke => 4,
+        _ => 8,
+    };
+    // weight the oracle so loss FLOPs dominate the arena sweeps — the
+    // regime the tier parallelizes
+    let work = 6u32;
+    let workers = 4usize;
+    let (run_seed, eps, lr) = (5u64, 1e-3f32, 0.01f32);
+
+    // single-process reference trajectory over the same canonical fold
+    let n_shards = base.n_shards();
+    let mut oracle = SepQuadOracle::with_work(work);
+    let cfg = TrainConfig { steps, spsa_eps: eps, seed: run_seed, ..Default::default() };
+    let mut opt = ZoSgd::new(lr);
+    opt.init(base);
+    let mut ref_params = base.clone();
+    let mut proto = ZoProtocol::new(&cfg);
+    let mut ref_losses = Vec::with_capacity(steps);
+    for step in 1..=steps {
+        let est = proto.step(
+            &mut opt,
+            &mut ref_params,
+            mix64(run_seed, step as u64),
+            mix64(run_seed, step as u64 + 1),
+            step == steps,
+            |p| {
+                Ok(spsa::fold_partial_losses(
+                    oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                ))
+            },
+        )?;
+        ref_losses.push(est.loss());
+    }
+    proto.finish(&mut ref_params);
+
+    let run = |n: usize| -> anyhow::Result<(f64, Vec<f32>, ParamSet)> {
+        let cfg = DistConfig { workers: n, eps, ..Default::default() };
+        let factory: WorkerFactory = Box::new(move |_slot| {
+            Ok((
+                Box::new(SepQuadOracle::with_work(work)) as Box<dyn ShardLossOracle>,
+                Box::new(ZoSgd::new(lr)) as Box<dyn Optimizer>,
+            ))
+        });
+        let mut coord = Coordinator::launch_threads(cfg, base.clone(), factory)?;
+        let t0 = Instant::now();
+        let report = coord.run(steps, run_seed)?;
+        Ok((t0.elapsed().as_secs_f64() * 1e3, report.losses, report.params))
+    };
+    let (t1_ms, losses_1, params_1) = run(1)?;
+    let (tn_ms, losses_n, params_n) = run(workers)?;
+
+    let trace_eq = |l: &[f32]| {
+        l.len() == ref_losses.len()
+            && l.iter().zip(&ref_losses).all(|(a, b)| a.to_bits() == b.to_bits())
+    };
+    let bitwise = trace_eq(&losses_1)
+        && trace_eq(&losses_n)
+        && params_1.bits_eq(&ref_params)
+        && params_n.bits_eq(&ref_params);
+    println!(
+        "dist tier ({} params, {steps} steps, work={work}): 1 worker {t1_ms:.1} ms, \
+         {workers} workers {tn_ms:.1} ms ({:.2}x), bitwise vs single-process: {}",
+        base.n_params(),
+        t1_ms / tn_ms,
+        if bitwise { "identical" } else { "MISMATCH" }
+    );
+    Ok(DistBenchStats { t1_ms, tn_ms, workers, steps, bitwise })
+}
+
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     scale: Scale,
     sampler: &SamplerRow,
@@ -681,6 +789,7 @@ fn write_json(
     bf16: &Bf16Stats,
     tiled: &TiledStats,
     multi: &MultiStats,
+    dist: &DistBenchStats,
     n_params: usize,
 ) -> anyhow::Result<PathBuf> {
     let mut threads = BTreeMap::new();
@@ -830,6 +939,18 @@ fn write_json(
         mp.insert(format!("q{}", r.q), Json::Obj(o));
     }
     root.insert("multiprobe".to_string(), Json::Obj(mp));
+    // distributed seed-and-scalar tier (DESIGN.md §Distributed): the CI
+    // gate asserts dist_bitwise — the coordinator must reproduce the
+    // single-process trajectory exactly; dist_speedup is informational
+    // (real parallelism needs the oracle's FLOPs to dominate)
+    root.insert("dist_bitwise".to_string(), Json::Bool(dist.bitwise));
+    root.insert("dist_speedup".to_string(), Json::Num(dist.speedup()));
+    let mut dj = BTreeMap::new();
+    dj.insert("workers".to_string(), Json::Num(dist.workers as f64));
+    dj.insert("steps".to_string(), Json::Num(dist.steps as f64));
+    dj.insert("t1_ms".to_string(), Json::Num(dist.t1_ms));
+    dj.insert("tn_ms".to_string(), Json::Num(dist.tn_ms));
+    root.insert("dist".to_string(), Json::Obj(dj));
     // measured by the instrumented ParamSet sweep counter, not assumed
     let mut sw = BTreeMap::new();
     sw.insert("unfused".to_string(), Json::Num(sweeps.unfused as f64));
@@ -988,8 +1109,9 @@ fn main() -> anyhow::Result<()> {
     let bf16 = bf16_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), iters)?;
     let tiled = tiled_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), iters)?;
     let multi = multiprobe_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), iters)?;
+    let dist = dist_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), scale)?;
     let n_params = synth_sizes(scale).iter().sum();
-    write_json(scale, &sampler, &rows, &sweeps, &bf16, &tiled, &multi, n_params)?;
+    write_json(scale, &sampler, &rows, &sweeps, &bf16, &tiled, &multi, &dist, n_params)?;
 
     if Runtime::default_dir().join("manifest.json").exists() {
         pjrt_section(match scale {

@@ -1,0 +1,617 @@
+//! The coordinator: step loop, probe aggregation, retry/backoff,
+//! quorum degradation and seed-log-replay recovery.
+//!
+//! One step proceeds as:
+//!
+//! 1. **Probe round.** The step seed is derived (`mix64(run_seed, step)`,
+//!    same as the single-worker loop) and each shard span is dispatched
+//!    to a live worker. Replies are per-shard f64 partial losses; the
+//!    coordinator concatenates them in global shard order and folds with
+//!    [`fold_partial_losses`] — one canonical left-fold, one rounding to
+//!    f32 — so `L⁺`/`L⁻` are bitwise independent of the worker count.
+//! 2. **Commit.** `g = (L⁺ − L⁻) / 2ε` (the exact `SpsaEstimate`
+//!    arithmetic), the `(step, seed, g, eps)` record is appended to the
+//!    in-memory log (and the persistent seed log, when configured), and
+//!    the record is broadcast; every worker answers with a digest of its
+//!    post-apply replica, which must be unanimous.
+//!
+//! The failure story is driven entirely by two signals: a **closed lane**
+//! (send error) means a worker is dead — it is struck from the quorum
+//! and, with recovery on, rebuilt from the step-0 arena plus the seed
+//! log; a **missing / poisoned reply** (timeout, dropped message,
+//! non-finite or malformed partials, reported oracle error) consumes one
+//! unit of the per-span retry budget and re-dispatches the span to the
+//! next live worker with exponentially backed-off deadlines. Every
+//! reply is deduplicated by `(step, span)`, so late duplicates from
+//! delayed workers are counted and discarded, never double-folded.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::fault::FaultPlan;
+use super::transport::{ChannelTransport, Disconnected, Reply, Request, Transport};
+use super::worker::{run_worker, Worker};
+use super::{plan_spans, WorkerFactory};
+use crate::model::checkpoint::{self, SeedRecord};
+use crate::model::ParamSet;
+use crate::optim::spsa::fold_partial_losses;
+use crate::util::rng::mix64;
+
+/// Knobs for the distributed tier. Mirrored by `TrainConfig`'s
+/// robustness fields and validated up front (never mid-run).
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Number of worker slots (≥ 1).
+    pub workers: usize,
+    /// Probe radius ε, shared by every step.
+    pub eps: f32,
+    /// Base per-wave reply deadline; waves back off exponentially from
+    /// here (×2 per wave, capped at ×8).
+    pub timeout: Duration,
+    /// Retries allowed per span per step beyond the first attempt (≥ 1).
+    pub retry_budget: usize,
+    /// Replace dead workers by seed-log replay. When off, the run
+    /// degrades to the surviving quorum (and fails only when no workers
+    /// survive).
+    pub recover: bool,
+    /// Deterministic fault schedule (empty = healthy cluster).
+    pub fault_plan: FaultPlan,
+    /// When set, every committed record is appended to this seed-log
+    /// file ([`checkpoint::append_seed_log`]) as it is won.
+    pub seed_log: Option<PathBuf>,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            workers: 1,
+            eps: 1e-3,
+            timeout: Duration::from_millis(1000),
+            retry_budget: 3,
+            recover: true,
+            fault_plan: FaultPlan::new(),
+            seed_log: None,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Reject unusable knob values with actionable messages — called at
+    /// construction (and by the CLI at parse time), not mid-run.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.workers >= 1,
+            "workers must be >= 1 (got 0): the tier needs at least one worker; \
+             use workers = 1 for a single-replica run"
+        );
+        ensure!(
+            !self.timeout.is_zero(),
+            "worker timeout must be > 0 ms (got 0): a zero deadline would expire \
+             every wave before any reply could arrive"
+        );
+        ensure!(
+            self.retry_budget >= 1,
+            "retry budget must be >= 1 (got 0): with no retries a single dropped \
+             reply would fail the run; raise --retries"
+        );
+        ensure!(
+            self.eps.is_finite() && self.eps > 0.0,
+            "probe radius eps must be finite and > 0 (got {})",
+            self.eps
+        );
+        Ok(())
+    }
+}
+
+/// Robustness counters accumulated over a run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DistStats {
+    /// Workers detected dead (closed lane).
+    pub deaths: usize,
+    /// Replacement workers spawned via seed-log replay.
+    pub recoveries: usize,
+    /// Probe/apply re-dispatches beyond first attempts.
+    pub retries: usize,
+    /// Stale or duplicate replies discarded by the dedupe filters.
+    pub late_replies: usize,
+}
+
+/// The outcome of a distributed run.
+#[derive(Debug)]
+pub struct DistReport {
+    /// Per-step training loss `0.5·(L⁺ + L⁻)`, bitwise identical to the
+    /// single-worker protocol's trace (f32 arenas).
+    pub losses: Vec<f32>,
+    /// Final parameters, fetched from a surviving replica.
+    pub params: ParamSet,
+    /// The complete `(step, seed, g, eps)` log — everything needed to
+    /// rebuild `params` from the step-0 arena.
+    pub log: Vec<SeedRecord>,
+    /// Robustness counters.
+    pub stats: DistStats,
+    /// Workers alive at the end of the run.
+    pub workers_alive: usize,
+}
+
+/// The step-loop owner. Generic over [`Transport`] plus a spawner
+/// closure that turns a built [`Worker`] and its endpoint into a running
+/// execution context (a thread for [`ChannelTransport`]; a process for a
+/// future socket transport).
+pub struct Coordinator<T: Transport> {
+    cfg: DistConfig,
+    base: ParamSet,
+    factory: WorkerFactory,
+    transport: T,
+    spawner: Box<dyn FnMut(usize, Worker, T::Endpoint) -> Result<()>>,
+    spans: Vec<Range<usize>>,
+    alive: Vec<bool>,
+    log: Vec<SeedRecord>,
+    stats: DistStats,
+}
+
+impl Coordinator<ChannelTransport> {
+    /// Launch the in-process tier: one detached thread per worker slot,
+    /// wired over [`ChannelTransport`]. `base` is the step-0 arena every
+    /// replica clones; `factory` builds each worker's oracle + optimizer.
+    pub fn launch_threads(
+        cfg: DistConfig,
+        base: ParamSet,
+        factory: WorkerFactory,
+    ) -> Result<Self> {
+        let spawner = Box::new(|slot: usize, worker: Worker, endpoint| {
+            std::thread::Builder::new()
+                .name(format!("helene-dist-worker-{slot}"))
+                .spawn(move || run_worker(worker, endpoint))
+                .map(|_| ())
+                .context("failed to spawn a worker thread")
+        });
+        Coordinator::new(cfg, base, factory, ChannelTransport::new(), spawner)
+    }
+}
+
+impl<T: Transport> Coordinator<T> {
+    /// Build and launch `cfg.workers` workers over `transport`.
+    pub fn new(
+        cfg: DistConfig,
+        base: ParamSet,
+        factory: WorkerFactory,
+        transport: T,
+        spawner: Box<dyn FnMut(usize, Worker, T::Endpoint) -> Result<()>>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let spans = plan_spans(&base.spec, cfg.workers)?;
+        let mut coord = Coordinator {
+            alive: vec![false; cfg.workers],
+            cfg,
+            base,
+            factory,
+            transport,
+            spawner,
+            spans,
+            log: Vec::new(),
+            stats: DistStats::default(),
+        };
+        for slot in 0..coord.cfg.workers {
+            let plan = coord.cfg.fault_plan.clone();
+            coord.spawn_worker(slot, plan)?;
+        }
+        Ok(coord)
+    }
+
+    /// Robustness counters so far.
+    pub fn stats(&self) -> &DistStats {
+        &self.stats
+    }
+
+    /// The committed seed log so far.
+    pub fn seed_log(&self) -> &[SeedRecord] {
+        &self.log
+    }
+
+    /// Number of currently live workers.
+    pub fn workers_alive(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// The planned shard spans (fixed for the run).
+    pub fn spans(&self) -> &[Range<usize>] {
+        &self.spans
+    }
+
+    /// Build (or rebuild) the worker for `slot`: fresh replica of the
+    /// step-0 arena, fast-forwarded through the current seed log, then
+    /// handed to the spawner with a fresh transport lane. The fault plan
+    /// is per-incarnation: initial workers get the configured plan,
+    /// replacements spawn healthy (a scripted fault fires once).
+    fn spawn_worker(&mut self, slot: usize, plan: FaultPlan) -> Result<()> {
+        let (oracle, opt) = (self.factory)(slot)
+            .with_context(|| format!("worker factory failed for slot {slot}"))?;
+        let mut worker = Worker::new(slot, &self.base, opt, oracle, plan);
+        worker
+            .replay(&self.log)
+            .with_context(|| format!("seed-log replay failed while rebuilding worker {slot}"))?;
+        let endpoint = self.transport.open(slot);
+        (self.spawner)(slot, worker, endpoint)?;
+        self.alive[slot] = true;
+        Ok(())
+    }
+
+    /// Strike a dead worker from the quorum; with recovery on, rebuild
+    /// it in place from the seed log.
+    fn on_death(&mut self, slot: usize) -> Result<()> {
+        if self.alive[slot] {
+            self.alive[slot] = false;
+            self.stats.deaths += 1;
+        }
+        if self.cfg.recover {
+            self.spawn_worker(slot, FaultPlan::new())?;
+            self.stats.recoveries += 1;
+        } else {
+            ensure!(
+                self.alive.iter().any(|&a| a),
+                "no surviving workers: the last worker died and recovery is disabled"
+            );
+        }
+        Ok(())
+    }
+
+    /// Deterministic worker choice for a span attempt: attempt 1 maps
+    /// span `i` to the `i`-th live worker, and each retry rotates one
+    /// live worker further (so a poisoned worker is routed around).
+    fn pick_worker(&self, span_i: usize, attempt: usize) -> Result<usize> {
+        let live: Vec<usize> = (0..self.alive.len()).filter(|&w| self.alive[w]).collect();
+        ensure!(!live.is_empty(), "no surviving workers");
+        Ok(live[(span_i + attempt - 1) % live.len()])
+    }
+
+    /// Per-wave deadline with bounded exponential backoff.
+    fn wave_timeout(&self, wave: u32) -> Duration {
+        self.cfg.timeout * 2u32.pow(wave.min(3))
+    }
+
+    /// (Re-)dispatch span `span_i` of `step`, consuming one attempt.
+    fn dispatch_probe(
+        &mut self,
+        step: u64,
+        seed: u64,
+        span_i: usize,
+        attempts: &mut [usize],
+        assigned_to: &mut [usize],
+        last_err: &Option<String>,
+    ) -> Result<()> {
+        attempts[span_i] += 1;
+        if attempts[span_i] > 1 {
+            self.stats.retries += 1;
+        }
+        if attempts[span_i] > 1 + self.cfg.retry_budget {
+            let detail = last_err
+                .as_ref()
+                .map(|e| format!("; last error: {e}"))
+                .unwrap_or_default();
+            bail!(
+                "retry budget exhausted at step {step} (seed {seed}): span {:?} still \
+                 unanswered after {} attempts (budget {} retries){detail}",
+                self.spans[span_i],
+                attempts[span_i] - 1,
+                self.cfg.retry_budget
+            );
+        }
+        loop {
+            let target = self.pick_worker(span_i, attempts[span_i])?;
+            let req = Request::Probe {
+                step,
+                seed,
+                eps: self.cfg.eps,
+                shards: self.spans[span_i].clone(),
+            };
+            match self.transport.send(target, req) {
+                Ok(()) => {
+                    assigned_to[span_i] = target;
+                    return Ok(());
+                }
+                Err(Disconnected(w)) => self.on_death(w)?,
+            }
+        }
+    }
+
+    /// Run one probe round and return the canonical `(L⁺, L⁻)` folds.
+    fn probe_round(&mut self, step: u64, seed: u64) -> Result<(f32, f32)> {
+        let n_spans = self.spans.len();
+        let mut plus: Vec<Option<Vec<f64>>> = vec![None; n_spans];
+        let mut minus: Vec<Option<Vec<f64>>> = vec![None; n_spans];
+        let mut attempts = vec![0usize; n_spans];
+        let mut assigned_to = vec![usize::MAX; n_spans];
+        let mut last_err: Option<String> = None;
+        let mut outstanding = n_spans;
+
+        for i in 0..n_spans {
+            self.dispatch_probe(step, seed, i, &mut attempts, &mut assigned_to, &last_err)?;
+        }
+
+        let mut wave: u32 = 0;
+        while outstanding > 0 {
+            let deadline = Instant::now() + self.wave_timeout(wave);
+            while outstanding > 0 {
+                let Some(reply) = self.transport.recv_deadline(deadline) else { break };
+                match reply {
+                    Reply::Probe { worker, step: s, shards, plus: p, minus: m } => {
+                        if s != step {
+                            self.stats.late_replies += 1;
+                            continue;
+                        }
+                        let Some(i) = self.spans.iter().position(|sp| *sp == shards) else {
+                            self.stats.late_replies += 1;
+                            continue;
+                        };
+                        if plus[i].is_some() {
+                            self.stats.late_replies += 1;
+                            continue;
+                        }
+                        let want = shards.len();
+                        if p.len() != want || m.len() != want {
+                            last_err = Some(format!(
+                                "worker {worker} returned {}/{} partials for the \
+                                 {want}-shard span {shards:?}",
+                                p.len(),
+                                m.len()
+                            ));
+                            self.dispatch_probe(
+                                step, seed, i, &mut attempts, &mut assigned_to, &last_err,
+                            )?;
+                            continue;
+                        }
+                        if let Some(bad) =
+                            p.iter().chain(m.iter()).find(|v| !v.is_finite())
+                        {
+                            last_err = Some(format!(
+                                "worker {worker} returned a non-finite partial loss \
+                                 ({bad}) for span {shards:?} at step {step} (seed {seed})"
+                            ));
+                            self.dispatch_probe(
+                                step, seed, i, &mut attempts, &mut assigned_to, &last_err,
+                            )?;
+                            continue;
+                        }
+                        plus[i] = Some(p);
+                        minus[i] = Some(m);
+                        outstanding -= 1;
+                    }
+                    Reply::Failed { worker, step: s, msg } => {
+                        if s != step {
+                            self.stats.late_replies += 1;
+                            continue;
+                        }
+                        last_err = Some(format!("worker {worker}: {msg}"));
+                        if let Some(i) = (0..n_spans)
+                            .find(|&i| assigned_to[i] == worker && plus[i].is_none())
+                        {
+                            self.dispatch_probe(
+                                step, seed, i, &mut attempts, &mut assigned_to, &last_err,
+                            )?;
+                        }
+                    }
+                    Reply::Applied { .. } | Reply::Params { .. } => {
+                        self.stats.late_replies += 1;
+                    }
+                }
+            }
+            if outstanding > 0 {
+                wave += 1;
+                for i in 0..n_spans {
+                    if plus[i].is_none() {
+                        self.dispatch_probe(
+                            step, seed, i, &mut attempts, &mut assigned_to, &last_err,
+                        )?;
+                    }
+                }
+            }
+        }
+
+        let lp = fold_partial_losses(
+            plus.iter().flat_map(|v| v.as_deref().expect("filled").iter().copied()),
+        );
+        let lm = fold_partial_losses(
+            minus.iter().flat_map(|v| v.as_deref().expect("filled").iter().copied()),
+        );
+        Ok((lp, lm))
+    }
+
+    /// Broadcast the committed record and require a unanimous replica
+    /// digest from every live worker.
+    fn apply_round(&mut self, rec: SeedRecord) -> Result<()> {
+        let step = rec.step;
+        let mut digests: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut wave: u32 = 0;
+        loop {
+            // (re)send to every live worker still missing a digest
+            for w in 0..self.alive.len() {
+                if !self.alive[w] || digests.contains_key(&w) {
+                    continue;
+                }
+                let req = Request::Apply { step, seed: rec.seed, eps: rec.eps, g: rec.g };
+                if let Err(Disconnected(dead)) = self.transport.send(w, req) {
+                    // a replacement replays the log (which already holds
+                    // this record), so the resend next wave just collects
+                    // its digest via the idempotent-apply path
+                    self.on_death(dead)?;
+                }
+            }
+            let pending = (0..self.alive.len())
+                .filter(|&w| self.alive[w] && !digests.contains_key(&w))
+                .count();
+            if pending == 0 {
+                break;
+            }
+            let deadline = Instant::now() + self.wave_timeout(wave);
+            loop {
+                let done = (0..self.alive.len())
+                    .all(|w| !self.alive[w] || digests.contains_key(&w));
+                if done {
+                    break;
+                }
+                let Some(reply) = self.transport.recv_deadline(deadline) else { break };
+                match reply {
+                    Reply::Applied { worker, step: s, digest } if s == step => {
+                        digests.insert(worker, digest);
+                    }
+                    Reply::Failed { worker, step: s, msg } if s == step => {
+                        bail!(
+                            "worker {worker} failed to commit step {step} \
+                             (seed {}): {msg}",
+                            rec.seed
+                        );
+                    }
+                    _ => {
+                        self.stats.late_replies += 1;
+                    }
+                }
+            }
+            let done = (0..self.alive.len())
+                .all(|w| !self.alive[w] || digests.contains_key(&w));
+            if done {
+                break;
+            }
+            wave += 1;
+            self.stats.retries += 1;
+            ensure!(
+                (wave as usize) <= self.cfg.retry_budget,
+                "commit broadcast for step {step} not fully acknowledged after \
+                 {wave} waves (budget {} retries)",
+                self.cfg.retry_budget
+            );
+        }
+        let mut values = digests.values();
+        if let Some(&first) = values.next() {
+            ensure!(
+                values.all(|&d| d == first),
+                "replica divergence after step {step}: digests {digests:?} are not \
+                 unanimous — a worker's arena has drifted from the quorum"
+            );
+        }
+        Ok(())
+    }
+
+    /// Fetch the full replica from the first live worker.
+    fn fetch_params(&mut self) -> Result<ParamSet> {
+        let all = self.fetch_all()?;
+        let (_, params) = all.into_iter().next().context("no replicas to fetch")?;
+        Ok(params)
+    }
+
+    /// Fetch every live worker's replica (readout + divergence tests).
+    pub fn fetch_all(&mut self) -> Result<Vec<(usize, ParamSet)>> {
+        let mut got: BTreeMap<usize, ParamSet> = BTreeMap::new();
+        let mut wave: u32 = 0;
+        loop {
+            for w in 0..self.alive.len() {
+                if !self.alive[w] || got.contains_key(&w) {
+                    continue;
+                }
+                if let Err(Disconnected(dead)) = self.transport.send(w, Request::Fetch) {
+                    self.on_death(dead)?;
+                }
+            }
+            let pending = (0..self.alive.len())
+                .filter(|&w| self.alive[w] && !got.contains_key(&w))
+                .count();
+            if pending == 0 {
+                break;
+            }
+            let deadline = Instant::now() + self.wave_timeout(wave);
+            loop {
+                let done = (0..self.alive.len())
+                    .all(|w| !self.alive[w] || got.contains_key(&w));
+                if done {
+                    break;
+                }
+                let Some(reply) = self.transport.recv_deadline(deadline) else { break };
+                match reply {
+                    Reply::Params { worker, codec, payload, .. } => {
+                        let mut params = ParamSet::from_payload(
+                            self.base.spec.clone(),
+                            codec,
+                            &payload,
+                        )
+                        .with_context(|| {
+                            format!("worker {worker} shipped an undecodable replica")
+                        })?;
+                        // replicas inherit the run's effective train mask,
+                        // which may be narrower than the manifest default
+                        params.train_mask = self.base.train_mask.clone();
+                        got.insert(worker, params);
+                    }
+                    _ => {
+                        self.stats.late_replies += 1;
+                    }
+                }
+            }
+            let done = (0..self.alive.len())
+                .all(|w| !self.alive[w] || got.contains_key(&w));
+            if done {
+                break;
+            }
+            wave += 1;
+            ensure!(
+                (wave as usize) <= self.cfg.retry_budget,
+                "replica fetch not answered after {wave} waves (budget {} retries)",
+                self.cfg.retry_budget
+            );
+        }
+        ensure!(!got.is_empty(), "no surviving workers to fetch replicas from");
+        Ok(got.into_iter().collect())
+    }
+
+    /// Run `steps` training steps from the step-0 arena. Step seeds are
+    /// `mix64(run_seed, step)`, exactly as the single-worker loop, so
+    /// the trajectory is comparable bit-for-bit.
+    pub fn run(&mut self, steps: usize, run_seed: u64) -> Result<DistReport> {
+        ensure!(
+            self.log.is_empty(),
+            "Coordinator::run starts from step 0; this coordinator has already \
+             committed {} steps",
+            self.log.len()
+        );
+        let mut losses = Vec::with_capacity(steps);
+        for step in 1..=steps as u64 {
+            let seed = mix64(run_seed, step);
+            let (lp, lm) = self.probe_round(step, seed)?;
+            ensure!(
+                lp.is_finite() && lm.is_finite(),
+                "non-finite aggregated loss at step {step} (step seed {seed}): \
+                 L+ = {lp}, L- = {lm} — aborting before the estimate poisons \
+                 the optimizer state"
+            );
+            let g = (lp - lm) / (2.0 * self.cfg.eps);
+            let rec = SeedRecord { step, seed, g, eps: self.cfg.eps };
+            self.log.push(rec);
+            if let Some(path) = self.cfg.seed_log.clone() {
+                checkpoint::append_seed_log(&path, &[rec])
+                    .with_context(|| format!("persisting seed log for step {step}"))?;
+            }
+            self.apply_round(rec)?;
+            losses.push(0.5 * (lp + lm));
+        }
+        let params = self.fetch_params()?;
+        Ok(DistReport {
+            losses,
+            params,
+            log: self.log.clone(),
+            stats: self.stats.clone(),
+            workers_alive: self.workers_alive(),
+        })
+    }
+}
+
+impl<T: Transport> Drop for Coordinator<T> {
+    fn drop(&mut self) {
+        for w in 0..self.alive.len() {
+            if self.alive[w] {
+                let _ = self.transport.send(w, Request::Shutdown);
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Deterministic fault injection for the distributed tier.
+//!
+//! A [`FaultPlan`] is a map from `(step, worker)` to a [`Fault`], so a
+//! faulted run is exactly reproducible: the same plan against the same
+//! seed always kills / delays / corrupts the same messages. The property
+//! tests in `tests/dist_fault.rs` lean on this to assert that every
+//! faulted trajectory still ends bitwise identical to the unfaulted
+//! single-worker protocol.
+//!
+//! Plans parse from a compact spec string (the `--fault-plan` CLI flag):
+//!
+//! ```text
+//! die@3:1,drop@5:0,nan@7:2,delay@4:1:50
+//! ```
+//!
+//! i.e. comma-separated `kind@step:worker` entries, with `delay` taking a
+//! trailing `:millis`. One entry per `(step, worker)` pair.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+/// One injected fault, applied when the worker receives a probe request
+/// (or, for [`Fault::Die`], any stepped request) at the keyed step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// The worker process dies: its loop exits without replying, closing
+    /// its channels. Permanent for that incarnation — the coordinator
+    /// detects the closed channel, degrades to the surviving quorum and
+    /// (when recovery is on) replays the seed log into a replacement.
+    /// Replacements spawn with an empty plan: a scripted fault kills its
+    /// worker once.
+    Die,
+    /// The reply is computed but never sent (a lost message). Fires once;
+    /// the coordinator's retry succeeds.
+    DropReply,
+    /// The reply is sent after this many milliseconds — long enough past
+    /// the coordinator timeout, it behaves like a drop plus a late,
+    /// discarded duplicate. Fires once.
+    DelayReply(u64),
+    /// The reply's first partial loss is replaced with NaN. Fires once;
+    /// the coordinator discards the poisoned reply and retries — on a
+    /// multi-worker quorum the rotation routes the retry to the next
+    /// live worker.
+    NanPartial,
+}
+
+/// A deterministic fault schedule keyed by `(step, worker)`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    entries: BTreeMap<(u64, usize), Fault>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults — the healthy-cluster default).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one fault at `(step, worker)`; replaces any previous entry for
+    /// that key.
+    pub fn insert(&mut self, step: u64, worker: usize, fault: Fault) {
+        self.entries.insert((step, worker), fault);
+    }
+
+    /// The fault scheduled for `(step, worker)`, if any.
+    pub fn get(&self, step: u64, worker: usize) -> Option<Fault> {
+        self.entries.get(&(step, worker)).copied()
+    }
+
+    /// Whether the plan schedules no faults at all.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Parse a spec string: comma-separated `kind@step:worker` entries
+    /// (`delay` takes a trailing `:millis`). Kinds: `die`, `drop`, `nan`,
+    /// `delay`. Duplicate `(step, worker)` keys are rejected — a plan
+    /// must be unambiguous to be replayable.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = entry.split_once('@').with_context(|| {
+                format!(
+                    "fault entry {entry:?} is missing '@' — expected kind@step:worker \
+                     (e.g. die@3:1)"
+                )
+            })?;
+            let mut fields = rest.split(':');
+            let step: u64 = fields
+                .next()
+                .unwrap_or_default()
+                .parse()
+                .with_context(|| format!("fault entry {entry:?}: bad step number"))?;
+            let worker: usize = fields
+                .next()
+                .with_context(|| {
+                    format!("fault entry {entry:?} is missing the worker index")
+                })?
+                .parse()
+                .with_context(|| format!("fault entry {entry:?}: bad worker index"))?;
+            let fault = match kind {
+                "die" => Fault::Die,
+                "drop" => Fault::DropReply,
+                "nan" => Fault::NanPartial,
+                "delay" => {
+                    let ms: u64 = fields
+                        .next()
+                        .with_context(|| {
+                            format!("fault entry {entry:?} is missing the delay millis \
+                                     (delay@step:worker:ms)")
+                        })?
+                        .parse()
+                        .with_context(|| format!("fault entry {entry:?}: bad delay millis"))?;
+                    Fault::DelayReply(ms)
+                }
+                other => bail!(
+                    "unknown fault kind {other:?} in {entry:?} — expected die | drop | \
+                     nan | delay"
+                ),
+            };
+            if !matches!(fault, Fault::DelayReply(_)) && fields.next().is_some() {
+                bail!("fault entry {entry:?} has trailing fields");
+            }
+            if plan.entries.insert((step, worker), fault).is_some() {
+                bail!("duplicate fault for step {step}, worker {worker} in {spec:?}");
+            }
+        }
+        Ok(plan)
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (&(step, worker), fault) in &self.entries {
+            if !first {
+                write!(f, ",")?;
+            }
+            first = false;
+            match fault {
+                Fault::Die => write!(f, "die@{step}:{worker}")?,
+                Fault::DropReply => write!(f, "drop@{step}:{worker}")?,
+                Fault::NanPartial => write!(f, "nan@{step}:{worker}")?,
+                Fault::DelayReply(ms) => write!(f, "delay@{step}:{worker}:{ms}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_round_trips() {
+        let spec = "die@3:1,drop@5:0,nan@7:2,delay@4:1:50";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.get(3, 1), Some(Fault::Die));
+        assert_eq!(plan.get(5, 0), Some(Fault::DropReply));
+        assert_eq!(plan.get(7, 2), Some(Fault::NanPartial));
+        assert_eq!(plan.get(4, 1), Some(Fault::DelayReply(50)));
+        assert_eq!(plan.get(4, 0), None);
+        // Display emits a parseable spec that reproduces the plan
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+    }
+
+    #[test]
+    fn empty_and_whitespace_specs_are_empty_plans() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        for bad in [
+            "die3:1",          // no @
+            "die@x:1",         // bad step
+            "die@3",           // no worker
+            "die@3:y",         // bad worker
+            "boom@3:1",        // unknown kind
+            "delay@3:1",       // delay without millis
+            "delay@3:1:z",     // bad millis
+            "die@3:1:9",       // trailing field on a non-delay kind
+            "die@3:1,die@3:1", // duplicate key
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! Fault-tolerant distributed ZO training: the seed-and-scalar tier.
+//!
+//! A ZO update is fully described by `(step_seed, g_scalar)` — the MeZO
+//! seed trick — and the position-pure v2 z-stream (`util/znorm`) makes
+//! reconstructing any step O(1)-addressable and bitwise deterministic.
+//! This module cashes that in as a distributed training tier whose wire
+//! protocol is ~24 bytes per step per worker, with no gradient exchange:
+//!
+//! * a [`Coordinator`] owns the step loop: it assigns probe seeds, hands
+//!   each worker a shard span of the loss to evaluate, folds the partial
+//!   losses into the SPSA scalar `g` with the canonical order-fixed fold
+//!   ([`crate::optim::spsa::fold_partial_losses`]), and broadcasts the
+//!   winning `(step, seed, g, eps)` record;
+//! * N [`Worker`]s each own a **full replica** of the arena plus a
+//!   [`ShardLossOracle`]; they serve probes idempotently and commit
+//!   steps with the canonical cycle-then-update arithmetic (see
+//!   [`worker`] for the three disciplines that keep replicas bitwise
+//!   identical to the single-worker `ZoProtocol`);
+//! * messages travel over a [`Transport`] — in-process channels today
+//!   ([`ChannelTransport`]), real sockets later — and every committed
+//!   step is appended to a persistent seed log
+//!   ([`crate::model::checkpoint::SeedRecord`]), so a dead worker is
+//!   replaced by replaying ~24 bytes/step ([`replay_seed_log`]).
+//!
+//! Robustness is a first-class, tested property: the deterministic
+//! [`FaultPlan`] harness injects worker death, dropped / delayed
+//! replies, and non-finite partial losses at exact `(step, worker)`
+//! coordinates, and the property suite in `tests/dist_fault.rs` asserts
+//! that faulted runs end **bitwise identical** (f32) to the unfaulted
+//! single-worker protocol — losses and final parameters both.
+
+pub mod coordinator;
+pub mod fault;
+pub mod transport;
+pub mod worker;
+
+use std::collections::BTreeSet;
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
+
+pub use coordinator::{Coordinator, DistConfig, DistReport, DistStats};
+pub use fault::{Fault, FaultPlan};
+pub use transport::{ChannelEndpoint, ChannelTransport, Disconnected, Reply, Request, Transport, WorkerLink};
+pub use worker::{run_worker, Action, Worker};
+
+use crate::model::checkpoint::SeedRecord;
+use crate::model::manifest::VariantSpec;
+use crate::model::params::SHARD_SIZE;
+use crate::model::ParamSet;
+use crate::optim::clip::{layer_shard_spans, ClipPolicy};
+use crate::optim::Optimizer;
+
+/// A shard-decomposable loss oracle: the distributed analogue of the
+/// scalar loss closures the single-process protocol consumes.
+///
+/// `shard_partials(θ, lo..hi, step)` returns one f64 partial loss per
+/// global shard index in the range, such that the total loss is the
+/// canonical fold ([`crate::optim::spsa::fold_partial_losses`]) of the
+/// per-shard partials in shard order. Two contract obligations make the
+/// tier bitwise reproducible:
+///
+/// * **Purity.** The value must be a pure function of `(θ bits, shard,
+///   step)` — no internal call counters, no RNG. Probes are re-evaluated
+///   on retry and reassignment, and any worker must produce the same
+///   bits for the same assignment.
+/// * **Per-shard grouping.** Each shard's partial must be accumulated
+///   independently (f64, element order within the shard), so the fold is
+///   identical no matter how shards are grouped into worker spans.
+pub trait ShardLossOracle: Send {
+    /// Per-shard partial losses over `shards` at parameters `params`.
+    fn shard_partials(
+        &mut self,
+        params: &ParamSet,
+        shards: Range<usize>,
+        step: u64,
+    ) -> Result<Vec<f64>>;
+}
+
+/// Per-worker factory for the tier: slot index → (oracle, optimizer).
+/// Called once per worker at launch and again for each replacement.
+pub type WorkerFactory =
+    Box<dyn Fn(usize) -> Result<(Box<dyn ShardLossOracle>, Box<dyn Optimizer>)>>;
+
+/// The canonical per-step probe arithmetic of the single-worker
+/// protocol, `θ → +εz → −2εz → +εz`, without loss evaluations. The f32
+/// rounding of this cycle is part of the canonical trajectory, so every
+/// replica runs it exactly once per committed step — at apply time, or
+/// during seed-log replay.
+pub fn probe_cycle(params: &mut ParamSet, seed: u64, eps: f32) {
+    params.perturb_trainable(seed, eps);
+    params.perturb_trainable(seed, -2.0 * eps);
+    params.perturb_trainable(seed, eps);
+}
+
+/// FNV-1a digest of the replica payload bytes — the cheap cross-replica
+/// divergence check collected after every commit broadcast.
+pub fn param_digest(params: &ParamSet) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in params.payload() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Rebuild parameters purely from the step-0 arena and the persisted
+/// seed log: for each record, the canonical [`probe_cycle`] followed by
+/// the optimizer update. This is the replay-recovery invariant — the
+/// result is bitwise identical to a replica that lived through the run.
+pub fn replay_seed_log(
+    base: &ParamSet,
+    opt: &mut dyn Optimizer,
+    records: &[SeedRecord],
+) -> Result<ParamSet> {
+    opt.init(base);
+    let mut params = base.clone();
+    let mut applied = 0u64;
+    for r in records {
+        ensure!(
+            r.step == applied + 1,
+            "seed log is not contiguous: expected step {}, found step {}",
+            applied + 1,
+            r.step
+        );
+        probe_cycle(&mut params, r.seed, r.eps);
+        opt.step_zo(&mut params, r.g, r.seed)?;
+        applied = r.step;
+    }
+    Ok(params)
+}
+
+/// Partition the arena's shards into up to `workers` contiguous spans,
+/// balanced by shard count and snapped to layer-group boundaries (from
+/// [`layer_shard_spans`]) when one lies close to the balanced cut. Any
+/// disjoint cover is numerically valid — partials are per-shard — but
+/// layer-aligned spans keep a future per-layer clipping exchange local
+/// to one worker.
+///
+/// Returns fewer spans than workers when the arena has fewer shards;
+/// every span is non-empty and the spans cover `0..n_shards` exactly.
+pub fn plan_spans(spec: &VariantSpec, workers: usize) -> Result<Vec<Range<usize>>> {
+    ensure!(workers >= 1, "span planning needs at least one worker");
+    ensure!(spec.n_params > 0, "cannot partition an empty parameter arena");
+    let n_shards = spec.n_params.div_ceil(SHARD_SIZE);
+    let n = workers.min(n_shards);
+
+    // Layer-group end boundaries are the preferred cut points.
+    let mut candidates: BTreeSet<usize> = BTreeSet::new();
+    if let Ok(groups) = layer_shard_spans(&ClipPolicy::default(), spec) {
+        for g in &groups {
+            for r in &g.shard_ranges {
+                candidates.insert(r.end);
+            }
+        }
+    }
+
+    let mut cuts: Vec<usize> = Vec::with_capacity(n + 1);
+    cuts.push(0);
+    for i in 1..n {
+        let prev = *cuts.last().expect("cuts is non-empty");
+        // keep room so every remaining span stays non-empty
+        let lo = prev + 1;
+        let hi = n_shards - (n - i);
+        let target = (i * n_shards / n).clamp(lo, hi);
+        let tol = (n_shards / (2 * n)).max(1);
+        let cut = candidates
+            .iter()
+            .copied()
+            .filter(|&c| c >= lo && c <= hi && c.abs_diff(target) <= tol)
+            .min_by_key(|&c| c.abs_diff(target))
+            .unwrap_or(target);
+        cuts.push(cut);
+    }
+    cuts.push(n_shards);
+    Ok(cuts.windows(2).map(|w| w[0]..w[1]).collect())
+}
+
+/// A synthetic, separable, per-step-drifting quadratic oracle: shard `s`
+/// contributes `Σ_j (θ_j − t(step, s))²` with a deterministic hashed
+/// target per `(step, shard)`. Pure and shard-decomposable by
+/// construction, so it exercises the full tier (including bitwise
+/// N-invariance) without a compiled model. `work` repeats the span pass
+/// with slightly shifted targets and averages — a knob the bench uses to
+/// emulate a loss whose FLOPs dominate the sweeps.
+pub struct SepQuadOracle {
+    /// Number of evaluation passes to average (≥ 1); raises arithmetic
+    /// intensity without changing the loss scale.
+    pub work: u32,
+}
+
+impl SepQuadOracle {
+    /// An oracle with a single evaluation pass.
+    pub fn new() -> Self {
+        SepQuadOracle { work: 1 }
+    }
+
+    /// Same oracle with `work` averaged passes (bench weighting).
+    pub fn with_work(work: u32) -> Self {
+        SepQuadOracle { work: work.max(1) }
+    }
+
+    /// Deterministic per-`(step, shard)` target in `[-0.125, 0.125)`.
+    fn target(step: u64, shard: usize) -> f32 {
+        let h = crate::util::rng::mix64(step.wrapping_add(0x9e37), shard as u64);
+        ((h % 2048) as f32 / 2048.0 - 0.5) * 0.25
+    }
+}
+
+impl Default for SepQuadOracle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardLossOracle for SepQuadOracle {
+    fn shard_partials(
+        &mut self,
+        params: &ParamSet,
+        shards: Range<usize>,
+        step: u64,
+    ) -> Result<Vec<f64>> {
+        let flat = params.flat_f32();
+        let n = flat.len();
+        let reps = self.work.max(1);
+        let mut out = Vec::with_capacity(shards.len());
+        for s in shards {
+            let lo = s * SHARD_SIZE;
+            ensure!(lo < n, "shard {s} is out of range for a {n}-element arena");
+            let hi = ((s + 1) * SHARD_SIZE).min(n);
+            let mut acc = 0.0f64;
+            for rep in 0..reps {
+                let t = Self::target(step, s) + rep as f32 * 1.0e-7;
+                let mut sum = 0.0f64;
+                for &x in &flat[lo..hi] {
+                    let d = (x - t) as f64;
+                    sum += d * d;
+                }
+                acc += sum;
+            }
+            out.push(acc / reps as f64);
+        }
+        Ok(out)
+    }
+}
+
+/// Adapter for losses that do **not** decompose over shards (e.g. a full
+/// forward pass): the worker whose span contains shard 0 evaluates the
+/// whole loss and reports it as shard 0's partial; every other shard
+/// contributes exactly 0.0. The canonical fold then reproduces the full
+/// loss bit-for-bit, at the cost of no loss-evaluation parallelism.
+pub struct FullLossOracle<F> {
+    loss: F,
+}
+
+impl<F> FullLossOracle<F>
+where
+    F: FnMut(&ParamSet, u64) -> Result<f32> + Send,
+{
+    /// Wrap a `(params, step) → loss` closure.
+    pub fn new(loss: F) -> Self {
+        FullLossOracle { loss }
+    }
+}
+
+impl<F> ShardLossOracle for FullLossOracle<F>
+where
+    F: FnMut(&ParamSet, u64) -> Result<f32> + Send,
+{
+    fn shard_partials(
+        &mut self,
+        params: &ParamSet,
+        shards: Range<usize>,
+        step: u64,
+    ) -> Result<Vec<f64>> {
+        let mut out = vec![0.0f64; shards.len()];
+        if shards.start == 0 && !shards.is_empty() {
+            out[0] = (self.loss)(params, step)? as f64;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::spsa::fold_partial_losses;
+
+    #[test]
+    fn plan_spans_is_a_disjoint_cover_for_every_worker_count() {
+        let params = ParamSet::synthetic(&[40_000, 20_000, 70_000, 5_000], 0.5);
+        let n_shards = params.n_shards();
+        for workers in [1, 2, 3, 4, 7, 64] {
+            let spans = plan_spans(&params.spec, workers).unwrap();
+            assert!(spans.len() <= workers);
+            assert!(!spans.is_empty());
+            let mut pos = 0;
+            for span in &spans {
+                assert_eq!(span.start, pos, "spans must be contiguous in order");
+                assert!(span.end > span.start, "empty span for workers={workers}");
+                pos = span.end;
+            }
+            assert_eq!(pos, n_shards, "spans must cover all shards");
+        }
+    }
+
+    #[test]
+    fn plan_spans_caps_at_shard_count() {
+        let params = ParamSet::synthetic(&[SHARD_SIZE * 3], 0.1);
+        let spans = plan_spans(&params.spec, 64).unwrap();
+        assert_eq!(spans.len(), 3);
+    }
+
+    #[test]
+    fn sep_quad_partials_are_span_invariant() {
+        let params = ParamSet::synthetic(&[30_000, 10_000], 0.25);
+        let n_shards = params.n_shards();
+        let mut oracle = SepQuadOracle::new();
+        let whole = oracle.shard_partials(&params, 0..n_shards, 3).unwrap();
+        // evaluate in two pieces and concatenate: bitwise-identical partials
+        let cut = n_shards / 2;
+        let mut pieces = oracle.shard_partials(&params, 0..cut, 3).unwrap();
+        pieces.extend(oracle.shard_partials(&params, cut..n_shards, 3).unwrap());
+        assert_eq!(whole.len(), n_shards);
+        for (a, b) in whole.iter().zip(&pieces) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and the fold is the same scalar either way
+        assert_eq!(
+            fold_partial_losses(whole.iter().copied()).to_bits(),
+            fold_partial_losses(pieces.iter().copied()).to_bits()
+        );
+    }
+
+    #[test]
+    fn full_loss_adapter_reports_on_shard_zero_only() {
+        let params = ParamSet::synthetic(&[20_000], 0.5);
+        let n_shards = params.n_shards();
+        let mut oracle = FullLossOracle::new(|_: &ParamSet, step: u64| Ok(2.5 + step as f32));
+        let partials = oracle.shard_partials(&params, 0..n_shards, 4).unwrap();
+        assert_eq!(fold_partial_losses(partials.iter().copied()), 6.5);
+        assert!(partials[1..].iter().all(|&p| p == 0.0));
+        let tail = oracle.shard_partials(&params, 1..n_shards, 4).unwrap();
+        assert!(tail.iter().all(|&p| p == 0.0));
+    }
+
+    #[test]
+    fn probe_cycle_matches_the_naive_step_arithmetic() {
+        let mut a = ParamSet::synthetic(&[9_000], 0.5);
+        let mut b = a.clone();
+        probe_cycle(&mut a, 77, 1e-3);
+        b.perturb_trainable(77, 1e-3);
+        b.perturb_trainable(77, -2.0 * 1e-3);
+        b.perturb_trainable(77, 1e-3);
+        assert!(a.bits_eq(&b));
+        // the cycle is a near-identity but its f32 drift is canonical:
+        // digests of cycled and pristine replicas legitimately differ or
+        // match depending on rounding; what matters is reproducibility
+        let mut c = ParamSet::synthetic(&[9_000], 0.5);
+        probe_cycle(&mut c, 77, 1e-3);
+        assert_eq!(param_digest(&a), param_digest(&c));
+    }
+}

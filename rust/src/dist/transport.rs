@@ -1,0 +1,274 @@
+//! Message types and the transport abstraction between coordinator and
+//! workers.
+//!
+//! The coordinator talks to workers through a [`Transport`]: an indexed
+//! set of request lanes (one per worker slot) plus a single merged reply
+//! stream with deadline-bounded receive. The in-process implementation,
+//! [`ChannelTransport`], is built on `std::sync::mpsc` channels and is
+//! what the tests, the bench and the `helene dist` CLI use; a socket
+//! transport can slot in later by implementing the same trait — the
+//! coordinator logic (retry, backoff, quorum degradation, replay
+//! recovery) is written against the trait, not the channels.
+//!
+//! Wire economy is the whole point of the seed-and-scalar protocol: a
+//! probe request is `(step, seed, eps, shard range)` and the commit
+//! broadcast is `(step, seed, g, eps)` — ~24 bytes per step per worker
+//! versus the O(n_params) gradient exchange of first-order data
+//! parallelism.
+
+use std::ops::Range;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::Instant;
+
+use crate::model::params::Codec;
+
+/// A request from the coordinator to one worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Evaluate the two-sided probe for `step`: perturb the local replica
+    /// by `+eps·z(seed)` and `-eps·z(seed)` and return per-shard partial
+    /// losses over `shards` at each point. The worker restores its
+    /// replica to the pre-probe bits before replying, so serving a probe
+    /// is idempotent — retries and reassignments are bitwise harmless.
+    Probe {
+        /// 1-based global step index.
+        step: u64,
+        /// The step seed that addresses the z-stream.
+        seed: u64,
+        /// Probe radius ε.
+        eps: f32,
+        /// Half-open range of global shard indices to evaluate.
+        shards: Range<usize>,
+    },
+    /// Commit `step`: run the canonical probe cycle (+ε, −2ε, +ε — the
+    /// same f32 drift the single-worker protocol accumulates) and then
+    /// the optimizer update for `(g, seed)`. Idempotent: a worker that
+    /// already applied this step (e.g. a replacement that replayed the
+    /// seed log past it) replies with its digest without re-applying.
+    Apply {
+        /// 1-based global step index.
+        step: u64,
+        /// The step seed.
+        seed: u64,
+        /// Probe radius ε used by this step (part of the replay record).
+        eps: f32,
+        /// The aggregated SPSA gradient scale.
+        g: f32,
+    },
+    /// Ship the full replica payload back (used to read out final params
+    /// and to cross-check replicas in tests).
+    Fetch,
+    /// Exit the worker loop cleanly.
+    Shutdown,
+}
+
+/// A reply from a worker to the coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// Partial losses for one probe assignment. `plus[i]` / `minus[i]`
+    /// are the f64 per-shard partials for global shard `shards.start + i`
+    /// at `θ+εz` / `θ−εz`.
+    Probe {
+        /// Replying worker slot.
+        worker: usize,
+        /// Step the probe was computed for.
+        step: u64,
+        /// The shard range this reply covers (echoed from the request).
+        shards: Range<usize>,
+        /// Per-shard partial losses at `θ+εz`.
+        plus: Vec<f64>,
+        /// Per-shard partial losses at `θ−εz`.
+        minus: Vec<f64>,
+    },
+    /// The worker committed (or had already committed) `step`; `digest`
+    /// is an FNV-1a hash of its replica payload for divergence checks.
+    Applied {
+        /// Replying worker slot.
+        worker: usize,
+        /// Step that was applied.
+        step: u64,
+        /// FNV-1a digest of the post-apply replica bytes.
+        digest: u64,
+    },
+    /// The worker's full replica, answering [`Request::Fetch`].
+    Params {
+        /// Replying worker slot.
+        worker: usize,
+        /// Last step the replica has applied (0 = pristine).
+        applied_through: u64,
+        /// Storage codec of the payload bytes.
+        codec: Codec,
+        /// Raw arena payload (`ParamSet::payload` encoding).
+        payload: Vec<u8>,
+    },
+    /// The worker hit a local error (e.g. its loss oracle failed) and
+    /// restored its replica; the coordinator treats this as a failed
+    /// attempt and retries elsewhere, carrying `msg` as context.
+    Failed {
+        /// Replying worker slot.
+        worker: usize,
+        /// Step the failure occurred at.
+        step: u64,
+        /// Human-readable error context.
+        msg: String,
+    },
+}
+
+/// Error returned by [`Transport::send`] when a worker's request lane is
+/// closed — the worker is gone (died, or shut down).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Disconnected(
+    /// The worker slot whose lane is closed.
+    pub usize,
+);
+
+impl std::fmt::Display for Disconnected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} is disconnected", self.0)
+    }
+}
+
+impl std::error::Error for Disconnected {}
+
+/// Coordinator-side view of the communication fabric: per-slot request
+/// lanes plus one merged, deadline-bounded reply stream.
+pub trait Transport {
+    /// The worker-side endpoint produced by [`Transport::open`]; moved
+    /// into the worker (thread today, process later).
+    type Endpoint: Send + 'static;
+
+    /// Open (or re-open, for a replacement worker) the lane for `slot`
+    /// and return the worker-side endpoint.
+    fn open(&mut self, slot: usize) -> Self::Endpoint;
+
+    /// Send a request to `slot`. `Err(Disconnected)` means the worker is
+    /// gone; the coordinator uses this as its failure detector.
+    fn send(&mut self, slot: usize, req: Request) -> Result<(), Disconnected>;
+
+    /// Receive the next reply from any worker, waiting until `deadline`
+    /// at the latest. `None` on deadline expiry.
+    fn recv_deadline(&mut self, deadline: Instant) -> Option<Reply>;
+}
+
+/// Worker-side view of its lane: blocking receive, best-effort send.
+pub trait WorkerLink {
+    /// Block for the next request; `None` means the coordinator is gone
+    /// and the worker should exit.
+    fn recv(&mut self) -> Option<Request>;
+
+    /// Send a reply; returns `false` if the coordinator is gone.
+    fn send(&mut self, reply: Reply) -> bool;
+}
+
+/// In-process [`Transport`] over `std::sync::mpsc` channels: one
+/// `Sender<Request>` per worker slot, one shared `Receiver<Reply>`.
+pub struct ChannelTransport {
+    routes: Vec<Option<Sender<Request>>>,
+    reply_tx: Sender<Reply>,
+    reply_rx: Receiver<Reply>,
+}
+
+impl ChannelTransport {
+    /// A transport with no lanes yet; [`Transport::open`] creates them.
+    pub fn new() -> Self {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        Self { routes: Vec::new(), reply_tx, reply_rx }
+    }
+}
+
+impl Default for ChannelTransport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for ChannelTransport {
+    type Endpoint = ChannelEndpoint;
+
+    fn open(&mut self, slot: usize) -> ChannelEndpoint {
+        if self.routes.len() <= slot {
+            self.routes.resize_with(slot + 1, || None);
+        }
+        let (req_tx, req_rx) = mpsc::channel();
+        self.routes[slot] = Some(req_tx);
+        ChannelEndpoint { rx: req_rx, tx: self.reply_tx.clone() }
+    }
+
+    fn send(&mut self, slot: usize, req: Request) -> Result<(), Disconnected> {
+        let lane = self
+            .routes
+            .get(slot)
+            .and_then(|r| r.as_ref())
+            .ok_or(Disconnected(slot))?;
+        lane.send(req).map_err(|_| Disconnected(slot))
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> Option<Reply> {
+        let now = Instant::now();
+        let timeout = deadline.saturating_duration_since(now);
+        match self.reply_rx.recv_timeout(timeout) {
+            Ok(reply) => Some(reply),
+            Err(RecvTimeoutError::Timeout) => None,
+            // All reply senders dropped — every worker is gone. Surface
+            // as a timeout; the coordinator's send() probes detect death.
+            Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+}
+
+/// Worker-side endpoint of a [`ChannelTransport`] lane.
+pub struct ChannelEndpoint {
+    rx: Receiver<Request>,
+    tx: Sender<Reply>,
+}
+
+impl WorkerLink for ChannelEndpoint {
+    fn recv(&mut self) -> Option<Request> {
+        self.rx.recv().ok()
+    }
+
+    fn send(&mut self, reply: Reply) -> bool {
+        self.tx.send(reply).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn channel_transport_routes_and_merges() {
+        let mut t = ChannelTransport::new();
+        let mut e0 = t.open(0);
+        let mut e1 = t.open(1);
+        t.send(0, Request::Fetch).unwrap();
+        t.send(1, Request::Shutdown).unwrap();
+        assert_eq!(e0.recv(), Some(Request::Fetch));
+        assert_eq!(e1.recv(), Some(Request::Shutdown));
+        assert!(e1.send(Reply::Applied { worker: 1, step: 7, digest: 42 }));
+        let got = t.recv_deadline(Instant::now() + Duration::from_secs(1)).unwrap();
+        assert_eq!(got, Reply::Applied { worker: 1, step: 7, digest: 42 });
+    }
+
+    #[test]
+    fn closed_lane_reports_disconnected_and_recv_times_out() {
+        let mut t = ChannelTransport::new();
+        {
+            let _dropped = t.open(0);
+        }
+        assert_eq!(t.send(0, Request::Fetch), Err(Disconnected(0)));
+        // unknown slot is also "disconnected"
+        assert_eq!(t.send(5, Request::Fetch), Err(Disconnected(5)));
+        assert!(t.recv_deadline(Instant::now() + Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn reopening_a_slot_replaces_the_lane() {
+        let mut t = ChannelTransport::new();
+        drop(t.open(0));
+        let mut fresh = t.open(0);
+        t.send(0, Request::Fetch).unwrap();
+        assert_eq!(fresh.recv(), Some(Request::Fetch));
+    }
+}

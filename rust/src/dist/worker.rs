@@ -1,0 +1,255 @@
+//! Worker replicas: probe service, idempotent apply, seed-log replay.
+//!
+//! Every worker owns a **full replica** of the parameter arena (the wire
+//! protocol is seed-and-scalar, so replicating θ costs no per-step
+//! bandwidth) plus a shard-decomposable loss oracle it evaluates over
+//! whatever shard span the coordinator assigns. Three disciplines keep
+//! all replicas bitwise identical to the single-worker protocol:
+//!
+//! 1. **Probe purity.** Serving a probe snapshots the pristine replica,
+//!    runs the `+εz` and `−εz` evaluations, and restores the snapshot
+//!    bit-for-bit. A probe can therefore be served any number of times
+//!    (retries, reassignment after a timeout, late duplicates) without
+//!    perturbing the trajectory.
+//! 2. **Canonical drift on apply.** The single-worker protocol's step
+//!    arithmetic is `θ +εz → −2εz → +εz` followed by the update, and the
+//!    f32 rounding of that cycle is part of the canonical trajectory.
+//!    Every commit therefore runs the same eval-free cycle before
+//!    `step_zo`, whether or not this worker probed the step.
+//! 3. **Idempotent apply.** Commits are keyed by step; a worker that
+//!    already applied a step (e.g. a replacement that replayed the seed
+//!    log past it) answers with its digest without re-applying.
+//!
+//! Replay recovery falls out of (2): rebuilding a dead worker is just
+//! `Worker::new` from the step-0 arena plus [`Worker::replay`] over the
+//! persisted `(step, seed, g, eps)` records.
+
+use std::collections::BTreeSet;
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
+
+use super::fault::{Fault, FaultPlan};
+use super::transport::{Reply, Request, WorkerLink};
+use super::{param_digest, probe_cycle, ShardLossOracle};
+use crate::model::checkpoint::SeedRecord;
+use crate::model::ParamSet;
+use crate::optim::Optimizer;
+
+/// What the worker loop should do with the outcome of one request.
+#[derive(Debug)]
+pub enum Action {
+    /// Send this reply now.
+    Send(Reply),
+    /// Send this reply after sleeping the given number of milliseconds
+    /// (the [`Fault::DelayReply`] injection).
+    Delay(Reply, u64),
+    /// Send nothing (the [`Fault::DropReply`] injection).
+    Silent,
+    /// Exit the worker loop (shutdown, or the [`Fault::Die`] injection).
+    Exit,
+}
+
+/// One worker replica: full-arena params, optimizer state, loss oracle,
+/// and the fault plan it is subject to.
+pub struct Worker {
+    /// This worker's slot index (stable across replacement).
+    pub id: usize,
+    params: ParamSet,
+    opt: Box<dyn Optimizer>,
+    oracle: Box<dyn ShardLossOracle>,
+    plan: FaultPlan,
+    /// Steps at which this worker's one-shot fault already fired.
+    fired: BTreeSet<u64>,
+    applied_through: u64,
+}
+
+impl Worker {
+    /// A fresh replica of `base` (step-0 or mid-run — the caller decides)
+    /// with freshly initialized optimizer state.
+    pub fn new(
+        id: usize,
+        base: &ParamSet,
+        mut opt: Box<dyn Optimizer>,
+        oracle: Box<dyn ShardLossOracle>,
+        plan: FaultPlan,
+    ) -> Worker {
+        opt.init(base);
+        Worker {
+            id,
+            params: base.clone(),
+            opt,
+            oracle,
+            plan,
+            fired: BTreeSet::new(),
+            applied_through: 0,
+        }
+    }
+
+    /// Last step this replica has applied (0 = pristine).
+    pub fn applied_through(&self) -> u64 {
+        self.applied_through
+    }
+
+    /// Read-only view of the replica (tests and readout).
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    /// Fast-forward the replica through persisted seed-log records: for
+    /// each record, the canonical probe cycle then the optimizer update.
+    /// This is the whole recovery story — a replacement worker rebuilt
+    /// from the step-0 arena plus the log lands bitwise on the survivors.
+    pub fn replay(&mut self, records: &[SeedRecord]) -> Result<()> {
+        for r in records {
+            ensure!(
+                r.step == self.applied_through + 1,
+                "seed log is not contiguous: replica has applied through step {} \
+                 but the next record is step {}",
+                self.applied_through,
+                r.step
+            );
+            probe_cycle(&mut self.params, r.seed, r.eps);
+            self.opt.step_zo(&mut self.params, r.g, r.seed)?;
+            self.applied_through = r.step;
+        }
+        Ok(())
+    }
+
+    /// Serve a two-sided probe over `shards`, restoring the replica to
+    /// its pre-probe bits before returning (discipline 1 above).
+    fn probe(
+        &mut self,
+        step: u64,
+        seed: u64,
+        eps: f32,
+        shards: Range<usize>,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let n = shards.len();
+        let snapshot = self.params.clone();
+        self.params.perturb_trainable(seed, eps);
+        let plus = match self.oracle.shard_partials(&self.params, shards.clone(), step) {
+            Ok(v) => v,
+            Err(e) => {
+                self.params = snapshot;
+                return Err(e);
+            }
+        };
+        self.params.perturb_trainable(seed, -2.0 * eps);
+        let minus = match self.oracle.shard_partials(&self.params, shards.clone(), step) {
+            Ok(v) => v,
+            Err(e) => {
+                self.params = snapshot;
+                return Err(e);
+            }
+        };
+        self.params = snapshot;
+        ensure!(
+            plus.len() == n && minus.len() == n,
+            "loss oracle returned {}/{} partials for a {}-shard span {:?}",
+            plus.len(),
+            minus.len(),
+            n,
+            shards
+        );
+        Ok((plus, minus))
+    }
+
+    /// Commit one step: canonical cycle + optimizer update, idempotent
+    /// by step (disciplines 2 and 3 above). Returns the replica digest.
+    fn apply(&mut self, step: u64, seed: u64, eps: f32, g: f32) -> Result<u64> {
+        if step > self.applied_through {
+            ensure!(
+                step == self.applied_through + 1,
+                "apply for step {} but replica has only applied through step {} — \
+                 a commit broadcast was lost",
+                step,
+                self.applied_through
+            );
+            probe_cycle(&mut self.params, seed, eps);
+            self.opt.step_zo(&mut self.params, g, seed)?;
+            self.applied_through = step;
+        }
+        Ok(param_digest(&self.params))
+    }
+
+    /// True exactly once per step: arms this worker's one-shot fault.
+    fn arm_once(&mut self, step: u64) -> bool {
+        self.fired.insert(step)
+    }
+
+    /// Process one request, injecting any fault the plan schedules for
+    /// `(step, self.id)`. Pure with respect to time — delays are returned
+    /// as [`Action::Delay`] for the loop to sleep on, so this is directly
+    /// unit-testable.
+    pub fn handle(&mut self, req: Request) -> Action {
+        match req {
+            Request::Probe { step, seed, eps, shards } => {
+                let fault = self.plan.get(step, self.id);
+                if matches!(fault, Some(Fault::Die)) {
+                    return Action::Exit;
+                }
+                // every fault fires exactly once per incarnation
+                let fire = fault.is_some() && self.arm_once(step);
+                let reply = match self.probe(step, seed, eps, shards.clone()) {
+                    Ok((mut plus, minus)) => {
+                        if fire && matches!(fault, Some(Fault::NanPartial)) {
+                            if let Some(p0) = plus.first_mut() {
+                                *p0 = f64::NAN;
+                            }
+                        }
+                        Reply::Probe { worker: self.id, step, shards, plus, minus }
+                    }
+                    Err(e) => Reply::Failed { worker: self.id, step, msg: format!("{e:#}") },
+                };
+                match fault {
+                    Some(Fault::DropReply) if fire => Action::Silent,
+                    Some(Fault::DelayReply(ms)) if fire => Action::Delay(reply, ms),
+                    _ => Action::Send(reply),
+                }
+            }
+            Request::Apply { step, seed, eps, g } => {
+                if matches!(self.plan.get(step, self.id), Some(Fault::Die)) {
+                    return Action::Exit;
+                }
+                match self.apply(step, seed, eps, g) {
+                    Ok(digest) => Action::Send(Reply::Applied { worker: self.id, step, digest }),
+                    Err(e) => {
+                        Action::Send(Reply::Failed { worker: self.id, step, msg: format!("{e:#}") })
+                    }
+                }
+            }
+            Request::Fetch => Action::Send(Reply::Params {
+                worker: self.id,
+                applied_through: self.applied_through,
+                codec: self.params.codec(),
+                payload: self.params.payload(),
+            }),
+            Request::Shutdown => Action::Exit,
+        }
+    }
+}
+
+/// The worker event loop: receive, handle, reply, until shutdown / death
+/// / a vanished coordinator. Runs on the worker's own thread (today) or
+/// process (with a socket transport).
+pub fn run_worker<L: WorkerLink>(mut worker: Worker, mut link: L) {
+    loop {
+        let Some(req) = link.recv() else { break };
+        match worker.handle(req) {
+            Action::Send(reply) => {
+                if !link.send(reply) {
+                    break;
+                }
+            }
+            Action::Delay(reply, ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                if !link.send(reply) {
+                    break;
+                }
+            }
+            Action::Silent => {}
+            Action::Exit => break,
+        }
+    }
+}

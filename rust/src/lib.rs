@@ -40,6 +40,7 @@
 pub mod bench;
 pub mod config;
 pub mod data;
+pub mod dist;
 pub mod model;
 pub mod optim;
 pub mod runtime;

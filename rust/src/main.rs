@@ -99,6 +99,7 @@ fn run() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
+        "dist" => cmd_dist(&args),
         "sweep" => cmd_sweep(&args),
         "zero-shot" => cmd_zero_shot(&args),
         "toy" => cmd_toy(&args),
@@ -117,6 +118,7 @@ helene — zeroth-order fine-tuning framework (HELENE reproduction)
 
 commands:
   train      train a model on a synthetic task with any optimizer
+  dist       run the fault-tolerant distributed ZO tier on a synthetic loss
   zero-shot  evaluate the init parameters on a task
   toy        run the 2-D heterogeneous-curvature demo (Figures 1-2)
   list       list models, variants, tasks and optimizers
@@ -145,6 +147,22 @@ train options:
   --eps-floor    clamp ε up to mean|θ|/256 when the bf16 codec would
                  round the perturbation away (DESIGN.md §Precision)
   --config PATH  TOML-lite config file (CLI flags win)
+  --workers N    distributed worker count (default 1; N > 1 needs `helene
+                 dist` — the compiled-model runner is single-threaded)
+  --worker-timeout-ms MS  base reply deadline per distributed wave (1000)
+  --retries N    per-span retry budget beyond the first attempt (3)
+  --fault-plan SPEC  deterministic fault schedule, e.g. die@3:1,drop@5:0
+
+dist: the seed-and-scalar worker tier over a synthetic separable loss —
+  N replica threads probe disjoint shard spans, the coordinator folds
+  partials canonically and broadcasts 24-byte (seed, g) commits; the
+  trajectory is bitwise identical to the single-worker protocol:
+  helene dist --workers 4 --steps 50 [--fault-plan die@3:1,nan@7:2]
+  --n-params N   synthetic parameter count (default 65536)
+  --opt O / --lr F / --eps F / --seed S   as in train
+  --seed-log PATH  append every committed (step, seed, g, eps) record
+  --work N       loss-oracle compute passes per probe (default 1)
+  (plus --worker-timeout-ms / --retries / --fault-plan as above)
 
 sweep: grid-search lr on dev (paper protocol):
   helene sweep --model M --task T --opt O --lrs 1e-4,3e-4,1e-3 --steps 600
@@ -217,6 +235,25 @@ fn cmd_train(args: &Args) -> Result<()> {
     // perturbation survives a bf16 round-trip (DESIGN.md §Precision)
     tc.eps_floor =
         args.get("eps-floor").is_some() || cfg_file.u64("train.eps_floor", 0)? != 0;
+    // robustness knobs (DESIGN.md §Distributed) — validated here at parse
+    // time so a bad value fails before the runner loads anything
+    tc.workers = args.usize("workers", cfg_file.usize("train.workers", 1)?)?;
+    tc.worker_timeout_ms =
+        args.u64("worker-timeout-ms", cfg_file.u64("train.worker_timeout_ms", 1000)?)?;
+    tc.retry_budget = args.usize("retries", cfg_file.usize("train.retries", 3)?)?;
+    let plan_spec = args.str("fault-plan", &cfg_file.str("train.fault_plan", ""));
+    if !plan_spec.is_empty() {
+        tc.fault_plan = Some(helene::dist::FaultPlan::parse(&plan_spec)?);
+    }
+    tc.validate_robustness()?;
+    if tc.workers > 1 {
+        bail!(
+            "--workers {} needs the distributed tier: the compiled-model runner \
+             is single-threaded — use `helene dist --workers {}` (see `helene help`)",
+            tc.workers,
+            tc.workers
+        );
+    }
     let mut opt: Box<dyn optim::Optimizer> = if lp {
         tc.train_only_layers = Some(vec!["head".to_string()]);
         optim::by_name("fo-adam", lr)?
@@ -247,6 +284,82 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         report.history.write_csv(&PathBuf::from(out))?;
         println!("history written to {out}");
+    }
+    Ok(())
+}
+
+/// The distributed seed-and-scalar tier (`helene dist`): N worker threads,
+/// each a full replica probing a disjoint shard span of a synthetic
+/// separable loss; the coordinator folds the per-shard partials
+/// canonically and broadcasts 24-byte `(step, seed, g, eps)` commits.
+/// With `--fault-plan` the run injects deterministic worker deaths,
+/// dropped/delayed replies and poisoned partials — the trajectory stays
+/// bitwise identical to the unfaulted single-worker protocol
+/// (DESIGN.md §Distributed).
+fn cmd_dist(args: &Args) -> Result<()> {
+    use helene::dist::{FaultPlan, SepQuadOracle, ShardLossOracle};
+    use helene::model::params::ParamSet;
+
+    let steps = args.usize("steps", 50)?;
+    let n_params = args.usize("n-params", 65536)?;
+    anyhow::ensure!(n_params >= 2, "--n-params must be >= 2 (got {n_params})");
+    let opt_name = args.str("opt", "mezo");
+    let lr = args.f32("lr", default_lr(&opt_name))?;
+    let work = args.u64("work", 1)? as u32;
+
+    let mut tc = TrainConfig {
+        steps,
+        seed: args.u64("seed", 0)?,
+        spsa_eps: args.f32("eps", 1e-3)?,
+        workers: args.usize("workers", 2)?,
+        worker_timeout_ms: args.u64("worker-timeout-ms", 1000)?,
+        retry_budget: args.usize("retries", 3)?,
+        ..Default::default()
+    };
+    let plan_spec = args.str("fault-plan", "");
+    if !plan_spec.is_empty() {
+        tc.fault_plan = Some(FaultPlan::parse(&plan_spec)?);
+    }
+    tc.validate_robustness()?;
+    let seed_log = args.get("seed-log").map(PathBuf::from);
+
+    println!(
+        "dist: workers={} n_params={n_params} steps={steps} opt={opt_name} lr={lr} \
+         eps={} fault-plan={:?}",
+        tc.workers,
+        tc.spsa_eps,
+        plan_spec
+    );
+    // two layer groups so multi-worker span cuts snap to a real boundary
+    let base = ParamSet::synthetic(&[n_params / 2, n_params - n_params / 2], 0.5);
+    let factory: helene::dist::WorkerFactory = Box::new(move |_slot| {
+        Ok((
+            Box::new(SepQuadOracle::with_work(work)) as Box<dyn ShardLossOracle>,
+            optim::by_name(&opt_name, lr)?,
+        ))
+    });
+    let t0 = std::time::Instant::now();
+    let report = helene::train::run_zo_distributed(&tc, &base, factory, seed_log)?;
+    println!(
+        "done in {:.2}s: first loss {:.6}, final loss {:.6}, {} steps committed, \
+         {} workers alive",
+        t0.elapsed().as_secs_f64(),
+        report.losses.first().copied().unwrap_or(f32::NAN),
+        report.losses.last().copied().unwrap_or(f32::NAN),
+        report.log.len(),
+        report.workers_alive
+    );
+    let s = &report.stats;
+    println!(
+        "robustness: {} deaths, {} recoveries, {} retries, {} late replies discarded",
+        s.deaths, s.recoveries, s.retries, s.late_replies
+    );
+    if let Some(path) = args.get("seed-log") {
+        println!(
+            "seed log appended to {path} ({} records, {} bytes each)",
+            report.log.len(),
+            helene::model::checkpoint::SeedRecord::BYTES
+        );
     }
     Ok(())
 }

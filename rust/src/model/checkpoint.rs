@@ -11,29 +11,86 @@
 //! checkpoint loads into an f32 run by widening after load
 //! (`ParamSet::convert_codec`) — lossless, since every bf16 value is an
 //! f32.
+//!
+//! Writes are crash-safe: [`save`] (and [`write_seed_log`]) stream into a
+//! sibling temp file and atomically rename it into place, so a crash
+//! mid-write can never leave a torn file under the real name. Loads are
+//! strict: a truncated or corrupted file produces a clear error naming
+//! the byte offset where decoding failed, never a panic.
+//!
+//! Alongside checkpoints lives the **seed log** ([`SeedRecord`]): the
+//! append-only `(step, seed, g, eps)` journal of a ZO run. Each record
+//! is 24 bytes and fully determines its step (MeZO's seed trick), so the
+//! log plus the step-0 arena reconstructs any checkpoint bit-exactly —
+//! the replay-recovery path of the distributed tier (`crate::dist`).
 
 use std::io::{Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::model::manifest::VariantSpec;
 use crate::model::params::{Codec, ParamSet};
 use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"HELENE1\n";
+const SEED_LOG_MAGIC: &[u8; 8] = b"HELENESL";
+
+/// Write `bytes → path` crash-safely: stream into `<name>.tmp` in the
+/// same directory, fsync, then atomically rename over the destination.
+fn atomic_write(path: &Path, write_body: impl FnOnce(&mut std::fs::File) -> Result<()>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("{}: path has no file name", path.display()))?;
+    let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    if let Err(e) = write_body(&mut f).and_then(|()| f.sync_all().map_err(Into::into)) {
+        drop(f);
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// `read_exact` with byte-offset context: `offset` tracks the file
+/// position and advances past the read on success.
+fn read_exact_at(
+    f: &mut std::fs::File,
+    offset: &mut u64,
+    buf: &mut [u8],
+    path: &Path,
+    what: &str,
+) -> Result<()> {
+    f.read_exact(buf).with_context(|| {
+        format!(
+            "{}: truncated or corrupted file: failed to read {what} ({} bytes) \
+             at byte offset {offset}",
+            path.display(),
+            buf.len()
+        )
+    })?;
+    *offset += buf.len() as u64;
+    Ok(())
+}
 
 /// Save parameters (and any extra named state sets, e.g. momentum/hessian).
+/// Crash-safe: streams into a sibling temp file and atomically renames it
+/// into place, so an interrupted save can never corrupt an existing
+/// checkpoint under `path`.
 pub fn save(
     path: &Path,
     step: usize,
     params: &ParamSet,
     extra: &[(&str, &ParamSet)],
 ) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
     let mut header = std::collections::BTreeMap::new();
     header.insert("model".to_string(), Json::Str(params.spec.model.clone()));
     header.insert("variant".to_string(), Json::Str(params.spec.variant.clone()));
@@ -60,40 +117,64 @@ pub fn save(
     );
     let header_text = Json::Obj(header).to_string();
 
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&(header_text.len() as u64).to_le_bytes())?;
-    f.write_all(header_text.as_bytes())?;
-    for set in std::iter::once(params).chain(extra.iter().map(|(_, s)| *s)) {
+    for (_, set) in extra {
         if set.n_params() != params.n_params() {
             bail!("extra state set has mismatched layout");
         }
-        // the arena IS the payload byte layout (in the set's codec):
-        // one bulk LE write
-        f.write_all(&set.payload())?;
     }
-    Ok(())
+    atomic_write(path, |f| {
+        f.write_all(MAGIC)?;
+        f.write_all(&(header_text.len() as u64).to_le_bytes())?;
+        f.write_all(header_text.as_bytes())?;
+        for set in std::iter::once(params).chain(extra.iter().map(|(_, s)| *s)) {
+            // the arena IS the payload byte layout (in the set's codec):
+            // one bulk LE write
+            f.write_all(&set.payload())?;
+        }
+        Ok(())
+    })
 }
 
 /// Load a checkpoint written by [`save`]. Returns (step, params, extras).
+/// A truncated or corrupted file yields a clear error with the byte
+/// offset where decoding failed, never a panic.
 pub fn load(
     path: &Path,
     spec: Arc<VariantSpec>,
 ) -> Result<(usize, ParamSet, Vec<(String, ParamSet)>)> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
+    let file_len = f.metadata().map(|m| m.len()).unwrap_or(0);
+    let mut offset = 0u64;
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    read_exact_at(&mut f, &mut offset, &mut magic, path, "the magic header")?;
     if &magic != MAGIC {
-        bail!("{}: not a HELENE checkpoint", path.display());
+        bail!("{}: not a HELENE checkpoint (bad magic at byte offset 0)", path.display());
     }
     let mut len8 = [0u8; 8];
-    f.read_exact(&mut len8)?;
+    read_exact_at(&mut f, &mut offset, &mut len8, path, "the header length")?;
     let hlen = u64::from_le_bytes(len8) as usize;
+    ensure!(
+        (hlen as u64) <= file_len.saturating_sub(offset),
+        "{}: corrupted checkpoint: header claims {hlen} bytes at byte offset \
+         {offset} but only {} bytes remain in the file",
+        path.display(),
+        file_len.saturating_sub(offset)
+    );
     let mut hbuf = vec![0u8; hlen];
-    f.read_exact(&mut hbuf)?;
-    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+    read_exact_at(&mut f, &mut offset, &mut hbuf, path, "the JSON header")?;
+    let htext = std::str::from_utf8(&hbuf).with_context(|| {
+        format!(
+            "{}: corrupted checkpoint: header at byte offset 16 is not UTF-8",
+            path.display()
+        )
+    })?;
+    let header = Json::parse(htext).with_context(|| {
+        format!(
+            "{}: corrupted checkpoint: header at byte offset 16 is not valid JSON",
+            path.display()
+        )
+    })?;
 
     let model = header.req("model")?.as_str().unwrap_or_default();
     let variant = header.req("variant")?.as_str().unwrap_or_default();
@@ -131,18 +212,142 @@ pub fn load(
         bail!("checkpoint codecs ({}) / sets ({}) mismatch", codecs.len(), set_names.len());
     }
 
-    let mut read_set = |spec: &Arc<VariantSpec>, codec: Codec| -> Result<ParamSet> {
+    let mut read_set = |spec: &Arc<VariantSpec>, name: &str, codec: Codec| -> Result<ParamSet> {
         let mut bytes = vec![0u8; codec.bytes_per_elem() * spec.n_params];
-        f.read_exact(&mut bytes)?;
+        read_exact_at(
+            &mut f,
+            &mut offset,
+            &mut bytes,
+            path,
+            &format!("the {name:?} payload"),
+        )?;
         ParamSet::from_payload(spec.clone(), codec, &bytes)
     };
 
-    let params = read_set(&spec, codecs.first().copied().unwrap_or(Codec::F32))?;
+    let params = read_set(&spec, "params", codecs.first().copied().unwrap_or(Codec::F32))?;
     let mut extras = Vec::new();
     for (name, &codec) in set_names.iter().zip(&codecs).skip(1) {
-        extras.push((name.clone(), read_set(&spec, codec)?));
+        extras.push((name.clone(), read_set(&spec, name, codec)?));
     }
     Ok((step, params, extras))
+}
+
+// ---------------------------------------------------------------------------
+// Seed log: the (step, seed, g, eps) journal of a ZO run
+// ---------------------------------------------------------------------------
+
+/// One committed ZO step, fully determining the update: `probe_cycle(seed,
+/// eps)` then `step_zo(g, seed)` replays it bit-exactly (`crate::dist`).
+/// Serialized as 24 little-endian bytes: `step: u64, seed: u64, g: f32,
+/// eps: f32`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SeedRecord {
+    /// 1-based global step index.
+    pub step: u64,
+    /// The step seed addressing the z-stream.
+    pub seed: u64,
+    /// The aggregated SPSA gradient scale `(L⁺ − L⁻) / 2ε`.
+    pub g: f32,
+    /// The probe radius ε the step used (needed by the replay cycle).
+    pub eps: f32,
+}
+
+impl SeedRecord {
+    /// Serialized size: 8 + 8 + 4 + 4 bytes.
+    pub const BYTES: usize = 24;
+
+    fn encode(&self) -> [u8; Self::BYTES] {
+        let mut out = [0u8; Self::BYTES];
+        out[0..8].copy_from_slice(&self.step.to_le_bytes());
+        out[8..16].copy_from_slice(&self.seed.to_le_bytes());
+        out[16..20].copy_from_slice(&self.g.to_le_bytes());
+        out[20..24].copy_from_slice(&self.eps.to_le_bytes());
+        out
+    }
+
+    fn decode(b: &[u8; Self::BYTES]) -> SeedRecord {
+        SeedRecord {
+            step: u64::from_le_bytes(b[0..8].try_into().expect("8 bytes")),
+            seed: u64::from_le_bytes(b[8..16].try_into().expect("8 bytes")),
+            g: f32::from_le_bytes(b[16..20].try_into().expect("4 bytes")),
+            eps: f32::from_le_bytes(b[20..24].try_into().expect("4 bytes")),
+        }
+    }
+}
+
+/// Write a complete seed log crash-safely (temp file + atomic rename):
+/// the 8-byte magic followed by each record's 24 bytes.
+pub fn write_seed_log(path: &Path, records: &[SeedRecord]) -> Result<()> {
+    atomic_write(path, |f| {
+        f.write_all(SEED_LOG_MAGIC)?;
+        for r in records {
+            f.write_all(&r.encode())?;
+        }
+        Ok(())
+    })
+}
+
+/// Append records to a seed log, creating it (with the magic header) if
+/// absent. This is the per-step persistence path of the distributed
+/// coordinator: appends are the crash-safe primitive here — a torn tail
+/// is detected (with its byte offset) by [`load_seed_log`].
+pub fn append_seed_log(path: &Path, records: &[SeedRecord]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let fresh = !path.exists();
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {} for append", path.display()))?;
+    if fresh {
+        f.write_all(SEED_LOG_MAGIC)?;
+    }
+    for r in records {
+        f.write_all(&r.encode())?;
+    }
+    Ok(())
+}
+
+/// Load a seed log strictly: bad magic, a partial trailing record, or a
+/// non-contiguous step sequence all error with byte-offset context. The
+/// returned records are guaranteed contiguous ascending from step 1 —
+/// exactly what replay (`crate::dist::replay_seed_log`) requires.
+pub fn load_seed_log(path: &Path) -> Result<Vec<SeedRecord>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading seed log {}", path.display()))?;
+    ensure!(
+        bytes.len() >= SEED_LOG_MAGIC.len() && &bytes[..SEED_LOG_MAGIC.len()] == SEED_LOG_MAGIC,
+        "{}: not a HELENE seed log (bad or missing magic in the first 8 bytes)",
+        path.display()
+    );
+    let body = &bytes[SEED_LOG_MAGIC.len()..];
+    let tail = body.len() % SeedRecord::BYTES;
+    ensure!(
+        tail == 0,
+        "{}: truncated seed log: {} trailing bytes of a partial record at byte \
+         offset {} (records are {} bytes)",
+        path.display(),
+        tail,
+        bytes.len() - tail,
+        SeedRecord::BYTES
+    );
+    let mut records = Vec::with_capacity(body.len() / SeedRecord::BYTES);
+    for (i, chunk) in body.chunks_exact(SeedRecord::BYTES).enumerate() {
+        let rec = SeedRecord::decode(chunk.try_into().expect("exact chunk"));
+        ensure!(
+            rec.step == (i as u64) + 1,
+            "{}: corrupted seed log: record {} at byte offset {} carries step {} \
+             (expected contiguous steps ascending from 1)",
+            path.display(),
+            i,
+            SEED_LOG_MAGIC.len() + i * SeedRecord::BYTES,
+            rec.step
+        );
+        records.push(rec);
+    }
+    Ok(records)
 }
 
 #[cfg(test)]
@@ -263,5 +468,120 @@ mod tests {
         let path = dir.join("junk.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path, toy().spec.clone()).is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_and_overwrites_cleanly() {
+        let p = toy();
+        let dir = std::env::temp_dir().join("helene_ckpt_atomic");
+        let path = dir.join("ckpt.bin");
+        save(&path, 1, &p, &[]).unwrap();
+        // no temp file left behind
+        assert!(!dir.join("ckpt.bin.tmp").exists());
+        // overwriting an existing checkpoint goes through the same rename
+        save(&path, 2, &p, &[]).unwrap();
+        assert!(!dir.join("ckpt.bin.tmp").exists());
+        let (step, p2, _) = load(&path, p.spec.clone()).unwrap();
+        assert_eq!(step, 2);
+        assert!(p2.bits_eq(&p));
+    }
+
+    #[test]
+    fn truncated_checkpoint_errors_with_byte_offset_context() {
+        let p = toy();
+        let dir = std::env::temp_dir().join("helene_ckpt_trunc");
+        let path = dir.join("ckpt.bin");
+        save(&path, 5, &p, &[]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut the file at several points: mid-magic, mid-header, mid-payload
+        for cut in [4usize, 12, full.len() - 10] {
+            let short = dir.join("short.bin");
+            std::fs::write(&short, &full[..cut]).unwrap();
+            let err = format!("{:#}", load(&short, p.spec.clone()).unwrap_err());
+            assert!(
+                err.contains("byte offset"),
+                "cut {cut}: error lacks offset context: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_header_length_errors_instead_of_allocating() {
+        let p = toy();
+        let dir = std::env::temp_dir().join("helene_ckpt_hlen");
+        let path = dir.join("ckpt.bin");
+        save(&path, 5, &p, &[]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // declare an absurd header length: load must error with offset
+        // context, not attempt a huge allocation or read past EOF
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        let bad = dir.join("bad.bin");
+        std::fs::write(&bad, &bytes).unwrap();
+        let err = format!("{:#}", load(&bad, p.spec.clone()).unwrap_err());
+        assert!(err.contains("byte offset"), "{err}");
+        assert!(err.contains("header claims"), "{err}");
+    }
+
+    fn sample_records(n: u64) -> Vec<SeedRecord> {
+        (1..=n)
+            .map(|step| SeedRecord {
+                step,
+                seed: crate::util::rng::mix64(42, step),
+                g: 0.125 * step as f32 - 0.5,
+                eps: 1e-3,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn seed_log_round_trips_and_append_matches_bulk_write() {
+        let dir = std::env::temp_dir().join("helene_seedlog_rt");
+        let records = sample_records(9);
+        let bulk = dir.join("bulk.sl");
+        write_seed_log(&bulk, &records).unwrap();
+        assert!(!dir.join("bulk.sl.tmp").exists());
+        assert_eq!(load_seed_log(&bulk).unwrap(), records);
+        // appending record-by-record produces a byte-identical file
+        let incr = dir.join("incr.sl");
+        let _ = std::fs::remove_file(&incr);
+        for r in &records {
+            append_seed_log(&incr, std::slice::from_ref(r)).unwrap();
+        }
+        assert_eq!(std::fs::read(&bulk).unwrap(), std::fs::read(&incr).unwrap());
+    }
+
+    #[test]
+    fn seed_log_rejects_partial_trailing_record_with_offset() {
+        let dir = std::env::temp_dir().join("helene_seedlog_trunc");
+        let path = dir.join("log.sl");
+        write_seed_log(&path, &sample_records(3)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.sl");
+        std::fs::write(&cut, &full[..full.len() - 7]).unwrap();
+        let err = format!("{:#}", load_seed_log(&cut).unwrap_err());
+        assert!(err.contains("truncated seed log"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        // truncating at a record boundary is fine — that's the replay-
+        // from-prefix case
+        let boundary = dir.join("boundary.sl");
+        std::fs::write(&boundary, &full[..full.len() - SeedRecord::BYTES]).unwrap();
+        assert_eq!(load_seed_log(&boundary).unwrap(), sample_records(2));
+    }
+
+    #[test]
+    fn seed_log_rejects_bad_magic_and_gapped_steps() {
+        let dir = std::env::temp_dir().join("helene_seedlog_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let junk = dir.join("junk.sl");
+        std::fs::write(&junk, b"definitely not a seed log").unwrap();
+        assert!(load_seed_log(&junk).is_err());
+
+        let path = dir.join("gap.sl");
+        let mut records = sample_records(3);
+        records[2].step = 7; // gap
+        write_seed_log(&path, &records).unwrap();
+        let err = format!("{:#}", load_seed_log(&path).unwrap_err());
+        assert!(err.contains("contiguous"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
     }
 }

@@ -151,7 +151,11 @@ pub enum StepKind {
 }
 
 /// A training algorithm over a `ParamSet`.
-pub trait Optimizer {
+///
+/// `Send` is a supertrait so optimizers can be moved into distributed
+/// worker threads (`crate::dist`); every optimizer state is plain
+/// `Vec`/scalar data, so this costs nothing.
+pub trait Optimizer: Send {
     fn name(&self) -> &'static str;
 
     fn kind(&self) -> StepKind;

@@ -35,6 +35,11 @@
 //!
 //! The estimator is generic over the loss oracle so the same code drives
 //! the PJRT model runner, the 2-D toy problems, and the unit tests.
+//!
+//! Probe-loss hygiene (every estimator path, pairwise and multi): a
+//! non-finite loss (NaN/±Inf) from the oracle aborts the step with
+//! step-seed context **after** restoring θ, before the value can poison
+//! the gradient scalar or the optimizer moment state.
 
 use anyhow::Result;
 
@@ -59,6 +64,25 @@ impl SpsaEstimate {
     pub fn loss(&self) -> f32 {
         0.5 * (self.loss_plus + self.loss_minus)
     }
+}
+
+/// Canonical aggregation of distributed per-shard partial losses
+/// (`crate::dist`): one left-fold in f64 over the partials **in global
+/// shard order**, rounded to f32 exactly once at the end. Fixing the
+/// fold order and the rounding point here makes the total loss bitwise
+/// independent of how shards are grouped into worker spans — the
+/// N-invariance the distributed property tests gate on. Single-process
+/// reference paths that want to be comparable to a distributed run must
+/// total their loss through this same fold.
+pub fn fold_partial_losses<I>(partials: I) -> f32
+where
+    I: IntoIterator<Item = f64>,
+{
+    let mut acc = 0.0f64;
+    for p in partials {
+        acc += p;
+    }
+    acc as f32
 }
 
 /// Cached probe pair **without the restore pass**: on success `params` is
@@ -86,6 +110,14 @@ where
             return Err(e);
         }
     };
+    if !loss_plus.is_finite() {
+        params.perturb_from_cache(cache, seed, -eps);
+        anyhow::bail!(
+            "non-finite loss {loss_plus} at the +ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     params.perturb_from_cache(cache, seed, -2.0 * eps);
     let loss_minus = match loss_fn(params) {
         Ok(l) => l,
@@ -94,6 +126,14 @@ where
             return Err(e);
         }
     };
+    if !loss_minus.is_finite() {
+        params.perturb_from_cache(cache, seed, eps);
+        anyhow::bail!(
+            "non-finite loss {loss_minus} at the −ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     Ok(SpsaEstimate {
         g_scale: (loss_plus - loss_minus) / (2.0 * eps),
         seed,
@@ -146,6 +186,14 @@ where
             return Err(e);
         }
     };
+    if !loss_plus.is_finite() {
+        params.perturb_trainable(seed, -eps); // unwind the prefetch
+        anyhow::bail!(
+            "non-finite loss {loss_plus} at the +ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     params.perturb_trainable(seed, -2.0 * eps);
     let loss_minus = match loss_fn(params) {
         Ok(l) => l,
@@ -154,6 +202,14 @@ where
             return Err(e);
         }
     };
+    if !loss_minus.is_finite() {
+        params.perturb_trainable(seed, eps);
+        anyhow::bail!(
+            "non-finite loss {loss_minus} at the −ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     Ok(SpsaEstimate {
         g_scale: (loss_plus - loss_minus) / (2.0 * eps),
         seed,
@@ -192,6 +248,14 @@ where
             return Err(e);
         }
     };
+    if !loss_plus.is_finite() {
+        params.perturb_from_cache(cache, seed, -eps);
+        anyhow::bail!(
+            "non-finite loss {loss_plus} at the +ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     params.perturb_from_cache(cache, seed, -2.0 * eps);
     let loss_minus = match loss_fn(params) {
         Ok(l) => l,
@@ -200,6 +264,14 @@ where
             return Err(e);
         }
     };
+    if !loss_minus.is_finite() {
+        params.perturb_from_cache(cache, seed, eps);
+        anyhow::bail!(
+            "non-finite loss {loss_minus} at the −ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     Ok(SpsaEstimate {
         g_scale: (loss_plus - loss_minus) / (2.0 * eps),
         seed,
@@ -257,6 +329,17 @@ where
             return Err(e);
         }
     };
+    if !loss_plus.is_finite() {
+        match cache {
+            Some(c) => params.perturb_from_cache(c, seed, -eps),
+            None => params.perturb_trainable(seed, -eps),
+        }
+        anyhow::bail!(
+            "non-finite loss {loss_plus} at the +ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     sink.begin_theta(params)?;
     for tile in params.theta_tiles(tiles) {
         match cache {
@@ -276,6 +359,17 @@ where
             return Err(e);
         }
     };
+    if !loss_minus.is_finite() {
+        match cache {
+            Some(c) => params.perturb_from_cache(c, seed, eps),
+            None => params.perturb_trainable(seed, eps),
+        }
+        anyhow::bail!(
+            "non-finite loss {loss_minus} at the −ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     Ok(SpsaEstimate {
         g_scale: (loss_plus - loss_minus) / (2.0 * eps),
         seed,
@@ -306,6 +400,14 @@ where
             return Err(e);
         }
     };
+    if !loss_plus.is_finite() {
+        params.perturb_trainable(seed, -eps); // restore before bailing
+        anyhow::bail!(
+            "non-finite loss {loss_plus} at the +ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     params.perturb_trainable(seed, -2.0 * eps);
     let loss_minus = match loss_fn(params) {
         Ok(l) => l,
@@ -314,6 +416,14 @@ where
             return Err(e);
         }
     };
+    if !loss_minus.is_finite() {
+        params.perturb_trainable(seed, eps);
+        anyhow::bail!(
+            "non-finite loss {loss_minus} at the −ε probe (step seed {seed}): \
+             aborting the step before it poisons the gradient estimate and \
+             optimizer state"
+        );
+    }
     Ok(SpsaEstimate {
         g_scale: (loss_plus - loss_minus) / (2.0 * eps),
         seed,
@@ -942,5 +1052,142 @@ mod tests {
     fn multi_rejects_zero_probes() {
         let mut p = toy_params(&[16]);
         assert!(estimate_multi_preperturbed(&mut p, 1, 0, 1e-3, quad_loss).is_err());
+    }
+
+    #[test]
+    fn fold_partial_losses_matches_an_f64_left_fold() {
+        assert_eq!(fold_partial_losses(std::iter::empty()), 0.0);
+        let parts = [1.25f64, -0.5, 3.0e-7, 1.0e9, -1.0e9];
+        let mut acc = 0.0f64;
+        for p in parts {
+            acc += p;
+        }
+        let folded = fold_partial_losses(parts.iter().copied());
+        assert_eq!(folded.to_bits(), (acc as f32).to_bits());
+        // grouping shards into spans is concatenation — same fold
+        let grouped =
+            fold_partial_losses(parts[..2].iter().chain(&parts[2..]).copied());
+        assert_eq!(folded.to_bits(), grouped.to_bits());
+    }
+
+    /// Scripted oracle: returns `bad` on call number `fail_at`, else a
+    /// benign constant.
+    fn scripted(bad: f32, fail_at: usize) -> impl FnMut(&ParamSet) -> Result<f32> {
+        let mut calls = 0usize;
+        move |_| {
+            let l = if calls == fail_at { bad } else { 1.0 };
+            calls += 1;
+            Ok(l)
+        }
+    }
+
+    fn assert_nonfinite_abort(err: anyhow::Error, fail_at: usize, seed: u64) {
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite loss"), "{msg}");
+        let probe = if fail_at == 0 { "+ε probe" } else { "−ε probe" };
+        assert!(msg.contains(probe), "fail_at {fail_at}: {msg}");
+        assert!(msg.contains(&format!("step seed {seed}")), "{msg}");
+    }
+
+    #[test]
+    fn nonfinite_loss_aborts_seeded_estimators_after_restoring() {
+        let eps = 1e-3f32;
+        let seed = 11u64;
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for fail_at in [0usize, 1] {
+                // seeded, unrestored protocol
+                let mut p = toy_params(&[48, 16]);
+                let orig = p.clone();
+                let r = estimate_unrestored(&mut p, seed, eps, scripted(bad, fail_at));
+                assert_nonfinite_abort(r.unwrap_err(), fail_at, seed);
+                assert!(p.max_abs_diff(&orig) < 1e-5, "fail_at {fail_at}");
+
+                // classic full-cycle wrapper delegates to the same checks
+                let mut p = toy_params(&[48, 16]);
+                let orig = p.clone();
+                let r = estimate_with(&mut p, seed, eps, scripted(bad, fail_at));
+                assert_nonfinite_abort(r.unwrap_err(), fail_at, seed);
+                assert!(p.max_abs_diff(&orig) < 1e-5, "fail_at {fail_at}");
+
+                // prefetch protocol: θ arrives pre-perturbed
+                let mut p = toy_params(&[48, 16]);
+                let orig = p.clone();
+                p.perturb_trainable(seed, eps);
+                let r = estimate_preperturbed(&mut p, seed, eps, scripted(bad, fail_at));
+                assert_nonfinite_abort(r.unwrap_err(), fail_at, seed);
+                assert!(p.max_abs_diff(&orig) < 1e-5, "fail_at {fail_at}");
+            }
+        }
+    }
+
+    #[test]
+    fn nonfinite_loss_aborts_cached_estimators_after_restoring() {
+        let eps = 1e-3f32;
+        let seed = 12u64;
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for fail_at in [0usize, 1] {
+                let mut p = toy_params(&[48, 16]);
+                let orig = p.clone();
+                let mut cache = crate::model::params::ZCache::default();
+                let r = estimate_cached_unrestored(
+                    &mut p, &mut cache, seed, eps, scripted(bad, fail_at),
+                );
+                assert_nonfinite_abort(r.unwrap_err(), fail_at, seed);
+                assert!(p.max_abs_diff(&orig) < 1e-5, "fail_at {fail_at}");
+
+                let mut p = toy_params(&[48, 16]);
+                let orig = p.clone();
+                let mut cache = crate::model::params::ZCache::default();
+                p.perturb_fill_cache(&mut cache, seed, eps);
+                let r = estimate_cached_preperturbed(
+                    &mut p, &cache, seed, eps, scripted(bad, fail_at),
+                );
+                assert_nonfinite_abort(r.unwrap_err(), fail_at, seed);
+                assert!(p.max_abs_diff(&orig) < 1e-5, "fail_at {fail_at}");
+            }
+        }
+    }
+
+    #[test]
+    fn nonfinite_loss_aborts_staged_estimator_after_restoring() {
+        use crate::model::params::TileSpec;
+        use crate::runtime::{stream_theta, HostThetaStage};
+        let eps = 1e-3f32;
+        let seed = 13u64;
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for fail_at in [0usize, 1] {
+                for cached in [false, true] {
+                    let mut p = toy_params(&[48, 16]);
+                    let orig = p.clone();
+                    let mut cache = crate::model::params::ZCache::default();
+                    if cached {
+                        p.perturb_fill_cache(&mut cache, seed, eps);
+                    } else {
+                        p.perturb_trainable(seed, eps);
+                    }
+                    let mut sink = HostThetaStage::default();
+                    stream_theta(&p, TileSpec::by_shards(1), &mut sink).unwrap();
+                    let mut calls = 0usize;
+                    let r = estimate_staged_preperturbed(
+                        &mut p,
+                        cached.then_some(&cache),
+                        seed,
+                        eps,
+                        TileSpec::by_shards(1),
+                        &mut sink,
+                        |_| {
+                            let l = if calls == fail_at { bad } else { 1.0 };
+                            calls += 1;
+                            Ok(l)
+                        },
+                    );
+                    assert_nonfinite_abort(r.unwrap_err(), fail_at, seed);
+                    assert!(
+                        p.max_abs_diff(&orig) < 1e-5,
+                        "fail_at {fail_at} cached {cached}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -110,6 +110,21 @@ pub struct TrainConfig {
     /// active and `spsa_eps` < mean|θ|/256 the trainer always emits a
     /// one-time warning; with this flag it also raises ε to that floor.
     pub eps_floor: bool,
+    /// Distributed worker count (DESIGN.md §Distributed). 1 (default)
+    /// keeps the classic in-process protocol. Values > 1 shard the probe
+    /// loss across a seed-and-scalar worker tier (`crate::dist`) — driven
+    /// by [`run_zo_distributed`] / the `helene dist` subcommand, since
+    /// the compiled-model runner is single-threaded.
+    pub workers: usize,
+    /// Deterministic fault schedule for the distributed tier
+    /// ([`crate::dist::FaultPlan`], the `--fault-plan` flag). `None` (and
+    /// an empty plan) is a healthy cluster.
+    pub fault_plan: Option<crate::dist::FaultPlan>,
+    /// Base per-wave reply deadline for distributed probe/commit rounds,
+    /// in milliseconds (waves back off exponentially, ×2 capped at ×8).
+    pub worker_timeout_ms: u64,
+    /// Retries allowed per span per step beyond the first attempt.
+    pub retry_budget: usize,
 }
 
 impl Default for TrainConfig {
@@ -132,8 +147,61 @@ impl Default for TrainConfig {
             tiled_sweeps: None,
             probes: 1,
             eps_floor: false,
+            workers: 1,
+            fault_plan: None,
+            worker_timeout_ms: 1000,
+            retry_budget: 3,
         }
     }
+}
+
+impl TrainConfig {
+    /// Validate the robustness knobs with actionable messages — called by
+    /// the run entrypoints and by the CLI at parse time, so a bad value
+    /// fails before any work starts. Delegates to
+    /// [`crate::dist::DistConfig::validate`] via [`Self::dist_config`].
+    pub fn validate_robustness(&self) -> Result<()> {
+        self.dist_config(None).map(|_| ())
+    }
+
+    /// Map the robustness knobs onto a [`crate::dist::DistConfig`]
+    /// (validated). `seed_log` is the optional persistence path for the
+    /// committed `(step, seed, g, eps)` records.
+    pub fn dist_config(
+        &self,
+        seed_log: Option<std::path::PathBuf>,
+    ) -> Result<crate::dist::DistConfig> {
+        let cfg = crate::dist::DistConfig {
+            workers: self.workers,
+            eps: self.spsa_eps,
+            timeout: std::time::Duration::from_millis(self.worker_timeout_ms),
+            retry_budget: self.retry_budget,
+            recover: true,
+            fault_plan: self.fault_plan.clone().unwrap_or_default(),
+            seed_log,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Run `cfg.steps` ZO steps on the distributed seed-and-scalar tier
+/// (`crate::dist`): `cfg.workers` threaded replicas probe disjoint shard
+/// spans of the loss, the coordinator folds the partials canonically and
+/// broadcasts `(step_seed, g)` commits. The trajectory is bitwise
+/// identical (f32 arenas) to the single-worker protocol over the same
+/// oracle — faulted or not. `factory` builds each worker slot's
+/// [`crate::dist::ShardLossOracle`] and optimizer; `seed_log` optionally
+/// persists every committed record for crash recovery.
+pub fn run_zo_distributed(
+    cfg: &TrainConfig,
+    base: &ParamSet,
+    factory: crate::dist::WorkerFactory,
+    seed_log: Option<std::path::PathBuf>,
+) -> Result<crate::dist::DistReport> {
+    let dist_cfg = cfg.dist_config(seed_log)?;
+    let mut coord = crate::dist::Coordinator::launch_threads(dist_cfg, base.clone(), factory)?;
+    coord.run(cfg.steps, cfg.seed)
 }
 
 /// DESIGN.md §Precision ε-floor heuristic: with a bf16 θ-arena, one store
@@ -785,6 +853,14 @@ impl Trainer {
         }
         let cfg = &cfg_run;
         anyhow::ensure!(cfg.probes >= 1, "TrainConfig::probes must be >= 1");
+        cfg.validate_robustness()?;
+        anyhow::ensure!(
+            cfg.workers <= 1,
+            "workers = {} requires the distributed tier: the compiled-model \
+             runner is single-threaded — use `helene dist` (or \
+             train::run_zo_distributed with a Send loss oracle)",
+            cfg.workers
+        );
         if cfg.probes > 1 && opt.kind() == StepKind::Zo {
             anyhow::ensure!(
                 !opt.wants_post_check(),
@@ -981,6 +1057,13 @@ pub fn run_lm(
     }
     let cfg = &cfg_run;
     anyhow::ensure!(cfg.probes >= 1, "TrainConfig::probes must be >= 1");
+    cfg.validate_robustness()?;
+    anyhow::ensure!(
+        cfg.workers <= 1,
+        "workers = {} requires the distributed tier: the compiled-model \
+         runner is single-threaded — use `helene dist`",
+        cfg.workers
+    );
     if cfg.probes > 1 && opt.kind() == StepKind::Zo {
         anyhow::ensure!(
             !opt.wants_post_check(),
@@ -1075,6 +1158,31 @@ mod tests {
         // estimator default: single probe, no bf16 ε clamp
         assert_eq!(c.probes, 1);
         assert!(!c.eps_floor);
+        // robustness defaults: single worker, healthy cluster, 1 s waves,
+        // 3 retries — and they pass their own validation
+        assert_eq!(c.workers, 1);
+        assert!(c.fault_plan.is_none());
+        assert_eq!(c.worker_timeout_ms, 1000);
+        assert_eq!(c.retry_budget, 3);
+        c.validate_robustness().unwrap();
+    }
+
+    #[test]
+    fn robustness_knobs_validate_at_config_time() {
+        let zero_workers = TrainConfig { workers: 0, ..Default::default() };
+        let err = format!("{:#}", zero_workers.validate_robustness().unwrap_err());
+        assert!(err.contains("workers must be >= 1"), "{err}");
+
+        let zero_timeout = TrainConfig { worker_timeout_ms: 0, ..Default::default() };
+        let err = format!("{:#}", zero_timeout.validate_robustness().unwrap_err());
+        assert!(err.contains("timeout must be > 0"), "{err}");
+
+        let no_retries = TrainConfig { retry_budget: 0, ..Default::default() };
+        let err = format!("{:#}", no_retries.validate_robustness().unwrap_err());
+        assert!(err.contains("retry budget must be >= 1"), "{err}");
+
+        let bad_eps = TrainConfig { spsa_eps: 0.0, ..Default::default() };
+        assert!(bad_eps.validate_robustness().is_err());
     }
 
     #[test]

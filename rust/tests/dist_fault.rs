@@ -1,0 +1,332 @@
+//! Property suite for the fault-tolerant distributed tier (`helene::dist`):
+//! faulted multi-worker runs must end **bitwise identical** (f32 arenas)
+//! to the unfaulted single-worker `ZoProtocol` — per-step loss trace and
+//! final parameters both — and a replacement rebuilt purely from the seed
+//! log must match the surviving replicas exactly.
+//!
+//! No artifacts needed: the tier runs against the synthetic separable
+//! [`SepQuadOracle`], which is pure and shard-decomposable by
+//! construction.
+
+use std::ops::Range;
+use std::time::Duration;
+
+use helene::dist::{
+    Coordinator, DistConfig, DistReport, FaultPlan, SepQuadOracle, ShardLossOracle,
+    WorkerFactory,
+};
+use helene::model::checkpoint::{self, SeedRecord};
+use helene::model::params::{Codec, ParamSet, SHARD_SIZE};
+use helene::optim::spsa::fold_partial_losses;
+use helene::optim::zo_sgd::ZoSgd;
+use helene::optim::Optimizer;
+use helene::train::{TrainConfig, ZoProtocol};
+use helene::util::rng::mix64;
+
+const STEPS: usize = 6;
+const RUN_SEED: u64 = 11;
+const EPS: f32 = 1e-3;
+const LR: f32 = 0.01;
+
+fn base_params() -> ParamSet {
+    // 5 shards across two layer groups: enough spans that 2- and 4-worker
+    // runs really dispatch disjoint assignments (faults keyed to worker 1
+    // must be able to fire at probe time), with a layer boundary for span
+    // planning to snap to
+    ParamSet::synthetic(&[3 * SHARD_SIZE, 2 * SHARD_SIZE], 0.5)
+}
+
+fn factory() -> WorkerFactory {
+    Box::new(|_slot| {
+        Ok((
+            Box::new(SepQuadOracle::new()) as Box<dyn ShardLossOracle>,
+            Box::new(ZoSgd::new(LR)) as Box<dyn Optimizer>,
+        ))
+    })
+}
+
+fn dist_cfg(workers: usize, plan: FaultPlan) -> DistConfig {
+    DistConfig {
+        workers,
+        eps: EPS,
+        // small waves keep the fault tests fast; the delay fault below is
+        // scheduled well past this deadline
+        timeout: Duration::from_millis(40),
+        retry_budget: 3,
+        recover: true,
+        fault_plan: plan,
+        seed_log: None,
+    }
+}
+
+/// The unfaulted single-worker reference: the default-config (pipelined)
+/// `ZoProtocol` over the same oracle, totalling the loss through the same
+/// canonical per-shard fold the coordinator uses.
+fn reference_run() -> (Vec<f32>, ParamSet) {
+    let base = base_params();
+    let n_shards = base.n_shards();
+    let mut oracle = SepQuadOracle::new();
+    let cfg = TrainConfig { steps: STEPS, spsa_eps: EPS, seed: RUN_SEED, ..Default::default() };
+    let mut opt = ZoSgd::new(LR);
+    opt.init(&base);
+    let mut params = base.clone();
+    let mut proto = ZoProtocol::new(&cfg);
+    let mut losses = Vec::with_capacity(STEPS);
+    // mirror the trainer's step loop: the trainer tracks the step number,
+    // so thread it into the oracle from the enclosing scope
+    for step in 1..=STEPS {
+        let step_seed = mix64(RUN_SEED, step as u64);
+        let next_seed = mix64(RUN_SEED, step as u64 + 1);
+        let boundary = step == STEPS;
+        let est = proto
+            .step(&mut opt, &mut params, step_seed, next_seed, boundary, |p| {
+                Ok(fold_partial_losses(
+                    oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                ))
+            })
+            .unwrap();
+        losses.push(est.loss());
+    }
+    proto.finish(&mut params);
+    (losses, params)
+}
+
+fn run_dist(cfg: DistConfig) -> (Coordinator<helene::dist::ChannelTransport>, DistReport) {
+    let mut coord = Coordinator::launch_threads(cfg, base_params(), factory()).unwrap();
+    let report = coord.run(STEPS, RUN_SEED).unwrap();
+    (coord, report)
+}
+
+fn assert_bitwise(tag: &str, report: &DistReport, ref_losses: &[f32], ref_params: &ParamSet) {
+    assert_eq!(report.losses.len(), ref_losses.len(), "{tag}: step count");
+    for (i, (a, b)) in report.losses.iter().zip(ref_losses).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{tag}: loss trace diverges at step {} ({a} vs {b})",
+            i + 1
+        );
+    }
+    assert!(report.params.bits_eq(ref_params), "{tag}: final params diverge");
+}
+
+#[test]
+fn unfaulted_runs_match_the_single_worker_protocol_for_any_worker_count() {
+    let (ref_losses, ref_params) = reference_run();
+    for workers in [1usize, 2, 4] {
+        let (mut coord, report) = run_dist(dist_cfg(workers, FaultPlan::new()));
+        assert_bitwise(&format!("workers={workers}"), &report, &ref_losses, &ref_params);
+        assert_eq!(report.workers_alive, workers);
+        assert_eq!(report.stats.deaths, 0);
+        // every replica holds the identical arena
+        for (w, replica) in coord.fetch_all().unwrap() {
+            assert!(replica.bits_eq(&ref_params), "workers={workers}: replica {w} diverges");
+        }
+        // the committed log replays to the same parameters from step 0
+        let replayed =
+            helene::dist::replay_seed_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
+                .unwrap();
+        assert!(replayed.bits_eq(&ref_params), "workers={workers}: replay diverges");
+    }
+}
+
+#[test]
+fn faulted_runs_stay_bitwise_identical_and_recover() {
+    let (ref_losses, ref_params) = reference_run();
+    // three distinct fault families: worker death mid-step, a dropped
+    // reply plus a delayed (late, discarded) reply, a poisoned partial
+    let plans = [
+        ("death", "die@3:1"),
+        ("drop+delay", "drop@2:0,delay@4:1:200"),
+        ("nan-partial", "nan@2:1"),
+    ];
+    for (name, spec) in plans {
+        let plan = FaultPlan::parse(spec).unwrap();
+        for workers in [2usize, 4] {
+            let tag = format!("{name}/workers={workers}");
+            let (mut coord, report) = run_dist(dist_cfg(workers, plan.clone()));
+            assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+            match name {
+                "death" => {
+                    assert!(report.stats.deaths >= 1, "{tag}: no death recorded");
+                    assert!(report.stats.recoveries >= 1, "{tag}: no recovery recorded");
+                    assert_eq!(report.workers_alive, workers, "{tag}: quorum not restored");
+                }
+                _ => {
+                    assert!(report.stats.retries >= 1, "{tag}: fault never cost a retry");
+                }
+            }
+            // every survivor (including any seed-log-replayed replacement)
+            // holds the identical arena
+            let replicas = coord.fetch_all().unwrap();
+            for (w, replica) in &replicas {
+                assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+            }
+            // and a from-scratch replay of the committed log matches too
+            let replayed =
+                helene::dist::replay_seed_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
+                    .unwrap();
+            assert!(replayed.bits_eq(&ref_params), "{tag}: replay diverges");
+        }
+    }
+}
+
+#[test]
+fn recovery_off_degrades_to_the_surviving_quorum() {
+    let (ref_losses, ref_params) = reference_run();
+    let mut cfg = dist_cfg(3, FaultPlan::parse("die@2:2").unwrap());
+    cfg.recover = false;
+    let (_coord, report) = run_dist(cfg);
+    assert_bitwise("degraded", &report, &ref_losses, &ref_params);
+    assert_eq!(report.workers_alive, 2);
+    assert_eq!(report.stats.deaths, 1);
+    assert_eq!(report.stats.recoveries, 0);
+}
+
+#[test]
+fn losing_every_worker_without_recovery_is_a_clear_error() {
+    let mut cfg = dist_cfg(2, FaultPlan::parse("die@1:0,die@1:1").unwrap());
+    cfg.recover = false;
+    let mut coord = Coordinator::launch_threads(cfg, base_params(), factory()).unwrap();
+    let err = format!("{:#}", coord.run(STEPS, RUN_SEED).unwrap_err());
+    assert!(err.contains("no surviving workers"), "{err}");
+}
+
+/// An oracle that always fails: drives the retry loop to budget
+/// exhaustion deterministically (injected faults fire only once, so they
+/// can never exhaust the budget on their own).
+struct AlwaysFailOracle;
+impl ShardLossOracle for AlwaysFailOracle {
+    fn shard_partials(
+        &mut self,
+        _params: &ParamSet,
+        _shards: Range<usize>,
+        _step: u64,
+    ) -> anyhow::Result<Vec<f64>> {
+        anyhow::bail!("synthetic oracle failure")
+    }
+}
+
+#[test]
+fn retry_budget_exhaustion_names_the_step_and_span() {
+    let mut cfg = dist_cfg(1, FaultPlan::new());
+    cfg.retry_budget = 2;
+    let fail_factory: WorkerFactory = Box::new(|_slot| {
+        Ok((
+            Box::new(AlwaysFailOracle) as Box<dyn ShardLossOracle>,
+            Box::new(ZoSgd::new(LR)) as Box<dyn Optimizer>,
+        ))
+    });
+    let mut coord = Coordinator::launch_threads(cfg, base_params(), fail_factory).unwrap();
+    let err = format!("{:#}", coord.run(STEPS, RUN_SEED).unwrap_err());
+    assert!(err.contains("retry budget exhausted at step 1"), "{err}");
+    assert!(err.contains("synthetic oracle failure"), "{err}");
+}
+
+#[test]
+fn committed_records_persist_to_the_seed_log_file() {
+    let dir = std::env::temp_dir().join("helene_dist_seedlog");
+    let path = dir.join("run.sl");
+    let _ = std::fs::remove_file(&path); // appends accumulate across runs
+    let mut cfg = dist_cfg(2, FaultPlan::parse("die@3:1").unwrap());
+    cfg.seed_log = Some(path.clone());
+    let (_coord, report) = run_dist(cfg);
+    let on_disk = checkpoint::load_seed_log(&path).unwrap();
+    assert_eq!(on_disk, report.log);
+    assert_eq!(on_disk.len(), STEPS);
+}
+
+#[test]
+fn dist_config_rejects_bad_knobs_with_actionable_messages() {
+    let bad = [
+        (DistConfig { workers: 0, ..Default::default() }, "workers must be >= 1"),
+        (
+            DistConfig { timeout: Duration::ZERO, ..Default::default() },
+            "timeout must be > 0",
+        ),
+        (
+            DistConfig { retry_budget: 0, ..Default::default() },
+            "retry budget must be >= 1",
+        ),
+        (DistConfig { eps: f32::NAN, ..Default::default() }, "eps must be finite"),
+    ];
+    for (cfg, needle) in bad {
+        let err = format!("{:#}", cfg.validate().unwrap_err());
+        assert!(err.contains(needle), "{err:?} should contain {needle:?}");
+    }
+}
+
+/// Satellite: seed-log replay coverage across checkpoints and codecs.
+/// Record a naive-config run's `(step, seed, g, eps)` log, checkpoint at
+/// step k, keep training to k+m; truncating the log at step k and
+/// replaying from the step-0 arena must land bitwise on the step-k
+/// checkpoint — in both storage codecs. (The naive config is used because
+/// its per-step arithmetic is exactly `probe_cycle` + `step_zo` in every
+/// codec; the pipelined config is bitwise-equal to it in f32 only.)
+#[test]
+fn seed_log_replay_lands_on_the_checkpoint_in_both_codecs() {
+    let (k, m) = (4usize, 3usize);
+    for codec in [Codec::F32, Codec::Bf16] {
+        let dir = std::env::temp_dir().join(format!("helene_replay_{}", codec.name()));
+        let base = base_params().with_codec(codec);
+        let n_shards = base.n_shards();
+        let mut oracle = SepQuadOracle::new();
+        let cfg = TrainConfig {
+            steps: k + m,
+            spsa_eps: EPS,
+            seed: RUN_SEED,
+            cache_z: false,
+            fuse_restore: false,
+            prefetch_perturb: false,
+            ..Default::default()
+        };
+        let mut opt = ZoSgd::new(LR);
+        opt.init(&base);
+        let mut params = base.clone();
+        let mut proto = ZoProtocol::new(&cfg);
+        let mut records = Vec::new();
+        let ckpt = dir.join("step_k.bin");
+        for step in 1..=k + m {
+            let step_seed = mix64(RUN_SEED, step as u64);
+            let next_seed = mix64(RUN_SEED, step as u64 + 1);
+            let est = proto
+                .step(&mut opt, &mut params, step_seed, next_seed, true, |p| {
+                    Ok(fold_partial_losses(
+                        oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                    ))
+                })
+                .unwrap();
+            records.push(SeedRecord {
+                step: step as u64,
+                seed: est.seed,
+                g: est.g_scale,
+                eps: EPS,
+            });
+            if step == k {
+                // the naive protocol leaves θ pristine after every step
+                checkpoint::save(&ckpt, k, &params, &[]).unwrap();
+            }
+        }
+        proto.finish(&mut params);
+
+        // persist the full log, reload it, truncate at step k, replay
+        let log_path = dir.join("run.sl");
+        checkpoint::write_seed_log(&log_path, &records).unwrap();
+        let loaded = checkpoint::load_seed_log(&log_path).unwrap();
+        assert_eq!(loaded, records);
+        let replayed = helene::dist::replay_seed_log(
+            &base,
+            &mut ZoSgd::new(LR),
+            &loaded[..k],
+        )
+        .unwrap();
+        let (step, at_k, _) = checkpoint::load(&ckpt, base.spec.clone()).unwrap();
+        assert_eq!(step, k);
+        assert_eq!(replayed.codec(), at_k.codec());
+        assert!(
+            replayed.bits_eq(&at_k),
+            "{}: replay of the first {k} records does not land on the step-{k} checkpoint",
+            codec.name()
+        );
+    }
+}
