@@ -78,8 +78,14 @@ fn main() -> anyhow::Result<()> {
 
     // the paper's observation: worse windows ↔ more clipping. report the
     // ratio between the worst- and best-loss windows.
-    let best = windows.iter().cloned().fold((f64::INFINITY, 0.0), |a, b| if b.0 < a.0 { b } else { a });
-    let worst = windows.iter().cloned().fold((f64::NEG_INFINITY, 0.0), |a, b| if b.0 > a.0 { b } else { a });
+    let best = windows
+        .iter()
+        .cloned()
+        .fold((f64::INFINITY, 0.0), |a, b| if b.0 < a.0 { b } else { a });
+    let worst = windows
+        .iter()
+        .cloned()
+        .fold((f64::NEG_INFINITY, 0.0), |a, b| if b.0 > a.0 { b } else { a });
     if best.1 > 0.0 {
         println!(
             "trigger-rate ratio (worst-loss window / best-loss window): {:.2} (paper: 1.18-1.22)",

@@ -54,7 +54,11 @@ fn main() -> anyhow::Result<()> {
         .fold(f32::NEG_INFINITY, f32::max);
     println!(
         "helene smoothed loss {helene:.3} vs worst baseline {worst:.3} ({})",
-        if helene < worst { "helene ahead of at least one baseline ✓" } else { "⚠ ordering differs" }
+        if helene < worst {
+            "helene ahead of at least one baseline ✓"
+        } else {
+            "⚠ ordering differs"
+        }
     );
     b.finish(&["optimizer", "final_loss", "dev_acc"])?;
     Ok(())

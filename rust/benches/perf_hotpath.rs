@@ -32,12 +32,14 @@
 //!    `multiprobe_speedup` (≥ 1.0) fields.
 //! 5. **Distributed section** (always runs): the seed-and-scalar worker
 //!    tier (`helene::dist`) on a work-weighted separable oracle — wall
-//!    clock of a 1-worker vs 4-worker coordinator run, plus the bitwise
-//!    check of both against the single-process protocol. Emits the
-//!    CI-gated `dist_bitwise` flag (must be true) and the informational
-//!    `dist_speedup` (loss-evaluation parallelism is real only when the
-//!    oracle's FLOPs dominate; on a 2-core runner the speedup is modest
-//!    and not gated).
+//!    clock of a 1-worker vs 4-worker coordinator run, plus a 4-worker
+//!    run over the loopback socket transport (framed, checksummed TCP),
+//!    with bitwise checks of all three against the single-process
+//!    protocol. Emits the CI-gated `dist_bitwise` and
+//!    `dist_socket_bitwise` flags (must both be true) and the
+//!    informational `dist_speedup` (loss-evaluation parallelism is real
+//!    only when the oracle's FLOPs dominate; on a 2-core runner the
+//!    speedup is modest and not gated).
 //! 6. **PJRT section** (skipped when `artifacts/` is absent): forward
 //!    passes, the buffered fast path, the fused L1 update kernel and
 //!    loss_grad — the per-step cost structure DESIGN.md §Perf documents.
@@ -182,7 +184,15 @@ fn bf16_section(base: &ParamSet, iters: usize) -> anyhow::Result<Bf16Stats> {
         p.perturb_fill_cache(&mut zc, 3, 1e-3);
         p.reset_sweep_count();
         let est = spsa::estimate_cached_preperturbed(&mut p, &zc, 3, 1e-3, |_| Ok(0.0))?;
-        opt.step_zo_fused_prefetch(&mut p, est.g_scale, est.seed, 4, 1e-3, Some(&zc), Some(&mut nextc))?;
+        opt.step_zo_fused_prefetch(
+            &mut p,
+            est.g_scale,
+            est.seed,
+            4,
+            1e-3,
+            Some(&zc),
+            Some(&mut nextc),
+        )?;
         p.sweep_count()
     };
 
@@ -617,7 +627,15 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<(Vec<ThreadRow>, S
         p.perturb_fill_cache(&mut zc, 3, 1e-3);
         p.reset_sweep_count();
         let est = spsa::estimate_cached_preperturbed(&mut p, &zc, 3, 1e-3, |_| Ok(0.0))?;
-        opt.step_zo_fused_prefetch(&mut p, est.g_scale, est.seed, 4, 1e-3, Some(&zc), Some(&mut nextc))?;
+        opt.step_zo_fused_prefetch(
+            &mut p,
+            est.g_scale,
+            est.seed,
+            4,
+            1e-3,
+            Some(&zc),
+            Some(&mut nextc),
+        )?;
         let prefetch = p.sweep_count();
         SweepCounts { unfused, fused, prefetch }
     };
@@ -682,13 +700,20 @@ fn host_section(scale: Scale, iters: usize) -> anyhow::Result<(Vec<ThreadRow>, S
 }
 
 /// §Distributed bench outcome: 1-worker vs N-worker coordinator wall
-/// clock and the bitwise cross-check against the single-process protocol.
+/// clock and the bitwise cross-check against the single-process protocol
+/// — over in-process channels and over the loopback socket transport.
 struct DistBenchStats {
     t1_ms: f64,
     tn_ms: f64,
+    /// N-worker wall clock over loopback TCP (framing + handshake
+    /// included).
+    tsock_ms: f64,
     workers: usize,
     steps: usize,
     bitwise: bool,
+    /// Whether the socket-transport run also reproduced the
+    /// single-process trajectory bit-for-bit (CI-gated).
+    socket_bitwise: bool,
 }
 
 impl DistBenchStats {
@@ -762,6 +787,31 @@ fn dist_section(base: &ParamSet, scale: Scale) -> anyhow::Result<DistBenchStats>
     let (t1_ms, losses_1, params_1) = run(1)?;
     let (tn_ms, losses_n, params_n) = run(workers)?;
 
+    // the same N-worker run over the loopback socket transport: real TCP
+    // lanes, checksummed frames, the connect handshake — the trajectory
+    // must still be bit-for-bit the single-process one
+    let run_socket = |n: usize| -> anyhow::Result<(f64, Vec<f32>, ParamSet)> {
+        let cfg = DistConfig { workers: n, eps, ..Default::default() };
+        let factory: WorkerFactory = Box::new(move |_slot| {
+            Ok((
+                Box::new(SepQuadOracle::with_work(work)) as Box<dyn ShardLossOracle>,
+                Box::new(ZoSgd::new(lr)) as Box<dyn Optimizer>,
+            ))
+        });
+        let mut coord = Coordinator::launch_socket_threads(
+            cfg,
+            base.clone(),
+            factory,
+            run_seed,
+            helene::dist::SocketConfig::default(),
+            None,
+        )?;
+        let t0 = Instant::now();
+        let report = coord.run(steps, run_seed)?;
+        Ok((t0.elapsed().as_secs_f64() * 1e3, report.losses, report.params))
+    };
+    let (tsock_ms, losses_s, params_s) = run_socket(workers)?;
+
     let trace_eq = |l: &[f32]| {
         l.len() == ref_losses.len()
             && l.iter().zip(&ref_losses).all(|(a, b)| a.to_bits() == b.to_bits())
@@ -770,14 +820,17 @@ fn dist_section(base: &ParamSet, scale: Scale) -> anyhow::Result<DistBenchStats>
         && trace_eq(&losses_n)
         && params_1.bits_eq(&ref_params)
         && params_n.bits_eq(&ref_params);
+    let socket_bitwise = trace_eq(&losses_s) && params_s.bits_eq(&ref_params);
     println!(
         "dist tier ({} params, {steps} steps, work={work}): 1 worker {t1_ms:.1} ms, \
-         {workers} workers {tn_ms:.1} ms ({:.2}x), bitwise vs single-process: {}",
+         {workers} workers {tn_ms:.1} ms ({:.2}x), {workers} socket workers \
+         {tsock_ms:.1} ms, bitwise vs single-process: channels {}, sockets {}",
         base.n_params(),
         t1_ms / tn_ms,
-        if bitwise { "identical" } else { "MISMATCH" }
+        if bitwise { "identical" } else { "MISMATCH" },
+        if socket_bitwise { "identical" } else { "MISMATCH" }
     );
-    Ok(DistBenchStats { t1_ms, tn_ms, workers, steps, bitwise })
+    Ok(DistBenchStats { t1_ms, tn_ms, tsock_ms, workers, steps, bitwise, socket_bitwise })
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -944,12 +997,16 @@ fn write_json(
     // single-process trajectory exactly; dist_speedup is informational
     // (real parallelism needs the oracle's FLOPs to dominate)
     root.insert("dist_bitwise".to_string(), Json::Bool(dist.bitwise));
+    // same gate for the socket transport: framing/handshake/timeout
+    // machinery must never perturb the trajectory
+    root.insert("dist_socket_bitwise".to_string(), Json::Bool(dist.socket_bitwise));
     root.insert("dist_speedup".to_string(), Json::Num(dist.speedup()));
     let mut dj = BTreeMap::new();
     dj.insert("workers".to_string(), Json::Num(dist.workers as f64));
     dj.insert("steps".to_string(), Json::Num(dist.steps as f64));
     dj.insert("t1_ms".to_string(), Json::Num(dist.t1_ms));
     dj.insert("tn_ms".to_string(), Json::Num(dist.tn_ms));
+    dj.insert("tsock_ms".to_string(), Json::Num(dist.tsock_ms));
     root.insert("dist".to_string(), Json::Obj(dj));
     // measured by the instrumented ParamSet sweep counter, not assumed
     let mut sw = BTreeMap::new();

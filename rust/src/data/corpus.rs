@@ -57,7 +57,13 @@ impl TinyCorpus {
     }
 
     /// Chop a stream into (batch, seq) examples for the LM loss entrypoint.
-    pub fn batches(&self, n_batches: usize, batch: usize, seq: usize, stream_id: u64) -> Vec<Vec<i32>> {
+    pub fn batches(
+        &self,
+        n_batches: usize,
+        batch: usize,
+        seq: usize,
+        stream_id: u64,
+    ) -> Vec<Vec<i32>> {
         let total = n_batches * batch * seq;
         let s = self.stream(total, stream_id);
         (0..n_batches)

@@ -118,6 +118,9 @@ pub struct DistStats {
     pub retries: usize,
     /// Stale or duplicate replies discarded by the dedupe filters.
     pub late_replies: usize,
+    /// Worker redials accepted by the transport (socket transport only:
+    /// handshakes beyond each slot's first; always 0 over channels).
+    pub wire_reconnects: usize,
 }
 
 /// The outcome of a distributed run.
@@ -236,6 +239,11 @@ impl<T: Transport> Coordinator<T> {
             .with_context(|| format!("seed-log replay failed while rebuilding worker {slot}"))?;
         let endpoint = self.transport.open(slot);
         (self.spawner)(slot, worker, endpoint)?;
+        // a channel lane is live immediately (default no-op); a socket
+        // lane is live only once the worker dials in and handshakes
+        self.transport.await_live(slot).with_context(|| {
+            format!("worker {slot} was provisioned but never came live on the transport")
+        })?;
         self.alive[slot] = true;
         Ok(())
     }
@@ -588,6 +596,11 @@ impl<T: Transport> Coordinator<T> {
             let g = (lp - lm) / (2.0 * self.cfg.eps);
             let rec = SeedRecord { step, seed, g, eps: self.cfg.eps };
             self.log.push(rec);
+            // the transport sees the record before the apply broadcast,
+            // so a worker that (re)handshakes mid-apply receives a log
+            // that already contains this step — same invariant as the
+            // local spawn path above
+            self.transport.on_commit(&rec);
             if let Some(path) = self.cfg.seed_log.clone() {
                 checkpoint::append_seed_log(&path, &[rec])
                     .with_context(|| format!("persisting seed log for step {step}"))?;
@@ -596,6 +609,7 @@ impl<T: Transport> Coordinator<T> {
             losses.push(0.5 * (lp + lm));
         }
         let params = self.fetch_params()?;
+        self.stats.wire_reconnects = self.transport.reconnects();
         Ok(DistReport {
             losses,
             params,
@@ -604,14 +618,25 @@ impl<T: Transport> Coordinator<T> {
             workers_alive: self.workers_alive(),
         })
     }
+
+    /// Send an explicit [`Request::Shutdown`] to every live worker and
+    /// retire its lane, so workers exit through the clean
+    /// `WorkerExit::Shutdown` path (process exit code 0) instead of
+    /// treating a closed lane as a death signal. Idempotent; also runs
+    /// on drop, so simply letting the coordinator go out of scope after
+    /// a run shuts the tier down gracefully.
+    pub fn shutdown(&mut self) {
+        for w in 0..self.alive.len() {
+            if self.alive[w] {
+                let _ = self.transport.send(w, Request::Shutdown);
+                self.alive[w] = false;
+            }
+        }
+    }
 }
 
 impl<T: Transport> Drop for Coordinator<T> {
     fn drop(&mut self) {
-        for w in 0..self.alive.len() {
-            if self.alive[w] {
-                let _ = self.transport.send(w, Request::Shutdown);
-            }
-        }
+        self.shutdown();
     }
 }

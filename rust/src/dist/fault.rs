@@ -1,28 +1,46 @@
 //! Deterministic fault injection for the distributed tier.
 //!
-//! A [`FaultPlan`] is a map from `(step, worker)` to a [`Fault`], so a
-//! faulted run is exactly reproducible: the same plan against the same
-//! seed always kills / delays / corrupts the same messages. The property
-//! tests in `tests/dist_fault.rs` lean on this to assert that every
-//! faulted trajectory still ends bitwise identical to the unfaulted
+//! A [`FaultPlan`] schedules [`Fault`]s at exact `(step, worker)`
+//! coordinates, so a faulted run is exactly reproducible: the same plan
+//! against the same seed always kills / delays / corrupts the same
+//! messages. The property tests in `tests/dist_fault.rs` and
+//! `tests/dist_socket.rs` lean on this to assert that every faulted
+//! trajectory still ends bitwise identical to the unfaulted
 //! single-worker protocol.
+//!
+//! Faults come in two classes:
+//!
+//! * **worker-class** (`die`, `drop`, `delay`, `nan`) — injected inside
+//!   the worker's request handler, transport-agnostic;
+//! * **wire-class** (`cut`, `corrupt`, `stall`) — injected by the
+//!   in-path TCP fault proxy (`dist::socket::FaultProxy`) on the bytes
+//!   of a framed reply, so they only exist on a socket transport.
+//!
+//! At most one fault of each class may be scheduled per `(step, worker)`
+//! coordinate; a worker-class and a wire-class fault may coexist on the
+//! same key (e.g. a delayed reply whose frame is then corrupted).
 //!
 //! Plans parse from a compact spec string (the `--fault-plan` CLI flag):
 //!
 //! ```text
-//! die@3:1,drop@5:0,nan@7:2,delay@4:1:50
+//! die@3:1,drop@5:0,nan@7:2,delay@4:1:50,cut@3:1,corrupt@2:0,stall@4:1:300
 //! ```
 //!
-//! i.e. comma-separated `kind@step:worker` entries, with `delay` taking a
-//! trailing `:millis`. One entry per `(step, worker)` pair.
+//! i.e. comma-separated `kind@step:worker` entries, with `delay` and
+//! `stall` taking a trailing `:millis`. Duplicate `(kind, step, worker)`
+//! entries — and any second entry of the same class on one key — are
+//! rejected with an actionable error, because an ambiguous plan is not
+//! replayable.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
 use anyhow::{bail, Context, Result};
 
-/// One injected fault, applied when the worker receives a probe request
-/// (or, for [`Fault::Die`], any stepped request) at the keyed step.
+/// One injected fault. Worker-class faults apply when the worker
+/// receives a probe request (or, for [`Fault::Die`], any stepped
+/// request) at the keyed step; wire-class faults apply when the fault
+/// proxy observes the keyed worker's framed reply for the keyed step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fault {
     /// The worker process dies: its loop exits without replying, closing
@@ -44,12 +62,62 @@ pub enum Fault {
     /// multi-worker quorum the rotation routes the retry to the next
     /// live worker.
     NanPartial,
+    /// Wire-class: the proxy drops the reply frame and severs the TCP
+    /// connection in both directions — a crash/partition as seen from
+    /// the coordinator. The worker side survives and redials, exercising
+    /// reconnect-by-replay. Fires once per run.
+    CutWire,
+    /// Wire-class: one bit of the reply frame's payload is flipped in
+    /// flight while the checksum header is left stale, so the receiver
+    /// detects a checksum mismatch and kills the lane. Fires once.
+    CorruptFrame,
+    /// Wire-class: the proxy forwards half of the reply frame's bytes,
+    /// sleeps this many milliseconds, then forwards the rest — a torn
+    /// write / hung peer. Past the receiver's mid-frame stall budget
+    /// this is indistinguishable from a wedged worker and the lane is
+    /// killed. Fires once.
+    StallFrame(u64),
+}
+
+impl Fault {
+    /// Whether this fault is injected on the wire (by the TCP fault
+    /// proxy) rather than inside the worker's request handler.
+    pub fn is_wire(self) -> bool {
+        matches!(self, Fault::CutWire | Fault::CorruptFrame | Fault::StallFrame(_))
+    }
+
+    /// The spec-string kind keyword (`die`, `drop`, …).
+    fn kind(self) -> &'static str {
+        match self {
+            Fault::Die => "die",
+            Fault::DropReply => "drop",
+            Fault::DelayReply(_) => "delay",
+            Fault::NanPartial => "nan",
+            Fault::CutWire => "cut",
+            Fault::CorruptFrame => "corrupt",
+            Fault::StallFrame(_) => "stall",
+        }
+    }
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.kind())
+    }
+}
+
+/// The per-key fault slots: at most one worker-class and one wire-class
+/// fault per `(step, worker)` coordinate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct Scheduled {
+    worker: Option<Fault>,
+    wire: Option<Fault>,
 }
 
 /// A deterministic fault schedule keyed by `(step, worker)`.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct FaultPlan {
-    entries: BTreeMap<(u64, usize), Fault>,
+    entries: BTreeMap<(u64, usize), Scheduled>,
 }
 
 impl FaultPlan {
@@ -58,31 +126,56 @@ impl FaultPlan {
         Self::default()
     }
 
-    /// Add one fault at `(step, worker)`; replaces any previous entry for
-    /// that key.
+    /// Add one fault at `(step, worker)`; replaces any previous entry of
+    /// the same class (worker / wire) for that key. [`FaultPlan::parse`]
+    /// rejects such duplicates instead — use it when ambiguity should be
+    /// an error.
     pub fn insert(&mut self, step: u64, worker: usize, fault: Fault) {
-        self.entries.insert((step, worker), fault);
+        let slot = self.entries.entry((step, worker)).or_default();
+        if fault.is_wire() {
+            slot.wire = Some(fault);
+        } else {
+            slot.worker = Some(fault);
+        }
     }
 
-    /// The fault scheduled for `(step, worker)`, if any.
+    /// The worker-class fault scheduled for `(step, worker)`, if any.
+    /// Wire-class faults are invisible here — they belong to the proxy.
     pub fn get(&self, step: u64, worker: usize) -> Option<Fault> {
-        self.entries.get(&(step, worker)).copied()
+        self.entries.get(&(step, worker)).and_then(|s| s.worker)
+    }
+
+    /// The wire-class fault scheduled for `(step, worker)`, if any — the
+    /// fault proxy's lookup.
+    pub fn wire(&self, step: u64, worker: usize) -> Option<Fault> {
+        self.entries.get(&(step, worker)).and_then(|s| s.wire)
+    }
+
+    /// Whether the plan schedules any wire-class fault at all (i.e.
+    /// whether a socket run needs the fault proxy in path).
+    pub fn has_wire_faults(&self) -> bool {
+        self.entries.values().any(|s| s.wire.is_some())
     }
 
     /// Whether the plan schedules no faults at all.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len() == 0
     }
 
-    /// Number of scheduled faults.
+    /// Number of scheduled faults (both classes).
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries
+            .values()
+            .map(|s| usize::from(s.worker.is_some()) + usize::from(s.wire.is_some()))
+            .sum()
     }
 
     /// Parse a spec string: comma-separated `kind@step:worker` entries
-    /// (`delay` takes a trailing `:millis`). Kinds: `die`, `drop`, `nan`,
-    /// `delay`. Duplicate `(step, worker)` keys are rejected — a plan
-    /// must be unambiguous to be replayable.
+    /// (`delay` and `stall` take a trailing `:millis`). Kinds: `die`,
+    /// `drop`, `nan`, `delay` (worker-class), `cut`, `corrupt`, `stall`
+    /// (wire-class). A duplicate `(kind, step, worker)` entry — or any
+    /// second entry of the same class on one `(step, worker)` key — is
+    /// rejected: a plan must be unambiguous to be replayable.
     pub fn parse(spec: &str) -> Result<Self> {
         let mut plan = FaultPlan::new();
         for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
@@ -105,32 +198,59 @@ impl FaultPlan {
                 })?
                 .parse()
                 .with_context(|| format!("fault entry {entry:?}: bad worker index"))?;
+            let takes_ms = matches!(kind, "delay" | "stall");
             let fault = match kind {
                 "die" => Fault::Die,
                 "drop" => Fault::DropReply,
                 "nan" => Fault::NanPartial,
-                "delay" => {
+                "cut" => Fault::CutWire,
+                "corrupt" => Fault::CorruptFrame,
+                "delay" | "stall" => {
                     let ms: u64 = fields
                         .next()
                         .with_context(|| {
-                            format!("fault entry {entry:?} is missing the delay millis \
-                                     (delay@step:worker:ms)")
+                            format!(
+                                "fault entry {entry:?} is missing the millis field \
+                                 ({kind}@step:worker:ms)"
+                            )
                         })?
                         .parse()
-                        .with_context(|| format!("fault entry {entry:?}: bad delay millis"))?;
-                    Fault::DelayReply(ms)
+                        .with_context(|| format!("fault entry {entry:?}: bad millis"))?;
+                    if kind == "delay" {
+                        Fault::DelayReply(ms)
+                    } else {
+                        Fault::StallFrame(ms)
+                    }
                 }
                 other => bail!(
                     "unknown fault kind {other:?} in {entry:?} — expected die | drop | \
-                     nan | delay"
+                     nan | delay | cut | corrupt | stall"
                 ),
             };
-            if !matches!(fault, Fault::DelayReply(_)) && fields.next().is_some() {
+            if !takes_ms && fields.next().is_some() {
                 bail!("fault entry {entry:?} has trailing fields");
             }
-            if plan.entries.insert((step, worker), fault).is_some() {
-                bail!("duplicate fault for step {step}, worker {worker} in {spec:?}");
+            let slot = plan.entries.entry((step, worker)).or_default();
+            let class = if fault.is_wire() { &mut slot.wire } else { &mut slot.worker };
+            if let Some(prev) = *class {
+                if prev.kind() == fault.kind() {
+                    bail!(
+                        "duplicate `{}` fault for step {step}, worker {worker} in \
+                         {spec:?} — remove one; a plan must be unambiguous to be \
+                         replayable",
+                        fault.kind()
+                    );
+                }
+                bail!(
+                    "conflicting {}-class faults `{}` and `{}` for step {step}, worker \
+                     {worker} in {spec:?} — at most one worker-class and one \
+                     wire-class fault per (step, worker)",
+                    if fault.is_wire() { "wire" } else { "worker" },
+                    prev.kind(),
+                    fault.kind()
+                );
             }
+            *class = Some(fault);
         }
         Ok(plan)
     }
@@ -139,16 +259,28 @@ impl FaultPlan {
 impl fmt::Display for FaultPlan {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let mut first = true;
-        for (&(step, worker), fault) in &self.entries {
+        let mut emit = |f: &mut fmt::Formatter<'_>,
+                        step: u64,
+                        worker: usize,
+                        fault: Fault|
+         -> fmt::Result {
             if !first {
                 write!(f, ",")?;
             }
             first = false;
             match fault {
-                Fault::Die => write!(f, "die@{step}:{worker}")?,
-                Fault::DropReply => write!(f, "drop@{step}:{worker}")?,
-                Fault::NanPartial => write!(f, "nan@{step}:{worker}")?,
-                Fault::DelayReply(ms) => write!(f, "delay@{step}:{worker}:{ms}")?,
+                Fault::DelayReply(ms) | Fault::StallFrame(ms) => {
+                    write!(f, "{fault}@{step}:{worker}:{ms}")
+                }
+                _ => write!(f, "{fault}@{step}:{worker}"),
+            }
+        };
+        for (&(step, worker), slot) in &self.entries {
+            if let Some(fault) = slot.worker {
+                emit(f, step, worker, fault)?;
+            }
+            if let Some(fault) = slot.wire {
+                emit(f, step, worker, fault)?;
             }
         }
         Ok(())
@@ -161,15 +293,33 @@ mod tests {
 
     #[test]
     fn parses_every_kind_and_round_trips() {
-        let spec = "die@3:1,drop@5:0,nan@7:2,delay@4:1:50";
+        let spec = "die@3:1,drop@5:0,nan@7:2,delay@4:1:50,cut@6:1,corrupt@2:0,stall@5:2:300";
         let plan = FaultPlan::parse(spec).unwrap();
-        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.len(), 7);
         assert_eq!(plan.get(3, 1), Some(Fault::Die));
         assert_eq!(plan.get(5, 0), Some(Fault::DropReply));
         assert_eq!(plan.get(7, 2), Some(Fault::NanPartial));
         assert_eq!(plan.get(4, 1), Some(Fault::DelayReply(50)));
         assert_eq!(plan.get(4, 0), None);
+        // wire-class faults are invisible to the worker-class accessor …
+        assert_eq!(plan.get(6, 1), None);
+        assert_eq!(plan.get(2, 0), None);
+        // … and vice versa
+        assert_eq!(plan.wire(6, 1), Some(Fault::CutWire));
+        assert_eq!(plan.wire(2, 0), Some(Fault::CorruptFrame));
+        assert_eq!(plan.wire(5, 2), Some(Fault::StallFrame(300)));
+        assert_eq!(plan.wire(3, 1), None);
+        assert!(plan.has_wire_faults());
         // Display emits a parseable spec that reproduces the plan
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+    }
+
+    #[test]
+    fn worker_and_wire_faults_coexist_on_one_key() {
+        let plan = FaultPlan::parse("delay@3:1:80,corrupt@3:1").unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.get(3, 1), Some(Fault::DelayReply(80)));
+        assert_eq!(plan.wire(3, 1), Some(Fault::CorruptFrame));
         assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
     }
 
@@ -177,20 +327,39 @@ mod tests {
     fn empty_and_whitespace_specs_are_empty_plans() {
         assert!(FaultPlan::parse("").unwrap().is_empty());
         assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+        assert!(!FaultPlan::parse("die@1:0").unwrap().has_wire_faults());
+    }
+
+    #[test]
+    fn rejects_duplicate_and_conflicting_entries_with_actionable_errors() {
+        let dup = format!("{:#}", FaultPlan::parse("die@3:1,die@3:1").unwrap_err());
+        assert!(dup.contains("duplicate `die` fault for step 3, worker 1"), "{dup}");
+        let cut = format!("{:#}", FaultPlan::parse("cut@3:1,cut@3:1").unwrap_err());
+        assert!(cut.contains("duplicate `cut` fault"), "{cut}");
+        let conflict = format!("{:#}", FaultPlan::parse("die@3:1,drop@3:1").unwrap_err());
+        assert!(
+            conflict.contains("conflicting worker-class faults `die` and `drop`"),
+            "{conflict}"
+        );
+        let wires = format!("{:#}", FaultPlan::parse("cut@3:1,corrupt@3:1").unwrap_err());
+        assert!(wires.contains("conflicting wire-class faults"), "{wires}");
     }
 
     #[test]
     fn rejects_malformed_entries() {
         for bad in [
-            "die3:1",          // no @
-            "die@x:1",         // bad step
-            "die@3",           // no worker
-            "die@3:y",         // bad worker
-            "boom@3:1",        // unknown kind
-            "delay@3:1",       // delay without millis
-            "delay@3:1:z",     // bad millis
-            "die@3:1:9",       // trailing field on a non-delay kind
-            "die@3:1,die@3:1", // duplicate key
+            "die3:1",            // no @
+            "die@x:1",           // bad step
+            "die@3",             // no worker
+            "die@3:y",           // bad worker
+            "boom@3:1",          // unknown kind
+            "delay@3:1",         // delay without millis
+            "delay@3:1:z",       // bad millis
+            "stall@3:1",         // stall without millis
+            "die@3:1:9",         // trailing field on a non-millis kind
+            "cut@3:1:9",         // same, wire-class
+            "die@3:1,die@3:1",   // duplicate key
+            "stall@3:1:5,cut@3:1", // two wire faults on one key
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail");
         }

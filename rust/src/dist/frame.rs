@@ -1,0 +1,869 @@
+//! Wire framing and binary message codec for the socket transport.
+//!
+//! Every message travels as one **frame**:
+//!
+//! ```text
+//! [payload_len: u32 LE][fnv1a32(payload): u32 LE][payload bytes]
+//! ```
+//!
+//! The length prefix bounds the read (and is validated against
+//! [`DEFAULT_MAX_FRAME_BYTES`] before any allocation, so a corrupt
+//! prefix can never trigger a huge allocation or an unbounded read), and
+//! the FNV-1a-32 checksum detects in-flight corruption — a mismatch is a
+//! fatal lane error, never a panic. [`FrameReader`] is a *resumable*
+//! decoder: a frame torn across TCP segments, or interrupted by a read
+//! timeout, picks up exactly where it left off, and every failure
+//! carries byte-offset context.
+//!
+//! The payload is a tagged, hand-rolled little-endian encoding of the
+//! transport messages ([`Request`] / [`Reply`]) plus the three
+//! handshake messages ([`Hello`], [`HelloReply::Ack`],
+//! [`HelloReply::Err`]). No serde — the vendored crate set is
+//! `anyhow` + `rayon` only, and the messages are simple enough that an
+//! explicit codec doubles as wire documentation (§6b of DESIGN.md).
+
+use std::io::{ErrorKind, Read};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::transport::{Reply, Request};
+use crate::model::checkpoint::SeedRecord;
+use crate::model::params::Codec;
+
+/// Bytes of frame header: 4-byte payload length + 4-byte checksum.
+pub const FRAME_HEADER_BYTES: usize = 8;
+
+/// Default upper bound on a frame's payload size (256 MiB). Generously
+/// above any real message — the largest is a `Reply::Params` carrying a
+/// full arena payload — while still rejecting a corrupt length prefix
+/// long before it turns into a multi-gigabyte allocation.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 28;
+
+/// Wire protocol version, verified by the connect handshake. Bump on
+/// any change to the frame layout or message encoding.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Magic bytes opening every [`Hello`] message, so a dialer that hits
+/// the wrong port fails with "not a helene dist endpoint" instead of a
+/// confusing decode error.
+pub const HELLO_MAGIC: [u8; 8] = *b"HELNDST\n";
+
+/// FNV-1a 32-bit hash of `bytes` — the per-frame checksum.
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Wrap `payload` in a frame: length prefix, checksum, payload.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// One step of [`FrameReader::poll`].
+#[derive(Debug)]
+pub enum FrameProgress {
+    /// A complete, checksum-verified frame payload.
+    Frame(Vec<u8>),
+    /// The read timed out with **no** frame in progress — the peer is
+    /// idle, not wedged. Harmless; poll again.
+    Idle,
+    /// The read timed out **mid-frame**: some bytes of the current frame
+    /// have arrived and the rest have not. The caller charges this
+    /// against its stall budget — a peer that stalls past the budget is
+    /// treated as dead.
+    Stalled,
+    /// Clean EOF on a frame boundary — the peer closed the connection.
+    Closed,
+}
+
+/// Resumable frame decoder over any [`Read`]: accumulates header and
+/// payload bytes across calls, so torn writes and read timeouts never
+/// desynchronize the stream. Fatal conditions (EOF mid-frame, oversized
+/// or checksum-mismatched frames, I/O errors) are `Err` with byte-offset
+/// context; benign ones ([`FrameProgress::Idle`] / `Stalled` / `Closed`)
+/// are `Ok`.
+pub struct FrameReader {
+    max_frame: usize,
+    buf: Vec<u8>,
+    /// Total frame size (header + payload) once the header has arrived.
+    total: Option<usize>,
+}
+
+impl FrameReader {
+    /// A reader enforcing `max_frame` as the payload-size bound.
+    pub fn new(max_frame: usize) -> Self {
+        FrameReader { max_frame, buf: Vec::new(), total: None }
+    }
+
+    /// Bytes of the current frame received so far (0 = between frames).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Total size of the in-progress frame, once its header is complete.
+    pub fn expected(&self) -> Option<usize> {
+        self.total
+    }
+
+    /// Whether a frame is partially received.
+    pub fn mid_frame(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Pull bytes from `r` until a frame completes, the stream goes
+    /// quiet (timeout → [`FrameProgress::Idle`] / `Stalled`), or the
+    /// peer closes ([`FrameProgress::Closed`] on a frame boundary, `Err`
+    /// mid-frame).
+    pub fn poll(&mut self, r: &mut impl Read) -> Result<FrameProgress> {
+        let mut chunk = [0u8; 16384];
+        loop {
+            let need = match self.total {
+                Some(total) => total - self.buf.len(),
+                None => FRAME_HEADER_BYTES - self.buf.len(),
+            };
+            let n = match r.read(&mut chunk[..need.min(chunk.len())]) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(FrameProgress::Closed);
+                    }
+                    match self.total {
+                        Some(total) => bail!(
+                            "connection closed mid-frame: got {} of {} frame bytes",
+                            self.buf.len(),
+                            total
+                        ),
+                        None => bail!(
+                            "connection closed mid-frame: got {} of {FRAME_HEADER_BYTES} \
+                             header bytes (truncated length prefix)",
+                            self.buf.len()
+                        ),
+                    }
+                }
+                Ok(n) => n,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Ok(if self.buf.is_empty() {
+                        FrameProgress::Idle
+                    } else {
+                        FrameProgress::Stalled
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("socket read failed at frame offset {}", self.buf.len())
+                    });
+                }
+            };
+            self.buf.extend_from_slice(&chunk[..n]);
+            if self.total.is_none() && self.buf.len() >= FRAME_HEADER_BYTES {
+                let len =
+                    u32::from_le_bytes(self.buf[0..4].try_into().expect("4 bytes")) as usize;
+                ensure!(
+                    len <= self.max_frame,
+                    "oversized frame: length prefix declares {len} payload bytes, over \
+                     the {}-byte bound — corrupt prefix or protocol mismatch",
+                    self.max_frame
+                );
+                self.total = Some(FRAME_HEADER_BYTES + len);
+            }
+            if let Some(total) = self.total {
+                if self.buf.len() == total {
+                    let want =
+                        u32::from_le_bytes(self.buf[4..8].try_into().expect("4 bytes"));
+                    let payload = self.buf.split_off(FRAME_HEADER_BYTES);
+                    self.buf.clear();
+                    self.total = None;
+                    let got = fnv1a32(&payload);
+                    ensure!(
+                        got == want,
+                        "frame checksum mismatch over {} payload bytes: header says \
+                         {want:#010x}, payload hashes to {got:#010x}",
+                        payload.len()
+                    );
+                    return Ok(FrameProgress::Frame(payload));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// message payload codec
+// ---------------------------------------------------------------------
+
+/// Payload tag bytes. Requests and replies live in disjoint ranges so a
+/// message routed to the wrong side fails loudly at decode.
+mod tag {
+    pub const REQ_PROBE: u8 = 0x01;
+    pub const REQ_APPLY: u8 = 0x02;
+    pub const REQ_FETCH: u8 = 0x03;
+    pub const REQ_SHUTDOWN: u8 = 0x04;
+    pub const REP_PROBE: u8 = 0x11;
+    pub const REP_APPLIED: u8 = 0x12;
+    pub const REP_PARAMS: u8 = 0x13;
+    pub const REP_FAILED: u8 = 0x14;
+    pub const HELLO: u8 = 0xA0;
+    pub const HELLO_ACK: u8 = 0xA1;
+    pub const HELLO_ERR: u8 = 0xA2;
+}
+
+/// The tag byte of an encoded message payload, if non-empty. The fault
+/// proxy uses this to recognize handshake frames without a full decode.
+pub fn peek_tag(payload: &[u8]) -> Option<u8> {
+    payload.first().copied()
+}
+
+/// Bounds-checked little-endian field reader with byte-offset errors.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let remain = self.buf.len() - self.pos;
+        ensure!(
+            n <= remain,
+            "truncated message: field `{what}` needs {n} bytes at offset {}, only \
+             {remain} remain",
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+
+    /// A `usize` field encoded as u64 (shard indices, lengths).
+    fn usize(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64(what)?;
+        usize::try_from(v).with_context(|| format!("field `{what}` = {v} overflows usize"))
+    }
+
+    /// A length prefix for `elem_bytes`-sized elements, validated against
+    /// the bytes actually remaining so a corrupt count can never drive a
+    /// huge allocation.
+    fn len_prefix(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.usize(what)?;
+        let remain = self.buf.len() - self.pos;
+        ensure!(
+            n.checked_mul(elem_bytes).is_some_and(|b| b <= remain),
+            "corrupt length prefix: field `{what}` claims {n} elements \
+             ({elem_bytes} bytes each) at offset {} but only {remain} bytes remain",
+            self.pos - 8
+        );
+        Ok(n)
+    }
+
+    fn f64_vec(&mut self, what: &str) -> Result<Vec<f64>> {
+        let n = self.len_prefix(8, what)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64(what)?);
+        }
+        Ok(out)
+    }
+
+    fn bytes(&mut self, what: &str) -> Result<Vec<u8>> {
+        let n = self.len_prefix(1, what)?;
+        Ok(self.take(n, what)?.to_vec())
+    }
+
+    fn string(&mut self, what: &str) -> Result<String> {
+        let raw = self.bytes(what)?;
+        String::from_utf8(raw).with_context(|| format!("field `{what}` is not UTF-8"))
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "{what} has {} trailing bytes after offset {}",
+            self.buf.len() - self.pos,
+            self.pos
+        );
+        Ok(())
+    }
+}
+
+fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+fn put_f64s(out: &mut Vec<u8>, vals: &[f64]) {
+    out.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn codec_byte(codec: Codec) -> u8 {
+    match codec {
+        Codec::F32 => 0,
+        Codec::Bf16 => 1,
+    }
+}
+
+fn codec_from(b: u8) -> Result<Codec> {
+    match b {
+        0 => Ok(Codec::F32),
+        1 => Ok(Codec::Bf16),
+        other => bail!("unknown codec byte {other:#04x} (expected 0 = f32, 1 = bf16)"),
+    }
+}
+
+/// Encode a [`Request`] payload (tag + little-endian fields).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Probe { step, seed, eps, shards } => {
+            out.push(tag::REQ_PROBE);
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&seed.to_le_bytes());
+            out.extend_from_slice(&eps.to_le_bytes());
+            out.extend_from_slice(&(shards.start as u64).to_le_bytes());
+            out.extend_from_slice(&(shards.end as u64).to_le_bytes());
+        }
+        Request::Apply { step, seed, eps, g } => {
+            out.push(tag::REQ_APPLY);
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&seed.to_le_bytes());
+            out.extend_from_slice(&eps.to_le_bytes());
+            out.extend_from_slice(&g.to_le_bytes());
+        }
+        Request::Fetch => out.push(tag::REQ_FETCH),
+        Request::Shutdown => out.push(tag::REQ_SHUTDOWN),
+    }
+    out
+}
+
+/// Decode a [`Request`] payload.
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut d = Dec::new(payload);
+    let req = match d.u8("request tag")? {
+        tag::REQ_PROBE => {
+            let step = d.u64("step")?;
+            let seed = d.u64("seed")?;
+            let eps = d.f32("eps")?;
+            let lo = d.usize("shards.start")?;
+            let hi = d.usize("shards.end")?;
+            ensure!(lo <= hi, "probe shard range {lo}..{hi} is inverted");
+            Request::Probe { step, seed, eps, shards: lo..hi }
+        }
+        tag::REQ_APPLY => Request::Apply {
+            step: d.u64("step")?,
+            seed: d.u64("seed")?,
+            eps: d.f32("eps")?,
+            g: d.f32("g")?,
+        },
+        tag::REQ_FETCH => Request::Fetch,
+        tag::REQ_SHUTDOWN => Request::Shutdown,
+        other => bail!("unknown request tag {other:#04x}"),
+    };
+    d.done("request")?;
+    Ok(req)
+}
+
+/// Encode a [`Reply`] payload (tag + little-endian fields).
+pub fn encode_reply(reply: &Reply) -> Vec<u8> {
+    let mut out = Vec::new();
+    match reply {
+        Reply::Probe { worker, step, shards, plus, minus } => {
+            out.push(tag::REP_PROBE);
+            out.extend_from_slice(&(*worker as u64).to_le_bytes());
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&(shards.start as u64).to_le_bytes());
+            out.extend_from_slice(&(shards.end as u64).to_le_bytes());
+            put_f64s(&mut out, plus);
+            put_f64s(&mut out, minus);
+        }
+        Reply::Applied { worker, step, digest } => {
+            out.push(tag::REP_APPLIED);
+            out.extend_from_slice(&(*worker as u64).to_le_bytes());
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&digest.to_le_bytes());
+        }
+        Reply::Params { worker, applied_through, codec, payload } => {
+            out.push(tag::REP_PARAMS);
+            out.extend_from_slice(&(*worker as u64).to_le_bytes());
+            out.extend_from_slice(&applied_through.to_le_bytes());
+            out.push(codec_byte(*codec));
+            put_bytes(&mut out, payload);
+        }
+        Reply::Failed { worker, step, msg } => {
+            out.push(tag::REP_FAILED);
+            out.extend_from_slice(&(*worker as u64).to_le_bytes());
+            out.extend_from_slice(&step.to_le_bytes());
+            put_bytes(&mut out, msg.as_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a [`Reply`] payload.
+pub fn decode_reply(payload: &[u8]) -> Result<Reply> {
+    let mut d = Dec::new(payload);
+    let reply = match d.u8("reply tag")? {
+        tag::REP_PROBE => {
+            let worker = d.usize("worker")?;
+            let step = d.u64("step")?;
+            let lo = d.usize("shards.start")?;
+            let hi = d.usize("shards.end")?;
+            ensure!(lo <= hi, "probe-reply shard range {lo}..{hi} is inverted");
+            let plus = d.f64_vec("plus")?;
+            let minus = d.f64_vec("minus")?;
+            Reply::Probe { worker, step, shards: lo..hi, plus, minus }
+        }
+        tag::REP_APPLIED => Reply::Applied {
+            worker: d.usize("worker")?,
+            step: d.u64("step")?,
+            digest: d.u64("digest")?,
+        },
+        tag::REP_PARAMS => Reply::Params {
+            worker: d.usize("worker")?,
+            applied_through: d.u64("applied_through")?,
+            codec: codec_from(d.u8("codec")?)?,
+            payload: d.bytes("payload")?,
+        },
+        tag::REP_FAILED => Reply::Failed {
+            worker: d.usize("worker")?,
+            step: d.u64("step")?,
+            msg: d.string("msg")?,
+        },
+        other => bail!("unknown reply tag {other:#04x}"),
+    };
+    d.done("reply")?;
+    Ok(reply)
+}
+
+/// The step a reply is keyed to, if any ([`Reply::Params`] has none).
+/// The fault proxy uses this to match wire faults to `(step, worker)`.
+pub fn reply_step(reply: &Reply) -> Option<u64> {
+    match reply {
+        Reply::Probe { step, .. }
+        | Reply::Applied { step, .. }
+        | Reply::Failed { step, .. } => Some(*step),
+        Reply::Params { .. } => None,
+    }
+}
+
+/// The worker's opening handshake message: identifies the dialer and
+/// pins the run configuration, so a lane only goes live between a
+/// coordinator and a worker that agree on protocol version, run seed,
+/// slot, and step-0 arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    /// The dialer's [`PROTOCOL_VERSION`].
+    pub version: u32,
+    /// The run seed the worker was configured with; must equal the
+    /// coordinator's.
+    pub run_seed: u64,
+    /// The worker slot this connection serves.
+    pub slot: usize,
+    /// 0 for the first dial, incremented on every redial — telemetry
+    /// for the reconnect counters; not part of identity.
+    pub incarnation: u64,
+    /// [`super::param_digest`] of the worker's step-0 arena; must equal
+    /// the coordinator's, or replay could never converge.
+    pub base_digest: u64,
+}
+
+/// Encode a [`Hello`] payload.
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 8 + 4 + 8 + 8 + 8 + 8);
+    out.push(tag::HELLO);
+    out.extend_from_slice(&HELLO_MAGIC);
+    out.extend_from_slice(&h.version.to_le_bytes());
+    out.extend_from_slice(&h.run_seed.to_le_bytes());
+    out.extend_from_slice(&(h.slot as u64).to_le_bytes());
+    out.extend_from_slice(&h.incarnation.to_le_bytes());
+    out.extend_from_slice(&h.base_digest.to_le_bytes());
+    out
+}
+
+/// Decode a [`Hello`] payload (tag + magic validated here; version /
+/// seed / digest equality is the acceptor's job, which knows both
+/// sides' values and can produce a better error).
+pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
+    let mut d = Dec::new(payload);
+    let t = d.u8("hello tag")?;
+    ensure!(t == tag::HELLO, "expected a Hello frame (tag {:#04x}), got {t:#04x}", tag::HELLO);
+    let magic = d.take(HELLO_MAGIC.len(), "magic")?;
+    ensure!(
+        magic == HELLO_MAGIC,
+        "bad handshake magic {magic:02x?} — the dialer is not a helene dist worker"
+    );
+    let hello = Hello {
+        version: d.u32("version")?,
+        run_seed: d.u64("run_seed")?,
+        slot: d.usize("slot")?,
+        incarnation: d.u64("incarnation")?,
+        base_digest: d.u64("base_digest")?,
+    };
+    d.done("hello")?;
+    Ok(hello)
+}
+
+/// The coordinator's answer to a [`Hello`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum HelloReply {
+    /// Lane accepted. Carries the full committed seed log, so the worker
+    /// rebuilds its replica bitwise (step-0 arena + replay) before
+    /// serving — reconnect-by-replay over the wire.
+    Ack {
+        /// The coordinator's protocol version (echoed for symmetry).
+        version: u32,
+        /// Every `(step, seed, g, eps)` record committed so far.
+        records: Vec<SeedRecord>,
+    },
+    /// Lane refused (version / seed / slot / digest mismatch); the
+    /// connection is closed after this message.
+    Err {
+        /// Human-readable refusal reason.
+        msg: String,
+    },
+}
+
+/// Encode a [`HelloReply`] payload.
+pub fn encode_hello_reply(reply: &HelloReply) -> Vec<u8> {
+    let mut out = Vec::new();
+    match reply {
+        HelloReply::Ack { version, records } => {
+            out.push(tag::HELLO_ACK);
+            out.extend_from_slice(&version.to_le_bytes());
+            out.extend_from_slice(&(records.len() as u64).to_le_bytes());
+            for r in records {
+                out.extend_from_slice(&r.step.to_le_bytes());
+                out.extend_from_slice(&r.seed.to_le_bytes());
+                out.extend_from_slice(&r.g.to_le_bytes());
+                out.extend_from_slice(&r.eps.to_le_bytes());
+            }
+        }
+        HelloReply::Err { msg } => {
+            out.push(tag::HELLO_ERR);
+            put_bytes(&mut out, msg.as_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a [`HelloReply`] payload.
+pub fn decode_hello_reply(payload: &[u8]) -> Result<HelloReply> {
+    let mut d = Dec::new(payload);
+    let reply = match d.u8("hello-reply tag")? {
+        tag::HELLO_ACK => {
+            let version = d.u32("version")?;
+            let n = d.len_prefix(SeedRecord::BYTES, "records")?;
+            let mut records = Vec::with_capacity(n);
+            for _ in 0..n {
+                records.push(SeedRecord {
+                    step: d.u64("record.step")?,
+                    seed: d.u64("record.seed")?,
+                    g: d.f32("record.g")?,
+                    eps: d.f32("record.eps")?,
+                });
+            }
+            HelloReply::Ack { version, records }
+        }
+        tag::HELLO_ERR => HelloReply::Err { msg: d.string("msg")? },
+        other => bail!("unknown hello-reply tag {other:#04x}"),
+    };
+    d.done("hello-reply")?;
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{self, Cursor};
+
+    /// A scripted `Read` for exercising the resumable reader: each event
+    /// is a data chunk, a timeout, or EOF (after the script runs out).
+    enum Ev {
+        Data(Vec<u8>),
+        Timeout,
+    }
+
+    struct Scripted {
+        events: std::collections::VecDeque<Ev>,
+    }
+
+    impl Scripted {
+        fn new(events: Vec<Ev>) -> Self {
+            Scripted { events: events.into() }
+        }
+    }
+
+    impl Read for Scripted {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            match self.events.pop_front() {
+                None => Ok(0),
+                Some(Ev::Timeout) => {
+                    Err(io::Error::new(io::ErrorKind::WouldBlock, "scripted timeout"))
+                }
+                Some(Ev::Data(mut d)) => {
+                    let n = d.len().min(buf.len());
+                    buf[..n].copy_from_slice(&d[..n]);
+                    if n < d.len() {
+                        self.events.push_front(Ev::Data(d.split_off(n)));
+                    }
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    fn read_one(frame: &[u8]) -> Result<FrameProgress> {
+        FrameReader::new(DEFAULT_MAX_FRAME_BYTES).poll(&mut Cursor::new(frame))
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let payload = b"seed-and-scalar".to_vec();
+        let frame = encode_frame(&payload);
+        assert_eq!(frame.len(), FRAME_HEADER_BYTES + payload.len());
+        match read_one(&frame).unwrap() {
+            FrameProgress::Frame(got) => assert_eq!(got, payload),
+            other => panic!("expected a frame, got {other:?}"),
+        }
+        // empty payloads are legal frames
+        match read_one(&encode_frame(&[])).unwrap() {
+            FrameProgress::Frame(got) => assert!(got.is_empty()),
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_between_frames_is_closed_and_timeout_is_idle() {
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_BYTES);
+        assert!(matches!(
+            fr.poll(&mut Scripted::new(vec![Ev::Timeout])).unwrap(),
+            FrameProgress::Idle
+        ));
+        assert!(matches!(
+            fr.poll(&mut Scripted::new(vec![])).unwrap(),
+            FrameProgress::Closed
+        ));
+    }
+
+    #[test]
+    fn truncated_length_prefix_fails_with_byte_offset() {
+        // 3 of the 8 header bytes, then EOF
+        let frame = encode_frame(b"abc");
+        let err = format!("{:#}", read_one(&frame[..3]).unwrap_err());
+        assert!(err.contains("got 3 of 8 header bytes"), "{err}");
+        assert!(err.contains("truncated length prefix"), "{err}");
+    }
+
+    #[test]
+    fn eof_mid_payload_reports_frame_offsets() {
+        let frame = encode_frame(&vec![7u8; 100]);
+        let err = format!("{:#}", read_one(&frame[..50]).unwrap_err());
+        assert!(err.contains("got 50 of 108 frame bytes"), "{err}");
+    }
+
+    #[test]
+    fn checksum_mismatch_is_detected_with_both_hashes() {
+        let mut frame = encode_frame(b"the quick brown fox");
+        let last = frame.len() - 1;
+        frame[last] ^= 0x40; // flip one payload bit; header checksum now stale
+        let err = format!("{:#}", read_one(&frame).unwrap_err());
+        assert!(err.contains("frame checksum mismatch"), "{err}");
+        assert!(err.contains("header says"), "{err}");
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_before_allocation() {
+        let mut fr = FrameReader::new(1024);
+        let mut header = Vec::new();
+        header.extend_from_slice(&(usize::MAX as u32).to_le_bytes());
+        header.extend_from_slice(&0u32.to_le_bytes());
+        let err = format!("{:#}", fr.poll(&mut Cursor::new(&header)).unwrap_err());
+        assert!(err.contains("oversized frame"), "{err}");
+        assert!(err.contains("1024-byte bound"), "{err}");
+    }
+
+    #[test]
+    fn torn_write_across_two_segments_resumes_cleanly() {
+        let payload = b"torn across two tcp segments".to_vec();
+        let frame = encode_frame(&payload);
+        let cut = frame.len() / 2;
+        let mut r = Scripted::new(vec![
+            Ev::Data(frame[..cut].to_vec()),
+            Ev::Timeout,
+            Ev::Data(frame[cut..].to_vec()),
+        ]);
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_BYTES);
+        // first poll: half a frame then a timeout → Stalled, state kept
+        assert!(matches!(fr.poll(&mut r).unwrap(), FrameProgress::Stalled));
+        assert!(fr.mid_frame());
+        assert_eq!(fr.buffered(), cut);
+        assert_eq!(fr.expected(), Some(frame.len()));
+        // second poll: the rest arrives and the frame completes
+        match fr.poll(&mut r).unwrap() {
+            FrameProgress::Frame(got) => assert_eq!(got, payload),
+            other => panic!("expected a frame, got {other:?}"),
+        }
+        assert!(!fr.mid_frame());
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_in_sequence() {
+        let mut stream = encode_frame(b"one");
+        stream.extend_from_slice(&encode_frame(b"two"));
+        let mut cur = Cursor::new(stream);
+        let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_BYTES);
+        for want in [b"one".as_slice(), b"two".as_slice()] {
+            match fr.poll(&mut cur).unwrap() {
+                FrameProgress::Frame(got) => assert_eq!(got, want),
+                other => panic!("expected a frame, got {other:?}"),
+            }
+        }
+        assert!(matches!(fr.poll(&mut cur).unwrap(), FrameProgress::Closed));
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        let reqs = [
+            Request::Probe { step: 9, seed: 0xDEAD_BEEF, eps: 1e-3, shards: 2..5 },
+            Request::Apply { step: 9, seed: 1, eps: 1e-3, g: -0.25 },
+            Request::Fetch,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let got = decode_request(&encode_request(&req)).unwrap();
+            assert_eq!(got, req);
+        }
+    }
+
+    #[test]
+    fn replies_round_trip() {
+        let replies = [
+            Reply::Probe {
+                worker: 3,
+                step: 7,
+                shards: 0..3,
+                plus: vec![1.5, -2.25, f64::MIN_POSITIVE],
+                minus: vec![0.0, 3.5, 4.75],
+            },
+            Reply::Applied { worker: 1, step: 7, digest: 0xABCD_EF01_2345_6789 },
+            Reply::Params {
+                worker: 0,
+                applied_through: 12,
+                codec: Codec::Bf16,
+                payload: vec![1, 2, 3, 4, 5],
+            },
+            Reply::Failed { worker: 2, step: 4, msg: "oracle exploded: ε → ∞".into() },
+        ];
+        for reply in replies {
+            let got = decode_reply(&encode_reply(&reply)).unwrap();
+            assert_eq!(got, reply);
+            match &reply {
+                Reply::Params { .. } => assert_eq!(reply_step(&reply), None),
+                Reply::Probe { step, .. }
+                | Reply::Applied { step, .. }
+                | Reply::Failed { step, .. } => assert_eq!(reply_step(&reply), Some(*step)),
+            }
+        }
+    }
+
+    #[test]
+    fn handshake_messages_round_trip() {
+        let hello = Hello {
+            version: PROTOCOL_VERSION,
+            run_seed: 11,
+            slot: 2,
+            incarnation: 3,
+            base_digest: 0x1234_5678_9ABC_DEF0,
+        };
+        assert_eq!(decode_hello(&encode_hello(&hello)).unwrap(), hello);
+        let ack = HelloReply::Ack {
+            version: PROTOCOL_VERSION,
+            records: vec![
+                SeedRecord { step: 1, seed: 42, g: 0.5, eps: 1e-3 },
+                SeedRecord { step: 2, seed: 43, g: -0.25, eps: 1e-3 },
+            ],
+        };
+        assert_eq!(decode_hello_reply(&encode_hello_reply(&ack)).unwrap(), ack);
+        let refuse = HelloReply::Err { msg: "run seed mismatch".into() };
+        assert_eq!(decode_hello_reply(&encode_hello_reply(&refuse)).unwrap(), refuse);
+    }
+
+    #[test]
+    fn decode_errors_carry_field_and_offset_context() {
+        // request truncated mid-field
+        let probe = encode_request(&Request::Probe {
+            step: 1,
+            seed: 2,
+            eps: 1e-3,
+            shards: 0..4,
+        });
+        let err = format!("{:#}", decode_request(&probe[..9]).unwrap_err());
+        assert!(err.contains("truncated message"), "{err}");
+        assert!(err.contains("offset"), "{err}");
+        // trailing junk is rejected
+        let mut fetch = encode_request(&Request::Fetch);
+        fetch.push(0);
+        let err = format!("{:#}", decode_request(&fetch).unwrap_err());
+        assert!(err.contains("trailing"), "{err}");
+        // a probe-reply whose claimed vector length exceeds the payload
+        let mut reply = Vec::new();
+        reply.push(0x11);
+        reply.extend_from_slice(&0u64.to_le_bytes()); // worker
+        reply.extend_from_slice(&1u64.to_le_bytes()); // step
+        reply.extend_from_slice(&0u64.to_le_bytes()); // shards.start
+        reply.extend_from_slice(&2u64.to_le_bytes()); // shards.end
+        reply.extend_from_slice(&u64::MAX.to_le_bytes()); // absurd plus-len
+        let err = format!("{:#}", decode_reply(&reply).unwrap_err());
+        assert!(err.contains("corrupt length prefix"), "{err}");
+        // wrong-side tag
+        let err = format!(
+            "{:#}",
+            decode_request(&encode_reply(&Reply::Applied { worker: 0, step: 1, digest: 2 }))
+                .unwrap_err()
+        );
+        assert!(err.contains("unknown request tag"), "{err}");
+        // hello magic
+        let mut hello = encode_hello(&Hello {
+            version: 1,
+            run_seed: 0,
+            slot: 0,
+            incarnation: 0,
+            base_digest: 0,
+        });
+        hello[3] ^= 0xFF;
+        let err = format!("{:#}", decode_hello(&hello).unwrap_err());
+        assert!(err.contains("bad handshake magic"), "{err}");
+    }
+}

@@ -16,21 +16,28 @@
 //!   steps with the canonical cycle-then-update arithmetic (see
 //!   [`worker`] for the three disciplines that keep replicas bitwise
 //!   identical to the single-worker `ZoProtocol`);
-//! * messages travel over a [`Transport`] — in-process channels today
-//!   ([`ChannelTransport`]), real sockets later — and every committed
-//!   step is appended to a persistent seed log
-//!   ([`crate::model::checkpoint::SeedRecord`]), so a dead worker is
-//!   replaced by replaying ~24 bytes/step ([`replay_seed_log`]).
+//! * messages travel over a [`Transport`] — in-process channels
+//!   ([`ChannelTransport`]) or real TCP sockets ([`SocketTransport`],
+//!   with checksummed framing, a run-identity handshake, and
+//!   reconnect-by-replay) — and every committed step is appended to a
+//!   persistent seed log ([`crate::model::checkpoint::SeedRecord`]), so
+//!   a dead worker is replaced by replaying ~24 bytes/step
+//!   ([`replay_seed_log`]).
 //!
 //! Robustness is a first-class, tested property: the deterministic
 //! [`FaultPlan`] harness injects worker death, dropped / delayed
 //! replies, and non-finite partial losses at exact `(step, worker)`
-//! coordinates, and the property suite in `tests/dist_fault.rs` asserts
-//! that faulted runs end **bitwise identical** (f32) to the unfaulted
-//! single-worker protocol — losses and final parameters both.
+//! coordinates, and — on the socket transport, via the in-path
+//! [`FaultProxy`] — wire-level cuts, corrupted frames, and mid-frame
+//! stalls. The property suites in `tests/dist_fault.rs` and
+//! `tests/dist_socket.rs` assert that faulted runs end **bitwise
+//! identical** (f32) to the unfaulted single-worker protocol — losses
+//! and final parameters both.
 
 pub mod coordinator;
 pub mod fault;
+pub mod frame;
+pub mod socket;
 pub mod transport;
 pub mod worker;
 
@@ -41,8 +48,13 @@ use anyhow::{ensure, Result};
 
 pub use coordinator::{Coordinator, DistConfig, DistReport, DistStats};
 pub use fault::{Fault, FaultPlan};
-pub use transport::{ChannelEndpoint, ChannelTransport, Disconnected, Reply, Request, Transport, WorkerLink};
-pub use worker::{run_worker, Action, Worker};
+pub use socket::{
+    resolve_addr, run_socket_worker, FaultProxy, SocketConfig, SocketEndpoint, SocketTransport,
+};
+pub use transport::{
+    ChannelEndpoint, ChannelTransport, Disconnected, Reply, Request, Transport, WorkerLink,
+};
+pub use worker::{run_worker, Action, Worker, WorkerExit};
 
 use crate::model::checkpoint::SeedRecord;
 use crate::model::manifest::VariantSpec;

@@ -1,0 +1,1034 @@
+//! `SocketTransport`: the distributed tier over real TCP sockets.
+//!
+//! Everything the channel transport hides becomes explicit here, and is
+//! handled with the same two-signal failure philosophy as the
+//! coordinator (DESIGN.md §6b): a lane is either **live** (a dialed,
+//! handshake-verified connection) or **dead** (closed, timed out
+//! mid-frame, checksum-poisoned — all collapsed into the closed-lane
+//! death signal the coordinator already understands). There are no
+//! heartbeats and no in-band recovery: a broken lane is shut down, and
+//! recovery is always a fresh dial plus **reconnect-by-replay**.
+//!
+//! * **Framing.** Every message is a length-prefixed, FNV-1a-checksummed
+//!   frame ([`super::frame`]); torn writes and read timeouts resume via
+//!   the stateful [`FrameReader`], while corruption, oversized prefixes
+//!   and mid-frame EOF kill the lane with byte-offset context.
+//! * **Handshake.** A dialing worker opens with [`Hello`] (protocol
+//!   version, run seed, slot, step-0 arena digest). The coordinator
+//!   verifies all four before the lane goes live and answers with the
+//!   full committed seed log; a mismatch gets a [`HelloReply::Err`] and
+//!   a closed connection.
+//! * **Reconnect-by-replay.** The ack's seed log is not an optimization
+//!   — it is the recovery contract. On *every* successful handshake the
+//!   worker rebuilds its replica from its retained step-0 arena plus the
+//!   acked log ([`Worker::rebuild`]), so a worker that dropped,
+//!   redialed, or missed any number of commit broadcasts is bitwise a
+//!   seed-log replacement. The coordinator pushes each record into the
+//!   transport *before* the apply broadcast ([`Transport::on_commit`]),
+//!   so even a mid-apply handshake ships a log containing the step in
+//!   flight.
+//! * **Fault injection.** [`FaultProxy`] is an in-path TCP shim driven
+//!   by the wire-class [`FaultPlan`] kinds (`cut` / `corrupt` /
+//!   `stall`), so disconnects, bit flips and mid-frame stalls are as
+//!   deterministic and replayable as the worker-class faults.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::coordinator::{Coordinator, DistConfig};
+use super::fault::{Fault, FaultPlan};
+use super::frame::{
+    decode_hello, decode_hello_reply, decode_reply, decode_request, encode_frame,
+    encode_hello, encode_hello_reply, encode_reply, encode_request, reply_step,
+    FrameProgress, FrameReader, Hello, HelloReply, DEFAULT_MAX_FRAME_BYTES,
+    PROTOCOL_VERSION,
+};
+use super::transport::{Disconnected, Reply, Request, Transport};
+use super::worker::{Action, Worker, WorkerExit};
+use super::{param_digest, WorkerFactory};
+use crate::model::checkpoint::SeedRecord;
+use crate::model::ParamSet;
+
+/// Socket-level knobs, distinct from the protocol-level [`DistConfig`]
+/// (wave deadlines, retry budget): these govern one TCP lane, not the
+/// step loop.
+#[derive(Clone, Debug)]
+pub struct SocketConfig {
+    /// Poll granularity for blocking reads: how long a read blocks
+    /// before the reader re-checks for shutdown / charges the stall
+    /// budget. Not a failure deadline by itself.
+    pub read_timeout: Duration,
+    /// Deadline for one framed write; an expired write kills the lane.
+    pub write_timeout: Duration,
+    /// Mid-frame stall budget: a peer that starts a frame and then goes
+    /// quiet for this long is dead (a hung peer / torn write), and the
+    /// lane is killed. Idle time *between* frames is never charged.
+    pub stall_timeout: Duration,
+    /// Overall deadline for the connect handshake (both directions).
+    pub handshake_timeout: Duration,
+    /// Upper bound on a frame's payload size (see
+    /// [`DEFAULT_MAX_FRAME_BYTES`]).
+    pub max_frame_bytes: usize,
+    /// How many times a worker redials after losing its connection
+    /// before giving up with [`WorkerExit::LinkClosed`].
+    pub redial_attempts: u32,
+    /// Pause between redial attempts.
+    pub redial_backoff: Duration,
+    /// How long [`Transport::await_live`] waits for a (re)provisioned
+    /// worker's handshake before declaring it disconnected. Interactive
+    /// `--listen` runs raise this to minutes — a human is starting the
+    /// worker processes by hand.
+    pub await_live_timeout: Duration,
+    /// Whether a worker whose incarnation dies (an injected
+    /// [`Fault::Die`]) is restarted in place by its dialer loop — the
+    /// in-process supervisor that stands in for "ops restarts the dead
+    /// worker process". Wired to [`DistConfig::recover`] by
+    /// [`Coordinator::launch_socket_threads`].
+    pub restart_on_fault: bool,
+    /// Print a note when `await_live` starts waiting on a slot (the
+    /// two-terminal `--listen` UX; off in tests).
+    pub announce_waits: bool,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        SocketConfig {
+            read_timeout: Duration::from_millis(25),
+            write_timeout: Duration::from_secs(2),
+            stall_timeout: Duration::from_secs(1),
+            handshake_timeout: Duration::from_secs(5),
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            redial_attempts: 30,
+            redial_backoff: Duration::from_millis(20),
+            await_live_timeout: Duration::from_secs(10),
+            restart_on_fault: true,
+            announce_waits: false,
+        }
+    }
+}
+
+/// Lock a mutex, recovering the guard if a holder panicked — the tier's
+/// failure handling must not cascade a worker panic into a poisoned-lock
+/// panic on the coordinator.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One live coordinator-side lane: the write half plus the incarnation
+/// tag its reader thread carries (so a stale reader can never retire a
+/// newer lane).
+struct Lane {
+    stream: TcpStream,
+    incarnation: u64,
+}
+
+struct LaneTable {
+    lanes: Vec<Option<Lane>>,
+    /// Whether each slot has ever completed a handshake (to tell a
+    /// reconnect from a first connect).
+    ever: Vec<bool>,
+    reconnects: usize,
+    next_incarnation: u64,
+}
+
+struct SocketShared {
+    cfg: SocketConfig,
+    run_seed: u64,
+    base_digest: u64,
+    slots: usize,
+    lanes: Mutex<LaneTable>,
+    live: Condvar,
+    /// The committed seed log, snapshotted into every handshake ack.
+    log: Mutex<Vec<SeedRecord>>,
+    closing: AtomicBool,
+}
+
+impl SocketShared {
+    /// Retire `slot`'s lane if it still belongs to `incarnation`.
+    fn retire(&self, slot: usize, incarnation: u64) {
+        let mut table = lock(&self.lanes);
+        if table.lanes[slot].as_ref().is_some_and(|l| l.incarnation == incarnation) {
+            if let Some(lane) = table.lanes[slot].take() {
+                let _ = lane.stream.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+/// Coordinator-side TCP implementation of [`Transport`]: a listener plus
+/// one verified lane per worker slot. See the module docs for the lane
+/// lifecycle; the [`Transport`] methods themselves are deliberately
+/// boring — `send` is a framed write that reports a dead lane as
+/// [`Disconnected`], `recv_deadline` drains the merged reply channel the
+/// per-lane reader threads feed.
+pub struct SocketTransport {
+    shared: Arc<SocketShared>,
+    listen_addr: SocketAddr,
+    dial_addr: SocketAddr,
+    reply_rx: Receiver<Reply>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SocketTransport {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
+    /// start accepting worker handshakes for `slots` worker slots.
+    /// `run_seed` and `base_digest` are the identity the handshake
+    /// verifies: a dialer configured with a different seed or a
+    /// different step-0 arena is refused.
+    pub fn listen(
+        addr: &str,
+        slots: usize,
+        run_seed: u64,
+        base_digest: u64,
+        cfg: SocketConfig,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding the dist coordinator listener on {addr}"))?;
+        let listen_addr = listener.local_addr().context("resolving the bound address")?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let shared = Arc::new(SocketShared {
+            cfg,
+            run_seed,
+            base_digest,
+            slots,
+            lanes: Mutex::new(LaneTable {
+                lanes: (0..slots).map(|_| None).collect(),
+                ever: vec![false; slots],
+                reconnects: 0,
+                next_incarnation: 0,
+            }),
+            live: Condvar::new(),
+            log: Mutex::new(Vec::new()),
+            closing: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_handle = std::thread::Builder::new()
+            .name("helene-sock-accept".into())
+            .spawn(move || {
+                loop {
+                    let Ok((stream, _peer)) = listener.accept() else { break };
+                    if accept_shared.closing.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let hs_shared = Arc::clone(&accept_shared);
+                    let hs_tx = reply_tx.clone();
+                    // handshakes run off the accept thread so one slow
+                    // dialer cannot block another worker's connect
+                    let _ = std::thread::Builder::new()
+                        .name("helene-sock-handshake".into())
+                        .spawn(move || handshake_accept(stream, hs_shared, hs_tx));
+                }
+            })
+            .context("failed to spawn the socket accept thread")?;
+        Ok(SocketTransport {
+            shared,
+            listen_addr,
+            dial_addr: listen_addr,
+            reply_rx,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// The address the listener actually bound (resolves `:0` ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listen_addr
+    }
+
+    /// Route worker endpoints through `addr` instead of the listener —
+    /// how the tests put a [`FaultProxy`] in path: workers dial the
+    /// proxy, the proxy dials the real listener.
+    pub fn set_dial_addr(&mut self, addr: SocketAddr) {
+        self.dial_addr = addr;
+    }
+
+    /// Stop accepting, retire every lane, and join the accept thread.
+    /// Called on drop; idempotent.
+    pub fn close(&mut self) {
+        self.shared.closing.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept_handle.take() {
+            // unblock accept() with a throwaway connection
+            let _ = TcpStream::connect_timeout(&self.listen_addr, Duration::from_millis(250));
+            let _ = handle.join();
+        }
+        let mut table = lock(&self.shared.lanes);
+        for slot in table.lanes.iter_mut() {
+            if let Some(lane) = slot.take() {
+                let _ = lane.stream.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Serve one inbound connection's handshake; on success, install the
+/// lane and hand the read half to a reader thread.
+fn handshake_accept(mut stream: TcpStream, shared: Arc<SocketShared>, reply_tx: Sender<Reply>) {
+    let cfg = shared.cfg.clone();
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let deadline = Instant::now() + cfg.handshake_timeout;
+    let Ok(payload) = read_frame_deadline(&mut stream, cfg.max_frame_bytes, deadline) else {
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    };
+    let hello = match decode_hello(&payload) {
+        Ok(h) => h,
+        Err(e) => {
+            refuse(&mut stream, format!("{e:#}"));
+            return;
+        }
+    };
+    if let Err(msg) = validate_hello(&shared, &hello) {
+        refuse(&mut stream, msg);
+        return;
+    }
+    // snapshot the committed log under the lock, then ack: the worker
+    // rebuilds bitwise from its step-0 arena plus exactly these records
+    let records = lock(&shared.log).clone();
+    let ack = HelloReply::Ack { version: PROTOCOL_VERSION, records };
+    if write_frame(&mut stream, &encode_hello_reply(&ack)).is_err() {
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    }
+    let Ok(write_half) = stream.try_clone() else {
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    };
+    let incarnation = {
+        let mut table = lock(&shared.lanes);
+        let incarnation = table.next_incarnation;
+        table.next_incarnation += 1;
+        // a redial replaces the previous lane wholesale: the old stream
+        // is shut down and its reader retires itself harmlessly
+        if let Some(old) = table.lanes[hello.slot].take() {
+            let _ = old.stream.shutdown(Shutdown::Both);
+        }
+        if table.ever[hello.slot] {
+            table.reconnects += 1;
+        }
+        table.ever[hello.slot] = true;
+        table.lanes[hello.slot] = Some(Lane { stream: write_half, incarnation });
+        shared.live.notify_all();
+        incarnation
+    };
+    let _ = std::thread::Builder::new()
+        .name(format!("helene-sock-reader-{}", hello.slot))
+        .spawn(move || reader_loop(stream, hello.slot, incarnation, shared, reply_tx));
+}
+
+/// The handshake identity checks, in the order a human debugs them.
+fn validate_hello(shared: &SocketShared, hello: &Hello) -> std::result::Result<(), String> {
+    if hello.version != PROTOCOL_VERSION {
+        return Err(format!(
+            "protocol version mismatch: coordinator speaks v{PROTOCOL_VERSION}, worker \
+             dialed with v{}",
+            hello.version
+        ));
+    }
+    if hello.run_seed != shared.run_seed {
+        return Err(format!(
+            "run seed mismatch: coordinator runs seed {}, worker was configured with \
+             seed {} — replicas would never converge",
+            shared.run_seed, hello.run_seed
+        ));
+    }
+    if hello.slot >= shared.slots {
+        return Err(format!(
+            "worker slot {} is out of range: this run has {} slots (0..={})",
+            hello.slot,
+            shared.slots,
+            shared.slots - 1
+        ));
+    }
+    if hello.base_digest != shared.base_digest {
+        return Err(format!(
+            "step-0 arena mismatch: coordinator digest {:#018x}, worker digest {:#018x} \
+             — the worker was built from different base parameters, so seed-log replay \
+             could never land on the quorum",
+            shared.base_digest, hello.base_digest
+        ));
+    }
+    Ok(())
+}
+
+/// Best-effort refusal: ship the reason, then close.
+fn refuse(stream: &mut TcpStream, msg: String) {
+    let _ = write_frame(stream, &encode_hello_reply(&HelloReply::Err { msg }));
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Per-lane reply pump: decode frames into the merged reply channel
+/// until the lane dies (EOF, frame error, stall-budget exhaustion, or
+/// transport close). Any fatal condition retires the lane — the
+/// closed-lane death signal the coordinator's `send` will observe.
+fn reader_loop(
+    mut stream: TcpStream,
+    slot: usize,
+    incarnation: u64,
+    shared: Arc<SocketShared>,
+    reply_tx: Sender<Reply>,
+) {
+    let mut fr = FrameReader::new(shared.cfg.max_frame_bytes);
+    let mut stall_since: Option<Instant> = None;
+    loop {
+        if shared.closing.load(Ordering::SeqCst) {
+            break;
+        }
+        match fr.poll(&mut stream) {
+            Ok(FrameProgress::Frame(payload)) => {
+                stall_since = None;
+                match decode_reply(&payload) {
+                    Ok(reply) => {
+                        if reply_tx.send(reply).is_err() {
+                            break; // transport dropped
+                        }
+                    }
+                    // a malformed reply is a poisoned lane, not a
+                    // recoverable message: kill it and let retry +
+                    // reconnect handle the rest
+                    Err(_) => break,
+                }
+            }
+            Ok(FrameProgress::Idle) => {
+                stall_since = None;
+            }
+            Ok(FrameProgress::Stalled) => {
+                let since = *stall_since.get_or_insert_with(Instant::now);
+                if since.elapsed() >= shared.cfg.stall_timeout {
+                    break; // hung peer mid-frame
+                }
+            }
+            Ok(FrameProgress::Closed) | Err(_) => break,
+        }
+    }
+    shared.retire(slot, incarnation);
+}
+
+impl Transport for SocketTransport {
+    type Endpoint = SocketEndpoint;
+
+    fn open(&mut self, _slot: usize) -> SocketEndpoint {
+        SocketEndpoint {
+            addr: self.dial_addr,
+            slot: _slot,
+            run_seed: self.shared.run_seed,
+            base_digest: self.shared.base_digest,
+            cfg: self.shared.cfg.clone(),
+        }
+    }
+
+    fn send(&mut self, slot: usize, req: Request) -> Result<(), Disconnected> {
+        let bytes = encode_frame(&encode_request(&req));
+        let mut table = lock(&self.shared.lanes);
+        let Some(Some(lane)) = table.lanes.get_mut(slot) else {
+            return Err(Disconnected(slot));
+        };
+        if lane.stream.write_all(&bytes).is_err() {
+            if let Some(dead) = table.lanes[slot].take() {
+                let _ = dead.stream.shutdown(Shutdown::Both);
+            }
+            return Err(Disconnected(slot));
+        }
+        Ok(())
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> Option<Reply> {
+        let timeout = deadline.saturating_duration_since(Instant::now());
+        match self.reply_rx.recv_timeout(timeout) {
+            Ok(reply) => Some(reply),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    fn on_commit(&mut self, rec: &SeedRecord) {
+        lock(&self.shared.log).push(*rec);
+    }
+
+    fn await_live(&mut self, slot: usize) -> Result<(), Disconnected> {
+        let deadline = Instant::now() + self.shared.cfg.await_live_timeout;
+        let mut announced = false;
+        let mut table = lock(&self.shared.lanes);
+        loop {
+            if table.lanes.get(slot).is_some_and(|l| l.is_some()) {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Disconnected(slot));
+            }
+            if self.shared.cfg.announce_waits && !announced {
+                eprintln!(
+                    "dist: waiting for worker {slot} to connect to {} …",
+                    self.listen_addr
+                );
+                announced = true;
+            }
+            table = self
+                .shared
+                .live
+                .wait_timeout(table, deadline - now)
+                .unwrap_or_else(|e| e.into_inner())
+                .0;
+        }
+    }
+
+    fn reconnects(&self) -> usize {
+        lock(&self.shared.lanes).reconnects
+    }
+}
+
+/// Worker-side dialing instructions produced by
+/// [`Transport::open`] on a [`SocketTransport`]: where to dial and the
+/// identity to present. Plain data — safe to ship to another thread or
+/// serialize into another process's argv.
+#[derive(Clone, Debug)]
+pub struct SocketEndpoint {
+    /// Address to dial (the listener, or a fault proxy in front of it).
+    pub addr: SocketAddr,
+    /// The worker slot this endpoint serves.
+    pub slot: usize,
+    /// Run seed presented (and verified) at handshake.
+    pub run_seed: u64,
+    /// Step-0 arena digest presented (and verified) at handshake.
+    pub base_digest: u64,
+    /// Socket knobs (timeouts, redial policy, frame bound).
+    pub cfg: SocketConfig,
+}
+
+/// Why one serve session over one connection ended.
+enum ServeEnd {
+    /// Explicit [`Request::Shutdown`] — exit cleanly, don't redial.
+    Shutdown,
+    /// An injected death — this incarnation is gone.
+    Died,
+    /// The connection broke (EOF, frame error, stall) — redial.
+    Disconnected,
+}
+
+/// The socket worker loop: dial, handshake, rebuild-by-replay, serve;
+/// redial on disconnect. This one function is the whole worker-process
+/// story — the CLI `dist-worker` subcommand is a thin wrapper, and the
+/// threaded test host runs it unchanged on a thread.
+///
+/// `base` is the worker's retained step-0 arena; every successful
+/// handshake rebuilds the replica from it plus the acked seed log, so a
+/// reconnecting worker is bitwise a seed-log replacement (the PR 7
+/// replay invariant, across a real disconnect).
+///
+/// Exits with [`WorkerExit::Shutdown`] on the coordinator's explicit
+/// shutdown message (the CLI maps this to process exit code 0),
+/// [`WorkerExit::Fault`] when an injected death fires and in-place
+/// restart is off, and [`WorkerExit::LinkClosed`] once the redial
+/// budget is exhausted against a vanished coordinator. A handshake
+/// *refusal* (version / seed / digest mismatch) is a configuration
+/// error, not a transient: it returns `Err` immediately.
+pub fn run_socket_worker(
+    mut worker: Worker,
+    base: ParamSet,
+    ep: SocketEndpoint,
+) -> Result<WorkerExit> {
+    let mut incarnation: u64 = 0;
+    let mut redials_left = ep.cfg.redial_attempts;
+    loop {
+        let backoff_and_retry = |redials_left: &mut u32| -> bool {
+            if *redials_left == 0 {
+                return false;
+            }
+            *redials_left -= 1;
+            std::thread::sleep(ep.cfg.redial_backoff);
+            true
+        };
+        let stream = match TcpStream::connect(ep.addr) {
+            Ok(s) => s,
+            Err(_) if backoff_and_retry(&mut redials_left) => continue,
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!(
+                        "worker {} could not reach the coordinator at {} after \
+                         exhausting {} redials",
+                        ep.slot, ep.addr, ep.cfg.redial_attempts
+                    )
+                });
+            }
+        };
+        let mut stream = stream;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(ep.cfg.read_timeout));
+        let _ = stream.set_write_timeout(Some(ep.cfg.write_timeout));
+        match handshake_dial(&mut stream, &ep, incarnation)? {
+            None => {
+                // handshake I/O failure: the listener may be mid-restart
+                // or the proxy mid-cut — a transient, worth a redial
+                incarnation += 1;
+                if backoff_and_retry(&mut redials_left) {
+                    continue;
+                }
+                return Ok(WorkerExit::LinkClosed);
+            }
+            Some(records) => {
+                worker
+                    .rebuild(&base, &records)
+                    .context("rebuilding the replica from the handshake seed log")?;
+            }
+        }
+        match serve(&mut worker, &mut stream, &ep.cfg) {
+            ServeEnd::Shutdown => return Ok(WorkerExit::Shutdown),
+            ServeEnd::Died => {
+                let _ = stream.shutdown(Shutdown::Both);
+                if !ep.cfg.restart_on_fault {
+                    return Ok(WorkerExit::Fault);
+                }
+                // in-place supervisor restart: the replacement
+                // incarnation serves healthy (a scripted fault fires
+                // once) and rebuilds from the log at the next handshake
+                worker.set_plan(FaultPlan::new());
+            }
+            ServeEnd::Disconnected => {}
+        }
+        incarnation += 1;
+        if !backoff_and_retry(&mut redials_left) {
+            return Ok(WorkerExit::LinkClosed);
+        }
+    }
+}
+
+/// Dial-side handshake. `Ok(Some(records))` on an accepted lane,
+/// `Ok(None)` on a transient I/O failure (caller redials), `Err` on an
+/// explicit refusal — that is a configuration mismatch and no amount of
+/// redialing fixes it.
+fn handshake_dial(
+    stream: &mut TcpStream,
+    ep: &SocketEndpoint,
+    incarnation: u64,
+) -> Result<Option<Vec<SeedRecord>>> {
+    let hello = Hello {
+        version: PROTOCOL_VERSION,
+        run_seed: ep.run_seed,
+        slot: ep.slot,
+        incarnation,
+        base_digest: ep.base_digest,
+    };
+    if write_frame(stream, &encode_hello(&hello)).is_err() {
+        return Ok(None);
+    }
+    let deadline = Instant::now() + ep.cfg.handshake_timeout;
+    let Ok(payload) = read_frame_deadline(stream, ep.cfg.max_frame_bytes, deadline) else {
+        return Ok(None);
+    };
+    match decode_hello_reply(&payload)
+        .context("the coordinator answered the handshake with an undecodable frame")?
+    {
+        HelloReply::Ack { version, records } => {
+            ensure!(
+                version == PROTOCOL_VERSION,
+                "coordinator acked with protocol v{version}, worker speaks \
+                 v{PROTOCOL_VERSION}"
+            );
+            Ok(Some(records))
+        }
+        HelloReply::Err { msg } => {
+            bail!("coordinator refused worker {} at {}: {msg}", ep.slot, ep.addr)
+        }
+    }
+}
+
+/// Serve requests over one established connection until it ends.
+fn serve(worker: &mut Worker, stream: &mut TcpStream, cfg: &SocketConfig) -> ServeEnd {
+    let mut fr = FrameReader::new(cfg.max_frame_bytes);
+    let mut stall_since: Option<Instant> = None;
+    loop {
+        match fr.poll(stream) {
+            Ok(FrameProgress::Frame(payload)) => {
+                stall_since = None;
+                let Ok(req) = decode_request(&payload) else {
+                    return ServeEnd::Disconnected;
+                };
+                let is_shutdown = matches!(req, Request::Shutdown);
+                match worker.handle(req) {
+                    Action::Send(reply) => {
+                        if write_frame(stream, &encode_reply(&reply)).is_err() {
+                            return ServeEnd::Disconnected;
+                        }
+                    }
+                    Action::Delay(reply, ms) => {
+                        std::thread::sleep(Duration::from_millis(ms));
+                        if write_frame(stream, &encode_reply(&reply)).is_err() {
+                            return ServeEnd::Disconnected;
+                        }
+                    }
+                    Action::Silent => {}
+                    Action::Exit => {
+                        return if is_shutdown { ServeEnd::Shutdown } else { ServeEnd::Died };
+                    }
+                }
+            }
+            Ok(FrameProgress::Idle) => {
+                stall_since = None;
+            }
+            Ok(FrameProgress::Stalled) => {
+                let since = *stall_since.get_or_insert_with(Instant::now);
+                if since.elapsed() >= cfg.stall_timeout {
+                    return ServeEnd::Disconnected;
+                }
+            }
+            Ok(FrameProgress::Closed) | Err(_) => return ServeEnd::Disconnected,
+        }
+    }
+}
+
+/// Write one framed payload.
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    stream.write_all(&encode_frame(payload))
+}
+
+/// Read exactly one frame before `deadline`, riding out read-timeout
+/// polls. The stream must have a read timeout set, or this blocks past
+/// the deadline.
+fn read_frame_deadline(
+    stream: &mut TcpStream,
+    max_frame: usize,
+    deadline: Instant,
+) -> Result<Vec<u8>> {
+    let mut fr = FrameReader::new(max_frame);
+    loop {
+        match fr.poll(stream)? {
+            FrameProgress::Frame(payload) => return Ok(payload),
+            FrameProgress::Closed => bail!("connection closed during handshake"),
+            FrameProgress::Idle | FrameProgress::Stalled => {
+                ensure!(
+                    Instant::now() < deadline,
+                    "handshake timed out ({} of {} frame bytes received)",
+                    fr.buffered(),
+                    fr.expected().map_or_else(|| "?".into(), |t| t.to_string())
+                );
+            }
+        }
+    }
+}
+
+impl Coordinator<SocketTransport> {
+    /// Launch the tier over loopback TCP with in-process worker threads:
+    /// the socket analogue of [`Coordinator::launch_threads`], used by
+    /// the property tests and the bench (`--socket` CLI mode). Each
+    /// worker thread runs the full [`run_socket_worker`] dial loop, so
+    /// disconnects exercise real redials and reconnect-by-replay.
+    ///
+    /// `dial_via` routes worker dials through an in-path address (a
+    /// [`FaultProxy`]) instead of the listener. `run_seed` must match
+    /// the seed later passed to [`Coordinator::run`] — the handshake
+    /// pins it.
+    pub fn launch_socket_threads(
+        cfg: DistConfig,
+        base: ParamSet,
+        factory: WorkerFactory,
+        run_seed: u64,
+        scfg: SocketConfig,
+        dial_via: Option<SocketAddr>,
+    ) -> Result<Self> {
+        let mut scfg = scfg;
+        scfg.restart_on_fault = cfg.recover;
+        let mut transport = SocketTransport::listen(
+            "127.0.0.1:0",
+            cfg.workers,
+            run_seed,
+            param_digest(&base),
+            scfg,
+        )?;
+        if let Some(addr) = dial_via {
+            transport.set_dial_addr(addr);
+        }
+        let worker_base = base.clone();
+        let mut spawned = vec![false; cfg.workers];
+        let spawner = Box::new(
+            move |slot: usize, worker: Worker, ep: SocketEndpoint| -> Result<()> {
+                if spawned[slot] {
+                    // the slot's dialer thread is alive and self-redials;
+                    // a respawn request only needs the coordinator to
+                    // await the fresh handshake
+                    return Ok(());
+                }
+                spawned[slot] = true;
+                let b = worker_base.clone();
+                std::thread::Builder::new()
+                    .name(format!("helene-sock-worker-{slot}"))
+                    .spawn(move || {
+                        let _ = run_socket_worker(worker, b, ep);
+                    })
+                    .map(|_| ())
+                    .context("failed to spawn a socket worker thread")
+            },
+        );
+        Coordinator::new(cfg, base, factory, transport, spawner)
+    }
+
+    /// Launch a listening coordinator for **external** worker processes
+    /// (`helene dist --listen ADDR` + `helene dist-worker --connect
+    /// ADDR`): nothing is spawned locally; provisioning a slot means
+    /// waiting (up to [`SocketConfig::await_live_timeout`]) for a
+    /// matching `dist-worker` process to dial in and pass the handshake.
+    pub fn launch_listen(
+        cfg: DistConfig,
+        base: ParamSet,
+        factory: WorkerFactory,
+        run_seed: u64,
+        addr: &str,
+        scfg: SocketConfig,
+    ) -> Result<Self> {
+        let transport = SocketTransport::listen(
+            addr,
+            cfg.workers,
+            run_seed,
+            param_digest(&base),
+            scfg,
+        )?;
+        println!(
+            "dist: listening on {} for {} worker(s) — start each with \
+             `helene dist-worker --connect {} --slot K ...`",
+            transport.local_addr(),
+            cfg.workers,
+            transport.local_addr()
+        );
+        let spawner =
+            Box::new(move |_slot: usize, _worker: Worker, _ep: SocketEndpoint| -> Result<()> {
+                Ok(())
+            });
+        Coordinator::new(cfg, base, factory, transport, spawner)
+    }
+}
+
+// ---------------------------------------------------------------------
+// wire-level fault proxy
+// ---------------------------------------------------------------------
+
+struct ProxyShared {
+    upstream: SocketAddr,
+    plan: FaultPlan,
+    /// Wire faults fire once per run, across reconnections — a cut that
+    /// re-fired on the retried reply would sever the lane forever.
+    fired: Mutex<BTreeSet<(u64, usize)>>,
+    closing: AtomicBool,
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+/// A deterministic in-path TCP shim: workers dial the proxy, the proxy
+/// dials the coordinator, and the wire-class faults of a [`FaultPlan`]
+/// (`cut@step:worker`, `corrupt@step:worker`, `stall@step:worker:ms`)
+/// are applied to the matching framed reply on the worker→coordinator
+/// direction. Frames are sniffed, not altered, on the healthy path — a
+/// forwarded frame is byte-identical to the original — so the proxy is
+/// invisible to an unfaulted run.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    shared: Arc<ProxyShared>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Start a proxy on an ephemeral loopback port, forwarding to
+    /// `upstream` (the coordinator's listener) and injecting `plan`'s
+    /// wire-class faults.
+    pub fn start(upstream: SocketAddr, plan: FaultPlan) -> Result<FaultProxy> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding the fault-proxy listener")?;
+        let addr = listener.local_addr().context("resolving the proxy address")?;
+        let shared = Arc::new(ProxyShared {
+            upstream,
+            plan,
+            fired: Mutex::new(BTreeSet::new()),
+            closing: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_handle = std::thread::Builder::new()
+            .name("helene-fault-proxy".into())
+            .spawn(move || {
+                loop {
+                    let Ok((down, _)) = listener.accept() else { break };
+                    if accept_shared.closing.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let conn_shared = Arc::clone(&accept_shared);
+                    let _ = std::thread::Builder::new()
+                        .name("helene-fault-proxy-conn".into())
+                        .spawn(move || proxy_conn(down, conn_shared));
+                }
+            })
+            .context("failed to spawn the fault-proxy accept thread")?;
+        Ok(FaultProxy { addr, shared, accept_handle: Some(accept_handle) })
+    }
+
+    /// The proxy's dial address (hand to
+    /// [`SocketTransport::set_dial_addr`]).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and sever every proxied connection. Called on
+    /// drop; idempotent.
+    pub fn close(&mut self) {
+        self.shared.closing.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept_handle.take() {
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+            let _ = handle.join();
+        }
+        for conn in lock(&self.shared.conns).drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Wire one proxied worker connection: a raw byte pump on the
+/// coordinator→worker direction, the frame-aware fault pump on
+/// worker→coordinator.
+fn proxy_conn(down: TcpStream, shared: Arc<ProxyShared>) {
+    let Ok(up) = TcpStream::connect(shared.upstream) else {
+        let _ = down.shutdown(Shutdown::Both);
+        return;
+    };
+    let _ = down.set_nodelay(true);
+    let _ = up.set_nodelay(true);
+    let (Ok(up_read), Ok(down_write)) = (up.try_clone(), down.try_clone()) else {
+        let _ = down.shutdown(Shutdown::Both);
+        let _ = up.shutdown(Shutdown::Both);
+        return;
+    };
+    {
+        let mut conns = lock(&shared.conns);
+        if let Ok(c) = down.try_clone() {
+            conns.push(c);
+        }
+        if let Ok(c) = up.try_clone() {
+            conns.push(c);
+        }
+    }
+    let _ = std::thread::Builder::new()
+        .name("helene-fault-proxy-c2w".into())
+        .spawn(move || raw_pump(up_read, down_write));
+    fault_pump(down, up, shared);
+}
+
+/// Byte-for-byte relay until either side closes.
+fn raw_pump(mut src: TcpStream, mut dst: TcpStream) {
+    use std::io::Read;
+    let mut buf = [0u8; 16384];
+    loop {
+        match src.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if dst.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}
+
+/// Frame-aware worker→coordinator relay: learns the worker's slot from
+/// its `Hello`, keys each decoded reply by `(step, slot)`, and applies
+/// any scheduled wire fault exactly once.
+fn fault_pump(mut src: TcpStream, mut dst: TcpStream, shared: Arc<ProxyShared>) {
+    let mut fr = FrameReader::new(DEFAULT_MAX_FRAME_BYTES);
+    let mut slot: Option<usize> = None;
+    loop {
+        let payload = match fr.poll(&mut src) {
+            Ok(FrameProgress::Frame(p)) => p,
+            Ok(FrameProgress::Idle) | Ok(FrameProgress::Stalled) => continue,
+            Ok(FrameProgress::Closed) | Err(_) => break,
+        };
+        let mut raw = encode_frame(&payload);
+        if let Ok(hello) = decode_hello(&payload) {
+            slot = Some(hello.slot);
+        } else if let (Ok(reply), Some(w)) = (decode_reply(&payload), slot) {
+            if let Some(step) = reply_step(&reply) {
+                let fault = shared.plan.wire(step, w);
+                if fault.is_some() && lock(&shared.fired).insert((step, w)) {
+                    match fault.expect("checked is_some") {
+                        Fault::CutWire => {
+                            // drop the frame and sever both directions:
+                            // a partition, as seen from the coordinator
+                            break;
+                        }
+                        Fault::CorruptFrame => {
+                            // flip one payload bit, leave the checksum
+                            // header stale — the receiver must detect it
+                            let at = super::frame::FRAME_HEADER_BYTES + payload.len() / 2;
+                            raw[at] ^= 0x10;
+                        }
+                        Fault::StallFrame(ms) => {
+                            // a torn write: half the frame, a long
+                            // pause, then (maybe into a dead lane) the
+                            // rest
+                            let half = raw.len() / 2;
+                            if dst.write_all(&raw[..half]).is_err() {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(ms));
+                            if dst.write_all(&raw[half..]).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                        _ => unreachable!("plan.wire returns wire-class faults only"),
+                    }
+                }
+            }
+        }
+        if dst.write_all(&raw).is_err() {
+            break;
+        }
+    }
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}
+
+/// Resolve a user-supplied `host:port` string to one socket address,
+/// with an actionable error (shared by the CLI `--listen` / `--connect`
+/// flags and the tests).
+pub fn resolve_addr(spec: &str) -> Result<SocketAddr> {
+    spec.to_socket_addrs()
+        .with_context(|| format!("cannot resolve {spec:?} as host:port"))?
+        .next()
+        .with_context(|| format!("{spec:?} resolved to no addresses"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_addr_accepts_loopback_and_rejects_garbage() {
+        let a = resolve_addr("127.0.0.1:7070").unwrap();
+        assert_eq!(a.port(), 7070);
+        assert!(resolve_addr("not an address").is_err());
+    }
+
+    #[test]
+    fn socket_config_default_is_sane() {
+        let cfg = SocketConfig::default();
+        assert!(cfg.read_timeout < cfg.stall_timeout);
+        assert!(cfg.stall_timeout <= cfg.handshake_timeout);
+        assert!(cfg.max_frame_bytes >= 1 << 20);
+        assert!(cfg.restart_on_fault);
+    }
+}

@@ -20,6 +20,7 @@ use std::ops::Range;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::time::Instant;
 
+use crate::model::checkpoint::SeedRecord;
 use crate::model::params::Codec;
 
 /// A request from the coordinator to one worker.
@@ -148,6 +149,27 @@ pub trait Transport {
     /// Receive the next reply from any worker, waiting until `deadline`
     /// at the latest. `None` on deadline expiry.
     fn recv_deadline(&mut self, deadline: Instant) -> Option<Reply>;
+
+    /// Notify the transport that `rec` was committed to the seed log.
+    /// The socket transport snapshots the log into every handshake ack
+    /// (reconnect-by-replay); the channel transport has nothing to do.
+    fn on_commit(&mut self, _rec: &SeedRecord) {}
+
+    /// Block until `slot` has a live lane, or fail with `Disconnected`.
+    /// Called after (re)provisioning a worker: an in-process channel
+    /// lane is live the moment it is opened (the default no-op), but a
+    /// socket lane only goes live once the worker has dialed in and
+    /// passed the connect handshake.
+    fn await_live(&mut self, _slot: usize) -> Result<(), Disconnected> {
+        Ok(())
+    }
+
+    /// Number of handshakes beyond each slot's first — i.e. how many
+    /// times a worker dropped and redialed. Always 0 for transports
+    /// without reconnection.
+    fn reconnects(&self) -> usize {
+        0
+    }
 }
 
 /// Worker-side view of its lane: blocking receive, best-effort send.

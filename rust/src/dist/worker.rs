@@ -50,6 +50,21 @@ pub enum Action {
     Exit,
 }
 
+/// Why a worker's event loop ended. The socket CLI maps this to the
+/// process exit code (clean shutdown = 0), and the socket worker loop
+/// uses it to decide whether to redial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerExit {
+    /// The coordinator sent an explicit [`Request::Shutdown`]: the end
+    /// of a run, not a failure.
+    Shutdown,
+    /// An injected [`Fault::Die`] fired — this incarnation is dead.
+    Fault,
+    /// The lane closed without a shutdown message: the coordinator is
+    /// gone (or, on a socket, the connection dropped).
+    LinkClosed,
+}
+
 /// One worker replica: full-arena params, optimizer state, loss oracle,
 /// and the fault plan it is subject to.
 pub struct Worker {
@@ -89,6 +104,29 @@ impl Worker {
     /// Last step this replica has applied (0 = pristine).
     pub fn applied_through(&self) -> u64 {
         self.applied_through
+    }
+
+    /// Reset the replica to `base` (fresh optimizer state, nothing
+    /// applied) and fast-forward it through `records`. This is the
+    /// socket worker's reconnect-by-replay path: every successful
+    /// handshake ships the committed log, and the worker rebuilds from
+    /// its retained step-0 arena rather than trusting any state that
+    /// survived the disconnect — a redialed worker is bitwise a
+    /// replacement. The fault plan and oracle are untouched (the oracle
+    /// contract requires purity, so it carries no replica state).
+    pub fn rebuild(&mut self, base: &ParamSet, records: &[SeedRecord]) -> Result<()> {
+        self.opt.init(base);
+        self.params = base.clone();
+        self.applied_through = 0;
+        self.fired.clear();
+        self.replay(records)
+    }
+
+    /// Replace this worker's fault plan. Replacement incarnations serve
+    /// healthy (a scripted fault fires once), so the socket worker loop
+    /// swaps in an empty plan before redialing after a death.
+    pub fn set_plan(&mut self, plan: FaultPlan) {
+        self.plan = plan;
     }
 
     /// Read-only view of the replica (tests and readout).
@@ -231,25 +269,32 @@ impl Worker {
 }
 
 /// The worker event loop: receive, handle, reply, until shutdown / death
-/// / a vanished coordinator. Runs on the worker's own thread (today) or
-/// process (with a socket transport).
-pub fn run_worker<L: WorkerLink>(mut worker: Worker, mut link: L) {
+/// / a vanished coordinator. Runs on the worker's own thread (channel
+/// transport) or process (socket transport, via
+/// `dist::socket::run_socket_worker`). The returned [`WorkerExit`]
+/// distinguishes a clean coordinator-initiated shutdown from a death or
+/// a vanished peer — the graceful-shutdown contract of the wire
+/// protocol, identical over channels and sockets.
+pub fn run_worker<L: WorkerLink>(mut worker: Worker, mut link: L) -> WorkerExit {
     loop {
-        let Some(req) = link.recv() else { break };
+        let Some(req) = link.recv() else { return WorkerExit::LinkClosed };
+        let is_shutdown = matches!(req, Request::Shutdown);
         match worker.handle(req) {
             Action::Send(reply) => {
                 if !link.send(reply) {
-                    break;
+                    return WorkerExit::LinkClosed;
                 }
             }
             Action::Delay(reply, ms) => {
                 std::thread::sleep(std::time::Duration::from_millis(ms));
                 if !link.send(reply) {
-                    break;
+                    return WorkerExit::LinkClosed;
                 }
             }
             Action::Silent => {}
-            Action::Exit => break,
+            Action::Exit => {
+                return if is_shutdown { WorkerExit::Shutdown } else { WorkerExit::Fault };
+            }
         }
     }
 }

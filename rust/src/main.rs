@@ -100,6 +100,7 @@ fn run() -> Result<()> {
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
         "dist" => cmd_dist(&args),
+        "dist-worker" => cmd_dist_worker(&args),
         "sweep" => cmd_sweep(&args),
         "zero-shot" => cmd_zero_shot(&args),
         "toy" => cmd_toy(&args),
@@ -119,6 +120,7 @@ helene — zeroth-order fine-tuning framework (HELENE reproduction)
 commands:
   train      train a model on a synthetic task with any optimizer
   dist       run the fault-tolerant distributed ZO tier on a synthetic loss
+  dist-worker  join a `helene dist --listen` coordinator as one worker process
   zero-shot  evaluate the init parameters on a task
   toy        run the 2-D heterogeneous-curvature demo (Figures 1-2)
   list       list models, variants, tasks and optimizers
@@ -162,7 +164,19 @@ dist: the seed-and-scalar worker tier over a synthetic separable loss —
   --opt O / --lr F / --eps F / --seed S   as in train
   --seed-log PATH  append every committed (step, seed, g, eps) record
   --work N       loss-oracle compute passes per probe (default 1)
+  --socket       run over loopback TCP (checksummed frames, handshake,
+                 reconnect-by-replay) instead of in-process channels;
+                 the trajectory is bitwise identical either way
+  --listen ADDR  bind ADDR (host:port) and wait for external
+                 `helene dist-worker` processes instead of spawning
+                 worker threads — one terminal per worker
   (plus --worker-timeout-ms / --retries / --fault-plan as above)
+
+dist-worker: one worker process for a listening coordinator; model/run
+  flags must match the coordinator's or its handshake refuses the dial:
+  helene dist-worker --connect 127.0.0.1:7070 --slot 0 --n-params 65536 \\
+    --opt mezo --lr 1e-3 --seed 0 [--work N]
+  exits 0 on the coordinator's end-of-run shutdown message
 
 sweep: grid-search lr on dev (paper protocol):
   helene sweep --model M --task T --opt O --lrs 1e-4,3e-4,1e-3 --steps 600
@@ -320,12 +334,21 @@ fn cmd_dist(args: &Args) -> Result<()> {
     if !plan_spec.is_empty() {
         tc.fault_plan = Some(FaultPlan::parse(&plan_spec)?);
     }
+    tc.dist_socket = args.get("socket").is_some();
+    tc.dist_listen = args.get("listen").map(str::to_string);
     tc.validate_robustness()?;
     let seed_log = args.get("seed-log").map(PathBuf::from);
 
+    let transport = if tc.dist_listen.is_some() {
+        "socket (external workers)"
+    } else if tc.dist_socket {
+        "socket (loopback threads)"
+    } else {
+        "channels"
+    };
     println!(
         "dist: workers={} n_params={n_params} steps={steps} opt={opt_name} lr={lr} \
-         eps={} fault-plan={:?}",
+         eps={} transport={transport} fault-plan={:?}",
         tc.workers,
         tc.spsa_eps,
         plan_spec
@@ -362,6 +385,67 @@ fn cmd_dist(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// One worker process for a listening coordinator (`helene dist-worker
+/// --connect ADDR --slot K`): builds the same step-0 arena and oracle the
+/// coordinator describes, dials in, and serves until the coordinator's
+/// shutdown message. The connect handshake pins protocol version, run
+/// seed, slot and arena digest, so a mismatched flag fails loudly instead
+/// of silently diverging. Exit code 0 = clean shutdown.
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    use helene::dist::{
+        param_digest, resolve_addr, run_socket_worker, FaultPlan, SepQuadOracle,
+        ShardLossOracle, SocketConfig, SocketEndpoint, Worker, WorkerExit,
+    };
+    use helene::model::params::ParamSet;
+
+    let addr_spec = args
+        .get("connect")
+        .context("dist-worker needs --connect HOST:PORT (the coordinator's --listen address)")?;
+    let addr = resolve_addr(addr_spec)?;
+    let slot = args.usize("slot", 0)?;
+    let n_params = args.usize("n-params", 65536)?;
+    anyhow::ensure!(n_params >= 2, "--n-params must be >= 2 (got {n_params})");
+    let opt_name = args.str("opt", "mezo");
+    let lr = args.f32("lr", default_lr(&opt_name))?;
+    let work = args.u64("work", 1)? as u32;
+    let run_seed = args.u64("seed", 0)?;
+    let plan_spec = args.str("fault-plan", "");
+    let plan =
+        if plan_spec.is_empty() { FaultPlan::new() } else { FaultPlan::parse(&plan_spec)? };
+
+    // the same arena construction as `cmd_dist` — the handshake digest
+    // check holds both sides to it
+    let base = ParamSet::synthetic(&[n_params / 2, n_params - n_params / 2], 0.5);
+    let worker = Worker::new(
+        slot,
+        &base,
+        optim::by_name(&opt_name, lr)?,
+        Box::new(SepQuadOracle::with_work(work)) as Box<dyn ShardLossOracle>,
+        plan,
+    );
+    let ep = SocketEndpoint {
+        addr,
+        slot,
+        run_seed,
+        base_digest: param_digest(&base),
+        cfg: SocketConfig::default(),
+    };
+    println!(
+        "dist-worker: slot={slot} dialing {addr} (n_params={n_params} opt={opt_name} \
+         lr={lr} seed={run_seed})"
+    );
+    match run_socket_worker(worker, base, ep)? {
+        WorkerExit::Shutdown => {
+            println!("dist-worker: run complete, coordinator sent shutdown");
+            Ok(())
+        }
+        WorkerExit::Fault => bail!("worker {slot} exited after an injected fault"),
+        WorkerExit::LinkClosed => {
+            bail!("worker {slot} lost the coordinator at {addr} and exhausted its redials")
+        }
+    }
 }
 
 /// The paper's hyper-parameter protocol: grid-search lr on dev, report the
@@ -466,7 +550,8 @@ fn cmd_list() -> Result<()> {
             spec.entrypoints.keys().cloned().collect::<Vec<_>>().join(", ")
         );
     }
-    println!("tasks: {}", tasks::ROBERTA_SUITE.iter().chain(tasks::OPT_SUITE).cloned().collect::<Vec<_>>().join(", "));
+    let all_tasks: Vec<_> = tasks::ROBERTA_SUITE.iter().chain(tasks::OPT_SUITE).cloned().collect();
+    println!("tasks: {}", all_tasks.join(", "));
     println!("optimizers: helene helene-fo mezo zo-sgd-mmt zo-sgd-cons zo-sgd-sign zo-adam zo-adamw zo-lion zo-sophia zo-newton fo-sgd fo-adam forward-grad");
     Ok(())
 }

@@ -39,7 +39,10 @@ const SEED_LOG_MAGIC: &[u8; 8] = b"HELENESL";
 
 /// Write `bytes → path` crash-safely: stream into `<name>.tmp` in the
 /// same directory, fsync, then atomically rename over the destination.
-fn atomic_write(path: &Path, write_body: impl FnOnce(&mut std::fs::File) -> Result<()>) -> Result<()> {
+fn atomic_write(
+    path: &Path,
+    write_body: impl FnOnce(&mut std::fs::File) -> Result<()>,
+) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -358,14 +361,39 @@ mod tests {
 
     fn toy() -> ParamSet {
         let params = vec![
-            ParamInfo { name: "a".into(), shape: vec![3], layer: "l0".into(), trainable: true, offset: 0, size: 3 },
-            ParamInfo { name: "b".into(), shape: vec![2, 2], layer: "l1".into(), trainable: true, offset: 3, size: 4 },
+            ParamInfo {
+                name: "a".into(),
+                shape: vec![3],
+                layer: "l0".into(),
+                trainable: true,
+                offset: 0,
+                size: 3,
+            },
+            ParamInfo {
+                name: "b".into(),
+                shape: vec![2, 2],
+                layer: "l1".into(),
+                trainable: true,
+                offset: 3,
+                size: 4,
+            },
         ];
         let spec = Arc::new(VariantSpec {
             model: "toy".into(),
             variant: "ft".into(),
             kind: ModelKind::Cls,
-            dims: ModelDims { vocab: 1, d_model: 1, n_heads: 1, n_layers: 1, d_ff: 1, max_seq: 1, n_classes: 1, batch: 1, lora_rank: 1, prefix_len: 1 },
+            dims: ModelDims {
+                vocab: 1,
+                d_model: 1,
+                n_heads: 1,
+                n_layers: 1,
+                d_ff: 1,
+                max_seq: 1,
+                n_classes: 1,
+                batch: 1,
+                lora_rank: 1,
+                prefix_len: 1,
+            },
             params_bin: "x".into(),
             n_params: 7,
             codec: Codec::F32,

@@ -335,9 +335,30 @@ mod tests {
             n_params: 12,
             codec: Codec::F32,
             params: vec![
-                ParamInfo { name: "embed.tok".into(), shape: vec![2, 2], layer: "embed".into(), trainable: true, offset: 0, size: 4 },
-                ParamInfo { name: "block0.attn.wq".into(), shape: vec![2, 2], layer: "block0.attn".into(), trainable: true, offset: 4, size: 4 },
-                ParamInfo { name: "head.w".into(), shape: vec![4], layer: "head".into(), trainable: true, offset: 8, size: 4 },
+                ParamInfo {
+                    name: "embed.tok".into(),
+                    shape: vec![2, 2],
+                    layer: "embed".into(),
+                    trainable: true,
+                    offset: 0,
+                    size: 4,
+                },
+                ParamInfo {
+                    name: "block0.attn.wq".into(),
+                    shape: vec![2, 2],
+                    layer: "block0.attn".into(),
+                    trainable: true,
+                    offset: 4,
+                    size: 4,
+                },
+                ParamInfo {
+                    name: "head.w".into(),
+                    shape: vec![4],
+                    layer: "head".into(),
+                    trainable: true,
+                    offset: 8,
+                    size: 4,
+                },
             ],
             entrypoints: BTreeMap::new(),
         }

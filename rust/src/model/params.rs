@@ -525,7 +525,9 @@ impl ParamSet {
     /// checkpoint load), never inside the step protocol.
     pub fn convert_codec(&mut self, codec: Codec) {
         self.arena = match (&self.arena, codec) {
-            (Arena::F32(v), Codec::Bf16) => Arena::Bf16(v.iter().map(|&x| bf16::round(x)).collect()),
+            (Arena::F32(v), Codec::Bf16) => {
+                Arena::Bf16(v.iter().map(|&x| bf16::round(x)).collect())
+            }
             (Arena::Bf16(v), Codec::F32) => Arena::F32(v.iter().map(|&b| bf16::widen(b)).collect()),
             _ => return,
         };
@@ -1194,7 +1196,9 @@ impl ParamSet {
         let mask = &self.train_mask;
         match &mut self.arena {
             Arena::F32(v) => perturbk_impl(&mut v[r.clone()], r.start, spec, mask, &seeds, &scales),
-            Arena::Bf16(v) => perturbk_impl(&mut v[r.clone()], r.start, spec, mask, &seeds, &scales),
+            Arena::Bf16(v) => {
+                perturbk_impl(&mut v[r.clone()], r.start, spec, mask, &seeds, &scales)
+            }
         }
     }
 
@@ -2827,8 +2831,8 @@ mod tests {
     #[test]
     fn perturb_tile_cover_matches_monolithic_bitwise() {
         for codec in [Codec::F32, Codec::Bf16] {
-            let base =
-                ParamSet::synthetic(&[SHARD_SIZE + 123, 2 * SHARD_SIZE, 777], 0.5).with_codec(codec);
+            let base = ParamSet::synthetic(&[SHARD_SIZE + 123, 2 * SHARD_SIZE, 777], 0.5)
+                .with_codec(codec);
             let mut mono = base.clone();
             mono.perturb_trainable(42, 1e-2);
             for spec in tile_specs() {
@@ -3149,14 +3153,21 @@ mod multi_tests {
         let mut m = p.zeros_like();
         let mut h = p.zeros_like();
         let mut cap = ZCache::default();
-        p.update_shards2_multi_dual(&mut m, &mut h, &ps, 77, Some(&mut cap), |_seg, th, m_arr, h_arr, gz, zn| {
-            for j in 0..th.len() {
-                m_arr[j] = 0.9 * m_arr[j] + gz[j];
-                h_arr[j] = h_arr[j].max(gz[j] * gz[j]);
-                th[j] -= 0.01 * m_arr[j];
-                th[j] += 1e-3 * zn[j];
-            }
-        });
+        p.update_shards2_multi_dual(
+            &mut m,
+            &mut h,
+            &ps,
+            77,
+            Some(&mut cap),
+            |_seg, th, m_arr, h_arr, gz, zn| {
+                for j in 0..th.len() {
+                    m_arr[j] = 0.9 * m_arr[j] + gz[j];
+                    h_arr[j] = h_arr[j].max(gz[j] * gz[j]);
+                    th[j] -= 0.01 * m_arr[j];
+                    th[j] += 1e-3 * zn[j];
+                }
+            },
+        );
         assert!(cap.matches_seed(&p, 77));
         assert_eq!(p.sweep_count(), 1);
         // m picked up exactly the combined basis

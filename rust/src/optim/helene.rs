@@ -144,7 +144,16 @@ pub struct Helene {
 impl Helene {
     /// A HELENE instance over explicit hyper-parameters.
     pub fn new(cfg: HeleneConfig) -> Self {
-        Self { cfg, t: 0, m: None, h: None, lambda: Vec::new(), fo: false, clipped_elems: 0, total_elems: 0 }
+        Self {
+            cfg,
+            t: 0,
+            m: None,
+            h: None,
+            lambda: Vec::new(),
+            fo: false,
+            clipped_elems: 0,
+            total_elems: 0,
+        }
     }
 
     /// The configuration used in the paper's experiments (§5): β₁=0.9,
@@ -234,7 +243,8 @@ impl Helene {
         let beta1 = if self.cfg.momentum == MomentumMode::None { 0.0 } else { self.cfg.beta1 };
         let cfg = self.cfg.clone();
         // Algorithm 1 line 8: refresh on t ≡ 1 (mod k)
-        let refresh_h = cfg.use_hessian && t % cfg.hessian_every_k.max(1) == 1 % cfg.hessian_every_k.max(1);
+        let refresh_h =
+            cfg.use_hessian && t % cfg.hessian_every_k.max(1) == 1 % cfg.hessian_every_k.max(1);
 
         let clipped = AtomicU64::new(0);
         let total = AtomicU64::new(0);
@@ -349,7 +359,8 @@ impl Helene {
         };
         let beta1 = if self.cfg.momentum == MomentumMode::None { 0.0 } else { self.cfg.beta1 };
         let cfg = self.cfg.clone();
-        let refresh_h = cfg.use_hessian && t % cfg.hessian_every_k.max(1) == 1 % cfg.hessian_every_k.max(1);
+        let refresh_h =
+            cfg.use_hessian && t % cfg.hessian_every_k.max(1) == 1 % cfg.hessian_every_k.max(1);
 
         let clipped = AtomicU64::new(0);
         let total = AtomicU64::new(0);

@@ -140,9 +140,12 @@ pub fn score(metric: Metric, preds: &[i32], labels: &[i32], n_classes: usize) ->
             let mut f1_sum = 0.0f32;
             let mut present = 0usize;
             for c in 0..n_classes as i32 {
-                let tp = preds.iter().zip(labels).filter(|(p, l)| **p == c && **l == c).count() as f32;
-                let fp = preds.iter().zip(labels).filter(|(p, l)| **p == c && **l != c).count() as f32;
-                let fneg = preds.iter().zip(labels).filter(|(p, l)| **p != c && **l == c).count() as f32;
+                let tp =
+                    preds.iter().zip(labels).filter(|(p, l)| **p == c && **l == c).count() as f32;
+                let fp =
+                    preds.iter().zip(labels).filter(|(p, l)| **p == c && **l != c).count() as f32;
+                let fneg =
+                    preds.iter().zip(labels).filter(|(p, l)| **p != c && **l == c).count() as f32;
                 if tp + fneg == 0.0 {
                     continue; // class absent from labels
                 }

@@ -125,6 +125,18 @@ pub struct TrainConfig {
     pub worker_timeout_ms: u64,
     /// Retries allowed per span per step beyond the first attempt.
     pub retry_budget: usize,
+    /// Run the distributed tier over loopback TCP sockets
+    /// ([`crate::dist::SocketTransport`]) instead of in-process channels:
+    /// worker threads dial the coordinator's listener and speak the full
+    /// checksummed wire protocol (the `helene dist --socket` flag). The
+    /// trajectory is bitwise identical either way.
+    pub dist_socket: bool,
+    /// Listen address (`host:port`) for **external** worker processes:
+    /// the coordinator binds here and waits for `helene dist-worker
+    /// --connect` dials instead of spawning anything locally (the
+    /// `helene dist --listen` flag). Mutually exclusive with
+    /// [`Self::dist_socket`].
+    pub dist_listen: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -151,6 +163,8 @@ impl Default for TrainConfig {
             fault_plan: None,
             worker_timeout_ms: 1000,
             retry_budget: 3,
+            dist_socket: false,
+            dist_listen: None,
         }
     }
 }
@@ -161,6 +175,12 @@ impl TrainConfig {
     /// fails before any work starts. Delegates to
     /// [`crate::dist::DistConfig::validate`] via [`Self::dist_config`].
     pub fn validate_robustness(&self) -> Result<()> {
+        anyhow::ensure!(
+            !(self.dist_socket && self.dist_listen.is_some()),
+            "dist_socket and dist_listen are mutually exclusive: --socket runs \
+             loopback worker threads, --listen waits for external `helene \
+             dist-worker` processes — pick one"
+        );
         self.dist_config(None).map(|_| ())
     }
 
@@ -199,9 +219,40 @@ pub fn run_zo_distributed(
     factory: crate::dist::WorkerFactory,
     seed_log: Option<std::path::PathBuf>,
 ) -> Result<crate::dist::DistReport> {
+    cfg.validate_robustness()?;
     let dist_cfg = cfg.dist_config(seed_log)?;
-    let mut coord = crate::dist::Coordinator::launch_threads(dist_cfg, base.clone(), factory)?;
-    coord.run(cfg.steps, cfg.seed)
+    if let Some(addr) = &cfg.dist_listen {
+        // external worker processes dial in; a human is starting them,
+        // so wait generously and say what we're waiting for
+        let scfg = crate::dist::SocketConfig {
+            await_live_timeout: std::time::Duration::from_secs(600),
+            announce_waits: true,
+            ..Default::default()
+        };
+        let mut coord = crate::dist::Coordinator::launch_listen(
+            dist_cfg,
+            base.clone(),
+            factory,
+            cfg.seed,
+            addr,
+            scfg,
+        )?;
+        coord.run(cfg.steps, cfg.seed)
+    } else if cfg.dist_socket {
+        let mut coord = crate::dist::Coordinator::launch_socket_threads(
+            dist_cfg,
+            base.clone(),
+            factory,
+            cfg.seed,
+            crate::dist::SocketConfig::default(),
+            None,
+        )?;
+        coord.run(cfg.steps, cfg.seed)
+    } else {
+        let mut coord =
+            crate::dist::Coordinator::launch_threads(dist_cfg, base.clone(), factory)?;
+        coord.run(cfg.steps, cfg.seed)
+    }
 }
 
 /// DESIGN.md §Precision ε-floor heuristic: with a bf16 θ-arena, one store
@@ -737,7 +788,12 @@ impl<'a> ZoProtocol<'a> {
                 sink.begin_theta(params)?;
                 for tile in params.theta_tiles(tiles) {
                     if cfg.cache_z {
-                        params.perturb_tile_fill_cache(&tile, &mut self.cur, step_seed, cfg.spsa_eps);
+                        params.perturb_tile_fill_cache(
+                            &tile,
+                            &mut self.cur,
+                            step_seed,
+                            cfg.spsa_eps,
+                        );
                     } else {
                         params.perturb_tile(&tile, step_seed, cfg.spsa_eps);
                     }
@@ -928,9 +984,15 @@ impl Trainer {
                             .context("tiled ZO step (staged probe pair + update)")?
                     } else {
                         proto
-                            .step_timed(opt, params, step_seed, next_seed, eval_point, &mut timing, |p| {
-                                runner.loss(p, &batch)
-                            })
+                            .step_timed(
+                                opt,
+                                params,
+                                step_seed,
+                                next_seed,
+                                eval_point,
+                                &mut timing,
+                                |p| runner.loss(p, &batch),
+                            )
                             .context("ZO step (probe pair + update)")?
                     };
 
@@ -1103,9 +1165,16 @@ pub fn run_lm(
                 let est = if let Some(shards) = cfg.tiled_sweeps {
                     let tiles = TileSpec::by_shards(shards);
                     let mut sink = runner.theta_sink();
-                    proto.step_staged(opt, &mut params, step_seed, next_seed, boundary, tiles, &mut sink, |_s| {
-                        runner.loss_staged(&batch)
-                    })?
+                    proto.step_staged(
+                        opt,
+                        &mut params,
+                        step_seed,
+                        next_seed,
+                        boundary,
+                        tiles,
+                        &mut sink,
+                        |_s| runner.loss_staged(&batch),
+                    )?
                 } else {
                     proto.step(opt, &mut params, step_seed, next_seed, boundary, |p| {
                         runner.loss(p, &batch)
@@ -1164,6 +1233,9 @@ mod tests {
         assert!(c.fault_plan.is_none());
         assert_eq!(c.worker_timeout_ms, 1000);
         assert_eq!(c.retry_budget, 3);
+        // socket-transport defaults: in-process channels, no listener
+        assert!(!c.dist_socket);
+        assert!(c.dist_listen.is_none());
         c.validate_robustness().unwrap();
     }
 
@@ -1183,6 +1255,14 @@ mod tests {
 
         let bad_eps = TrainConfig { spsa_eps: 0.0, ..Default::default() };
         assert!(bad_eps.validate_robustness().is_err());
+
+        let both_sockets = TrainConfig {
+            dist_socket: true,
+            dist_listen: Some("127.0.0.1:7070".into()),
+            ..Default::default()
+        };
+        let err = format!("{:#}", both_sockets.validate_robustness().unwrap_err());
+        assert!(err.contains("mutually exclusive"), "{err}");
     }
 
     #[test]
@@ -1218,7 +1298,14 @@ mod tests {
                 for step in 1..=5u64 {
                     let boundary = step == 3 || step == 5;
                     let em = proto_m
-                        .step(&mut opt_m, &mut mono, mix64(0, step), mix64(0, step + 1), boundary, quad)
+                        .step(
+                            &mut opt_m,
+                            &mut mono,
+                            mix64(0, step),
+                            mix64(0, step + 1),
+                            boundary,
+                            quad,
+                        )
                         .unwrap();
                     losses_m.push(em.loss());
 

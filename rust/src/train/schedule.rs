@@ -117,7 +117,8 @@ mod tests {
 
     #[test]
     fn from_config_parses() {
-        let c = Config::parse("[train]\nschedule = cosine\nwarmup = 7\nlr_end_factor = 0.2\n").unwrap();
+        let src = "[train]\nschedule = cosine\nwarmup = 7\nlr_end_factor = 0.2\n";
+        let c = Config::parse(src).unwrap();
         let s = LrSchedule::from_config(&c, 50).unwrap();
         assert_eq!(s.warmup, 7);
         assert_eq!(s.schedule, Schedule::Cosine { end_factor: 0.2 });

@@ -407,7 +407,8 @@ mod tests {
 
     #[test]
     fn round_trip() {
-        let src = r#"{"fmt":1,"models":[{"name":"cls-tiny","shape":[2,3],"ok":true,"x":null,"f":0.5}]}"#;
+        let src =
+            r#"{"fmt":1,"models":[{"name":"cls-tiny","shape":[2,3],"ok":true,"x":null,"f":0.5}]}"#;
         let v = Json::parse(src).unwrap();
         let v2 = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, v2);

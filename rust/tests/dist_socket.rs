@@ -1,0 +1,393 @@
+//! Property suite for the socket-backed distributed tier
+//! (`helene::dist::socket`): the PR 7 bitwise matrix re-run over real
+//! loopback TCP — checksummed frames, connect handshake, timeouts,
+//! redials — plus the wire-level fault families (`cut` / `corrupt` /
+//! `stall`) injected by the in-path [`FaultProxy`]. Every faulted run
+//! must end **bitwise identical** (f32 arenas) to the unfaulted
+//! single-worker `ZoProtocol`, including runs where a worker's
+//! connection is severed mid-step and it recovers by redialing and
+//! replaying the handshake's seed log (reconnect-by-replay).
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use helene::dist::{
+    param_digest, run_socket_worker, Coordinator, DistConfig, DistReport, FaultPlan,
+    FaultProxy, SepQuadOracle, ShardLossOracle, SocketConfig, SocketEndpoint,
+    SocketTransport, Worker, WorkerExit, WorkerFactory,
+};
+use helene::model::params::{ParamSet, SHARD_SIZE};
+use helene::optim::spsa::fold_partial_losses;
+use helene::optim::zo_sgd::ZoSgd;
+use helene::optim::Optimizer;
+use helene::train::{TrainConfig, ZoProtocol};
+use helene::util::rng::mix64;
+
+const STEPS: usize = 6;
+const RUN_SEED: u64 = 11;
+const EPS: f32 = 1e-3;
+const LR: f32 = 0.01;
+
+fn base_params() -> ParamSet {
+    // same arena as tests/dist_fault.rs: 5 shards over two layer groups,
+    // so every worker count dispatches real disjoint spans
+    ParamSet::synthetic(&[3 * SHARD_SIZE, 2 * SHARD_SIZE], 0.5)
+}
+
+fn factory() -> WorkerFactory {
+    Box::new(|_slot| {
+        Ok((
+            Box::new(SepQuadOracle::new()) as Box<dyn ShardLossOracle>,
+            Box::new(ZoSgd::new(LR)) as Box<dyn Optimizer>,
+        ))
+    })
+}
+
+fn dist_cfg(workers: usize, plan: FaultPlan) -> DistConfig {
+    DistConfig {
+        workers,
+        eps: EPS,
+        timeout: Duration::from_millis(40),
+        retry_budget: 3,
+        recover: true,
+        fault_plan: plan,
+        seed_log: None,
+    }
+}
+
+/// Socket knobs tuned for the test box: quick read polls, a short
+/// mid-frame stall budget (the `stall` fault must overrun it), fast
+/// redials with a budget that rides out a whole run of disconnects.
+fn test_scfg() -> SocketConfig {
+    SocketConfig {
+        read_timeout: Duration::from_millis(10),
+        stall_timeout: Duration::from_millis(150),
+        redial_attempts: 500,
+        redial_backoff: Duration::from_millis(10),
+        await_live_timeout: Duration::from_secs(10),
+        ..Default::default()
+    }
+}
+
+/// The unfaulted single-worker reference (identical to dist_fault.rs).
+fn reference_run() -> (Vec<f32>, ParamSet) {
+    let base = base_params();
+    let n_shards = base.n_shards();
+    let mut oracle = SepQuadOracle::new();
+    let cfg = TrainConfig { steps: STEPS, spsa_eps: EPS, seed: RUN_SEED, ..Default::default() };
+    let mut opt = ZoSgd::new(LR);
+    opt.init(&base);
+    let mut params = base.clone();
+    let mut proto = ZoProtocol::new(&cfg);
+    let mut losses = Vec::with_capacity(STEPS);
+    for step in 1..=STEPS {
+        let step_seed = mix64(RUN_SEED, step as u64);
+        let next_seed = mix64(RUN_SEED, step as u64 + 1);
+        let boundary = step == STEPS;
+        let est = proto
+            .step(&mut opt, &mut params, step_seed, next_seed, boundary, |p| {
+                Ok(fold_partial_losses(
+                    oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                ))
+            })
+            .unwrap();
+        losses.push(est.loss());
+    }
+    proto.finish(&mut params);
+    (losses, params)
+}
+
+/// Run the tier over loopback TCP with in-process dialer threads.
+fn run_socket(cfg: DistConfig) -> (Coordinator<SocketTransport>, DistReport) {
+    let mut coord = Coordinator::launch_socket_threads(
+        cfg,
+        base_params(),
+        factory(),
+        RUN_SEED,
+        test_scfg(),
+        None,
+    )
+    .unwrap();
+    let report = coord.run(STEPS, RUN_SEED).unwrap();
+    (coord, report)
+}
+
+/// Run the tier with a [`FaultProxy`] in path: workers dial the proxy,
+/// the proxy dials the coordinator and injects the plan's wire-class
+/// faults on the worker→coordinator direction.
+fn run_via_proxy(cfg: DistConfig) -> (Coordinator<SocketTransport>, FaultProxy, DistReport) {
+    let base = base_params();
+    let mut scfg = test_scfg();
+    scfg.restart_on_fault = cfg.recover;
+    let mut transport = SocketTransport::listen(
+        "127.0.0.1:0",
+        cfg.workers,
+        RUN_SEED,
+        param_digest(&base),
+        scfg,
+    )
+    .unwrap();
+    let proxy = FaultProxy::start(transport.local_addr(), cfg.fault_plan.clone()).unwrap();
+    transport.set_dial_addr(proxy.addr());
+    let worker_base = base.clone();
+    let mut spawned = vec![false; cfg.workers];
+    let spawner: Box<dyn FnMut(usize, Worker, SocketEndpoint) -> anyhow::Result<()>> =
+        Box::new(move |slot, worker, ep| {
+            if spawned[slot] {
+                return Ok(()); // the dialer thread self-redials
+            }
+            spawned[slot] = true;
+            let b = worker_base.clone();
+            std::thread::Builder::new()
+                .name(format!("test-sock-worker-{slot}"))
+                .spawn(move || {
+                    let _ = run_socket_worker(worker, b, ep);
+                })
+                .map(|_| ())
+                .map_err(anyhow::Error::from)
+        });
+    let mut coord = Coordinator::new(cfg, base, factory(), transport, spawner).unwrap();
+    let report = coord.run(STEPS, RUN_SEED).unwrap();
+    (coord, proxy, report)
+}
+
+fn assert_bitwise(tag: &str, report: &DistReport, ref_losses: &[f32], ref_params: &ParamSet) {
+    assert_eq!(report.losses.len(), ref_losses.len(), "{tag}: step count");
+    for (i, (a, b)) in report.losses.iter().zip(ref_losses).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{tag}: loss trace diverges at step {} ({a} vs {b})",
+            i + 1
+        );
+    }
+    assert!(report.params.bits_eq(ref_params), "{tag}: final params diverge");
+}
+
+#[test]
+fn unfaulted_socket_runs_match_the_single_worker_protocol() {
+    let (ref_losses, ref_params) = reference_run();
+    for workers in [1usize, 2, 4] {
+        let (mut coord, report) = run_socket(dist_cfg(workers, FaultPlan::new()));
+        assert_bitwise(&format!("socket/workers={workers}"), &report, &ref_losses, &ref_params);
+        assert_eq!(report.workers_alive, workers);
+        assert_eq!(report.stats.deaths, 0);
+        assert_eq!(report.stats.wire_reconnects, 0, "healthy lanes must not redial");
+        for (w, replica) in coord.fetch_all().unwrap() {
+            assert!(replica.bits_eq(&ref_params), "workers={workers}: replica {w} diverges");
+        }
+        let replayed =
+            helene::dist::replay_seed_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
+                .unwrap();
+        assert!(replayed.bits_eq(&ref_params), "workers={workers}: replay diverges");
+    }
+}
+
+#[test]
+fn worker_faults_over_sockets_stay_bitwise_identical() {
+    let (ref_losses, ref_params) = reference_run();
+    let plans = [
+        ("death", "die@3:1"),
+        ("drop+delay", "drop@2:0,delay@4:1:200"),
+        ("nan-partial", "nan@2:1"),
+    ];
+    for (name, spec) in plans {
+        let plan = FaultPlan::parse(spec).unwrap();
+        for workers in [2usize, 4] {
+            let tag = format!("socket/{name}/workers={workers}");
+            let (mut coord, report) = run_socket(dist_cfg(workers, plan.clone()));
+            assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+            match name {
+                "death" => {
+                    // over sockets the dialer loop is the supervisor: a
+                    // dead incarnation redials in place, so the event
+                    // shows up as a coordinator-observed death, a wire
+                    // reconnect, or both — depending on whether the
+                    // coordinator touched the lane in the gap
+                    assert!(
+                        report.stats.deaths >= 1 || report.stats.wire_reconnects >= 1,
+                        "{tag}: the death left no trace in the stats"
+                    );
+                    assert_eq!(report.workers_alive, workers, "{tag}: quorum not restored");
+                }
+                _ => {
+                    assert!(report.stats.retries >= 1, "{tag}: fault never cost a retry");
+                }
+            }
+            for (w, replica) in coord.fetch_all().unwrap() {
+                assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_faults_stay_bitwise_identical_and_reconnect_by_replay() {
+    let (ref_losses, ref_params) = reference_run();
+    // one fault per wire family; the stall (400 ms) overruns the 150 ms
+    // mid-frame budget, so the coordinator kills the lane and the worker
+    // redials — every family must end in at least one reconnect
+    let plans = [
+        ("cut", "cut@3:1"),
+        ("corrupt", "corrupt@2:0"),
+        ("stall", "stall@4:1:400"),
+    ];
+    for (name, spec) in plans {
+        let plan = FaultPlan::parse(spec).unwrap();
+        for workers in [2usize, 4] {
+            let tag = format!("wire/{name}/workers={workers}");
+            let (mut coord, _proxy, report) = run_via_proxy(dist_cfg(workers, plan.clone()));
+            assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+            assert!(
+                report.stats.wire_reconnects >= 1,
+                "{tag}: the wire fault never forced a reconnect"
+            );
+            assert_eq!(report.workers_alive, workers, "{tag}: quorum not restored");
+            // the reconnected worker rebuilt from the handshake's seed
+            // log — every replica, including it, must hold the exact
+            // reference arena
+            for (w, replica) in coord.fetch_all().unwrap() {
+                assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+            }
+        }
+    }
+}
+
+#[test]
+fn a_cut_mid_run_recovers_purely_from_the_handshake_seed_log() {
+    // the focused reconnect-by-replay property: sever worker 1's lane at
+    // step 3 of 6 — it must redial, rebuild bitwise from its retained
+    // step-0 arena plus the acked records (steps committed while it was
+    // gone included), and finish indistinguishable from a survivor
+    let (ref_losses, ref_params) = reference_run();
+    let (mut coord, _proxy, report) =
+        run_via_proxy(dist_cfg(2, FaultPlan::parse("cut@3:1").unwrap()));
+    assert_bitwise("reconnect-by-replay", &report, &ref_losses, &ref_params);
+    assert!(report.stats.wire_reconnects >= 1, "no reconnect recorded");
+    let replicas = coord.fetch_all().unwrap();
+    assert_eq!(replicas.len(), 2, "both workers must survive the cut");
+    for (w, replica) in &replicas {
+        assert!(replica.bits_eq(&ref_params), "replica {w} diverges after replay");
+    }
+    // the committed log itself still replays to the reference arena
+    let replayed =
+        helene::dist::replay_seed_log(&base_params(), &mut ZoSgd::new(LR), &report.log).unwrap();
+    assert!(replayed.bits_eq(&ref_params), "seed-log replay diverges");
+}
+
+#[test]
+fn recovery_off_degrades_over_sockets_too() {
+    let (ref_losses, ref_params) = reference_run();
+    let mut cfg = dist_cfg(3, FaultPlan::parse("die@2:2").unwrap());
+    cfg.recover = false; // also turns off the dialer's in-place restart
+    let (_coord, report) = run_socket(cfg);
+    assert_bitwise("socket/degraded", &report, &ref_losses, &ref_params);
+    assert_eq!(report.workers_alive, 2);
+    assert_eq!(report.stats.deaths, 1);
+    assert_eq!(report.stats.recoveries, 0);
+}
+
+#[test]
+fn shutdown_message_lets_every_worker_exit_cleanly() {
+    // graceful-shutdown satellite: after the run, Coordinator::shutdown
+    // broadcasts Request::Shutdown and each dialer loop must return
+    // WorkerExit::Shutdown (the CLI's exit-code-0 path) rather than
+    // treating the closing lane as a disconnect and redialing
+    let workers = 2usize;
+    let base = base_params();
+    let transport = SocketTransport::listen(
+        "127.0.0.1:0",
+        workers,
+        RUN_SEED,
+        param_digest(&base),
+        test_scfg(),
+    )
+    .unwrap();
+    let (exit_tx, exit_rx) = mpsc::channel();
+    let worker_base = base.clone();
+    let spawner: Box<dyn FnMut(usize, Worker, SocketEndpoint) -> anyhow::Result<()>> =
+        Box::new(move |_slot, worker, ep| {
+            let b = worker_base.clone();
+            let tx = exit_tx.clone();
+            std::thread::spawn(move || {
+                let _ = tx.send(run_socket_worker(worker, b, ep));
+            });
+            Ok(())
+        });
+    let mut coord =
+        Coordinator::new(dist_cfg(workers, FaultPlan::new()), base, factory(), transport, spawner)
+            .unwrap();
+    let report = coord.run(STEPS, RUN_SEED).unwrap();
+    assert_eq!(report.losses.len(), STEPS);
+    coord.shutdown();
+    for _ in 0..workers {
+        let exit = exit_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("a worker never exited after shutdown")
+            .expect("worker loop errored");
+        assert_eq!(exit, WorkerExit::Shutdown, "worker did not see a clean shutdown");
+    }
+}
+
+#[test]
+fn handshake_refuses_a_mismatched_run_seed() {
+    let base = base_params();
+    let _transport = SocketTransport::listen(
+        "127.0.0.1:0",
+        1,
+        RUN_SEED,
+        param_digest(&base),
+        test_scfg(),
+    )
+    .unwrap();
+    let addr = _transport.local_addr();
+    let worker = Worker::new(
+        0,
+        &base,
+        Box::new(ZoSgd::new(LR)) as Box<dyn Optimizer>,
+        Box::new(SepQuadOracle::new()) as Box<dyn ShardLossOracle>,
+        FaultPlan::new(),
+    );
+    let ep = SocketEndpoint {
+        addr,
+        slot: 0,
+        run_seed: RUN_SEED + 1, // wrong run seed
+        base_digest: param_digest(&base),
+        cfg: test_scfg(),
+    };
+    let err = format!("{:#}", run_socket_worker(worker, base, ep).unwrap_err());
+    assert!(err.contains("refused"), "{err}");
+    assert!(err.contains("run seed mismatch"), "{err}");
+}
+
+#[test]
+fn handshake_refuses_a_mismatched_base_arena() {
+    let base = base_params();
+    let _transport = SocketTransport::listen(
+        "127.0.0.1:0",
+        1,
+        RUN_SEED,
+        param_digest(&base),
+        test_scfg(),
+    )
+    .unwrap();
+    let addr = _transport.local_addr();
+    // a worker built from a *different* step-0 arena: same shape, other fill
+    let other = ParamSet::synthetic(&[3 * SHARD_SIZE, 2 * SHARD_SIZE], 0.25);
+    let worker = Worker::new(
+        0,
+        &other,
+        Box::new(ZoSgd::new(LR)) as Box<dyn Optimizer>,
+        Box::new(SepQuadOracle::new()) as Box<dyn ShardLossOracle>,
+        FaultPlan::new(),
+    );
+    let ep = SocketEndpoint {
+        addr,
+        slot: 0,
+        run_seed: RUN_SEED,
+        base_digest: param_digest(&other),
+        cfg: test_scfg(),
+    };
+    let err = format!("{:#}", run_socket_worker(worker, other, ep).unwrap_err());
+    assert!(err.contains("arena mismatch"), "{err}");
+}

@@ -608,7 +608,14 @@ fn staged_pipeline_with_post_check_optimizer_falls_back_to_classic() {
                     .unwrap()
             } else {
                 proto
-                    .step(&mut opt, &mut p, mix64(9, step), mix64(9, step + 1), step == 4, pipe_loss)
+                    .step(
+                        &mut opt,
+                        &mut p,
+                        mix64(9, step),
+                        mix64(9, step + 1),
+                        step == 4,
+                        pipe_loss,
+                    )
                     .unwrap()
             };
             losses.push(est.loss());
