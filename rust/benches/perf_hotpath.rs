@@ -714,6 +714,11 @@ struct DistBenchStats {
     /// Whether the socket-transport run also reproduced the
     /// single-process trajectory bit-for-bit (CI-gated).
     socket_bitwise: bool,
+    /// Per-q `(q, wall-clock ms)` rows for the N-worker multi-probe grid.
+    multi_rows: Vec<(usize, f64)>,
+    /// Whether every multi-probe grid run reproduced the single-process
+    /// pipelined `step_multi` trajectory bit-for-bit (CI-gated).
+    multiprobe_bitwise: bool,
 }
 
 impl DistBenchStats {
@@ -812,6 +817,62 @@ fn dist_section(base: &ParamSet, scale: Scale) -> anyhow::Result<DistBenchStats>
     };
     let (tsock_ms, losses_s, params_s) = run_socket(workers)?;
 
+    // the multi-probe grid: q probe points scheduled across the same N
+    // workers against one shared baseline — each run must stay bitwise
+    // the single-process pipelined `step_multi` trajectory
+    let mut multi_rows = Vec::new();
+    let mut multiprobe_bitwise = true;
+    for q in [1usize, 4] {
+        let cfg_m = TrainConfig {
+            steps,
+            spsa_eps: eps,
+            seed: run_seed,
+            probes: q,
+            ..Default::default()
+        };
+        let mut opt_m = ZoSgd::new(lr);
+        opt_m.init(base);
+        let mut mref_params = base.clone();
+        let mut proto_m = ZoProtocol::new(&cfg_m);
+        let mut mref_losses = Vec::with_capacity(steps);
+        let mut oracle_m = SepQuadOracle::with_work(work);
+        for step in 1..=steps {
+            let est = proto_m.step_multi(
+                &mut opt_m,
+                &mut mref_params,
+                mix64(run_seed, step as u64),
+                mix64(run_seed, step as u64 + 1),
+                step == steps,
+                |p| {
+                    Ok(spsa::fold_partial_losses(
+                        oracle_m.shard_partials(p, 0..n_shards, step as u64)?,
+                    ))
+                },
+            )?;
+            mref_losses.push(est.loss());
+        }
+        let cfg = DistConfig { workers, eps, probes: q, ..Default::default() };
+        let factory: WorkerFactory = Box::new(move |_slot| {
+            Ok((
+                Box::new(SepQuadOracle::with_work(work)) as Box<dyn ShardLossOracle>,
+                Box::new(ZoSgd::new(lr)) as Box<dyn Optimizer>,
+            ))
+        });
+        let mut coord = Coordinator::launch_threads(cfg, base.clone(), factory)?;
+        let t0 = Instant::now();
+        let report = coord.run_multi(steps, run_seed)?;
+        let tq_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let ok = report.losses.len() == mref_losses.len()
+            && report
+                .losses
+                .iter()
+                .zip(&mref_losses)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+            && report.params.bits_eq(&mref_params);
+        multiprobe_bitwise &= ok;
+        multi_rows.push((q, tq_ms));
+    }
+
     let trace_eq = |l: &[f32]| {
         l.len() == ref_losses.len()
             && l.iter().zip(&ref_losses).all(|(a, b)| a.to_bits() == b.to_bits())
@@ -824,13 +885,28 @@ fn dist_section(base: &ParamSet, scale: Scale) -> anyhow::Result<DistBenchStats>
     println!(
         "dist tier ({} params, {steps} steps, work={work}): 1 worker {t1_ms:.1} ms, \
          {workers} workers {tn_ms:.1} ms ({:.2}x), {workers} socket workers \
-         {tsock_ms:.1} ms, bitwise vs single-process: channels {}, sockets {}",
+         {tsock_ms:.1} ms, bitwise vs single-process: channels {}, sockets {}, \
+         multi-probe grid {}",
         base.n_params(),
         t1_ms / tn_ms,
         if bitwise { "identical" } else { "MISMATCH" },
-        if socket_bitwise { "identical" } else { "MISMATCH" }
+        if socket_bitwise { "identical" } else { "MISMATCH" },
+        if multiprobe_bitwise { "identical" } else { "MISMATCH" }
     );
-    Ok(DistBenchStats { t1_ms, tn_ms, tsock_ms, workers, steps, bitwise, socket_bitwise })
+    for (q, ms) in &multi_rows {
+        println!("  multi-probe grid q={q}: {workers} workers {ms:.1} ms");
+    }
+    Ok(DistBenchStats {
+        t1_ms,
+        tn_ms,
+        tsock_ms,
+        workers,
+        steps,
+        bitwise,
+        socket_bitwise,
+        multi_rows,
+        multiprobe_bitwise,
+    })
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1000,6 +1076,20 @@ fn write_json(
     // same gate for the socket transport: framing/handshake/timeout
     // machinery must never perturb the trajectory
     root.insert("dist_socket_bitwise".to_string(), Json::Bool(dist.socket_bitwise));
+    // and for the multi-probe grid: spreading q probe points across the
+    // workers must reproduce the single-process `step_multi` pipeline
+    root.insert(
+        "dist_multiprobe_bitwise".to_string(),
+        Json::Bool(dist.multiprobe_bitwise),
+    );
+    let mut dmp = BTreeMap::new();
+    for (q, ms) in &dist.multi_rows {
+        let mut o = BTreeMap::new();
+        o.insert("t_ms".to_string(), Json::Num(*ms));
+        o.insert("ms_per_probe".to_string(), Json::Num(*ms / *q as f64));
+        dmp.insert(format!("q{q}"), Json::Obj(o));
+    }
+    root.insert("dist_multiprobe".to_string(), Json::Obj(dmp));
     root.insert("dist_speedup".to_string(), Json::Num(dist.speedup()));
     let mut dj = BTreeMap::new();
     dj.insert("workers".to_string(), Json::Num(dist.workers as f64));

@@ -36,9 +36,9 @@ use super::fault::FaultPlan;
 use super::transport::{ChannelTransport, Disconnected, Reply, Request, Transport};
 use super::worker::{run_worker, Worker};
 use super::{plan_spans, WorkerFactory};
-use crate::model::checkpoint::{self, SeedRecord};
+use crate::model::checkpoint::{self, CommitRecord};
 use crate::model::ParamSet;
-use crate::optim::spsa::fold_partial_losses;
+use crate::optim::spsa::{fold_partial_losses, probe_seed};
 use crate::util::rng::mix64;
 
 /// Knobs for the distributed tier. Mirrored by `TrainConfig`'s
@@ -60,9 +60,21 @@ pub struct DistConfig {
     pub recover: bool,
     /// Deterministic fault schedule (empty = healthy cluster).
     pub fault_plan: FaultPlan,
-    /// When set, every committed record is appended to this seed-log
-    /// file ([`checkpoint::append_seed_log`]) as it is won.
+    /// When set, every committed record is appended to this log file as
+    /// it is won — v1 seed-log format for pairwise runs
+    /// ([`checkpoint::append_seed_log`]), v2 commit-log format for
+    /// multi-probe runs ([`checkpoint::append_commit_log`]).
     pub seed_log: Option<PathBuf>,
+    /// Probes per step (q). 1 = classic antithetic pairwise; q > 1
+    /// schedules the `(probe point, shard span)` grid and commits
+    /// multi-records applied via `Optimizer::step_zo_multi`.
+    pub probes: usize,
+    /// Base duration for the exponential retry-wave backoff (waves after
+    /// the first wait `backoff × 2^min(wave, 3)`). `None` uses `timeout`
+    /// as the base — the historical behavior. Exposed as
+    /// `--wave-backoff-ms` so cross-host latency sensitivity is
+    /// scriptable.
+    pub wave_backoff: Option<Duration>,
 }
 
 impl Default for DistConfig {
@@ -75,6 +87,8 @@ impl Default for DistConfig {
             recover: true,
             fault_plan: FaultPlan::new(),
             seed_log: None,
+            probes: 1,
+            wave_backoff: None,
         }
     }
 }
@@ -103,6 +117,18 @@ impl DistConfig {
             "probe radius eps must be finite and > 0 (got {})",
             self.eps
         );
+        ensure!(
+            self.probes >= 1,
+            "probes must be >= 1 (got 0): every step needs at least one probe; \
+             use probes = 1 for the classic pairwise protocol"
+        );
+        if let Some(backoff) = self.wave_backoff {
+            ensure!(
+                !backoff.is_zero(),
+                "wave backoff must be > 0 ms (got 0): a zero backoff base would \
+                 expire every retry wave immediately"
+            );
+        }
         Ok(())
     }
 }
@@ -126,18 +152,26 @@ pub struct DistStats {
 /// The outcome of a distributed run.
 #[derive(Debug)]
 pub struct DistReport {
-    /// Per-step training loss `0.5·(L⁺ + L⁻)`, bitwise identical to the
-    /// single-worker protocol's trace (f32 arenas).
+    /// Per-step training loss, bitwise identical to the single-process
+    /// protocol's trace (f32 arenas): `0.5·(L⁺ + L⁻)` for pairwise runs,
+    /// the shared baseline `L(θ)` for multi-probe runs (exactly
+    /// `SpsaMultiEstimate::loss`).
     pub losses: Vec<f32>,
     /// Final parameters, fetched from a surviving replica.
     pub params: ParamSet,
-    /// The complete `(step, seed, g, eps)` log — everything needed to
-    /// rebuild `params` from the step-0 arena.
-    pub log: Vec<SeedRecord>,
+    /// The complete commit log — everything needed to rebuild `params`
+    /// from the step-0 arena via [`super::replay_commit_log`].
+    pub log: Vec<CommitRecord>,
     /// Robustness counters.
     pub stats: DistStats,
     /// Workers alive at the end of the run.
     pub workers_alive: usize,
+    /// Per-slot clip telemetry: the last `Optimizer::clip_fraction`
+    /// each worker reported with a commit ack (`None` for optimizers
+    /// without clip telemetry, or slots that never acked). Replicas run
+    /// bitwise-identical updates, so live slots must agree — a cheap
+    /// cross-replica divergence canary.
+    pub clip_fractions: Vec<Option<f64>>,
 }
 
 /// The step-loop owner. Generic over [`Transport`] plus a spawner
@@ -152,8 +186,9 @@ pub struct Coordinator<T: Transport> {
     spawner: Box<dyn FnMut(usize, Worker, T::Endpoint) -> Result<()>>,
     spans: Vec<Range<usize>>,
     alive: Vec<bool>,
-    log: Vec<SeedRecord>,
+    log: Vec<CommitRecord>,
     stats: DistStats,
+    clip: Vec<Option<f64>>,
 }
 
 impl Coordinator<ChannelTransport> {
@@ -189,6 +224,7 @@ impl<T: Transport> Coordinator<T> {
         let spans = plan_spans(&base.spec, cfg.workers)?;
         let mut coord = Coordinator {
             alive: vec![false; cfg.workers],
+            clip: vec![None; cfg.workers],
             cfg,
             base,
             factory,
@@ -210,8 +246,8 @@ impl<T: Transport> Coordinator<T> {
         &self.stats
     }
 
-    /// The committed seed log so far.
-    pub fn seed_log(&self) -> &[SeedRecord] {
+    /// The committed log so far (pairwise or multi records).
+    pub fn commit_log(&self) -> &[CommitRecord] {
         &self.log
     }
 
@@ -276,9 +312,16 @@ impl<T: Transport> Coordinator<T> {
         Ok(live[(span_i + attempt - 1) % live.len()])
     }
 
-    /// Per-wave deadline with bounded exponential backoff.
+    /// Per-wave deadline with bounded exponential backoff: the first
+    /// wave waits `timeout`; retry waves wait the backoff base (default:
+    /// `timeout`; configurable via [`DistConfig::wave_backoff`]) scaled
+    /// by `2^min(wave, 3)`.
     fn wave_timeout(&self, wave: u32) -> Duration {
-        self.cfg.timeout * 2u32.pow(wave.min(3))
+        if wave == 0 {
+            self.cfg.timeout
+        } else {
+            self.cfg.wave_backoff.unwrap_or(self.cfg.timeout) * 2u32.pow(wave.min(3))
+        }
     }
 
     /// (Re-)dispatch span `span_i` of `step`, consuming one attempt.
@@ -402,7 +445,7 @@ impl<T: Transport> Coordinator<T> {
                             )?;
                         }
                     }
-                    Reply::Applied { .. } | Reply::Params { .. } => {
+                    Reply::Applied { .. } | Reply::Params { .. } | Reply::ProbePoint { .. } => {
                         self.stats.late_replies += 1;
                     }
                 }
@@ -428,9 +471,187 @@ impl<T: Transport> Coordinator<T> {
         Ok((lp, lm))
     }
 
+    /// (Re-)dispatch one `(point, span)` grid item of a multi-probe
+    /// step, consuming one attempt. `item = point * n_spans + span_i`
+    /// indexes the flattened grid, and drives the same live-worker
+    /// rotation as the pairwise path — so a poisoned worker is routed
+    /// around, and with more grid items than workers the whole cluster
+    /// is kept busy.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_probe_point(
+        &mut self,
+        step: u64,
+        seed: u64,
+        q: usize,
+        point: usize,
+        span_i: usize,
+        attempts: &mut [usize],
+        assigned_to: &mut [usize],
+        last_err: &Option<String>,
+    ) -> Result<()> {
+        let item = point * self.spans.len() + span_i;
+        attempts[item] += 1;
+        if attempts[item] > 1 {
+            self.stats.retries += 1;
+        }
+        if attempts[item] > 1 + self.cfg.retry_budget {
+            let detail = last_err
+                .as_ref()
+                .map(|e| format!("; last error: {e}"))
+                .unwrap_or_default();
+            let which = if point == q {
+                "the shared baseline".to_string()
+            } else {
+                format!("probe point {point} of {q}")
+            };
+            bail!(
+                "retry budget exhausted at step {step} (step seed {seed}, {which}): span \
+                 {:?} still unanswered after {} attempts (budget {} retries){detail}",
+                self.spans[span_i],
+                attempts[item] - 1,
+                self.cfg.retry_budget
+            );
+        }
+        loop {
+            let target = self.pick_worker(item, attempts[item])?;
+            let req = Request::ProbePoint {
+                step,
+                seed,
+                eps: self.cfg.eps,
+                q,
+                point,
+                shards: self.spans[span_i].clone(),
+            };
+            match self.transport.send(target, req) {
+                Ok(()) => {
+                    assigned_to[item] = target;
+                    return Ok(());
+                }
+                Err(Disconnected(w)) => self.on_death(w)?,
+            }
+        }
+    }
+
+    /// Run one multi-probe round over the `(point, span)` grid and
+    /// return the q + 1 canonical per-point folds (`[L_0, …, L_{q−1},
+    /// L_base]`), each the order-fixed [`fold_partial_losses`] over the
+    /// point's partials in global shard order — bitwise independent of
+    /// the worker count and of which worker served which item.
+    fn probe_round_multi(&mut self, step: u64, seed: u64, q: usize) -> Result<Vec<f32>> {
+        let n_spans = self.spans.len();
+        let n_items = (q + 1) * n_spans;
+        let mut parts: Vec<Option<Vec<f64>>> = vec![None; n_items];
+        let mut attempts = vec![0usize; n_items];
+        let mut assigned_to = vec![usize::MAX; n_items];
+        let mut last_err: Option<String> = None;
+        let mut outstanding = n_items;
+
+        for point in 0..=q {
+            for i in 0..n_spans {
+                self.dispatch_probe_point(
+                    step, seed, q, point, i, &mut attempts, &mut assigned_to, &last_err,
+                )?;
+            }
+        }
+
+        let mut wave: u32 = 0;
+        while outstanding > 0 {
+            let deadline = Instant::now() + self.wave_timeout(wave);
+            while outstanding > 0 {
+                let Some(reply) = self.transport.recv_deadline(deadline) else { break };
+                match reply {
+                    Reply::ProbePoint { worker, step: s, point, shards, partials: p } => {
+                        if s != step || point > q {
+                            self.stats.late_replies += 1;
+                            continue;
+                        }
+                        let Some(i) = self.spans.iter().position(|sp| *sp == shards) else {
+                            self.stats.late_replies += 1;
+                            continue;
+                        };
+                        let item = point * n_spans + i;
+                        if parts[item].is_some() {
+                            self.stats.late_replies += 1;
+                            continue;
+                        }
+                        let want = shards.len();
+                        if p.len() != want {
+                            last_err = Some(format!(
+                                "worker {worker} returned {} partials for the \
+                                 {want}-shard span {shards:?} (point {point})",
+                                p.len()
+                            ));
+                            self.dispatch_probe_point(
+                                step, seed, q, point, i, &mut attempts, &mut assigned_to,
+                                &last_err,
+                            )?;
+                            continue;
+                        }
+                        if let Some(bad) = p.iter().find(|v| !v.is_finite()) {
+                            last_err = Some(format!(
+                                "worker {worker} returned a non-finite partial loss \
+                                 ({bad}) for span {shards:?} at step {step} (point {point})"
+                            ));
+                            self.dispatch_probe_point(
+                                step, seed, q, point, i, &mut attempts, &mut assigned_to,
+                                &last_err,
+                            )?;
+                            continue;
+                        }
+                        parts[item] = Some(p);
+                        outstanding -= 1;
+                    }
+                    Reply::Failed { worker, step: s, msg } => {
+                        if s != step {
+                            self.stats.late_replies += 1;
+                            continue;
+                        }
+                        last_err = Some(format!("worker {worker}: {msg}"));
+                        if let Some(item) = (0..n_items)
+                            .find(|&it| assigned_to[it] == worker && parts[it].is_none())
+                        {
+                            let (point, i) = (item / n_spans, item % n_spans);
+                            self.dispatch_probe_point(
+                                step, seed, q, point, i, &mut attempts, &mut assigned_to,
+                                &last_err,
+                            )?;
+                        }
+                    }
+                    Reply::Probe { .. } | Reply::Applied { .. } | Reply::Params { .. } => {
+                        self.stats.late_replies += 1;
+                    }
+                }
+            }
+            if outstanding > 0 {
+                wave += 1;
+                for item in 0..n_items {
+                    if parts[item].is_none() {
+                        let (point, i) = (item / n_spans, item % n_spans);
+                        self.dispatch_probe_point(
+                            step, seed, q, point, i, &mut attempts, &mut assigned_to,
+                            &last_err,
+                        )?;
+                    }
+                }
+            }
+        }
+
+        Ok((0..=q)
+            .map(|point| {
+                fold_partial_losses((0..n_spans).flat_map(|i| {
+                    parts[point * n_spans + i]
+                        .as_deref()
+                        .expect("filled")
+                        .iter()
+                        .copied()
+                }))
+            })
+            .collect())
+    }
+
     /// Broadcast the committed record and require a unanimous replica
     /// digest from every live worker.
-    fn apply_round(&mut self, rec: SeedRecord) -> Result<()> {
+    fn apply_round(&mut self, rec: &CommitRecord) -> Result<()> {
         let step = rec.step;
         let mut digests: BTreeMap<usize, u64> = BTreeMap::new();
         let mut wave: u32 = 0;
@@ -440,7 +661,12 @@ impl<T: Transport> Coordinator<T> {
                 if !self.alive[w] || digests.contains_key(&w) {
                     continue;
                 }
-                let req = Request::Apply { step, seed: rec.seed, eps: rec.eps, g: rec.g };
+                let req = match rec.as_seed_record() {
+                    Some(sr) => {
+                        Request::Apply { step, seed: sr.seed, eps: sr.eps, g: sr.g }
+                    }
+                    None => Request::ApplyMulti { record: rec.clone() },
+                };
                 if let Err(Disconnected(dead)) = self.transport.send(w, req) {
                     // a replacement replays the log (which already holds
                     // this record), so the resend next wave just collects
@@ -463,15 +689,14 @@ impl<T: Transport> Coordinator<T> {
                 }
                 let Some(reply) = self.transport.recv_deadline(deadline) else { break };
                 match reply {
-                    Reply::Applied { worker, step: s, digest } if s == step => {
+                    Reply::Applied { worker, step: s, digest, clip } if s == step => {
+                        if worker < self.clip.len() {
+                            self.clip[worker] = clip;
+                        }
                         digests.insert(worker, digest);
                     }
                     Reply::Failed { worker, step: s, msg } if s == step => {
-                        bail!(
-                            "worker {worker} failed to commit step {step} \
-                             (seed {}): {msg}",
-                            rec.seed
-                        );
+                        bail!("worker {worker} failed to commit step {step}: {msg}");
                     }
                     _ => {
                         self.stats.late_replies += 1;
@@ -575,8 +800,13 @@ impl<T: Transport> Coordinator<T> {
 
     /// Run `steps` training steps from the step-0 arena. Step seeds are
     /// `mix64(run_seed, step)`, exactly as the single-worker loop, so
-    /// the trajectory is comparable bit-for-bit.
+    /// the trajectory is comparable bit-for-bit. With `cfg.probes > 1`
+    /// this delegates to [`Coordinator::run_multi`], which spreads each
+    /// step's probe points across the cluster.
     pub fn run(&mut self, steps: usize, run_seed: u64) -> Result<DistReport> {
+        if self.cfg.probes > 1 {
+            return self.run_multi(steps, run_seed);
+        }
         ensure!(
             self.log.is_empty(),
             "Coordinator::run starts from step 0; this coordinator has already \
@@ -594,18 +824,19 @@ impl<T: Transport> Coordinator<T> {
                  the optimizer state"
             );
             let g = (lp - lm) / (2.0 * self.cfg.eps);
-            let rec = SeedRecord { step, seed, g, eps: self.cfg.eps };
-            self.log.push(rec);
+            let rec = CommitRecord::pairwise(step, seed, g, self.cfg.eps);
+            self.log.push(rec.clone());
             // the transport sees the record before the apply broadcast,
             // so a worker that (re)handshakes mid-apply receives a log
             // that already contains this step — same invariant as the
             // local spawn path above
             self.transport.on_commit(&rec);
             if let Some(path) = self.cfg.seed_log.clone() {
-                checkpoint::append_seed_log(&path, &[rec])
+                let sr = rec.as_seed_record().expect("pairwise record");
+                checkpoint::append_seed_log(&path, &[sr])
                     .with_context(|| format!("persisting seed log for step {step}"))?;
             }
-            self.apply_round(rec)?;
+            self.apply_round(&rec)?;
             losses.push(0.5 * (lp + lm));
         }
         let params = self.fetch_params()?;
@@ -616,6 +847,73 @@ impl<T: Transport> Coordinator<T> {
             log: self.log.clone(),
             stats: self.stats.clone(),
             workers_alive: self.workers_alive(),
+            clip_fractions: self.clip.clone(),
+        })
+    }
+
+    /// Run `steps` multi-probe training steps (`q = cfg.probes` probe
+    /// pairs per step, valid for any q ≥ 1). Each step schedules a
+    /// `(q + 1) × n_spans` work grid — q perturbed probe points plus the
+    /// shared baseline at the walked parameter vector — across the live
+    /// workers, folds each point's partials in canonical shard order,
+    /// and commits one multi-record `(step, eps, [(seed_i, g_i); q])`
+    /// with the *raw* per-probe scalars `g_i = (L_i − L_base) / eps`.
+    /// Replicas apply the record via the optimizer's multi-probe step,
+    /// which averages the probes exactly as the single-process
+    /// [`estimate_multi_preperturbed`](crate::optim::spsa) path does,
+    /// so the trajectory stays bitwise identical to `step_multi`.
+    ///
+    /// Per-step reported losses are the shared baseline `L_base` —
+    /// the multi-probe estimator's loss readout, matching the trainer.
+    pub fn run_multi(&mut self, steps: usize, run_seed: u64) -> Result<DistReport> {
+        ensure!(
+            self.log.is_empty(),
+            "Coordinator::run_multi starts from step 0; this coordinator has \
+             already committed {} steps",
+            self.log.len()
+        );
+        let q = self.cfg.probes.max(1);
+        let mut losses = Vec::with_capacity(steps);
+        for step in 1..=steps as u64 {
+            let seed = mix64(run_seed, step);
+            let point_losses = self.probe_round_multi(step, seed, q)?;
+            debug_assert_eq!(point_losses.len(), q + 1);
+            ensure!(
+                point_losses.iter().all(|l| l.is_finite()),
+                "non-finite aggregated loss at step {step} (step seed {seed}): \
+                 per-point folds {point_losses:?} — aborting before the estimate \
+                 poisons the optimizer state"
+            );
+            let loss_base = point_losses[q];
+            let probes: Vec<(u64, f32)> = (0..q)
+                .map(|i| (probe_seed(seed, i), (point_losses[i] - loss_base) / self.cfg.eps))
+                .collect();
+            ensure!(
+                probes.iter().all(|(_, g)| g.is_finite()),
+                "non-finite probe scalar at step {step} (step seed {seed}): \
+                 probes {probes:?}"
+            );
+            let rec = CommitRecord::multi(step, self.cfg.eps, probes);
+            self.log.push(rec.clone());
+            // same ordering invariant as the pairwise loop: the transport
+            // sees the record before the apply broadcast
+            self.transport.on_commit(&rec);
+            if let Some(path) = self.cfg.seed_log.clone() {
+                checkpoint::append_commit_log(&path, std::slice::from_ref(&rec))
+                    .with_context(|| format!("persisting commit log for step {step}"))?;
+            }
+            self.apply_round(&rec)?;
+            losses.push(loss_base);
+        }
+        let params = self.fetch_params()?;
+        self.stats.wire_reconnects = self.transport.reconnects();
+        Ok(DistReport {
+            losses,
+            params,
+            log: self.log.clone(),
+            stats: self.stats.clone(),
+            workers_alive: self.workers_alive(),
+            clip_fractions: self.clip.clone(),
         })
     }
 

@@ -27,7 +27,7 @@ use std::io::{ErrorKind, Read};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::transport::{Reply, Request};
-use crate::model::checkpoint::SeedRecord;
+use crate::model::checkpoint::CommitRecord;
 use crate::model::params::Codec;
 
 /// Bytes of frame header: 4-byte payload length + 4-byte checksum.
@@ -40,8 +40,11 @@ pub const FRAME_HEADER_BYTES: usize = 8;
 pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 28;
 
 /// Wire protocol version, verified by the connect handshake. Bump on
-/// any change to the frame layout or message encoding.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// any change to the frame layout or message encoding. Version 2 added
+/// the multi-probe messages (`ProbePoint` / `ApplyMulti`), the commit
+/// records in the handshake ack, the clip-telemetry field on `Applied`,
+/// and the config fingerprint in [`Hello`].
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Magic bytes opening every [`Hello`] message, so a dialer that hits
 /// the wrong port fails with "not a helene dist endpoint" instead of a
@@ -206,10 +209,13 @@ mod tag {
     pub const REQ_APPLY: u8 = 0x02;
     pub const REQ_FETCH: u8 = 0x03;
     pub const REQ_SHUTDOWN: u8 = 0x04;
+    pub const REQ_PROBE_POINT: u8 = 0x05;
+    pub const REQ_APPLY_MULTI: u8 = 0x06;
     pub const REP_PROBE: u8 = 0x11;
     pub const REP_APPLIED: u8 = 0x12;
     pub const REP_PARAMS: u8 = 0x13;
     pub const REP_FAILED: u8 = 0x14;
+    pub const REP_PROBE_POINT: u8 = 0x15;
     pub const HELLO: u8 = 0xA0;
     pub const HELLO_ACK: u8 = 0xA1;
     pub const HELLO_ERR: u8 = 0xA2;
@@ -343,6 +349,43 @@ fn codec_from(b: u8) -> Result<Codec> {
     }
 }
 
+/// Encode a [`CommitRecord`] with the same layout as the on-disk v2
+/// commit log: `step u64, eps f32, mode u8, q u16, q × (seed u64, g f32)`.
+fn put_commit(out: &mut Vec<u8>, rec: &CommitRecord) {
+    out.extend_from_slice(&rec.step.to_le_bytes());
+    out.extend_from_slice(&rec.eps.to_le_bytes());
+    out.push(rec.pairwise as u8);
+    out.extend_from_slice(&(rec.probes.len() as u16).to_le_bytes());
+    for &(seed, g) in &rec.probes {
+        out.extend_from_slice(&seed.to_le_bytes());
+        out.extend_from_slice(&g.to_le_bytes());
+    }
+}
+
+impl Dec<'_> {
+    /// Decode one [`CommitRecord`] (wire layout = disk layout).
+    fn commit_record(&mut self) -> Result<CommitRecord> {
+        let step = self.u64("commit.step")?;
+        let eps = self.f32("commit.eps")?;
+        let mode = self.u8("commit.mode")?;
+        ensure!(mode <= 1, "unknown commit mode {mode} (0 = multi, 1 = pairwise)");
+        let q = u16::from_le_bytes(self.take(2, "commit.q")?.try_into().expect("2 bytes"))
+            as usize;
+        ensure!(q >= 1, "commit record claims q = 0 probes");
+        ensure!(
+            !(mode == 1 && q != 1),
+            "pairwise commit record claims q = {q} (pairwise records have exactly one probe)"
+        );
+        let mut probes = Vec::with_capacity(q);
+        for _ in 0..q {
+            let seed = self.u64("commit.seed")?;
+            let g = self.f32("commit.g")?;
+            probes.push((seed, g));
+        }
+        Ok(CommitRecord { step, eps, pairwise: mode == 1, probes })
+    }
+}
+
 /// Encode a [`Request`] payload (tag + little-endian fields).
 pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut out = Vec::new();
@@ -361,6 +404,20 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             out.extend_from_slice(&seed.to_le_bytes());
             out.extend_from_slice(&eps.to_le_bytes());
             out.extend_from_slice(&g.to_le_bytes());
+        }
+        Request::ProbePoint { step, seed, eps, q, point, shards } => {
+            out.push(tag::REQ_PROBE_POINT);
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&seed.to_le_bytes());
+            out.extend_from_slice(&eps.to_le_bytes());
+            out.extend_from_slice(&(*q as u64).to_le_bytes());
+            out.extend_from_slice(&(*point as u64).to_le_bytes());
+            out.extend_from_slice(&(shards.start as u64).to_le_bytes());
+            out.extend_from_slice(&(shards.end as u64).to_le_bytes());
+        }
+        Request::ApplyMulti { record } => {
+            out.push(tag::REQ_APPLY_MULTI);
+            put_commit(&mut out, record);
         }
         Request::Fetch => out.push(tag::REQ_FETCH),
         Request::Shutdown => out.push(tag::REQ_SHUTDOWN),
@@ -387,6 +444,23 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
             eps: d.f32("eps")?,
             g: d.f32("g")?,
         },
+        tag::REQ_PROBE_POINT => {
+            let step = d.u64("step")?;
+            let seed = d.u64("seed")?;
+            let eps = d.f32("eps")?;
+            let q = d.usize("q")?;
+            let point = d.usize("point")?;
+            let lo = d.usize("shards.start")?;
+            let hi = d.usize("shards.end")?;
+            ensure!(q >= 1, "probe-point request claims q = 0 probes");
+            ensure!(
+                point <= q,
+                "probe-point index {point} is out of range (q = {q}; q itself is the baseline)"
+            );
+            ensure!(lo <= hi, "probe-point shard range {lo}..{hi} is inverted");
+            Request::ProbePoint { step, seed, eps, q, point, shards: lo..hi }
+        }
+        tag::REQ_APPLY_MULTI => Request::ApplyMulti { record: d.commit_record()? },
         tag::REQ_FETCH => Request::Fetch,
         tag::REQ_SHUTDOWN => Request::Shutdown,
         other => bail!("unknown request tag {other:#04x}"),
@@ -408,11 +482,27 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
             put_f64s(&mut out, plus);
             put_f64s(&mut out, minus);
         }
-        Reply::Applied { worker, step, digest } => {
+        Reply::Applied { worker, step, digest, clip } => {
             out.push(tag::REP_APPLIED);
             out.extend_from_slice(&(*worker as u64).to_le_bytes());
             out.extend_from_slice(&step.to_le_bytes());
             out.extend_from_slice(&digest.to_le_bytes());
+            match clip {
+                Some(c) => {
+                    out.push(1);
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+                None => out.push(0),
+            }
+        }
+        Reply::ProbePoint { worker, step, point, shards, partials } => {
+            out.push(tag::REP_PROBE_POINT);
+            out.extend_from_slice(&(*worker as u64).to_le_bytes());
+            out.extend_from_slice(&step.to_le_bytes());
+            out.extend_from_slice(&(*point as u64).to_le_bytes());
+            out.extend_from_slice(&(shards.start as u64).to_le_bytes());
+            out.extend_from_slice(&(shards.end as u64).to_le_bytes());
+            put_f64s(&mut out, partials);
         }
         Reply::Params { worker, applied_through, codec, payload } => {
             out.push(tag::REP_PARAMS);
@@ -445,11 +535,27 @@ pub fn decode_reply(payload: &[u8]) -> Result<Reply> {
             let minus = d.f64_vec("minus")?;
             Reply::Probe { worker, step, shards: lo..hi, plus, minus }
         }
-        tag::REP_APPLIED => Reply::Applied {
-            worker: d.usize("worker")?,
-            step: d.u64("step")?,
-            digest: d.u64("digest")?,
-        },
+        tag::REP_APPLIED => {
+            let worker = d.usize("worker")?;
+            let step = d.u64("step")?;
+            let digest = d.u64("digest")?;
+            let clip = match d.u8("clip.present")? {
+                0 => None,
+                1 => Some(d.f64("clip")?),
+                other => bail!("bad clip-presence byte {other:#04x} (expected 0 or 1)"),
+            };
+            Reply::Applied { worker, step, digest, clip }
+        }
+        tag::REP_PROBE_POINT => {
+            let worker = d.usize("worker")?;
+            let step = d.u64("step")?;
+            let point = d.usize("point")?;
+            let lo = d.usize("shards.start")?;
+            let hi = d.usize("shards.end")?;
+            ensure!(lo <= hi, "probe-point-reply shard range {lo}..{hi} is inverted");
+            let partials = d.f64_vec("partials")?;
+            Reply::ProbePoint { worker, step, point, shards: lo..hi, partials }
+        }
         tag::REP_PARAMS => Reply::Params {
             worker: d.usize("worker")?,
             applied_through: d.u64("applied_through")?,
@@ -472,17 +578,81 @@ pub fn decode_reply(payload: &[u8]) -> Result<Reply> {
 pub fn reply_step(reply: &Reply) -> Option<u64> {
     match reply {
         Reply::Probe { step, .. }
+        | Reply::ProbePoint { step, .. }
         | Reply::Applied { step, .. }
         | Reply::Failed { step, .. } => Some(*step),
         Reply::Params { .. } => None,
     }
 }
 
+/// The run configuration a lane must agree on beyond seed and arena: a
+/// worker dialed with a mismatched `--opt` / `--lr` / `--eps` / step
+/// budget / probe count would join cleanly and then diverge steps later
+/// with an opaque unanimous-digest failure. The fingerprint travels in
+/// [`Hello`] so the coordinator can refuse at connect time with a
+/// message naming the differing field.
+///
+/// Floats are compared by **bit pattern** (`to_bits`) — the replicas run
+/// bitwise-identical arithmetic, so "close" is not good enough.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigFingerprint {
+    /// Optimizer zoo name (e.g. `"mezo"`, `"helene"`).
+    pub opt: String,
+    /// Learning rate.
+    pub lr: f32,
+    /// SPSA probe radius ε.
+    pub eps: f32,
+    /// Total step budget of the run.
+    pub steps: u64,
+    /// Probes per step (q; 1 = classic antithetic pairwise).
+    pub probes: u32,
+}
+
+impl ConfigFingerprint {
+    /// The first field on which `dialed` differs from `self` (the
+    /// coordinator's config), as an actionable refusal message — `None`
+    /// when the fingerprints agree.
+    pub fn mismatch_against(&self, dialed: &ConfigFingerprint) -> Option<String> {
+        if self.opt != dialed.opt {
+            return Some(format!(
+                "optimizer mismatch: coordinator runs {:?}, worker dialed with {:?}",
+                self.opt, dialed.opt
+            ));
+        }
+        if self.lr.to_bits() != dialed.lr.to_bits() {
+            return Some(format!(
+                "lr mismatch: coordinator uses {}, worker dialed with {}",
+                self.lr, dialed.lr
+            ));
+        }
+        if self.eps.to_bits() != dialed.eps.to_bits() {
+            return Some(format!(
+                "eps mismatch: coordinator uses {}, worker dialed with {}",
+                self.eps, dialed.eps
+            ));
+        }
+        if self.steps != dialed.steps {
+            return Some(format!(
+                "step-budget mismatch: coordinator runs {} steps, worker dialed with {}",
+                self.steps, dialed.steps
+            ));
+        }
+        if self.probes != dialed.probes {
+            return Some(format!(
+                "probe-count mismatch: coordinator runs q = {}, worker dialed with q = {}",
+                self.probes, dialed.probes
+            ));
+        }
+        None
+    }
+}
+
 /// The worker's opening handshake message: identifies the dialer and
 /// pins the run configuration, so a lane only goes live between a
 /// coordinator and a worker that agree on protocol version, run seed,
-/// slot, and step-0 arena.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// slot, step-0 arena, **and** the config fingerprint (optimizer, lr,
+/// eps, step budget, probe count).
+#[derive(Clone, Debug, PartialEq)]
 pub struct Hello {
     /// The dialer's [`PROTOCOL_VERSION`].
     pub version: u32,
@@ -497,11 +667,14 @@ pub struct Hello {
     /// [`super::param_digest`] of the worker's step-0 arena; must equal
     /// the coordinator's, or replay could never converge.
     pub base_digest: u64,
+    /// The run config the worker was dialed with; any field differing
+    /// from the coordinator's is a refusal naming that field.
+    pub fingerprint: ConfigFingerprint,
 }
 
 /// Encode a [`Hello`] payload.
 pub fn encode_hello(h: &Hello) -> Vec<u8> {
-    let mut out = Vec::with_capacity(1 + 8 + 4 + 8 + 8 + 8 + 8);
+    let mut out = Vec::new();
     out.push(tag::HELLO);
     out.extend_from_slice(&HELLO_MAGIC);
     out.extend_from_slice(&h.version.to_le_bytes());
@@ -509,12 +682,17 @@ pub fn encode_hello(h: &Hello) -> Vec<u8> {
     out.extend_from_slice(&(h.slot as u64).to_le_bytes());
     out.extend_from_slice(&h.incarnation.to_le_bytes());
     out.extend_from_slice(&h.base_digest.to_le_bytes());
+    put_bytes(&mut out, h.fingerprint.opt.as_bytes());
+    out.extend_from_slice(&h.fingerprint.lr.to_le_bytes());
+    out.extend_from_slice(&h.fingerprint.eps.to_le_bytes());
+    out.extend_from_slice(&h.fingerprint.steps.to_le_bytes());
+    out.extend_from_slice(&h.fingerprint.probes.to_le_bytes());
     out
 }
 
 /// Decode a [`Hello`] payload (tag + magic validated here; version /
-/// seed / digest equality is the acceptor's job, which knows both
-/// sides' values and can produce a better error).
+/// seed / digest / fingerprint equality is the acceptor's job, which
+/// knows both sides' values and can produce a better error).
 pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
     let mut d = Dec::new(payload);
     let t = d.u8("hello tag")?;
@@ -530,6 +708,13 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
         slot: d.usize("slot")?,
         incarnation: d.u64("incarnation")?,
         base_digest: d.u64("base_digest")?,
+        fingerprint: ConfigFingerprint {
+            opt: d.string("fingerprint.opt")?,
+            lr: d.f32("fingerprint.lr")?,
+            eps: d.f32("fingerprint.eps")?,
+            steps: d.u64("fingerprint.steps")?,
+            probes: d.u32("fingerprint.probes")?,
+        },
     };
     d.done("hello")?;
     Ok(hello)
@@ -538,17 +723,18 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
 /// The coordinator's answer to a [`Hello`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum HelloReply {
-    /// Lane accepted. Carries the full committed seed log, so the worker
+    /// Lane accepted. Carries the full committed log, so the worker
     /// rebuilds its replica bitwise (step-0 arena + replay) before
-    /// serving — reconnect-by-replay over the wire.
+    /// serving — reconnect-by-replay over the wire. Records are the
+    /// unified pairwise-or-multi [`CommitRecord`] form.
     Ack {
         /// The coordinator's protocol version (echoed for symmetry).
         version: u32,
-        /// Every `(step, seed, g, eps)` record committed so far.
-        records: Vec<SeedRecord>,
+        /// Every commit record committed so far, in step order.
+        records: Vec<CommitRecord>,
     },
-    /// Lane refused (version / seed / slot / digest mismatch); the
-    /// connection is closed after this message.
+    /// Lane refused (version / seed / slot / digest / config-fingerprint
+    /// mismatch); the connection is closed after this message.
     Err {
         /// Human-readable refusal reason.
         msg: String,
@@ -564,10 +750,7 @@ pub fn encode_hello_reply(reply: &HelloReply) -> Vec<u8> {
             out.extend_from_slice(&version.to_le_bytes());
             out.extend_from_slice(&(records.len() as u64).to_le_bytes());
             for r in records {
-                out.extend_from_slice(&r.step.to_le_bytes());
-                out.extend_from_slice(&r.seed.to_le_bytes());
-                out.extend_from_slice(&r.g.to_le_bytes());
-                out.extend_from_slice(&r.eps.to_le_bytes());
+                put_commit(&mut out, r);
             }
         }
         HelloReply::Err { msg } => {
@@ -584,15 +767,12 @@ pub fn decode_hello_reply(payload: &[u8]) -> Result<HelloReply> {
     let reply = match d.u8("hello-reply tag")? {
         tag::HELLO_ACK => {
             let version = d.u32("version")?;
-            let n = d.len_prefix(SeedRecord::BYTES, "records")?;
+            // records are variable-length; bound the allocation by the
+            // minimum (header-only) record size
+            let n = d.len_prefix(CommitRecord::HEADER_BYTES, "records")?;
             let mut records = Vec::with_capacity(n);
             for _ in 0..n {
-                records.push(SeedRecord {
-                    step: d.u64("record.step")?,
-                    seed: d.u64("record.seed")?,
-                    g: d.f32("record.g")?,
-                    eps: d.f32("record.eps")?,
-                });
+                records.push(d.commit_record()?);
             }
             HelloReply::Ack { version, records }
         }
@@ -758,6 +938,17 @@ mod tests {
         let reqs = [
             Request::Probe { step: 9, seed: 0xDEAD_BEEF, eps: 1e-3, shards: 2..5 },
             Request::Apply { step: 9, seed: 1, eps: 1e-3, g: -0.25 },
+            Request::ProbePoint { step: 9, seed: 77, eps: 1e-3, q: 4, point: 2, shards: 1..6 },
+            // point == q addresses the shared baseline
+            Request::ProbePoint { step: 9, seed: 77, eps: 1e-3, q: 4, point: 4, shards: 0..2 },
+            Request::ApplyMulti {
+                record: CommitRecord::multi(
+                    9,
+                    1e-3,
+                    vec![(77, 0.5), (78, -0.125), (79, 2.25), (80, 0.0)],
+                ),
+            },
+            Request::ApplyMulti { record: CommitRecord::pairwise(3, 42, -0.5, 1e-3) },
             Request::Fetch,
             Request::Shutdown,
         ];
@@ -765,6 +956,32 @@ mod tests {
             let got = decode_request(&encode_request(&req)).unwrap();
             assert_eq!(got, req);
         }
+    }
+
+    #[test]
+    fn probe_point_decode_validates_ranges() {
+        // point beyond the baseline index q is rejected
+        let bad = encode_request(&Request::ProbePoint {
+            step: 1,
+            seed: 2,
+            eps: 1e-3,
+            q: 4,
+            point: 5,
+            shards: 0..1,
+        });
+        let err = format!("{:#}", decode_request(&bad).unwrap_err());
+        assert!(err.contains("out of range"), "{err}");
+        // q = 0 is rejected
+        let bad = encode_request(&Request::ProbePoint {
+            step: 1,
+            seed: 2,
+            eps: 1e-3,
+            q: 0,
+            point: 0,
+            shards: 0..1,
+        });
+        let err = format!("{:#}", decode_request(&bad).unwrap_err());
+        assert!(err.contains("q = 0"), "{err}");
     }
 
     #[test]
@@ -777,7 +994,15 @@ mod tests {
                 plus: vec![1.5, -2.25, f64::MIN_POSITIVE],
                 minus: vec![0.0, 3.5, 4.75],
             },
-            Reply::Applied { worker: 1, step: 7, digest: 0xABCD_EF01_2345_6789 },
+            Reply::Applied { worker: 1, step: 7, digest: 0xABCD_EF01_2345_6789, clip: None },
+            Reply::Applied { worker: 1, step: 8, digest: 0x1111, clip: Some(0.375) },
+            Reply::ProbePoint {
+                worker: 2,
+                step: 7,
+                point: 3,
+                shards: 1..4,
+                partials: vec![0.5, -1.25, 9.0],
+            },
             Reply::Params {
                 worker: 0,
                 applied_through: 12,
@@ -792,6 +1017,7 @@ mod tests {
             match &reply {
                 Reply::Params { .. } => assert_eq!(reply_step(&reply), None),
                 Reply::Probe { step, .. }
+                | Reply::ProbePoint { step, .. }
                 | Reply::Applied { step, .. }
                 | Reply::Failed { step, .. } => assert_eq!(reply_step(&reply), Some(*step)),
             }
@@ -806,18 +1032,53 @@ mod tests {
             slot: 2,
             incarnation: 3,
             base_digest: 0x1234_5678_9ABC_DEF0,
+            fingerprint: ConfigFingerprint {
+                opt: "helene".into(),
+                lr: 0.01,
+                eps: 1e-3,
+                steps: 50,
+                probes: 4,
+            },
         };
         assert_eq!(decode_hello(&encode_hello(&hello)).unwrap(), hello);
+        // mixed pairwise + multi records replay through one ack
         let ack = HelloReply::Ack {
             version: PROTOCOL_VERSION,
             records: vec![
-                SeedRecord { step: 1, seed: 42, g: 0.5, eps: 1e-3 },
-                SeedRecord { step: 2, seed: 43, g: -0.25, eps: 1e-3 },
+                CommitRecord::pairwise(1, 42, 0.5, 1e-3),
+                CommitRecord::multi(2, 1e-3, vec![(43, -0.25), (44, 0.75)]),
             ],
         };
         assert_eq!(decode_hello_reply(&encode_hello_reply(&ack)).unwrap(), ack);
         let refuse = HelloReply::Err { msg: "run seed mismatch".into() };
         assert_eq!(decode_hello_reply(&encode_hello_reply(&refuse)).unwrap(), refuse);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_names_the_first_differing_field() {
+        let ours = ConfigFingerprint {
+            opt: "mezo".into(),
+            lr: 0.01,
+            eps: 1e-3,
+            steps: 50,
+            probes: 4,
+        };
+        assert_eq!(ours.mismatch_against(&ours.clone()), None);
+        let cases: [(ConfigFingerprint, &str); 5] = [
+            (ConfigFingerprint { opt: "helene".into(), ..ours.clone() }, "optimizer mismatch"),
+            (ConfigFingerprint { lr: 0.02, ..ours.clone() }, "lr mismatch"),
+            (ConfigFingerprint { eps: 1e-4, ..ours.clone() }, "eps mismatch"),
+            (ConfigFingerprint { steps: 49, ..ours.clone() }, "step-budget mismatch"),
+            (ConfigFingerprint { probes: 1, ..ours.clone() }, "probe-count mismatch"),
+        ];
+        for (theirs, want) in cases {
+            let msg = ours.mismatch_against(&theirs).unwrap();
+            assert!(msg.contains(want), "expected {want:?} in {msg:?}");
+        }
+        // floats compare by bits: -0.0 vs 0.0 is a mismatch
+        let neg = ConfigFingerprint { lr: -0.0, ..ours.clone() };
+        let pos = ConfigFingerprint { lr: 0.0, ..ours.clone() };
+        assert!(pos.mismatch_against(&neg).unwrap().contains("lr mismatch"));
     }
 
     #[test]
@@ -850,10 +1111,24 @@ mod tests {
         // wrong-side tag
         let err = format!(
             "{:#}",
-            decode_request(&encode_reply(&Reply::Applied { worker: 0, step: 1, digest: 2 }))
-                .unwrap_err()
+            decode_request(&encode_reply(&Reply::Applied {
+                worker: 0,
+                step: 1,
+                digest: 2,
+                clip: None,
+            }))
+            .unwrap_err()
         );
         assert!(err.contains("unknown request tag"), "{err}");
+        // an apply-multi whose commit record claims q = 0
+        let mut am = encode_request(&Request::ApplyMulti {
+            record: CommitRecord::multi(1, 1e-3, vec![(7, 0.5)]),
+        });
+        let qoff = am.len() - CommitRecord::PROBE_BYTES - 2;
+        am[qoff..qoff + 2].copy_from_slice(&0u16.to_le_bytes());
+        am.truncate(am.len() - CommitRecord::PROBE_BYTES);
+        let err = format!("{:#}", decode_request(&am).unwrap_err());
+        assert!(err.contains("q = 0"), "{err}");
         // hello magic
         let mut hello = encode_hello(&Hello {
             version: 1,
@@ -861,9 +1136,21 @@ mod tests {
             slot: 0,
             incarnation: 0,
             base_digest: 0,
+            fingerprint: ConfigFingerprint::default(),
         });
         hello[3] ^= 0xFF;
         let err = format!("{:#}", decode_hello(&hello).unwrap_err());
         assert!(err.contains("bad handshake magic"), "{err}");
+        // a truncated hello names the missing fingerprint field
+        let full = encode_hello(&Hello {
+            version: 1,
+            run_seed: 0,
+            slot: 0,
+            incarnation: 0,
+            base_digest: 0,
+            fingerprint: ConfigFingerprint { opt: "mezo".into(), ..Default::default() },
+        });
+        let err = format!("{:#}", decode_hello(&full[..full.len() - 2]).unwrap_err());
+        assert!(err.contains("fingerprint"), "{err}");
     }
 }

@@ -18,11 +18,22 @@
 //!   identical to the single-worker `ZoProtocol`);
 //! * messages travel over a [`Transport`] — in-process channels
 //!   ([`ChannelTransport`]) or real TCP sockets ([`SocketTransport`],
-//!   with checksummed framing, a run-identity handshake, and
-//!   reconnect-by-replay) — and every committed step is appended to a
-//!   persistent seed log ([`crate::model::checkpoint::SeedRecord`]), so
-//!   a dead worker is replaced by replaying ~24 bytes/step
-//!   ([`replay_seed_log`]).
+//!   with checksummed framing, a run-identity + config-fingerprint
+//!   handshake, and reconnect-by-replay) — and every committed step is
+//!   appended to a persistent log
+//!   ([`crate::model::checkpoint::CommitRecord`]), so a dead worker is
+//!   replaced by replaying a few dozen bytes/step
+//!   ([`replay_commit_log`]).
+//!
+//! With `DistConfig::probes = q > 1` the coordinator schedules a
+//! `(probe point, shard span)` work grid per step: workers concurrently
+//! evaluate **different** probe seeds (probe i's seed is
+//! `spsa::probe_seed(step_seed, i)`; probe 0 is the step seed itself,
+//! keeping the prefetch machinery armed), each point reached by walking
+//! the single-process transition chain (see [`multi_probe_cycle`]), all
+//! folded against one shared baseline and committed as a single
+//! multi-record — bitwise identical to the single-process
+//! `ZoProtocol::step_multi` trajectory.
 //!
 //! Robustness is a first-class, tested property: the deterministic
 //! [`FaultPlan`] harness injects worker death, dropped / delayed
@@ -48,6 +59,7 @@ use anyhow::{ensure, Result};
 
 pub use coordinator::{Coordinator, DistConfig, DistReport, DistStats};
 pub use fault::{Fault, FaultPlan};
+pub use frame::ConfigFingerprint;
 pub use socket::{
     resolve_addr, run_socket_worker, FaultProxy, SocketConfig, SocketEndpoint, SocketTransport,
 };
@@ -56,7 +68,7 @@ pub use transport::{
 };
 pub use worker::{run_worker, Action, Worker, WorkerExit};
 
-use crate::model::checkpoint::SeedRecord;
+use crate::model::checkpoint::{CommitRecord, SeedRecord};
 use crate::model::manifest::VariantSpec;
 use crate::model::params::SHARD_SIZE;
 use crate::model::ParamSet;
@@ -105,6 +117,24 @@ pub fn probe_cycle(params: &mut ParamSet, seed: u64, eps: f32) {
     params.perturb_trainable(seed, eps);
 }
 
+/// The canonical multi-probe walk of the single-process pipeline,
+/// without loss evaluations: `+εz_0`, then the fused `(−εz_i, +εz_{i+1})`
+/// transition for each consecutive probe pair, then `−εz_{q−1}` — ending
+/// at the **walked** θ whose accumulated f32 rounding is part of the
+/// canonical `step_multi` trajectory. Every replica runs this exactly
+/// once per committed multi step (at apply time or during replay),
+/// immediately before `Optimizer::step_zo_multi`.
+pub fn multi_probe_cycle(params: &mut ParamSet, seeds: &[u64], eps: f32) {
+    if seeds.is_empty() {
+        return;
+    }
+    params.perturb_trainable(seeds[0], eps);
+    for pair in seeds.windows(2) {
+        params.perturb_trainable2(pair[0], -eps, pair[1], eps);
+    }
+    params.perturb_trainable(seeds[seeds.len() - 1], -eps);
+}
+
 /// FNV-1a digest of the replica payload bytes — the cheap cross-replica
 /// divergence check collected after every commit broadcast.
 pub fn param_digest(params: &ParamSet) -> u64 {
@@ -117,13 +147,15 @@ pub fn param_digest(params: &ParamSet) -> u64 {
 }
 
 /// Rebuild parameters purely from the step-0 arena and the persisted
-/// seed log: for each record, the canonical [`probe_cycle`] followed by
-/// the optimizer update. This is the replay-recovery invariant — the
-/// result is bitwise identical to a replica that lived through the run.
-pub fn replay_seed_log(
+/// commit log: pairwise records run the canonical [`probe_cycle`] then
+/// `step_zo`; multi records run [`multi_probe_cycle`] over the probe
+/// seeds then `step_zo_multi` on the 1/q-averaged probes. This is the
+/// replay-recovery invariant — the result is bitwise identical to a
+/// replica that lived through the run.
+pub fn replay_commit_log(
     base: &ParamSet,
     opt: &mut dyn Optimizer,
-    records: &[SeedRecord],
+    records: &[CommitRecord],
 ) -> Result<ParamSet> {
     opt.init(base);
     let mut params = base.clone();
@@ -131,15 +163,35 @@ pub fn replay_seed_log(
     for r in records {
         ensure!(
             r.step == applied + 1,
-            "seed log is not contiguous: expected step {}, found step {}",
+            "commit log is not contiguous: expected step {}, found step {}",
             applied + 1,
             r.step
         );
-        probe_cycle(&mut params, r.seed, r.eps);
-        opt.step_zo(&mut params, r.g, r.seed)?;
+        ensure!(!r.probes.is_empty(), "commit record for step {} carries no probes", r.step);
+        if r.pairwise {
+            let (seed, g) = r.probes[0];
+            probe_cycle(&mut params, seed, r.eps);
+            opt.step_zo(&mut params, g, seed)?;
+        } else {
+            let seeds: Vec<u64> = r.probes.iter().map(|&(s, _)| s).collect();
+            multi_probe_cycle(&mut params, &seeds, r.eps);
+            opt.step_zo_multi(&mut params, &r.averaged_probes())?;
+        }
         applied = r.step;
     }
     Ok(params)
+}
+
+/// Rebuild parameters from a v1 (pairwise-only) seed log — a thin
+/// wrapper over [`replay_commit_log`], kept for pre-v2 log files.
+pub fn replay_seed_log(
+    base: &ParamSet,
+    opt: &mut dyn Optimizer,
+    records: &[SeedRecord],
+) -> Result<ParamSet> {
+    let records: Vec<CommitRecord> =
+        records.iter().map(|&r| CommitRecord::from(r)).collect();
+    replay_commit_log(base, opt, &records)
 }
 
 /// Partition the arena's shards into up to `workers` contiguous spans,
@@ -371,5 +423,58 @@ mod tests {
         let mut c = ParamSet::synthetic(&[9_000], 0.5);
         probe_cycle(&mut c, 77, 1e-3);
         assert_eq!(param_digest(&a), param_digest(&c));
+    }
+
+    #[test]
+    fn multi_probe_cycle_matches_the_separate_sweep_chain() {
+        // the fused (−εz_i, +εz_{i+1}) transitions must land on the same
+        // bits as the separate-sweep walk — the chain every replica and
+        // the single-process pipeline share
+        let seeds: Vec<u64> = (0..4).map(|i| crate::optim::spsa::probe_seed(99, i)).collect();
+        let eps = 1e-3;
+        let mut a = ParamSet::synthetic(&[9_000, 4_000], 0.5);
+        let mut b = a.clone();
+        multi_probe_cycle(&mut a, &seeds, eps);
+        b.perturb_trainable(seeds[0], eps);
+        for pair in seeds.windows(2) {
+            b.perturb_trainable2(pair[0], -eps, pair[1], eps);
+        }
+        b.perturb_trainable(seeds[3], -eps);
+        assert!(a.bits_eq(&b));
+        // q = 1 degenerates to +εz then −εz (no transitions)
+        let mut c = ParamSet::synthetic(&[9_000, 4_000], 0.5);
+        let mut d = c.clone();
+        multi_probe_cycle(&mut c, &seeds[..1], eps);
+        d.perturb_trainable(seeds[0], eps);
+        d.perturb_trainable(seeds[0], -eps);
+        assert!(c.bits_eq(&d));
+    }
+
+    #[test]
+    fn replay_commit_log_handles_pairwise_and_rejects_gaps() {
+        use crate::optim::by_name;
+        let base = ParamSet::synthetic(&[9_000], 0.5);
+        // a pairwise commit log replays exactly like the v1 seed-log path
+        let v1 = [
+            SeedRecord { step: 1, seed: 5, g: 0.25, eps: 1e-3 },
+            SeedRecord { step: 2, seed: 6, g: -0.5, eps: 1e-3 },
+        ];
+        let v2: Vec<CommitRecord> = v1.iter().map(|&r| CommitRecord::from(r)).collect();
+        let mut opt_a = by_name("mezo", 0.01).unwrap();
+        let mut opt_b = by_name("mezo", 0.01).unwrap();
+        let a = replay_seed_log(&base, opt_a.as_mut(), &v1).unwrap();
+        let b = replay_commit_log(&base, opt_b.as_mut(), &v2).unwrap();
+        assert!(a.bits_eq(&b));
+        // a gapped log is rejected with a contiguity error
+        let gapped = [
+            CommitRecord::pairwise(1, 5, 0.25, 1e-3),
+            CommitRecord::multi(3, 1e-3, vec![(7, 0.5), (8, -0.25)]),
+        ];
+        let mut opt_c = by_name("mezo", 0.01).unwrap();
+        let err = format!(
+            "{:#}",
+            replay_commit_log(&base, opt_c.as_mut(), &gapped).unwrap_err()
+        );
+        assert!(err.contains("not contiguous"), "{err}");
     }
 }

@@ -14,16 +14,23 @@
 //!   the stateful [`FrameReader`], while corruption, oversized prefixes
 //!   and mid-frame EOF kill the lane with byte-offset context.
 //! * **Handshake.** A dialing worker opens with [`Hello`] (protocol
-//!   version, run seed, slot, step-0 arena digest). The coordinator
-//!   verifies all four before the lane goes live and answers with the
-//!   full committed seed log; a mismatch gets a [`HelloReply::Err`] and
-//!   a closed connection.
-//! * **Reconnect-by-replay.** The ack's seed log is not an optimization
-//!   — it is the recovery contract. On *every* successful handshake the
-//!   worker rebuilds its replica from its retained step-0 arena plus the
-//!   acked log ([`Worker::rebuild`]), so a worker that dropped,
-//!   redialed, or missed any number of commit broadcasts is bitwise a
-//!   seed-log replacement. The coordinator pushes each record into the
+//!   version, run seed, slot, step-0 arena digest, and the training
+//!   [`ConfigFingerprint`] — optimizer name, lr, eps, step budget,
+//!   probe count). The coordinator verifies all of them before the lane
+//!   goes live and answers with the full committed commit log; a
+//!   mismatch gets a [`HelloReply::Err`] *naming the differing field*
+//!   and a closed connection. The fingerprint check closes the silent
+//!   config-mismatch hole: a worker dialed with the wrong lr or eps
+//!   used to pass the handshake and only fail steps later with an
+//!   inscrutable replica-digest divergence.
+//! * **Reconnect-by-replay.** The ack's commit log is not an
+//!   optimization — it is the recovery contract. On *every* successful
+//!   handshake the worker rebuilds its replica from its retained step-0
+//!   arena plus the acked log ([`Worker::rebuild`]), so a worker that
+//!   dropped, redialed, or missed any number of commit broadcasts is
+//!   bitwise a log replacement — including multi-probe records, which
+//!   replay through the same `Optimizer::step_zo_multi` arithmetic the
+//!   live apply path uses. The coordinator pushes each record into the
 //!   transport *before* the apply broadcast ([`Transport::on_commit`]),
 //!   so even a mid-apply handshake ships a log containing the step in
 //!   flight.
@@ -47,13 +54,13 @@ use super::fault::{Fault, FaultPlan};
 use super::frame::{
     decode_hello, decode_hello_reply, decode_reply, decode_request, encode_frame,
     encode_hello, encode_hello_reply, encode_reply, encode_request, reply_step,
-    FrameProgress, FrameReader, Hello, HelloReply, DEFAULT_MAX_FRAME_BYTES,
-    PROTOCOL_VERSION,
+    ConfigFingerprint, FrameProgress, FrameReader, Hello, HelloReply,
+    DEFAULT_MAX_FRAME_BYTES, PROTOCOL_VERSION,
 };
 use super::transport::{Disconnected, Reply, Request, Transport};
 use super::worker::{Action, Worker, WorkerExit};
 use super::{param_digest, WorkerFactory};
-use crate::model::checkpoint::SeedRecord;
+use crate::model::checkpoint::CommitRecord;
 use crate::model::ParamSet;
 
 /// Socket-level knobs, distinct from the protocol-level [`DistConfig`]
@@ -95,6 +102,15 @@ pub struct SocketConfig {
     /// Print a note when `await_live` starts waiting on a slot (the
     /// two-terminal `--listen` UX; off in tests).
     pub announce_waits: bool,
+    /// The run's training-config fingerprint. The coordinator verifies
+    /// a dialing worker's fingerprint field-by-field at handshake and
+    /// refuses on the first difference, naming the field — so a worker
+    /// started with, say, the wrong `--lr` is rejected at connect
+    /// instead of silently diverging and failing a replica-digest check
+    /// steps later. The default (empty optimizer name, zero scalars) is
+    /// fine for tests that construct both ends from the same
+    /// `SocketConfig`; the CLI always fills it in.
+    pub fingerprint: ConfigFingerprint,
 }
 
 impl Default for SocketConfig {
@@ -110,6 +126,7 @@ impl Default for SocketConfig {
             await_live_timeout: Duration::from_secs(10),
             restart_on_fault: true,
             announce_waits: false,
+            fingerprint: ConfigFingerprint::default(),
         }
     }
 }
@@ -145,8 +162,9 @@ struct SocketShared {
     slots: usize,
     lanes: Mutex<LaneTable>,
     live: Condvar,
-    /// The committed seed log, snapshotted into every handshake ack.
-    log: Mutex<Vec<SeedRecord>>,
+    /// The committed log (pairwise and multi-probe records alike),
+    /// snapshotted into every handshake ack.
+    log: Mutex<Vec<CommitRecord>>,
     closing: AtomicBool,
 }
 
@@ -361,6 +379,9 @@ fn validate_hello(shared: &SocketShared, hello: &Hello) -> std::result::Result<(
             shared.base_digest, hello.base_digest
         ));
     }
+    if let Some(msg) = shared.cfg.fingerprint.mismatch_against(&hello.fingerprint) {
+        return Err(msg);
+    }
     Ok(())
 }
 
@@ -453,8 +474,8 @@ impl Transport for SocketTransport {
         }
     }
 
-    fn on_commit(&mut self, rec: &SeedRecord) {
-        lock(&self.shared.log).push(*rec);
+    fn on_commit(&mut self, rec: &CommitRecord) {
+        lock(&self.shared.log).push(rec.clone());
     }
 
     fn await_live(&mut self, slot: usize) -> Result<(), Disconnected> {
@@ -533,8 +554,9 @@ enum ServeEnd {
 /// [`WorkerExit::Fault`] when an injected death fires and in-place
 /// restart is off, and [`WorkerExit::LinkClosed`] once the redial
 /// budget is exhausted against a vanished coordinator. A handshake
-/// *refusal* (version / seed / digest mismatch) is a configuration
-/// error, not a transient: it returns `Err` immediately.
+/// *refusal* (version / seed / digest / config-fingerprint mismatch) is
+/// a configuration error, not a transient: it returns `Err` immediately
+/// with the coordinator's field-naming reason.
 pub fn run_socket_worker(
     mut worker: Worker,
     base: ParamSet,
@@ -613,13 +635,14 @@ fn handshake_dial(
     stream: &mut TcpStream,
     ep: &SocketEndpoint,
     incarnation: u64,
-) -> Result<Option<Vec<SeedRecord>>> {
+) -> Result<Option<Vec<CommitRecord>>> {
     let hello = Hello {
         version: PROTOCOL_VERSION,
         run_seed: ep.run_seed,
         slot: ep.slot,
         incarnation,
         base_digest: ep.base_digest,
+        fingerprint: ep.cfg.fingerprint.clone(),
     };
     if write_frame(stream, &encode_hello(&hello)).is_err() {
         return Ok(None);

@@ -20,7 +20,7 @@ use std::ops::Range;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::time::Instant;
 
-use crate::model::checkpoint::SeedRecord;
+use crate::model::checkpoint::CommitRecord;
 use crate::model::params::Codec;
 
 /// A request from the coordinator to one worker.
@@ -56,6 +56,39 @@ pub enum Request {
         /// The aggregated SPSA gradient scale.
         g: f32,
     },
+    /// Evaluate ONE point of a multi-probe step: the worker snapshots
+    /// its replica, walks the single-process transition chain to probe
+    /// point `point` (`+εz_0` then `point` chained `(−εz_j, +εz_{j+1})`
+    /// transitions — bitwise the pipeline's path, NOT a direct `θ+εz_i`
+    /// perturb), evaluates per-shard partials over `shards`, and
+    /// restores. `point == q` addresses the shared baseline, evaluated
+    /// at the **walked** θ (full cycle applied) so its bits match the
+    /// single-process `estimate_multi_*` baseline. Idempotent like
+    /// [`Request::Probe`].
+    ProbePoint {
+        /// 1-based global step index.
+        step: u64,
+        /// The STEP seed; the worker derives probe seed i via
+        /// `spsa::probe_seed(seed, i)` (probe 0 is the step seed itself,
+        /// keeping the prefetch machinery armed).
+        seed: u64,
+        /// Probe radius ε.
+        eps: f32,
+        /// Probes per step.
+        q: usize,
+        /// Which point to evaluate: `0..q` are probes, `q` the baseline.
+        point: usize,
+        /// Half-open range of global shard indices to evaluate.
+        shards: Range<usize>,
+    },
+    /// Commit a step in the unified record form: pairwise records run
+    /// the classic cycle + `step_zo`, multi records run the multi-probe
+    /// cycle + `step_zo_multi` on the 1/q-averaged probes. Idempotent
+    /// like [`Request::Apply`].
+    ApplyMulti {
+        /// The full commit record to apply (also the replay-log entry).
+        record: CommitRecord,
+    },
     /// Ship the full replica payload back (used to read out final params
     /// and to cross-check replicas in tests).
     Fetch,
@@ -90,6 +123,24 @@ pub enum Reply {
         step: u64,
         /// FNV-1a digest of the post-apply replica bytes.
         digest: u64,
+        /// The optimizer's cumulative clip fraction after this apply
+        /// (`Optimizer::clip_fraction`); `None` for optimizers without
+        /// clip telemetry. A cheap cross-replica divergence canary: all
+        /// replicas must report the same value.
+        clip: Option<f64>,
+    },
+    /// Partial losses for one multi-probe point assignment.
+    ProbePoint {
+        /// Replying worker slot.
+        worker: usize,
+        /// Step the point was computed for.
+        step: u64,
+        /// Which point this reply covers (echoed from the request).
+        point: usize,
+        /// The shard range this reply covers (echoed from the request).
+        shards: Range<usize>,
+        /// Per-shard partial losses at the walked probe point.
+        partials: Vec<f64>,
     },
     /// The worker's full replica, answering [`Request::Fetch`].
     Params {
@@ -150,10 +201,10 @@ pub trait Transport {
     /// at the latest. `None` on deadline expiry.
     fn recv_deadline(&mut self, deadline: Instant) -> Option<Reply>;
 
-    /// Notify the transport that `rec` was committed to the seed log.
-    /// The socket transport snapshots the log into every handshake ack
+    /// Notify the transport that `rec` was committed to the log. The
+    /// socket transport snapshots the log into every handshake ack
     /// (reconnect-by-replay); the channel transport has nothing to do.
-    fn on_commit(&mut self, _rec: &SeedRecord) {}
+    fn on_commit(&mut self, _rec: &CommitRecord) {}
 
     /// Block until `slot` has a live lane, or fail with `Disconnected`.
     /// Called after (re)provisioning a worker: an in-process channel
@@ -268,9 +319,9 @@ mod tests {
         t.send(1, Request::Shutdown).unwrap();
         assert_eq!(e0.recv(), Some(Request::Fetch));
         assert_eq!(e1.recv(), Some(Request::Shutdown));
-        assert!(e1.send(Reply::Applied { worker: 1, step: 7, digest: 42 }));
+        assert!(e1.send(Reply::Applied { worker: 1, step: 7, digest: 42, clip: None }));
         let got = t.recv_deadline(Instant::now() + Duration::from_secs(1)).unwrap();
-        assert_eq!(got, Reply::Applied { worker: 1, step: 7, digest: 42 });
+        assert_eq!(got, Reply::Applied { worker: 1, step: 7, digest: 42, clip: None });
     }
 
     #[test]

@@ -22,7 +22,8 @@
 //!
 //! Replay recovery falls out of (2): rebuilding a dead worker is just
 //! `Worker::new` from the step-0 arena plus [`Worker::replay`] over the
-//! persisted `(step, seed, g, eps)` records.
+//! persisted commit records (pairwise `(step, seed, g, eps)` or
+//! multi-probe `(step, eps, [(seed_i, g_i); q])`).
 
 use std::collections::BTreeSet;
 use std::ops::Range;
@@ -31,9 +32,10 @@ use anyhow::{ensure, Result};
 
 use super::fault::{Fault, FaultPlan};
 use super::transport::{Reply, Request, WorkerLink};
-use super::{param_digest, probe_cycle, ShardLossOracle};
-use crate::model::checkpoint::SeedRecord;
+use super::{multi_probe_cycle, param_digest, probe_cycle, ShardLossOracle};
+use crate::model::checkpoint::CommitRecord;
 use crate::model::ParamSet;
+use crate::optim::spsa::probe_seed;
 use crate::optim::Optimizer;
 
 /// What the worker loop should do with the outcome of one request.
@@ -114,7 +116,7 @@ impl Worker {
     /// survived the disconnect — a redialed worker is bitwise a
     /// replacement. The fault plan and oracle are untouched (the oracle
     /// contract requires purity, so it carries no replica state).
-    pub fn rebuild(&mut self, base: &ParamSet, records: &[SeedRecord]) -> Result<()> {
+    pub fn rebuild(&mut self, base: &ParamSet, records: &[CommitRecord]) -> Result<()> {
         self.opt.init(base);
         self.params = base.clone();
         self.applied_through = 0;
@@ -134,24 +136,40 @@ impl Worker {
         &self.params
     }
 
-    /// Fast-forward the replica through persisted seed-log records: for
-    /// each record, the canonical probe cycle then the optimizer update.
-    /// This is the whole recovery story — a replacement worker rebuilt
-    /// from the step-0 arena plus the log lands bitwise on the survivors.
-    pub fn replay(&mut self, records: &[SeedRecord]) -> Result<()> {
+    /// Fast-forward the replica through persisted commit records: for
+    /// each record, the canonical probe cycle (pairwise) or multi-probe
+    /// walk (multi) then the matching optimizer update. This is the
+    /// whole recovery story — a replacement worker rebuilt from the
+    /// step-0 arena plus the log lands bitwise on the survivors.
+    pub fn replay(&mut self, records: &[CommitRecord]) -> Result<()> {
         for r in records {
             ensure!(
                 r.step == self.applied_through + 1,
-                "seed log is not contiguous: replica has applied through step {} \
+                "commit log is not contiguous: replica has applied through step {} \
                  but the next record is step {}",
                 self.applied_through,
                 r.step
             );
-            probe_cycle(&mut self.params, r.seed, r.eps);
-            self.opt.step_zo(&mut self.params, r.g, r.seed)?;
+            self.commit(r)?;
             self.applied_through = r.step;
         }
         Ok(())
+    }
+
+    /// The canonical cycle + update for one commit record — the single
+    /// arithmetic path shared by apply and replay, so a replayed replica
+    /// is bitwise a survivor.
+    fn commit(&mut self, rec: &CommitRecord) -> Result<()> {
+        ensure!(!rec.probes.is_empty(), "commit record for step {} carries no probes", rec.step);
+        if rec.pairwise {
+            let (seed, g) = rec.probes[0];
+            probe_cycle(&mut self.params, seed, rec.eps);
+            self.opt.step_zo(&mut self.params, g, seed)
+        } else {
+            let seeds: Vec<u64> = rec.probes.iter().map(|&(s, _)| s).collect();
+            multi_probe_cycle(&mut self.params, &seeds, rec.eps);
+            self.opt.step_zo_multi(&mut self.params, &rec.averaged_probes())
+        }
     }
 
     /// Serve a two-sided probe over `shards`, restoring the replica to
@@ -193,20 +211,65 @@ impl Worker {
         Ok((plus, minus))
     }
 
+    /// Serve ONE point of a multi-probe step over `shards`: snapshot,
+    /// walk the single-process transition chain to the requested point
+    /// (probe i is reached via `+εz_0` then i fused `(−εz_j, +εz_{j+1})`
+    /// transitions; the baseline `point == q` via the full
+    /// [`multi_probe_cycle`] walk), evaluate, restore. The walk — not a
+    /// direct `θ + εz_i` perturb — is what keeps the evaluated bits
+    /// identical to the single-process `estimate_multi_*` chain, whose
+    /// accumulated f32 rounding is canonical.
+    fn probe_point(
+        &mut self,
+        step: u64,
+        step_seed: u64,
+        eps: f32,
+        q: usize,
+        point: usize,
+        shards: Range<usize>,
+    ) -> Result<Vec<f64>> {
+        ensure!(q >= 1, "multi-probe point request with q = 0");
+        ensure!(
+            point <= q,
+            "probe point {point} is out of range for q = {q} (q itself is the baseline)"
+        );
+        let n = shards.len();
+        let seeds: Vec<u64> = (0..q).map(|i| probe_seed(step_seed, i)).collect();
+        let snapshot = self.params.clone();
+        if point == q {
+            // the shared baseline: the walked θ after the full cycle
+            multi_probe_cycle(&mut self.params, &seeds, eps);
+        } else {
+            self.params.perturb_trainable(seeds[0], eps);
+            for j in 0..point {
+                self.params.perturb_trainable2(seeds[j], -eps, seeds[j + 1], eps);
+            }
+        }
+        let result = self.oracle.shard_partials(&self.params, shards.clone(), step);
+        self.params = snapshot;
+        let partials = result?;
+        ensure!(
+            partials.len() == n,
+            "loss oracle returned {} partials for a {n}-shard span {:?}",
+            partials.len(),
+            shards
+        );
+        Ok(partials)
+    }
+
     /// Commit one step: canonical cycle + optimizer update, idempotent
     /// by step (disciplines 2 and 3 above). Returns the replica digest.
-    fn apply(&mut self, step: u64, seed: u64, eps: f32, g: f32) -> Result<u64> {
-        if step > self.applied_through {
+    fn apply(&mut self, rec: &CommitRecord) -> Result<u64> {
+        if rec.step > self.applied_through {
             ensure!(
-                step == self.applied_through + 1,
+                rec.step == self.applied_through + 1,
                 "apply for step {} but replica has only applied through step {} — \
                  a commit broadcast was lost",
-                step,
+                rec.step,
                 self.applied_through
             );
-            probe_cycle(&mut self.params, seed, eps);
-            self.opt.step_zo(&mut self.params, g, seed)?;
-            self.applied_through = step;
+            self.commit(rec)?;
+            self.applied_through = rec.step;
         }
         Ok(param_digest(&self.params))
     }
@@ -214,6 +277,22 @@ impl Worker {
     /// True exactly once per step: arms this worker's one-shot fault.
     fn arm_once(&mut self, step: u64) -> bool {
         self.fired.insert(step)
+    }
+
+    /// Run [`Worker::apply`] for `rec` and package the outcome as the
+    /// reply action, attaching the optimizer's clip telemetry (the
+    /// cross-replica divergence canary) to successful commits.
+    fn applied_action(&mut self, rec: &CommitRecord) -> Action {
+        let step = rec.step;
+        match self.apply(rec) {
+            Ok(digest) => Action::Send(Reply::Applied {
+                worker: self.id,
+                step,
+                digest,
+                clip: self.opt.clip_fraction(),
+            }),
+            Err(e) => Action::Send(Reply::Failed { worker: self.id, step, msg: format!("{e:#}") }),
+        }
     }
 
     /// Process one request, injecting any fault the plan schedules for
@@ -246,16 +325,43 @@ impl Worker {
                     _ => Action::Send(reply),
                 }
             }
+            Request::ProbePoint { step, seed, eps, q, point, shards } => {
+                let fault = self.plan.get(step, self.id);
+                if matches!(fault, Some(Fault::Die)) {
+                    return Action::Exit;
+                }
+                // every fault fires exactly once per incarnation — the
+                // first matching point request of the step arms it
+                let fire = fault.is_some() && self.arm_once(step);
+                let reply = match self.probe_point(step, seed, eps, q, point, shards.clone()) {
+                    Ok(mut partials) => {
+                        if fire && matches!(fault, Some(Fault::NanPartial)) {
+                            if let Some(p0) = partials.first_mut() {
+                                *p0 = f64::NAN;
+                            }
+                        }
+                        Reply::ProbePoint { worker: self.id, step, point, shards, partials }
+                    }
+                    Err(e) => Reply::Failed { worker: self.id, step, msg: format!("{e:#}") },
+                };
+                match fault {
+                    Some(Fault::DropReply) if fire => Action::Silent,
+                    Some(Fault::DelayReply(ms)) if fire => Action::Delay(reply, ms),
+                    _ => Action::Send(reply),
+                }
+            }
             Request::Apply { step, seed, eps, g } => {
                 if matches!(self.plan.get(step, self.id), Some(Fault::Die)) {
                     return Action::Exit;
                 }
-                match self.apply(step, seed, eps, g) {
-                    Ok(digest) => Action::Send(Reply::Applied { worker: self.id, step, digest }),
-                    Err(e) => {
-                        Action::Send(Reply::Failed { worker: self.id, step, msg: format!("{e:#}") })
-                    }
+                let rec = CommitRecord::pairwise(step, seed, g, eps);
+                self.applied_action(&rec)
+            }
+            Request::ApplyMulti { record } => {
+                if matches!(self.plan.get(record.step, self.id), Some(Fault::Die)) {
+                    return Action::Exit;
                 }
+                self.applied_action(&record)
             }
             Request::Fetch => Action::Send(Reply::Params {
                 worker: self.id,

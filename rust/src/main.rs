@@ -162,8 +162,16 @@ dist: the seed-and-scalar worker tier over a synthetic separable loss —
   helene dist --workers 4 --steps 50 [--fault-plan die@3:1,nan@7:2]
   --n-params N   synthetic parameter count (default 65536)
   --opt O / --lr F / --eps F / --seed S   as in train
-  --seed-log PATH  append every committed (step, seed, g, eps) record
+  --probes Q     probes per step: Q > 1 spreads the q probe points plus
+                 one shared baseline across the workers and commits
+                 multi-records — bitwise identical to the single-process
+                 multi-probe protocol (default 1: classic pairwise)
+  --seed-log PATH  append every committed record (v1 24-byte pairwise
+                 format, or the v2 multi-probe commit-log format when
+                 --probes > 1)
   --work N       loss-oracle compute passes per probe (default 1)
+  --wave-backoff-ms MS  base for the exponential retry-wave backoff
+                 (default: --worker-timeout-ms)
   --socket       run over loopback TCP (checksummed frames, handshake,
                  reconnect-by-replay) instead of in-process channels;
                  the trajectory is bitwise identical either way
@@ -173,9 +181,11 @@ dist: the seed-and-scalar worker tier over a synthetic separable loss —
   (plus --worker-timeout-ms / --retries / --fault-plan as above)
 
 dist-worker: one worker process for a listening coordinator; model/run
-  flags must match the coordinator's or its handshake refuses the dial:
+  flags must match the coordinator's or its handshake refuses the dial,
+  naming the differing field (optimizer, lr, eps, steps, probes, seed,
+  or arena digest):
   helene dist-worker --connect 127.0.0.1:7070 --slot 0 --n-params 65536 \\
-    --opt mezo --lr 1e-3 --seed 0 [--work N]
+    --opt mezo --lr 1e-3 --eps 1e-3 --steps 50 --probes 1 --seed 0 [--work N]
   exits 0 on the coordinator's end-of-run shutdown message
 
 sweep: grid-search lr on dev (paper protocol):
@@ -328,6 +338,7 @@ fn cmd_dist(args: &Args) -> Result<()> {
         workers: args.usize("workers", 2)?,
         worker_timeout_ms: args.u64("worker-timeout-ms", 1000)?,
         retry_budget: args.usize("retries", 3)?,
+        probes: args.usize("probes", 1)?,
         ..Default::default()
     };
     let plan_spec = args.str("fault-plan", "");
@@ -336,6 +347,17 @@ fn cmd_dist(args: &Args) -> Result<()> {
     }
     tc.dist_socket = args.get("socket").is_some();
     tc.dist_listen = args.get("listen").map(str::to_string);
+    if let Some(ms) = args.get("wave-backoff-ms") {
+        tc.wave_backoff_ms =
+            Some(ms.parse().with_context(|| format!("bad --wave-backoff-ms {ms:?}"))?);
+    }
+    tc.dist_fingerprint = Some(helene::dist::ConfigFingerprint {
+        opt: opt_name.clone(),
+        lr,
+        eps: tc.spsa_eps,
+        steps: steps as u64,
+        probes: tc.probes as u32,
+    });
     tc.validate_robustness()?;
     let seed_log = args.get("seed-log").map(PathBuf::from);
 
@@ -348,9 +370,10 @@ fn cmd_dist(args: &Args) -> Result<()> {
     };
     println!(
         "dist: workers={} n_params={n_params} steps={steps} opt={opt_name} lr={lr} \
-         eps={} transport={transport} fault-plan={:?}",
+         eps={} probes={} transport={transport} fault-plan={:?}",
         tc.workers,
         tc.spsa_eps,
+        tc.probes,
         plan_spec
     );
     // two layer groups so multi-worker span cuts snap to a real boundary
@@ -377,11 +400,20 @@ fn cmd_dist(args: &Args) -> Result<()> {
         "robustness: {} deaths, {} recoveries, {} retries, {} late replies discarded",
         s.deaths, s.recoveries, s.retries, s.late_replies
     );
+    let clips: Vec<String> = report
+        .clip_fractions
+        .iter()
+        .enumerate()
+        .filter_map(|(w, c)| c.map(|v| format!("w{w}={v:.4}")))
+        .collect();
+    if !clips.is_empty() {
+        println!("clip fractions (per replica): {}", clips.join(" "));
+    }
     if let Some(path) = args.get("seed-log") {
+        let fmt = if tc.probes > 1 { "v2 multi-probe" } else { "v1 24-byte pairwise" };
         println!(
-            "seed log appended to {path} ({} records, {} bytes each)",
-            report.log.len(),
-            helene::model::checkpoint::SeedRecord::BYTES
+            "commit log appended to {path} ({} records, {fmt} format)",
+            report.log.len()
         );
     }
     Ok(())
@@ -391,8 +423,10 @@ fn cmd_dist(args: &Args) -> Result<()> {
 /// --connect ADDR --slot K`): builds the same step-0 arena and oracle the
 /// coordinator describes, dials in, and serves until the coordinator's
 /// shutdown message. The connect handshake pins protocol version, run
-/// seed, slot and arena digest, so a mismatched flag fails loudly instead
-/// of silently diverging. Exit code 0 = clean shutdown.
+/// seed, slot, arena digest, and the full training-config fingerprint
+/// (optimizer, lr, eps, step budget, probe count), so a mismatched flag
+/// fails loudly at connect — naming the differing field — instead of
+/// silently diverging. Exit code 0 = clean shutdown.
 fn cmd_dist_worker(args: &Args) -> Result<()> {
     use helene::dist::{
         param_digest, resolve_addr, run_socket_worker, FaultPlan, SepQuadOracle,
@@ -409,6 +443,9 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
     anyhow::ensure!(n_params >= 2, "--n-params must be >= 2 (got {n_params})");
     let opt_name = args.str("opt", "mezo");
     let lr = args.f32("lr", default_lr(&opt_name))?;
+    let eps = args.f32("eps", 1e-3)?;
+    let steps = args.usize("steps", 50)?;
+    let probes = args.usize("probes", 1)?;
     let work = args.u64("work", 1)? as u32;
     let run_seed = args.u64("seed", 0)?;
     let plan_spec = args.str("fault-plan", "");
@@ -425,16 +462,26 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
         Box::new(SepQuadOracle::with_work(work)) as Box<dyn ShardLossOracle>,
         plan,
     );
+    // the fingerprint the handshake presents — must match the
+    // coordinator's flags exactly or the dial is refused with the
+    // differing field named
+    let fingerprint = helene::dist::ConfigFingerprint {
+        opt: opt_name.clone(),
+        lr,
+        eps,
+        steps: steps as u64,
+        probes: probes as u32,
+    };
     let ep = SocketEndpoint {
         addr,
         slot,
         run_seed,
         base_digest: param_digest(&base),
-        cfg: SocketConfig::default(),
+        cfg: SocketConfig { fingerprint, ..Default::default() },
     };
     println!(
         "dist-worker: slot={slot} dialing {addr} (n_params={n_params} opt={opt_name} \
-         lr={lr} seed={run_seed})"
+         lr={lr} eps={eps} steps={steps} probes={probes} seed={run_seed})"
     );
     match run_socket_worker(worker, base, ep)? {
         WorkerExit::Shutdown => {

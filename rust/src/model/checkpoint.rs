@@ -23,6 +23,14 @@
 //! is 24 bytes and fully determines its step (MeZO's seed trick), so the
 //! log plus the step-0 arena reconstructs any checkpoint bit-exactly —
 //! the replay-recovery path of the distributed tier (`crate::dist`).
+//!
+//! The multi-probe distributed tier generalizes the journal to the **v2
+//! commit log** ([`CommitRecord`]): one record per step carrying
+//! `(step, eps, [(seed_i, g_i); q])` — q probe seeds with their RAW
+//! per-probe gradient scales (averaging happens at apply time, exactly
+//! as `Optimizer::step_zo_multi` expects). [`load_commit_log`] sniffs
+//! the magic, so a pre-v2 seed-log file loads transparently as q = 1
+//! pairwise records.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -36,6 +44,7 @@ use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"HELENE1\n";
 const SEED_LOG_MAGIC: &[u8; 8] = b"HELENESL";
+const COMMIT_LOG_MAGIC: &[u8; 8] = b"HELENES2";
 
 /// Write `bytes → path` crash-safely: stream into `<name>.tmp` in the
 /// same directory, fsync, then atomically rename over the destination.
@@ -353,6 +362,217 @@ pub fn load_seed_log(path: &Path) -> Result<Vec<SeedRecord>> {
     Ok(records)
 }
 
+// ---------------------------------------------------------------------------
+// Commit log v2: the (step, eps, [(seed_i, g_i); q]) journal of a
+// multi-probe ZO run
+// ---------------------------------------------------------------------------
+
+/// One committed ZO step in the unified (pairwise OR multi-probe) form.
+///
+/// A `pairwise` record is exactly a [`SeedRecord`]: one antithetic probe
+/// pair, replayed by `probe_cycle(seed, eps)` + `step_zo(g, seed)`. A
+/// multi record carries q probe seeds with their **raw** gradient scales
+/// `g_i = (L(θ + ε z_i) − L(θ)) / ε`; replay walks the same transition
+/// chain as the single-process pipeline (`crate::dist::multi_probe_cycle`)
+/// and feeds `Optimizer::step_zo_multi` the 1/q-averaged scales — see
+/// [`CommitRecord::averaged_probes`].
+///
+/// Serialized (little-endian): `step: u64, eps: f32, mode: u8 (1 =
+/// pairwise), q: u16, q × (seed: u64, g: f32)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommitRecord {
+    /// 1-based global step index.
+    pub step: u64,
+    /// The probe radius ε the step used (needed by the replay cycle).
+    pub eps: f32,
+    /// True for a classic antithetic-pair step (q is then exactly 1 and
+    /// `probes[0]` carries the aggregated `(L⁺ − L⁻) / 2ε` scale).
+    pub pairwise: bool,
+    /// The q `(seed_i, g_i)` probes. Pairwise: one entry. Multi: raw
+    /// one-sided scales, NOT yet divided by q.
+    pub probes: Vec<(u64, f32)>,
+}
+
+impl CommitRecord {
+    /// Fixed header size before the per-probe entries: 8 + 4 + 1 + 2.
+    pub const HEADER_BYTES: usize = 15;
+    /// Bytes per `(seed, g)` probe entry.
+    pub const PROBE_BYTES: usize = 12;
+
+    /// Wrap a classic antithetic-pair commit.
+    pub fn pairwise(step: u64, seed: u64, g: f32, eps: f32) -> CommitRecord {
+        CommitRecord { step, eps, pairwise: true, probes: vec![(seed, g)] }
+    }
+
+    /// Wrap a multi-probe commit carrying raw per-probe scales.
+    pub fn multi(step: u64, eps: f32, probes: Vec<(u64, f32)>) -> CommitRecord {
+        CommitRecord { step, eps, pairwise: false, probes }
+    }
+
+    /// The probes with each raw scale divided by q — the exact argument
+    /// `Optimizer::step_zo_multi` expects (mirrors
+    /// `SpsaMultiEstimate::averaged_probes`, same f32 arithmetic).
+    pub fn averaged_probes(&self) -> Vec<(u64, f32)> {
+        let inv_q = 1.0 / self.probes.len() as f32;
+        self.probes.iter().map(|&(s, g)| (s, g * inv_q)).collect()
+    }
+
+    /// View a pairwise record as its v1 [`SeedRecord`] (None for multi).
+    pub fn as_seed_record(&self) -> Option<SeedRecord> {
+        if self.pairwise && self.probes.len() == 1 {
+            let (seed, g) = self.probes[0];
+            Some(SeedRecord { step: self.step, seed, g, eps: self.eps })
+        } else {
+            None
+        }
+    }
+
+    /// Serialized size of this record.
+    pub fn bytes(&self) -> usize {
+        Self::HEADER_BYTES + self.probes.len() * Self::PROBE_BYTES
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.eps.to_le_bytes());
+        out.push(self.pairwise as u8);
+        out.extend_from_slice(&(self.probes.len() as u16).to_le_bytes());
+        for &(seed, g) in &self.probes {
+            out.extend_from_slice(&seed.to_le_bytes());
+            out.extend_from_slice(&g.to_le_bytes());
+        }
+        out
+    }
+}
+
+impl From<SeedRecord> for CommitRecord {
+    fn from(r: SeedRecord) -> CommitRecord {
+        CommitRecord::pairwise(r.step, r.seed, r.g, r.eps)
+    }
+}
+
+/// Write a complete v2 commit log crash-safely (temp file + atomic
+/// rename): the 8-byte magic followed by each record's variable-length
+/// encoding.
+pub fn write_commit_log(path: &Path, records: &[CommitRecord]) -> Result<()> {
+    atomic_write(path, |f| {
+        f.write_all(COMMIT_LOG_MAGIC)?;
+        for r in records {
+            f.write_all(&r.encode())?;
+        }
+        Ok(())
+    })
+}
+
+/// Append records to a v2 commit log, creating it (with the magic
+/// header) if absent — the per-step persistence path of the multi-probe
+/// distributed coordinator. A torn tail is detected (with its byte
+/// offset) by [`load_commit_log`].
+pub fn append_commit_log(path: &Path, records: &[CommitRecord]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let fresh = !path.exists();
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {} for append", path.display()))?;
+    if fresh {
+        f.write_all(COMMIT_LOG_MAGIC)?;
+    }
+    for r in records {
+        f.write_all(&r.encode())?;
+    }
+    Ok(())
+}
+
+/// Load a commit log strictly, sniffing the magic: a v2 file decodes
+/// natively, and a pre-v2 seed log (v1 magic) loads transparently as
+/// q = 1 pairwise records. Bad magic, a torn record, q = 0, or a
+/// non-contiguous step sequence all error with byte-offset context. The
+/// returned records are contiguous ascending from step 1 — exactly what
+/// replay (`crate::dist::replay_commit_log`) requires.
+pub fn load_commit_log(path: &Path) -> Result<Vec<CommitRecord>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading commit log {}", path.display()))?;
+    ensure!(
+        bytes.len() >= 8,
+        "{}: not a HELENE commit log (file shorter than the 8-byte magic)",
+        path.display()
+    );
+    if &bytes[..8] == SEED_LOG_MAGIC {
+        // pre-v2 file: every record is a pairwise q = 1 commit
+        return Ok(load_seed_log(path)?.into_iter().map(CommitRecord::from).collect());
+    }
+    ensure!(
+        &bytes[..8] == COMMIT_LOG_MAGIC,
+        "{}: not a HELENE commit log (bad magic in the first 8 bytes)",
+        path.display()
+    );
+    let mut records = Vec::new();
+    let mut off = 8usize;
+    while off < bytes.len() {
+        let start = off;
+        ensure!(
+            bytes.len() - off >= CommitRecord::HEADER_BYTES,
+            "{}: truncated commit log: {} trailing bytes of a partial record \
+             header at byte offset {start} (headers are {} bytes)",
+            path.display(),
+            bytes.len() - off,
+            CommitRecord::HEADER_BYTES
+        );
+        let step = u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"));
+        let eps = f32::from_le_bytes(bytes[off + 8..off + 12].try_into().expect("4 bytes"));
+        let mode = bytes[off + 12];
+        let q = u16::from_le_bytes(bytes[off + 13..off + 15].try_into().expect("2 bytes")) as usize;
+        off += CommitRecord::HEADER_BYTES;
+        ensure!(
+            mode <= 1,
+            "{}: corrupted commit log: record at byte offset {start} carries \
+             unknown mode {mode} (0 = multi, 1 = pairwise)",
+            path.display()
+        );
+        ensure!(
+            q >= 1,
+            "{}: corrupted commit log: record at byte offset {start} carries \
+             q = 0 probes",
+            path.display()
+        );
+        ensure!(
+            !(mode == 1 && q != 1),
+            "{}: corrupted commit log: pairwise record at byte offset {start} \
+             carries q = {q} (pairwise records have exactly one probe)",
+            path.display()
+        );
+        ensure!(
+            bytes.len() - off >= q * CommitRecord::PROBE_BYTES,
+            "{}: truncated commit log: record at byte offset {start} claims \
+             {q} probes ({} bytes) but only {} bytes remain",
+            path.display(),
+            q * CommitRecord::PROBE_BYTES,
+            bytes.len() - off
+        );
+        let mut probes = Vec::with_capacity(q);
+        for _ in 0..q {
+            let seed = u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"));
+            let g = f32::from_le_bytes(bytes[off + 8..off + 12].try_into().expect("4 bytes"));
+            probes.push((seed, g));
+            off += CommitRecord::PROBE_BYTES;
+        }
+        ensure!(
+            step == records.len() as u64 + 1,
+            "{}: corrupted commit log: record {} at byte offset {start} carries \
+             step {step} (expected contiguous steps ascending from 1)",
+            path.display(),
+            records.len()
+        );
+        records.push(CommitRecord { step, eps, pairwise: mode == 1, probes });
+    }
+    Ok(records)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -611,5 +831,125 @@ mod tests {
         let err = format!("{:#}", load_seed_log(&path).unwrap_err());
         assert!(err.contains("contiguous"), "{err}");
         assert!(err.contains("byte offset"), "{err}");
+    }
+
+    fn sample_multi_records(n: u64, q: usize) -> Vec<CommitRecord> {
+        (1..=n)
+            .map(|step| {
+                CommitRecord::multi(
+                    step,
+                    1e-3,
+                    (0..q)
+                        .map(|i| {
+                            (
+                                crate::util::rng::mix64(step, i as u64),
+                                0.25 * (i as f32 + 1.0) - 0.125 * step as f32,
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn commit_log_round_trips_and_append_matches_bulk_write() {
+        let dir = std::env::temp_dir().join("helene_commitlog_rt");
+        let records = sample_multi_records(7, 4);
+        let bulk = dir.join("bulk.cl");
+        write_commit_log(&bulk, &records).unwrap();
+        assert!(!dir.join("bulk.cl.tmp").exists());
+        assert_eq!(load_commit_log(&bulk).unwrap(), records);
+        let incr = dir.join("incr.cl");
+        let _ = std::fs::remove_file(&incr);
+        for r in &records {
+            append_commit_log(&incr, std::slice::from_ref(r)).unwrap();
+        }
+        assert_eq!(std::fs::read(&bulk).unwrap(), std::fs::read(&incr).unwrap());
+    }
+
+    #[test]
+    fn commit_log_loads_pre_v2_seed_logs_as_pairwise_q1() {
+        // a v1 seed-log file must load through load_commit_log unchanged,
+        // each record converted to a pairwise q = 1 commit
+        let dir = std::env::temp_dir().join("helene_commitlog_v1");
+        let path = dir.join("legacy.sl");
+        let v1 = sample_records(5);
+        write_seed_log(&path, &v1).unwrap();
+        let loaded = load_commit_log(&path).unwrap();
+        assert_eq!(loaded.len(), 5);
+        for (rec, old) in loaded.iter().zip(&v1) {
+            assert!(rec.pairwise);
+            assert_eq!(rec.probes, vec![(old.seed, old.g)]);
+            assert_eq!(rec.as_seed_record(), Some(*old));
+        }
+    }
+
+    #[test]
+    fn commit_log_rejects_torn_tails_gaps_and_bad_headers() {
+        let dir = std::env::temp_dir().join("helene_commitlog_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let records = sample_multi_records(3, 2);
+        let path = dir.join("log.cl");
+        write_commit_log(&path, &records).unwrap();
+        let full = std::fs::read(&path).unwrap();
+
+        // torn mid-probe and torn mid-header both name the byte offset
+        for cut in [full.len() - 5, full.len() - records[2].bytes() + 3] {
+            let torn = dir.join("torn.cl");
+            std::fs::write(&torn, &full[..cut]).unwrap();
+            let err = format!("{:#}", load_commit_log(&torn).unwrap_err());
+            assert!(err.contains("truncated commit log"), "cut {cut}: {err}");
+            assert!(err.contains("byte offset"), "cut {cut}: {err}");
+        }
+        // a record-boundary prefix is fine (replay-from-prefix)
+        let boundary = dir.join("boundary.cl");
+        std::fs::write(&boundary, &full[..full.len() - records[2].bytes()]).unwrap();
+        assert_eq!(load_commit_log(&boundary).unwrap(), records[..2]);
+
+        // gapped steps rejected
+        let mut gapped = records.clone();
+        gapped[2].step = 9;
+        let gap = dir.join("gap.cl");
+        write_commit_log(&gap, &gapped).unwrap();
+        let err = format!("{:#}", load_commit_log(&gap).unwrap_err());
+        assert!(err.contains("contiguous"), "{err}");
+
+        // q = 0 rejected
+        let mut zero = Vec::new();
+        zero.extend_from_slice(COMMIT_LOG_MAGIC);
+        zero.extend_from_slice(&CommitRecord::multi(1, 1e-3, vec![(7, 0.5)]).encode());
+        let qoff = zero.len() - CommitRecord::PROBE_BYTES - 2;
+        zero[qoff..qoff + 2].copy_from_slice(&0u16.to_le_bytes());
+        zero.truncate(zero.len() - CommitRecord::PROBE_BYTES);
+        let zpath = dir.join("zero.cl");
+        std::fs::write(&zpath, &zero).unwrap();
+        let err = format!("{:#}", load_commit_log(&zpath).unwrap_err());
+        assert!(err.contains("q = 0"), "{err}");
+
+        // bad magic rejected
+        let junk = dir.join("junk.cl");
+        std::fs::write(&junk, b"definitely not a commit log").unwrap();
+        assert!(load_commit_log(&junk).is_err());
+    }
+
+    #[test]
+    fn commit_record_averaging_matches_multi_estimate_arithmetic() {
+        // averaged_probes must reproduce SpsaMultiEstimate's f32 op order:
+        // inv_q = 1.0 / q as f32, then g * inv_q per probe
+        let rec = CommitRecord::multi(1, 1e-3, vec![(1, 0.3), (2, -0.7), (3, 1.1)]);
+        let inv_q = 1.0f32 / 3.0;
+        let want: Vec<(u64, f32)> =
+            rec.probes.iter().map(|&(s, g)| (s, g * inv_q)).collect();
+        let got = rec.averaged_probes();
+        assert_eq!(got.len(), want.len());
+        for ((s1, g1), (s2, g2)) in got.iter().zip(&want) {
+            assert_eq!(s1, s2);
+            assert_eq!(g1.to_bits(), g2.to_bits());
+        }
+        // pairwise round-trip through SeedRecord conversion is lossless
+        let pw = CommitRecord::pairwise(4, 99, -0.25, 1e-3);
+        assert_eq!(CommitRecord::from(pw.as_seed_record().unwrap()), pw);
+        assert_eq!(rec.as_seed_record(), None);
     }
 }

@@ -108,6 +108,7 @@ pub fn from_config(cfg: &crate::config::Config, lr: f32) -> anyhow::Result<Helen
     hc.weight_decay = cfg.f32("helene.weight_decay", hc.weight_decay)?;
     hc.t_anneal = cfg.f32("helene.t_anneal", hc.t_anneal)?;
     hc.hessian_every_k = cfg.usize("helene.k", hc.hessian_every_k)?;
+    let k_explicit = cfg.get("helene.k").is_some();
     hc.use_hessian = cfg.bool("helene.use_hessian", hc.use_hessian)?;
     if let Some(r) = cfg.get("helene.lambda_scaled_r") {
         hc.clip = ClipPolicy::LayerScaled { r: r.parse()? };
@@ -121,7 +122,9 @@ pub fn from_config(cfg: &crate::config::Config, lr: f32) -> anyhow::Result<Helen
         "annealed" => MomentumMode::Annealed,
         other => anyhow::bail!("unknown momentum mode {other:?}"),
     };
-    Ok(Helene::new(hc))
+    let mut opt = Helene::new(hc);
+    opt.k_explicit = opt.k_explicit || k_explicit;
+    Ok(opt)
 }
 
 /// The HELENE optimizer.
@@ -134,6 +137,10 @@ pub struct Helene {
     /// λ resolved per parameter array (from the layer-group policy)
     lambda: Vec<f32>,
     fo: bool,
+    /// whether the refresh period k was set explicitly (config key or a
+    /// non-default `HeleneConfig`), so `with_fo_hessian` knows not to
+    /// override it with the FO default k = 10
+    k_explicit: bool,
     /// elements whose h fell below λ at the last Hessian refresh (per-run
     /// clip telemetry, cf. §B.3's trigger counting for Sophia)
     pub clipped_elems: u64,
@@ -144,6 +151,7 @@ pub struct Helene {
 impl Helene {
     /// A HELENE instance over explicit hyper-parameters.
     pub fn new(cfg: HeleneConfig) -> Self {
+        let k_explicit = cfg.hessian_every_k != 1;
         Self {
             cfg,
             t: 0,
@@ -151,6 +159,7 @@ impl Helene {
             h: None,
             lambda: Vec::new(),
             fo: false,
+            k_explicit,
             clipped_elems: 0,
             total_elems: 0,
         }
@@ -189,9 +198,18 @@ impl Helene {
     }
 
     /// Use the exact mini-batch gradient (Algorithm 2 verbatim) — the
-    /// optimizer then runs as a first-order method.
+    /// optimizer then runs as a first-order method. Unless the refresh
+    /// period was set explicitly (`helene.k` or a non-default
+    /// [`HeleneConfig::hessian_every_k`]), this also switches k to the
+    /// paper's FO default of 10: in the FO setting the A-GNB Hessian
+    /// refresh costs a real extra gradient pass, so Algorithm 2
+    /// amortizes it over k = 10 steps — the ZO default k = 1 would
+    /// silently pay that pass every step.
     pub fn with_fo_hessian(mut self) -> Self {
         self.fo = true;
+        if !self.k_explicit {
+            self.cfg.hessian_every_k = 10;
+        }
         self
     }
 
@@ -447,6 +465,10 @@ impl Optimizer for Helene {
 
     fn configure_batch(&mut self, batch_size: usize) {
         self.cfg.batch_size = batch_size as f32;
+    }
+
+    fn clip_fraction(&self) -> Option<f64> {
+        Some(Helene::clip_fraction(self))
     }
 
     fn init(&mut self, params: &ParamSet) {
@@ -761,6 +783,52 @@ mod tests {
             .unwrap();
         assert_eq!(p1.max_abs_diff(&p2), 0.0);
         assert!(cache.matches_seed(&p2, 999));
+    }
+
+    #[test]
+    fn fo_variant_defaults_hessian_refresh_to_k10() {
+        // the paper's Algorithm 2 amortizes the FO A-GNB pass over k = 10
+        // steps; `helene-fo` used to inherit the ZO default k = 1 and
+        // silently pay a refresh every step
+        let fo = Helene::paper_defaults().with_fo_hessian();
+        assert_eq!(fo.cfg.hessian_every_k, 10);
+        // the ZO variant keeps the free-refresh default
+        assert_eq!(Helene::paper_defaults().cfg.hessian_every_k, 1);
+        // an explicit k survives the FO switch, in either order
+        let custom = Helene::new(HeleneConfig { hessian_every_k: 4, ..Default::default() })
+            .with_fo_hessian();
+        assert_eq!(custom.cfg.hessian_every_k, 4);
+    }
+
+    #[test]
+    fn fo_variant_respects_explicit_config_k() {
+        // `helene.k = 1` set explicitly must NOT be bumped to 10
+        let cfg = crate::config::Config::parse("helene.k = 1").unwrap();
+        let opt = crate::optim::helene::from_config(&cfg, 1e-3)
+            .unwrap()
+            .with_fo_hessian();
+        assert_eq!(opt.cfg.hessian_every_k, 1);
+        // and without the key, from_config + FO lands on 10
+        let cfg = crate::config::Config::parse("").unwrap();
+        let opt = crate::optim::helene::from_config(&cfg, 1e-3)
+            .unwrap()
+            .with_fo_hessian();
+        assert_eq!(opt.cfg.hessian_every_k, 10);
+    }
+
+    #[test]
+    fn trait_clip_fraction_reports_the_inherent_telemetry() {
+        // the dyn-dispatch accessor the dist tier uses must agree with
+        // the concrete telemetry method, and non-clipping optimizers
+        // must stay None
+        let mut p = toy_params(&[64]);
+        let mut opt = Helene::paper_defaults().with_lr(1e-2);
+        opt.init(&p);
+        opt.step_zo(&mut p, 0.4, 7).unwrap();
+        let dy: &dyn Optimizer = &opt;
+        assert_eq!(dy.clip_fraction(), Some(Helene::clip_fraction(&opt)));
+        let mezo = crate::optim::by_name("mezo", 1e-2).unwrap();
+        assert_eq!(mezo.clip_fraction(), None);
     }
 
     #[test]

@@ -331,6 +331,16 @@ pub trait Optimizer: Send {
         false
     }
 
+    /// Fraction of coordinates clipped by the optimizer's most recent
+    /// curvature clamp, if it keeps one (HELENE's layer-wise Hessian
+    /// clipping telemetry). `None` (the default) means the optimizer has
+    /// no clipping to report — distinct from `Some(0.0)`, which means
+    /// clipping is live but nothing was clamped. Surfaced per-replica by
+    /// the distributed tier ([`crate::dist::DistReport`]).
+    fn clip_fraction(&self) -> Option<f64> {
+        None
+    }
+
     /// Post-step hook with (loss_before, loss_after); may revert the update.
     fn post_check(&mut self, _params: &mut ParamSet, _before: f32, _after: f32) -> Result<()> {
         Ok(())

@@ -137,6 +137,19 @@ pub struct TrainConfig {
     /// `helene dist --listen` flag). Mutually exclusive with
     /// [`Self::dist_socket`].
     pub dist_listen: Option<String>,
+    /// Base duration in milliseconds for the distributed retry-wave
+    /// backoff (`--wave-backoff-ms`): waves after the first wait
+    /// `base × 2^min(wave, 3)`. `None` (default) uses
+    /// [`Self::worker_timeout_ms`] as the base — the historical
+    /// behavior.
+    pub wave_backoff_ms: Option<u64>,
+    /// Training-config fingerprint for socket handshakes
+    /// ([`crate::dist::ConfigFingerprint`]): when set, every worker must
+    /// dial with an identical fingerprint (optimizer, lr, eps, steps,
+    /// probes) or be refused at connect with the differing field named.
+    /// `None` leaves the default (empty) fingerprint on both ends, which
+    /// trivially matches — the CLI always sets it.
+    pub dist_fingerprint: Option<crate::dist::ConfigFingerprint>,
 }
 
 impl Default for TrainConfig {
@@ -165,6 +178,8 @@ impl Default for TrainConfig {
             retry_budget: 3,
             dist_socket: false,
             dist_listen: None,
+            wave_backoff_ms: None,
+            dist_fingerprint: None,
         }
     }
 }
@@ -199,6 +214,8 @@ impl TrainConfig {
             recover: true,
             fault_plan: self.fault_plan.clone().unwrap_or_default(),
             seed_log,
+            probes: self.probes.max(1),
+            wave_backoff: self.wave_backoff_ms.map(std::time::Duration::from_millis),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -208,8 +225,11 @@ impl TrainConfig {
 /// Run `cfg.steps` ZO steps on the distributed seed-and-scalar tier
 /// (`crate::dist`): `cfg.workers` threaded replicas probe disjoint shard
 /// spans of the loss, the coordinator folds the partials canonically and
-/// broadcasts `(step_seed, g)` commits. The trajectory is bitwise
-/// identical (f32 arenas) to the single-worker protocol over the same
+/// broadcasts `(step_seed, g)` commits. With `cfg.probes > 1` each step
+/// spreads the q probe points plus the shared baseline across the
+/// cluster and commits one multi-record instead. The trajectory is
+/// bitwise identical (f32 arenas) to the single-worker protocol
+/// ([`ZoProtocol::step`] / [`ZoProtocol::step_multi`]) over the same
 /// oracle — faulted or not. `factory` builds each worker slot's
 /// [`crate::dist::ShardLossOracle`] and optimizer; `seed_log` optionally
 /// persists every committed record for crash recovery.
@@ -221,12 +241,14 @@ pub fn run_zo_distributed(
 ) -> Result<crate::dist::DistReport> {
     cfg.validate_robustness()?;
     let dist_cfg = cfg.dist_config(seed_log)?;
+    let fingerprint = cfg.dist_fingerprint.clone().unwrap_or_default();
     if let Some(addr) = &cfg.dist_listen {
         // external worker processes dial in; a human is starting them,
         // so wait generously and say what we're waiting for
         let scfg = crate::dist::SocketConfig {
             await_live_timeout: std::time::Duration::from_secs(600),
             announce_waits: true,
+            fingerprint,
             ..Default::default()
         };
         let mut coord = crate::dist::Coordinator::launch_listen(
@@ -239,12 +261,13 @@ pub fn run_zo_distributed(
         )?;
         coord.run(cfg.steps, cfg.seed)
     } else if cfg.dist_socket {
+        let scfg = crate::dist::SocketConfig { fingerprint, ..Default::default() };
         let mut coord = crate::dist::Coordinator::launch_socket_threads(
             dist_cfg,
             base.clone(),
             factory,
             cfg.seed,
-            crate::dist::SocketConfig::default(),
+            scfg,
             None,
         )?;
         coord.run(cfg.steps, cfg.seed)

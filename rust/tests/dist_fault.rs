@@ -1,8 +1,10 @@
 //! Property suite for the fault-tolerant distributed tier (`helene::dist`):
 //! faulted multi-worker runs must end **bitwise identical** (f32 arenas)
 //! to the unfaulted single-worker `ZoProtocol` — per-step loss trace and
-//! final parameters both — and a replacement rebuilt purely from the seed
-//! log must match the surviving replicas exactly.
+//! final parameters both — and a replacement rebuilt purely from the
+//! commit log must match the surviving replicas exactly. The multi-probe
+//! grid (`probes` = q > 1) is held to the same bar against
+//! `ZoProtocol::step_multi`.
 //!
 //! No artifacts needed: the tier runs against the synthetic separable
 //! [`SepQuadOracle`], which is pure and shard-decomposable by
@@ -15,8 +17,9 @@ use helene::dist::{
     Coordinator, DistConfig, DistReport, FaultPlan, SepQuadOracle, ShardLossOracle,
     WorkerFactory,
 };
-use helene::model::checkpoint::{self, SeedRecord};
+use helene::model::checkpoint::{self, CommitRecord, SeedRecord};
 use helene::model::params::{Codec, ParamSet, SHARD_SIZE};
+use helene::optim::helene::Helene;
 use helene::optim::spsa::fold_partial_losses;
 use helene::optim::zo_sgd::ZoSgd;
 use helene::optim::Optimizer;
@@ -56,6 +59,8 @@ fn dist_cfg(workers: usize, plan: FaultPlan) -> DistConfig {
         recover: true,
         fault_plan: plan,
         seed_log: None,
+        probes: 1,
+        wave_backoff: None,
     }
 }
 
@@ -91,9 +96,56 @@ fn reference_run() -> (Vec<f32>, ParamSet) {
     (losses, params)
 }
 
+/// The single-process multi-probe reference: the default-config
+/// (pipelined) `ZoProtocol::step_multi` over the same oracle. The final
+/// step runs as a `boundary` (update only, no prefetch), which makes the
+/// cumulative per-element op sequence identical to the distributed
+/// apply path — step k's prefetch sweep in the pipeline is step k+1's
+/// opening walk sweep in the tier.
+fn reference_run_multi(q: usize) -> (Vec<f32>, ParamSet) {
+    let base = base_params();
+    let n_shards = base.n_shards();
+    let mut oracle = SepQuadOracle::new();
+    let cfg = TrainConfig {
+        steps: STEPS,
+        spsa_eps: EPS,
+        seed: RUN_SEED,
+        probes: q,
+        ..Default::default()
+    };
+    let mut opt = ZoSgd::new(LR);
+    opt.init(&base);
+    let mut params = base.clone();
+    let mut proto = ZoProtocol::new(&cfg);
+    let mut losses = Vec::with_capacity(STEPS);
+    for step in 1..=STEPS {
+        let step_seed = mix64(RUN_SEED, step as u64);
+        let next_seed = mix64(RUN_SEED, step as u64 + 1);
+        let boundary = step == STEPS;
+        let est = proto
+            .step_multi(&mut opt, &mut params, step_seed, next_seed, boundary, |p| {
+                Ok(fold_partial_losses(
+                    oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                ))
+            })
+            .unwrap();
+        losses.push(est.loss());
+    }
+    (losses, params)
+}
+
 fn run_dist(cfg: DistConfig) -> (Coordinator<helene::dist::ChannelTransport>, DistReport) {
     let mut coord = Coordinator::launch_threads(cfg, base_params(), factory()).unwrap();
     let report = coord.run(STEPS, RUN_SEED).unwrap();
+    (coord, report)
+}
+
+/// Launch and drive the multi-probe grid directly (valid for any q ≥ 1,
+/// so the q = 1 multi semantics get coverage too — `run()` only
+/// delegates when `probes > 1`).
+fn run_dist_multi(cfg: DistConfig) -> (Coordinator<helene::dist::ChannelTransport>, DistReport) {
+    let mut coord = Coordinator::launch_threads(cfg, base_params(), factory()).unwrap();
+    let report = coord.run_multi(STEPS, RUN_SEED).unwrap();
     (coord, report)
 }
 
@@ -124,9 +176,193 @@ fn unfaulted_runs_match_the_single_worker_protocol_for_any_worker_count() {
         }
         // the committed log replays to the same parameters from step 0
         let replayed =
-            helene::dist::replay_seed_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
+            helene::dist::replay_commit_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
                 .unwrap();
         assert!(replayed.bits_eq(&ref_params), "workers={workers}: replay diverges");
+    }
+}
+
+#[test]
+fn multi_probe_runs_match_the_single_process_step_multi() {
+    // the tentpole invariant: the (q + 1) × spans probe grid, folded per
+    // point in canonical shard order and applied via multi-records, is
+    // bitwise the single-process multi-probe pipeline — for any worker
+    // count and any q (q = 1 exercises the degenerate grid)
+    for q in [1usize, 4] {
+        let (ref_losses, ref_params) = reference_run_multi(q);
+        for workers in [1usize, 2, 4] {
+            let tag = format!("q={q}/workers={workers}");
+            let mut cfg = dist_cfg(workers, FaultPlan::new());
+            cfg.probes = q;
+            let (mut coord, report) = run_dist_multi(cfg);
+            assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+            assert_eq!(report.workers_alive, workers);
+            // every record is a q-probe multi commit with probe 0 on the
+            // step seed (the prefetch-compatibility contract)
+            for (i, rec) in report.log.iter().enumerate() {
+                assert!(!rec.pairwise, "{tag}: record {i} is pairwise");
+                assert_eq!(rec.probes.len(), q, "{tag}: record {i} probe count");
+                assert_eq!(
+                    rec.probes[0].0,
+                    mix64(RUN_SEED, i as u64 + 1),
+                    "{tag}: record {i} probe 0 is not the step seed"
+                );
+            }
+            for (w, replica) in coord.fetch_all().unwrap() {
+                assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+            }
+            let replayed = helene::dist::replay_commit_log(
+                &base_params(),
+                &mut ZoSgd::new(LR),
+                &report.log,
+            )
+            .unwrap();
+            assert!(replayed.bits_eq(&ref_params), "{tag}: replay diverges");
+        }
+    }
+}
+
+#[test]
+fn faulted_multi_probe_runs_stay_bitwise_identical_and_recover() {
+    // worker-class faults against the probe grid: a death mid-step (the
+    // replacement rebuilds by replaying v2 multi-records), a dropped and
+    // a delayed reply, and a poisoned partial — all invisible in the
+    // committed trajectory
+    let plans =
+        [("death", "die@3:1"), ("drop+delay", "drop@2:0,delay@4:1:200"), ("nan", "nan@2:1")];
+    for q in [1usize, 4] {
+        let (ref_losses, ref_params) = reference_run_multi(q);
+        for (name, spec) in plans {
+            for workers in [2usize, 4] {
+                let tag = format!("{name}/q={q}/workers={workers}");
+                let mut cfg = dist_cfg(workers, FaultPlan::parse(spec).unwrap());
+                cfg.probes = q;
+                let (mut coord, report) = run_dist_multi(cfg);
+                assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+                if name == "death" {
+                    assert!(report.stats.deaths >= 1, "{tag}: no death recorded");
+                    assert!(report.stats.recoveries >= 1, "{tag}: no recovery recorded");
+                    assert_eq!(report.workers_alive, workers, "{tag}: quorum not restored");
+                } else {
+                    assert!(report.stats.retries >= 1, "{tag}: fault never cost a retry");
+                }
+                for (w, replica) in coord.fetch_all().unwrap() {
+                    assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+                }
+                let replayed = helene::dist::replay_commit_log(
+                    &base_params(),
+                    &mut ZoSgd::new(LR),
+                    &report.log,
+                )
+                .unwrap();
+                assert!(replayed.bits_eq(&ref_params), "{tag}: replay diverges");
+            }
+        }
+    }
+}
+
+#[test]
+fn clip_telemetry_is_reported_and_identical_across_replicas() {
+    // HELENE's clip_fraction was previously invisible to `helene dist`;
+    // now every Applied reply carries it, and since every replica runs
+    // the identical apply arithmetic — including a seed-log-rebuilt
+    // replacement — the reported fractions must agree exactly
+    let helene_factory: WorkerFactory = Box::new(|_slot| {
+        Ok((
+            Box::new(SepQuadOracle::new()) as Box<dyn ShardLossOracle>,
+            Box::new(Helene::paper_defaults().with_lr(LR)) as Box<dyn Optimizer>,
+        ))
+    });
+    let mut cfg = dist_cfg(3, FaultPlan::parse("die@3:1").unwrap());
+    cfg.probes = 4;
+    let mut coord = Coordinator::launch_threads(cfg, base_params(), helene_factory).unwrap();
+    let report = coord.run_multi(STEPS, RUN_SEED).unwrap();
+    assert_eq!(report.clip_fractions.len(), 3);
+    let first = report.clip_fractions[0].expect("helene reports a clip fraction");
+    for (w, c) in report.clip_fractions.iter().enumerate() {
+        let c = c.unwrap_or_else(|| panic!("worker {w} reported no clip fraction"));
+        assert_eq!(c.to_bits(), first.to_bits(), "worker {w}: clip fraction diverges");
+    }
+    // and the dyn-reported value matches a single-process replay's
+    let mut ref_opt = Helene::paper_defaults().with_lr(LR);
+    let _ = helene::dist::replay_commit_log(&base_params(), &mut ref_opt, &report.log).unwrap();
+    assert_eq!(first.to_bits(), Helene::clip_fraction(&ref_opt).to_bits());
+    // a non-clipping optimizer stays None end-to-end
+    let (_c, rep) = run_dist(dist_cfg(2, FaultPlan::new()));
+    assert!(rep.clip_fractions.iter().all(Option::is_none));
+}
+
+/// Satellite: the bf16 θ-arena over the distributed tier. The pipelined
+/// single-process protocol is bitwise-equal to the naive one in f32
+/// only, so the tier — whose apply path IS the naive arithmetic — is
+/// pinned against the **naive-config** reference here: same walk, same
+/// fold, same update, in both the pairwise and multi-probe protocols,
+/// across worker counts and under a death fault.
+#[test]
+fn bf16_dist_runs_match_the_naive_reference_across_worker_counts() {
+    let naive = |q: usize| -> (Vec<f32>, ParamSet) {
+        let base = base_params().with_codec(Codec::Bf16);
+        let n_shards = base.n_shards();
+        let mut oracle = SepQuadOracle::new();
+        let cfg = TrainConfig {
+            steps: STEPS,
+            spsa_eps: EPS,
+            seed: RUN_SEED,
+            probes: q,
+            cache_z: false,
+            fuse_restore: false,
+            prefetch_perturb: false,
+            ..Default::default()
+        };
+        let mut opt = ZoSgd::new(LR);
+        opt.init(&base);
+        let mut params = base.clone();
+        let mut proto = ZoProtocol::new(&cfg);
+        let mut losses = Vec::with_capacity(STEPS);
+        for step in 1..=STEPS {
+            let step_seed = mix64(RUN_SEED, step as u64);
+            let next_seed = mix64(RUN_SEED, step as u64 + 1);
+            let loss_fn = |p: &ParamSet| {
+                Ok(fold_partial_losses(oracle.shard_partials(p, 0..n_shards, step as u64)?))
+            };
+            let est_loss = if q > 1 {
+                proto
+                    .step_multi(&mut opt, &mut params, step_seed, next_seed, true, loss_fn)
+                    .unwrap()
+                    .loss()
+            } else {
+                proto
+                    .step(&mut opt, &mut params, step_seed, next_seed, true, loss_fn)
+                    .unwrap()
+                    .loss()
+            };
+            losses.push(est_loss);
+        }
+        (losses, params)
+    };
+    for q in [1usize, 4] {
+        let (ref_losses, ref_params) = naive(q);
+        for workers in [1usize, 2, 4] {
+            let tag = format!("bf16/q={q}/workers={workers}");
+            let mut cfg = dist_cfg(workers, FaultPlan::new());
+            cfg.probes = q;
+            let mut coord = Coordinator::launch_threads(
+                cfg,
+                base_params().with_codec(Codec::Bf16),
+                factory(),
+            )
+            .unwrap();
+            let report = if q > 1 {
+                coord.run_multi(STEPS, RUN_SEED).unwrap()
+            } else {
+                coord.run(STEPS, RUN_SEED).unwrap()
+            };
+            assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+            assert_eq!(report.params.codec(), Codec::Bf16, "{tag}: codec lost in transit");
+            for (w, replica) in coord.fetch_all().unwrap() {
+                assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+            }
+        }
     }
 }
 
@@ -164,7 +400,7 @@ fn faulted_runs_stay_bitwise_identical_and_recover() {
             }
             // and a from-scratch replay of the committed log matches too
             let replayed =
-                helene::dist::replay_seed_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
+                helene::dist::replay_commit_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
                     .unwrap();
             assert!(replayed.bits_eq(&ref_params), "{tag}: replay diverges");
         }
@@ -231,9 +467,34 @@ fn committed_records_persist_to_the_seed_log_file() {
     let mut cfg = dist_cfg(2, FaultPlan::parse("die@3:1").unwrap());
     cfg.seed_log = Some(path.clone());
     let (_coord, report) = run_dist(cfg);
+    // pairwise runs keep writing the v1 24-byte format …
     let on_disk = checkpoint::load_seed_log(&path).unwrap();
+    let as_commits: Vec<CommitRecord> =
+        on_disk.iter().map(|&r| CommitRecord::from(r)).collect();
+    assert_eq!(as_commits, report.log);
+    assert_eq!(on_disk.len(), STEPS);
+    // … and the unified loader reads them back identically
+    assert_eq!(checkpoint::load_commit_log(&path).unwrap(), report.log);
+}
+
+#[test]
+fn multi_probe_records_persist_to_the_v2_commit_log() {
+    let dir = std::env::temp_dir().join("helene_dist_commitlog");
+    let path = dir.join("run.cl");
+    let _ = std::fs::remove_file(&path);
+    let mut cfg = dist_cfg(2, FaultPlan::parse("die@3:1").unwrap());
+    cfg.probes = 4;
+    cfg.seed_log = Some(path.clone());
+    // `run()` delegates to the multi grid when probes > 1
+    let (_coord, report) = run_dist(cfg);
+    let on_disk = checkpoint::load_commit_log(&path).unwrap();
     assert_eq!(on_disk, report.log);
     assert_eq!(on_disk.len(), STEPS);
+    assert!(on_disk.iter().all(|r| !r.pairwise && r.probes.len() == 4));
+    // the persisted log alone rebuilds the final parameters
+    let replayed =
+        helene::dist::replay_commit_log(&base_params(), &mut ZoSgd::new(LR), &on_disk).unwrap();
+    assert!(replayed.bits_eq(&report.params));
 }
 
 #[test]
@@ -249,6 +510,11 @@ fn dist_config_rejects_bad_knobs_with_actionable_messages() {
             "retry budget must be >= 1",
         ),
         (DistConfig { eps: f32::NAN, ..Default::default() }, "eps must be finite"),
+        (DistConfig { probes: 0, ..Default::default() }, "probes must be >= 1"),
+        (
+            DistConfig { wave_backoff: Some(Duration::ZERO), ..Default::default() },
+            "wave backoff must be > 0",
+        ),
     ];
     for (cfg, needle) in bad {
         let err = format!("{:#}", cfg.validate().unwrap_err());

@@ -6,15 +6,17 @@
 //! must end **bitwise identical** (f32 arenas) to the unfaulted
 //! single-worker `ZoProtocol`, including runs where a worker's
 //! connection is severed mid-step and it recovers by redialing and
-//! replaying the handshake's seed log (reconnect-by-replay).
+//! replaying the handshake's commit log (reconnect-by-replay). The
+//! multi-probe grid (`probes` > 1) rides the same wire matrix, and the
+//! handshake's config fingerprint refuses mismatched workers by name.
 
 use std::sync::mpsc;
 use std::time::Duration;
 
 use helene::dist::{
-    param_digest, run_socket_worker, Coordinator, DistConfig, DistReport, FaultPlan,
-    FaultProxy, SepQuadOracle, ShardLossOracle, SocketConfig, SocketEndpoint,
-    SocketTransport, Worker, WorkerExit, WorkerFactory,
+    param_digest, run_socket_worker, ConfigFingerprint, Coordinator, DistConfig,
+    DistReport, FaultPlan, FaultProxy, SepQuadOracle, ShardLossOracle, SocketConfig,
+    SocketEndpoint, SocketTransport, Worker, WorkerExit, WorkerFactory,
 };
 use helene::model::params::{ParamSet, SHARD_SIZE};
 use helene::optim::spsa::fold_partial_losses;
@@ -52,6 +54,8 @@ fn dist_cfg(workers: usize, plan: FaultPlan) -> DistConfig {
         recover: true,
         fault_plan: plan,
         seed_log: None,
+        probes: 1,
+        wave_backoff: None,
     }
 }
 
@@ -97,6 +101,42 @@ fn reference_run() -> (Vec<f32>, ParamSet) {
     (losses, params)
 }
 
+/// The single-process multi-probe reference (identical to
+/// dist_fault.rs): pipelined `step_multi` with the last step run as a
+/// boundary, which aligns the cumulative per-element op sequence with
+/// the tier's apply path.
+fn reference_run_multi(q: usize) -> (Vec<f32>, ParamSet) {
+    let base = base_params();
+    let n_shards = base.n_shards();
+    let mut oracle = SepQuadOracle::new();
+    let cfg = TrainConfig {
+        steps: STEPS,
+        spsa_eps: EPS,
+        seed: RUN_SEED,
+        probes: q,
+        ..Default::default()
+    };
+    let mut opt = ZoSgd::new(LR);
+    opt.init(&base);
+    let mut params = base.clone();
+    let mut proto = ZoProtocol::new(&cfg);
+    let mut losses = Vec::with_capacity(STEPS);
+    for step in 1..=STEPS {
+        let step_seed = mix64(RUN_SEED, step as u64);
+        let next_seed = mix64(RUN_SEED, step as u64 + 1);
+        let boundary = step == STEPS;
+        let est = proto
+            .step_multi(&mut opt, &mut params, step_seed, next_seed, boundary, |p| {
+                Ok(fold_partial_losses(
+                    oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                ))
+            })
+            .unwrap();
+        losses.push(est.loss());
+    }
+    (losses, params)
+}
+
 /// Run the tier over loopback TCP with in-process dialer threads.
 fn run_socket(cfg: DistConfig) -> (Coordinator<SocketTransport>, DistReport) {
     let mut coord = Coordinator::launch_socket_threads(
@@ -109,6 +149,22 @@ fn run_socket(cfg: DistConfig) -> (Coordinator<SocketTransport>, DistReport) {
     )
     .unwrap();
     let report = coord.run(STEPS, RUN_SEED).unwrap();
+    (coord, report)
+}
+
+/// Like [`run_socket`] but drives the multi-probe grid directly, so the
+/// q = 1 multi semantics are reachable too.
+fn run_socket_multi(cfg: DistConfig) -> (Coordinator<SocketTransport>, DistReport) {
+    let mut coord = Coordinator::launch_socket_threads(
+        cfg,
+        base_params(),
+        factory(),
+        RUN_SEED,
+        test_scfg(),
+        None,
+    )
+    .unwrap();
+    let report = coord.run_multi(STEPS, RUN_SEED).unwrap();
     (coord, report)
 }
 
@@ -177,9 +233,31 @@ fn unfaulted_socket_runs_match_the_single_worker_protocol() {
             assert!(replica.bits_eq(&ref_params), "workers={workers}: replica {w} diverges");
         }
         let replayed =
-            helene::dist::replay_seed_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
+            helene::dist::replay_commit_log(&base_params(), &mut ZoSgd::new(LR), &report.log)
                 .unwrap();
         assert!(replayed.bits_eq(&ref_params), "workers={workers}: replay diverges");
+    }
+}
+
+#[test]
+fn multi_probe_socket_runs_match_the_single_process_step_multi() {
+    // the probe grid over real TCP: every (point, span) item travels as
+    // a checksummed ProbePoint frame, the multi-record commit as an
+    // ApplyMulti broadcast — still bitwise the single-process pipeline
+    for q in [1usize, 4] {
+        let (ref_losses, ref_params) = reference_run_multi(q);
+        for workers in [1usize, 2, 4] {
+            let tag = format!("socket/q={q}/workers={workers}");
+            let mut cfg = dist_cfg(workers, FaultPlan::new());
+            cfg.probes = q;
+            let (mut coord, report) = run_socket_multi(cfg);
+            assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+            assert_eq!(report.stats.wire_reconnects, 0, "{tag}: healthy lanes redialed");
+            assert!(report.log.iter().all(|r| !r.pairwise && r.probes.len() == q));
+            for (w, replica) in coord.fetch_all().unwrap() {
+                assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+            }
+        }
     }
 }
 
@@ -271,8 +349,32 @@ fn a_cut_mid_run_recovers_purely_from_the_handshake_seed_log() {
     }
     // the committed log itself still replays to the reference arena
     let replayed =
-        helene::dist::replay_seed_log(&base_params(), &mut ZoSgd::new(LR), &report.log).unwrap();
+        helene::dist::replay_commit_log(&base_params(), &mut ZoSgd::new(LR), &report.log).unwrap();
     assert!(replayed.bits_eq(&ref_params), "seed-log replay diverges");
+}
+
+#[test]
+fn a_cut_mid_multi_probe_run_recovers_by_replaying_v2_records() {
+    // reconnect-by-replay over the multi-probe grid: the redialing
+    // worker's handshake ack carries v2 multi-commit records, and the
+    // rebuild must walk each one through step_zo_multi to stay bitwise
+    let q = 4usize;
+    let (ref_losses, ref_params) = reference_run_multi(q);
+    let mut cfg = dist_cfg(2, FaultPlan::parse("cut@3:1").unwrap());
+    cfg.probes = q;
+    let (mut coord, _proxy, report) = run_via_proxy(cfg);
+    assert_bitwise("multi/reconnect-by-replay", &report, &ref_losses, &ref_params);
+    assert!(report.stats.wire_reconnects >= 1, "the cut never forced a reconnect");
+    assert!(
+        report.log.iter().all(|r| !r.pairwise && r.probes.len() == q),
+        "expected v2 multi records in the commit log"
+    );
+    for (w, replica) in coord.fetch_all().unwrap() {
+        assert!(replica.bits_eq(&ref_params), "replica {w} diverges after replay");
+    }
+    let replayed =
+        helene::dist::replay_commit_log(&base_params(), &mut ZoSgd::new(LR), &report.log).unwrap();
+    assert!(replayed.bits_eq(&ref_params), "multi commit-log replay diverges");
 }
 
 #[test]
@@ -390,4 +492,52 @@ fn handshake_refuses_a_mismatched_base_arena() {
     };
     let err = format!("{:#}", run_socket_worker(worker, other, ep).unwrap_err());
     assert!(err.contains("arena mismatch"), "{err}");
+}
+
+#[test]
+fn handshake_refuses_a_mismatched_config_fingerprint_naming_the_field() {
+    // the silent-mismatch hole: a worker dialing with a different lr used
+    // to pass the handshake and diverge bitwise mid-run. The refusal must
+    // name the differing field — not hide behind a digest comparison.
+    let base = base_params();
+    let mut listen_scfg = test_scfg();
+    listen_scfg.fingerprint = ConfigFingerprint {
+        opt: "mezo".into(),
+        lr: LR,
+        eps: EPS,
+        steps: STEPS as u64,
+        probes: 4,
+    };
+    let _transport = SocketTransport::listen(
+        "127.0.0.1:0",
+        1,
+        RUN_SEED,
+        param_digest(&base),
+        listen_scfg.clone(),
+    )
+    .unwrap();
+    let addr = _transport.local_addr();
+    let worker = Worker::new(
+        0,
+        &base,
+        Box::new(ZoSgd::new(LR)) as Box<dyn Optimizer>,
+        Box::new(SepQuadOracle::new()) as Box<dyn ShardLossOracle>,
+        FaultPlan::new(),
+    );
+    let mut dial_scfg = listen_scfg;
+    dial_scfg.fingerprint.lr = LR * 2.0; // worker launched with the wrong lr
+    let ep = SocketEndpoint {
+        addr,
+        slot: 0,
+        run_seed: RUN_SEED,
+        base_digest: param_digest(&base),
+        cfg: dial_scfg,
+    };
+    let err = format!("{:#}", run_socket_worker(worker, base, ep).unwrap_err());
+    assert!(err.contains("refused"), "{err}");
+    assert!(err.contains("lr mismatch: coordinator uses"), "{err}");
+    assert!(
+        !err.contains("digest") && !err.contains("arena mismatch"),
+        "refusal must name the field, not a digest: {err}"
+    );
 }
