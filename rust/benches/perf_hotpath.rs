@@ -40,7 +40,14 @@
 //!    informational `dist_speedup` (loss-evaluation parallelism is real
 //!    only when the oracle's FLOPs dominate; on a 2-core runner the
 //!    speedup is modest and not gated).
-//! 6. **PJRT section** (skipped when `artifacts/` is absent): forward
+//! 6. **Adaptive-ε section** (always runs): the annealed FZOO-style ε
+//!    schedule (`--adapt-eps`) at q = 4 — fixed-ε vs adapted-ε pipeline
+//!    wall clock (the schedule is O(q) scalar work per step, so the
+//!    CI-gated `adapt_overhead` must stay ≤ 1%) and a 2-worker
+//!    coordinator run cross-checked bitwise against the single-process
+//!    adapted trajectory (losses, committed ε trace, final arena — the
+//!    CI-gated `eps_adapt_bitwise` flag).
+//! 7. **PJRT section** (skipped when `artifacts/` is absent): forward
 //!    passes, the buffered fast path, the fused L1 update kernel and
 //!    loss_grad — the per-step cost structure DESIGN.md §Perf documents.
 
@@ -909,6 +916,139 @@ fn dist_section(base: &ParamSet, scale: Scale) -> anyhow::Result<DistBenchStats>
     })
 }
 
+/// §Adaptive-ε bench outcome: the FZOO-style schedule's bitwise
+/// cross-check (single-process adapted trajectory vs the 2-worker
+/// coordinator, ε trace included) and its wall-clock overhead against
+/// the fixed-ε pipeline at the same q (CI gates on both).
+struct EpsAdaptStats {
+    /// Best-of-N single-process wall clock, fixed ε, q = 4.
+    t_fixed_ms: f64,
+    /// Best-of-N single-process wall clock, adapted ε, q = 4.
+    t_adapt_ms: f64,
+    /// `max(0, t_adapt / t_fixed − 1)` — the schedule is O(q) scalar ops
+    /// per step against O(n) arena sweeps, so this gates at ≤ 1%.
+    overhead: f64,
+    /// Whether the 2-worker adapted run reproduced the single-process
+    /// adapted trajectory bit-for-bit — losses, committed ε trace, and
+    /// final arena (CI-gated).
+    bitwise: bool,
+}
+
+/// Annealed ε adaptation: measure the schedule's overhead on the
+/// single-process multi-probe pipeline and cross-check the distributed
+/// coordinator's adapted trajectory against it; assert nothing here (CI
+/// gates on the emitted `eps_adapt_bitwise` / `adapt_overhead`).
+fn eps_adapt_section(base: &ParamSet, scale: Scale) -> anyhow::Result<EpsAdaptStats> {
+    use helene::dist::{
+        Coordinator, DistConfig, SepQuadOracle, ShardLossOracle, WorkerFactory,
+    };
+    use helene::optim::spsa::EpsAdaptConfig;
+    use helene::optim::zo_sgd::ZoSgd;
+    use helene::train::{TrainConfig, ZoProtocol};
+    use helene::util::rng::mix64;
+
+    let steps = match scale {
+        Scale::Smoke => 4,
+        _ => 8,
+    };
+    let (work, q) = (6u32, 4usize);
+    let (run_seed, eps, lr) = (5u64, 1e-3f32, 0.01f32);
+    let n_shards = base.n_shards();
+
+    // one single-process q-probe run (losses, ε trace, final arena);
+    // `adapt: None` is the fixed-ε timing baseline, `Some(default)` both
+    // times the adapted pipeline and produces the reference trajectory
+    // for the distributed check
+    type Traj = (Vec<f32>, Vec<f32>, ParamSet);
+    let run_single = |adapt: Option<EpsAdaptConfig>| -> anyhow::Result<Traj> {
+        let cfg = TrainConfig {
+            steps,
+            spsa_eps: eps,
+            seed: run_seed,
+            probes: q,
+            adapt_eps: adapt,
+            ..Default::default()
+        };
+        let mut oracle = SepQuadOracle::with_work(work);
+        let mut opt = ZoSgd::new(lr);
+        opt.init(base);
+        let mut params = base.clone();
+        let mut proto = ZoProtocol::new_adapted(&cfg, spsa::bf16_eps_floor(base))?;
+        let mut losses = Vec::with_capacity(steps);
+        let mut eps_trace = Vec::with_capacity(steps);
+        for step in 1..=steps {
+            eps_trace.push(proto.eps());
+            let est = proto.step_multi(
+                &mut opt,
+                &mut params,
+                mix64(run_seed, step as u64),
+                mix64(run_seed, step as u64 + 1),
+                step == steps,
+                |p| {
+                    Ok(spsa::fold_partial_losses(
+                        oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                    ))
+                },
+            )?;
+            losses.push(est.loss());
+        }
+        Ok((losses, eps_trace, params))
+    };
+
+    // wall-clock: best-of-N full runs, min statistics (one-sided noise)
+    let trials = match scale {
+        Scale::Smoke => 3,
+        _ => 5,
+    };
+    let t_fixed_ms = 1e3 * best(trials, || {
+        black_box(run_single(None).unwrap());
+    });
+    let t_adapt_ms = 1e3 * best(trials, || {
+        black_box(run_single(Some(EpsAdaptConfig::default())).unwrap());
+    });
+    let overhead = (t_adapt_ms / t_fixed_ms - 1.0).max(0.0);
+
+    // bitwise: the 2-worker channel coordinator with the same schedule
+    let (ref_losses, ref_eps, ref_params) = run_single(Some(EpsAdaptConfig::default()))?;
+    let cfg = DistConfig {
+        workers: 2,
+        eps,
+        probes: q,
+        adapt: Some(EpsAdaptConfig::default()),
+        ..Default::default()
+    };
+    let factory: WorkerFactory = Box::new(move |_slot| {
+        Ok((
+            Box::new(SepQuadOracle::with_work(work)) as Box<dyn ShardLossOracle>,
+            Box::new(ZoSgd::new(lr)) as Box<dyn Optimizer>,
+        ))
+    });
+    let mut coord = Coordinator::launch_threads(cfg, base.clone(), factory)?;
+    let report = coord.run(steps, run_seed)?;
+    let bitwise = report.losses.len() == ref_losses.len()
+        && report
+            .losses
+            .iter()
+            .zip(&ref_losses)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+        && report.log.len() == ref_eps.len()
+        && report
+            .log
+            .iter()
+            .zip(&ref_eps)
+            .all(|(r, e)| r.eps.to_bits() == e.to_bits())
+        && report.params.bits_eq(&ref_params);
+
+    println!(
+        "eps adapt (q={q}, {steps} steps, work={work}): fixed {t_fixed_ms:.1} ms, \
+         adapted {t_adapt_ms:.1} ms ({:.2}% overhead), 2-worker coordinator \
+         bitwise vs single-process: {}",
+        100.0 * overhead,
+        if bitwise { "identical" } else { "MISMATCH" }
+    );
+    Ok(EpsAdaptStats { t_fixed_ms, t_adapt_ms, overhead, bitwise })
+}
+
 #[allow(clippy::too_many_arguments)]
 fn write_json(
     scale: Scale,
@@ -919,6 +1059,7 @@ fn write_json(
     tiled: &TiledStats,
     multi: &MultiStats,
     dist: &DistBenchStats,
+    eps_adapt: &EpsAdaptStats,
     n_params: usize,
 ) -> anyhow::Result<PathBuf> {
     let mut threads = BTreeMap::new();
@@ -1091,6 +1232,15 @@ fn write_json(
     }
     root.insert("dist_multiprobe".to_string(), Json::Obj(dmp));
     root.insert("dist_speedup".to_string(), Json::Num(dist.speedup()));
+    // annealed ε adaptation: the 2-worker adapted trajectory (ε trace
+    // included) must be bitwise the single-process one, and the schedule
+    // must cost ≤ 1% wall clock vs the fixed-ε pipeline (both CI-gated)
+    root.insert("eps_adapt_bitwise".to_string(), Json::Bool(eps_adapt.bitwise));
+    root.insert("adapt_overhead".to_string(), Json::Num(eps_adapt.overhead));
+    let mut ea = BTreeMap::new();
+    ea.insert("t_fixed_ms".to_string(), Json::Num(eps_adapt.t_fixed_ms));
+    ea.insert("t_adapt_ms".to_string(), Json::Num(eps_adapt.t_adapt_ms));
+    root.insert("eps_adapt".to_string(), Json::Obj(ea));
     let mut dj = BTreeMap::new();
     dj.insert("workers".to_string(), Json::Num(dist.workers as f64));
     dj.insert("steps".to_string(), Json::Num(dist.steps as f64));
@@ -1257,8 +1407,11 @@ fn main() -> anyhow::Result<()> {
     let tiled = tiled_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), iters)?;
     let multi = multiprobe_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), iters)?;
     let dist = dist_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), scale)?;
+    let eps_adapt = eps_adapt_section(&ParamSet::synthetic(&synth_sizes(scale), 0.5), scale)?;
     let n_params = synth_sizes(scale).iter().sum();
-    write_json(scale, &sampler, &rows, &sweeps, &bf16, &tiled, &multi, &dist, n_params)?;
+    write_json(
+        scale, &sampler, &rows, &sweeps, &bf16, &tiled, &multi, &dist, &eps_adapt, n_params,
+    )?;
 
     if Runtime::default_dir().join("manifest.json").exists() {
         pjrt_section(match scale {

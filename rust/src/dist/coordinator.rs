@@ -38,7 +38,7 @@ use super::worker::{run_worker, Worker};
 use super::{plan_spans, WorkerFactory};
 use crate::model::checkpoint::{self, CommitRecord};
 use crate::model::ParamSet;
-use crate::optim::spsa::{fold_partial_losses, probe_seed};
+use crate::optim::spsa::{bf16_eps_floor, fold_partial_losses, probe_seed, EpsSchedule};
 use crate::util::rng::mix64;
 
 /// Knobs for the distributed tier. Mirrored by `TrainConfig`'s
@@ -75,6 +75,16 @@ pub struct DistConfig {
     /// `--wave-backoff-ms` so cross-host latency sensitivity is
     /// scriptable.
     pub wave_backoff: Option<Duration>,
+    /// FZOO-style online ε adaptation
+    /// ([`crate::optim::spsa::EpsAdaptConfig`], the `--adapt-eps` flag).
+    /// `None` keeps ε fixed at [`Self::eps`]. `Some(_)` runs every step
+    /// through the multi-probe grid (even at probes = 1): the coordinator
+    /// sees all q probe scalars before committing, folds them into the
+    /// identical [`crate::optim::spsa::EpsSchedule`] the single-process
+    /// protocol runs, and stamps each step's ε into its v2 commit record
+    /// — so replay and replacement-by-replay reproduce adapted
+    /// trajectories bitwise with no format change.
+    pub adapt: Option<crate::optim::spsa::EpsAdaptConfig>,
 }
 
 impl Default for DistConfig {
@@ -89,6 +99,7 @@ impl Default for DistConfig {
             seed_log: None,
             probes: 1,
             wave_backoff: None,
+            adapt: None,
         }
     }
 }
@@ -128,6 +139,9 @@ impl DistConfig {
                 "wave backoff must be > 0 ms (got 0): a zero backoff base would \
                  expire every retry wave immediately"
             );
+        }
+        if let Some(a) = &self.adapt {
+            a.validate()?;
         }
         Ok(())
     }
@@ -482,6 +496,7 @@ impl<T: Transport> Coordinator<T> {
         &mut self,
         step: u64,
         seed: u64,
+        eps: f32,
         q: usize,
         point: usize,
         span_i: usize,
@@ -517,7 +532,7 @@ impl<T: Transport> Coordinator<T> {
             let req = Request::ProbePoint {
                 step,
                 seed,
-                eps: self.cfg.eps,
+                eps,
                 q,
                 point,
                 shards: self.spans[span_i].clone(),
@@ -537,7 +552,13 @@ impl<T: Transport> Coordinator<T> {
     /// L_base]`), each the order-fixed [`fold_partial_losses`] over the
     /// point's partials in global shard order — bitwise independent of
     /// the worker count and of which worker served which item.
-    fn probe_round_multi(&mut self, step: u64, seed: u64, q: usize) -> Result<Vec<f32>> {
+    fn probe_round_multi(
+        &mut self,
+        step: u64,
+        seed: u64,
+        eps: f32,
+        q: usize,
+    ) -> Result<Vec<f32>> {
         let n_spans = self.spans.len();
         let n_items = (q + 1) * n_spans;
         let mut parts: Vec<Option<Vec<f64>>> = vec![None; n_items];
@@ -549,7 +570,8 @@ impl<T: Transport> Coordinator<T> {
         for point in 0..=q {
             for i in 0..n_spans {
                 self.dispatch_probe_point(
-                    step, seed, q, point, i, &mut attempts, &mut assigned_to, &last_err,
+                    step, seed, eps, q, point, i, &mut attempts, &mut assigned_to,
+                    &last_err,
                 )?;
             }
         }
@@ -582,8 +604,8 @@ impl<T: Transport> Coordinator<T> {
                                 p.len()
                             ));
                             self.dispatch_probe_point(
-                                step, seed, q, point, i, &mut attempts, &mut assigned_to,
-                                &last_err,
+                                step, seed, eps, q, point, i, &mut attempts,
+                                &mut assigned_to, &last_err,
                             )?;
                             continue;
                         }
@@ -593,8 +615,8 @@ impl<T: Transport> Coordinator<T> {
                                  ({bad}) for span {shards:?} at step {step} (point {point})"
                             ));
                             self.dispatch_probe_point(
-                                step, seed, q, point, i, &mut attempts, &mut assigned_to,
-                                &last_err,
+                                step, seed, eps, q, point, i, &mut attempts,
+                                &mut assigned_to, &last_err,
                             )?;
                             continue;
                         }
@@ -612,8 +634,8 @@ impl<T: Transport> Coordinator<T> {
                         {
                             let (point, i) = (item / n_spans, item % n_spans);
                             self.dispatch_probe_point(
-                                step, seed, q, point, i, &mut attempts, &mut assigned_to,
-                                &last_err,
+                                step, seed, eps, q, point, i, &mut attempts,
+                                &mut assigned_to, &last_err,
                             )?;
                         }
                     }
@@ -628,8 +650,8 @@ impl<T: Transport> Coordinator<T> {
                     if parts[item].is_none() {
                         let (point, i) = (item / n_spans, item % n_spans);
                         self.dispatch_probe_point(
-                            step, seed, q, point, i, &mut attempts, &mut assigned_to,
-                            &last_err,
+                            step, seed, eps, q, point, i, &mut attempts,
+                            &mut assigned_to, &last_err,
                         )?;
                     }
                 }
@@ -801,10 +823,13 @@ impl<T: Transport> Coordinator<T> {
     /// Run `steps` training steps from the step-0 arena. Step seeds are
     /// `mix64(run_seed, step)`, exactly as the single-worker loop, so
     /// the trajectory is comparable bit-for-bit. With `cfg.probes > 1`
-    /// this delegates to [`Coordinator::run_multi`], which spreads each
-    /// step's probe points across the cluster.
+    /// or ε adaptation armed (`cfg.adapt`) this delegates to
+    /// [`Coordinator::run_multi`], which spreads each step's probe
+    /// points across the cluster — adaptation needs the one-sided
+    /// multi-probe scalars even at q = 1, mirroring the trainer's
+    /// dispatch.
     pub fn run(&mut self, steps: usize, run_seed: u64) -> Result<DistReport> {
-        if self.cfg.probes > 1 {
+        if self.cfg.probes > 1 || self.cfg.adapt.is_some() {
             return self.run_multi(steps, run_seed);
         }
         ensure!(
@@ -865,6 +890,15 @@ impl<T: Transport> Coordinator<T> {
     ///
     /// Per-step reported losses are the shared baseline `L_base` —
     /// the multi-probe estimator's loss readout, matching the trainer.
+    ///
+    /// With `cfg.adapt` set, ε is adapted **here**, after folding the q
+    /// scalars and before broadcasting the commit — the record carries
+    /// the ε its probes actually used, and the freshly adapted ε drives
+    /// the next step's grid. The schedule instance is bit-identical to
+    /// the single-process `ZoProtocol`'s (same [`EpsSchedule`] fed the
+    /// same raw scalar bits, with the same bf16 floor computed from the
+    /// step-0 arena), so adapted distributed trajectories pin bitwise
+    /// against `step_multi` — the `eps_adapt_bitwise` CI gate.
     pub fn run_multi(&mut self, steps: usize, run_seed: u64) -> Result<DistReport> {
         ensure!(
             self.log.is_empty(),
@@ -873,10 +907,15 @@ impl<T: Transport> Coordinator<T> {
             self.log.len()
         );
         let q = self.cfg.probes.max(1);
+        let mut sched = match self.cfg.adapt {
+            Some(a) => Some(EpsSchedule::new(a, self.cfg.eps, bf16_eps_floor(&self.base))?),
+            None => None,
+        };
+        let mut eps = self.cfg.eps;
         let mut losses = Vec::with_capacity(steps);
         for step in 1..=steps as u64 {
             let seed = mix64(run_seed, step);
-            let point_losses = self.probe_round_multi(step, seed, q)?;
+            let point_losses = self.probe_round_multi(step, seed, eps, q)?;
             debug_assert_eq!(point_losses.len(), q + 1);
             ensure!(
                 point_losses.iter().all(|l| l.is_finite()),
@@ -886,14 +925,20 @@ impl<T: Transport> Coordinator<T> {
             );
             let loss_base = point_losses[q];
             let probes: Vec<(u64, f32)> = (0..q)
-                .map(|i| (probe_seed(seed, i), (point_losses[i] - loss_base) / self.cfg.eps))
+                .map(|i| (probe_seed(seed, i), (point_losses[i] - loss_base) / eps))
                 .collect();
             ensure!(
                 probes.iter().all(|(_, g)| g.is_finite()),
                 "non-finite probe scalar at step {step} (step seed {seed}): \
                  probes {probes:?}"
             );
-            let rec = CommitRecord::multi(step, self.cfg.eps, probes);
+            let rec = CommitRecord::multi(step, eps, probes);
+            // adapt ε for the next step from this step's raw scalars —
+            // same update point as the single-process protocol (after the
+            // estimate, before anything consumes the next ε)
+            if let Some(s) = &mut sched {
+                eps = s.update(&rec.probes);
+            }
             self.log.push(rec.clone());
             // same ordering invariant as the pairwise loop: the transport
             // sees the record before the apply broadcast

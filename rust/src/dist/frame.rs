@@ -43,8 +43,10 @@ pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 28;
 /// any change to the frame layout or message encoding. Version 2 added
 /// the multi-probe messages (`ProbePoint` / `ApplyMulti`), the commit
 /// records in the handshake ack, the clip-telemetry field on `Applied`,
-/// and the config fingerprint in [`Hello`].
-pub const PROTOCOL_VERSION: u32 = 2;
+/// and the config fingerprint in [`Hello`]. Version 3 extended the
+/// fingerprint with the ε-adaptation mode and hyperparameters
+/// (`--adapt-eps`).
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Magic bytes opening every [`Hello`] message, so a dialer that hits
 /// the wrong port fails with "not a helene dist endpoint" instead of a
@@ -606,6 +608,13 @@ pub struct ConfigFingerprint {
     pub steps: u64,
     /// Probes per step (q; 1 = classic antithetic pairwise).
     pub probes: u32,
+    /// ε-adaptation settings (`--adapt-eps`): `None` = fixed ε. A worker
+    /// dialed with a different adaptation mode **or any differing
+    /// hyperparameter** would replay the identical commit log but expect
+    /// a different ε trajectory at its first locally-derived decision —
+    /// refused at connect instead. Hyperparameter floats are compared by
+    /// bit pattern like every other float here.
+    pub adapt: Option<crate::optim::spsa::EpsAdaptConfig>,
 }
 
 impl ConfigFingerprint {
@@ -642,6 +651,33 @@ impl ConfigFingerprint {
                 "probe-count mismatch: coordinator runs q = {}, worker dialed with q = {}",
                 self.probes, dialed.probes
             ));
+        }
+        match (&self.adapt, &dialed.adapt) {
+            (None, None) => {}
+            (Some(_), None) | (None, Some(_)) => {
+                return Some(format!(
+                    "eps-adaptation mismatch: coordinator runs adapt-eps = {}, worker \
+                     dialed with adapt-eps = {}",
+                    if self.adapt.is_some() { "on" } else { "off" },
+                    if dialed.adapt.is_some() { "on" } else { "off" },
+                ));
+            }
+            (Some(a), Some(b)) => {
+                let fields = [
+                    ("adapt-anneal", a.anneal, b.anneal),
+                    ("adapt-gain", a.gain, b.gain),
+                    ("adapt-min-ratio", a.min_ratio, b.min_ratio),
+                    ("adapt-max-ratio", a.max_ratio, b.max_ratio),
+                ];
+                for (name, ours, theirs) in fields {
+                    if ours.to_bits() != theirs.to_bits() {
+                        return Some(format!(
+                            "{name} mismatch: coordinator uses {ours}, worker dialed \
+                             with {theirs}"
+                        ));
+                    }
+                }
+            }
         }
         None
     }
@@ -687,6 +723,19 @@ pub fn encode_hello(h: &Hello) -> Vec<u8> {
     out.extend_from_slice(&h.fingerprint.eps.to_le_bytes());
     out.extend_from_slice(&h.fingerprint.steps.to_le_bytes());
     out.extend_from_slice(&h.fingerprint.probes.to_le_bytes());
+    // ε-adaptation tail (v3): mode byte + the four hyperparameters (zero
+    // filler when adaptation is off, so the frame length is fixed)
+    let a = h.fingerprint.adapt.unwrap_or(crate::optim::spsa::EpsAdaptConfig {
+        anneal: 0.0,
+        gain: 0.0,
+        min_ratio: 0.0,
+        max_ratio: 0.0,
+    });
+    out.push(h.fingerprint.adapt.is_some() as u8);
+    out.extend_from_slice(&a.anneal.to_le_bytes());
+    out.extend_from_slice(&a.gain.to_le_bytes());
+    out.extend_from_slice(&a.min_ratio.to_le_bytes());
+    out.extend_from_slice(&a.max_ratio.to_le_bytes());
     out
 }
 
@@ -702,7 +751,7 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
         magic == HELLO_MAGIC,
         "bad handshake magic {magic:02x?} — the dialer is not a helene dist worker"
     );
-    let hello = Hello {
+    let mut hello = Hello {
         version: d.u32("version")?,
         run_seed: d.u64("run_seed")?,
         slot: d.usize("slot")?,
@@ -714,8 +763,20 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
             eps: d.f32("fingerprint.eps")?,
             steps: d.u64("fingerprint.steps")?,
             probes: d.u32("fingerprint.probes")?,
+            adapt: None,
         },
     };
+    let mode = d.u8("fingerprint.adapt")?;
+    ensure!(mode <= 1, "fingerprint.adapt mode must be 0 or 1, got {mode}");
+    let adapt = crate::optim::spsa::EpsAdaptConfig {
+        anneal: d.f32("fingerprint.adapt.anneal")?,
+        gain: d.f32("fingerprint.adapt.gain")?,
+        min_ratio: d.f32("fingerprint.adapt.min-ratio")?,
+        max_ratio: d.f32("fingerprint.adapt.max-ratio")?,
+    };
+    if mode == 1 {
+        hello.fingerprint.adapt = Some(adapt);
+    }
     d.done("hello")?;
     Ok(hello)
 }
@@ -1038,9 +1099,16 @@ mod tests {
                 eps: 1e-3,
                 steps: 50,
                 probes: 4,
+                adapt: Some(crate::optim::spsa::EpsAdaptConfig::default()),
             },
         };
         assert_eq!(decode_hello(&encode_hello(&hello)).unwrap(), hello);
+        // adaptation-off round-trips too (mode byte 0, filler ignored)
+        let plain = Hello {
+            fingerprint: ConfigFingerprint { adapt: None, ..hello.fingerprint.clone() },
+            ..hello.clone()
+        };
+        assert_eq!(decode_hello(&encode_hello(&plain)).unwrap(), plain);
         // mixed pairwise + multi records replay through one ack
         let ack = HelloReply::Ack {
             version: PROTOCOL_VERSION,
@@ -1056,25 +1124,64 @@ mod tests {
 
     #[test]
     fn fingerprint_mismatch_names_the_first_differing_field() {
+        use crate::optim::spsa::EpsAdaptConfig;
+        let adapt = EpsAdaptConfig::default();
         let ours = ConfigFingerprint {
             opt: "mezo".into(),
             lr: 0.01,
             eps: 1e-3,
             steps: 50,
             probes: 4,
+            adapt: Some(adapt),
         };
         assert_eq!(ours.mismatch_against(&ours.clone()), None);
-        let cases: [(ConfigFingerprint, &str); 5] = [
+        let cases: [(ConfigFingerprint, &str); 10] = [
             (ConfigFingerprint { opt: "helene".into(), ..ours.clone() }, "optimizer mismatch"),
             (ConfigFingerprint { lr: 0.02, ..ours.clone() }, "lr mismatch"),
             (ConfigFingerprint { eps: 1e-4, ..ours.clone() }, "eps mismatch"),
             (ConfigFingerprint { steps: 49, ..ours.clone() }, "step-budget mismatch"),
             (ConfigFingerprint { probes: 1, ..ours.clone() }, "probe-count mismatch"),
+            (ConfigFingerprint { adapt: None, ..ours.clone() }, "eps-adaptation mismatch"),
+            (
+                ConfigFingerprint {
+                    adapt: Some(EpsAdaptConfig { anneal: 0.9, ..adapt }),
+                    ..ours.clone()
+                },
+                "adapt-anneal mismatch",
+            ),
+            (
+                ConfigFingerprint {
+                    adapt: Some(EpsAdaptConfig { gain: 0.5, ..adapt }),
+                    ..ours.clone()
+                },
+                "adapt-gain mismatch",
+            ),
+            (
+                ConfigFingerprint {
+                    adapt: Some(EpsAdaptConfig { min_ratio: 0.25, ..adapt }),
+                    ..ours.clone()
+                },
+                "adapt-min-ratio mismatch",
+            ),
+            (
+                ConfigFingerprint {
+                    adapt: Some(EpsAdaptConfig { max_ratio: 8.0, ..adapt }),
+                    ..ours.clone()
+                },
+                "adapt-max-ratio mismatch",
+            ),
         ];
         for (theirs, want) in cases {
             let msg = ours.mismatch_against(&theirs).unwrap();
             assert!(msg.contains(want), "expected {want:?} in {msg:?}");
         }
+        // the asymmetric refusal names which side runs adaptation
+        let off = ConfigFingerprint { adapt: None, ..ours.clone() };
+        let msg = off.mismatch_against(&ours).unwrap();
+        assert!(
+            msg.contains("coordinator runs adapt-eps = off") && msg.contains("worker dialed"),
+            "{msg}"
+        );
         // floats compare by bits: -0.0 vs 0.0 is a mismatch
         let neg = ConfigFingerprint { lr: -0.0, ..ours.clone() };
         let pos = ConfigFingerprint { lr: 0.0, ..ours.clone() };

@@ -148,6 +148,11 @@ train options:
   --codec C      θ-arena storage codec: f32 | bf16 (default: manifest)
   --eps-floor    clamp ε up to mean|θ|/256 when the bf16 codec would
                  round the perturbation away (DESIGN.md §Precision)
+  --adapt-eps    FZOO-style annealed ε adaptation: re-estimate ε each step
+                 from the spread of the q probe gradients (ZO optimizers
+                 only; DESIGN.md §Adaptive ε); override the schedule with
+                 --adapt-anneal F / --adapt-gain F / --adapt-min-ratio F /
+                 --adapt-max-ratio F
   --config PATH  TOML-lite config file (CLI flags win)
   --workers N    distributed worker count (default 1; N > 1 needs `helene
                  dist` — the compiled-model runner is single-threaded)
@@ -166,6 +171,10 @@ dist: the seed-and-scalar worker tier over a synthetic separable loss —
                  one shared baseline across the workers and commits
                  multi-records — bitwise identical to the single-process
                  multi-probe protocol (default 1: classic pairwise)
+  --adapt-eps    anneal ε from the probe spread exactly as in train; the
+                 per-step ε rides in every commit record, so replay and
+                 replacement-by-replay reproduce the adapted trajectory
+                 bitwise (same overrides as in train)
   --seed-log PATH  append every committed record (v1 24-byte pairwise
                  format, or the v2 multi-probe commit-log format when
                  --probes > 1)
@@ -182,16 +191,48 @@ dist: the seed-and-scalar worker tier over a synthetic separable loss —
 
 dist-worker: one worker process for a listening coordinator; model/run
   flags must match the coordinator's or its handshake refuses the dial,
-  naming the differing field (optimizer, lr, eps, steps, probes, seed,
-  or arena digest):
+  naming the differing field (optimizer, lr, eps, steps, probes,
+  ε-adaptation, seed, or arena digest):
   helene dist-worker --connect 127.0.0.1:7070 --slot 0 --n-params 65536 \\
-    --opt mezo --lr 1e-3 --eps 1e-3 --steps 50 --probes 1 --seed 0 [--work N]
+    --opt mezo --lr 1e-3 --eps 1e-3 --steps 50 --probes 1 --seed 0 \\
+    [--adapt-eps] [--work N]
   exits 0 on the coordinator's end-of-run shutdown message
 
 sweep: grid-search lr on dev (paper protocol):
   helene sweep --model M --task T --opt O --lrs 1e-4,3e-4,1e-3 --steps 600
   --out PATH     write the step history CSV here
 ";
+
+/// Parse the `--adapt-eps` flag family shared by `train`, `dist` and
+/// `dist-worker`. The bare flag (or `enabled`, from a config-file key)
+/// arms the FZOO-style ε schedule with its defaults; `--adapt-anneal` /
+/// `--adapt-gain` / `--adapt-min-ratio` / `--adapt-max-ratio` override
+/// individual hyperparameters and are rejected when the schedule is off
+/// so a typo cannot silently change nothing.
+fn parse_adapt_eps(
+    args: &Args,
+    enabled: bool,
+) -> Result<Option<helene::optim::spsa::EpsAdaptConfig>> {
+    use helene::optim::spsa::EpsAdaptConfig;
+    let on = enabled || args.get("adapt-eps").is_some();
+    if !on {
+        for flag in ["adapt-anneal", "adapt-gain", "adapt-min-ratio", "adapt-max-ratio"] {
+            if args.get(flag).is_some() {
+                bail!("--{flag} needs --adapt-eps (the ε schedule is off)");
+            }
+        }
+        return Ok(None);
+    }
+    let d = EpsAdaptConfig::default();
+    let cfg = EpsAdaptConfig {
+        anneal: args.f32("adapt-anneal", d.anneal)?,
+        gain: args.f32("adapt-gain", d.gain)?,
+        min_ratio: args.f32("adapt-min-ratio", d.min_ratio)?,
+        max_ratio: args.f32("adapt-max-ratio", d.max_ratio)?,
+    };
+    cfg.validate()?;
+    Ok(Some(cfg))
+}
 
 fn default_lr(opt: &str) -> f32 {
     match opt {
@@ -259,6 +300,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     // perturbation survives a bf16 round-trip (DESIGN.md §Precision)
     tc.eps_floor =
         args.get("eps-floor").is_some() || cfg_file.u64("train.eps_floor", 0)? != 0;
+    // FZOO-style annealed ε adaptation: --adapt-eps / `train.adapt_eps = 1`
+    // re-estimates ε each step from the spread of the probe gradients
+    // (DESIGN.md §Adaptive ε); validated inside parse_adapt_eps
+    tc.adapt_eps = parse_adapt_eps(args, cfg_file.u64("train.adapt_eps", 0)? != 0)?;
     // robustness knobs (DESIGN.md §Distributed) — validated here at parse
     // time so a bad value fails before the runner loads anything
     tc.workers = args.usize("workers", cfg_file.usize("train.workers", 1)?)?;
@@ -351,12 +396,14 @@ fn cmd_dist(args: &Args) -> Result<()> {
         tc.wave_backoff_ms =
             Some(ms.parse().with_context(|| format!("bad --wave-backoff-ms {ms:?}"))?);
     }
+    tc.adapt_eps = parse_adapt_eps(args, false)?;
     tc.dist_fingerprint = Some(helene::dist::ConfigFingerprint {
         opt: opt_name.clone(),
         lr,
         eps: tc.spsa_eps,
         steps: steps as u64,
         probes: tc.probes as u32,
+        adapt: tc.adapt_eps,
     });
     tc.validate_robustness()?;
     let seed_log = args.get("seed-log").map(PathBuf::from);
@@ -370,10 +417,11 @@ fn cmd_dist(args: &Args) -> Result<()> {
     };
     println!(
         "dist: workers={} n_params={n_params} steps={steps} opt={opt_name} lr={lr} \
-         eps={} probes={} transport={transport} fault-plan={:?}",
+         eps={} probes={} adapt-eps={} transport={transport} fault-plan={:?}",
         tc.workers,
         tc.spsa_eps,
         tc.probes,
+        if tc.adapt_eps.is_some() { "on" } else { "off" },
         plan_spec
     );
     // two layer groups so multi-worker span cuts snap to a real boundary
@@ -424,7 +472,8 @@ fn cmd_dist(args: &Args) -> Result<()> {
 /// coordinator describes, dials in, and serves until the coordinator's
 /// shutdown message. The connect handshake pins protocol version, run
 /// seed, slot, arena digest, and the full training-config fingerprint
-/// (optimizer, lr, eps, step budget, probe count), so a mismatched flag
+/// (optimizer, lr, eps, step budget, probe count, ε-adaptation mode and
+/// hyperparameters), so a mismatched flag
 /// fails loudly at connect — naming the differing field — instead of
 /// silently diverging. Exit code 0 = clean shutdown.
 fn cmd_dist_worker(args: &Args) -> Result<()> {
@@ -446,6 +495,7 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
     let eps = args.f32("eps", 1e-3)?;
     let steps = args.usize("steps", 50)?;
     let probes = args.usize("probes", 1)?;
+    let adapt = parse_adapt_eps(args, false)?;
     let work = args.u64("work", 1)? as u32;
     let run_seed = args.u64("seed", 0)?;
     let plan_spec = args.str("fault-plan", "");
@@ -471,6 +521,7 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
         eps,
         steps: steps as u64,
         probes: probes as u32,
+        adapt,
     };
     let ep = SocketEndpoint {
         addr,
@@ -481,7 +532,8 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
     };
     println!(
         "dist-worker: slot={slot} dialing {addr} (n_params={n_params} opt={opt_name} \
-         lr={lr} eps={eps} steps={steps} probes={probes} seed={run_seed})"
+         lr={lr} eps={eps} steps={steps} probes={probes} adapt-eps={} seed={run_seed})",
+        if adapt.is_some() { "on" } else { "off" }
     );
     match run_socket_worker(worker, base, ep)? {
         WorkerExit::Shutdown => {

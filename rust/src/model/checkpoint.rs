@@ -534,6 +534,17 @@ pub fn load_commit_log(path: &Path) -> Result<Vec<CommitRecord>> {
              unknown mode {mode} (0 = multi, 1 = pairwise)",
             path.display()
         );
+        // ε rides in every record so adapted-ε runs replay bitwise; a
+        // non-finite or non-positive value can never have been committed
+        // (EpsSchedule clamps to a positive band) and would poison every
+        // replayed probe, so refuse it here with the offset
+        ensure!(
+            eps.is_finite() && eps > 0.0,
+            "{}: corrupted commit log: record at byte offset {start} carries \
+             non-finite or non-positive eps {eps} (adapted ε is always a \
+             positive finite f32)",
+            path.display()
+        );
         ensure!(
             q >= 1,
             "{}: corrupted commit log: record at byte offset {start} carries \
@@ -931,6 +942,33 @@ mod tests {
         let junk = dir.join("junk.cl");
         std::fs::write(&junk, b"definitely not a commit log").unwrap();
         assert!(load_commit_log(&junk).is_err());
+    }
+
+    #[test]
+    fn commit_log_rejects_non_finite_and_non_positive_eps() {
+        // adapted-ε runs commit a (possibly different) ε every step; a
+        // corrupted ε must be refused at load with its byte offset, not
+        // silently poison every replayed probe of that record
+        let dir = std::env::temp_dir().join("helene_commitlog_eps");
+        std::fs::create_dir_all(&dir).unwrap();
+        let records = sample_multi_records(3, 2);
+        let path = dir.join("log.cl");
+        write_commit_log(&path, &records).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // ε sits at bytes 8..12 of each record header; corrupt record 2's
+        let rec2 = 8 + records[0].bytes();
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1e-3, 0.0] {
+            let mut bytes = full.clone();
+            bytes[rec2 + 8..rec2 + 12].copy_from_slice(&bad.to_le_bytes());
+            let bpath = dir.join("bad_eps.cl");
+            std::fs::write(&bpath, &bytes).unwrap();
+            let err = format!("{:#}", load_commit_log(&bpath).unwrap_err());
+            assert!(
+                err.contains("non-finite or non-positive eps"),
+                "eps {bad}: {err}"
+            );
+            assert!(err.contains(&format!("byte offset {rec2}")), "eps {bad}: {err}");
+        }
     }
 
     #[test]

@@ -619,6 +619,198 @@ where
     estimate_multi_preperturbed(params, step_seed, q, eps, loss_fn)
 }
 
+/// Hyperparameters of the FZOO-style ε adaptation ([`EpsSchedule`]).
+///
+/// The schedule multiplies ε each step by `anneal + gain · r`, where
+/// `r ∈ [0, 1)` is the variance-normalized spread of the step's q raw
+/// one-sided probe scalars (see [`EpsSchedule::update`]). `anneal < 1`
+/// gives HELENE-style geometric annealing toward small probe scales as
+/// the run converges; `gain` lets a noisy probe ensemble (spread
+/// comparable to the mean projection — the FZOO curvature signal) slow
+/// or reverse the shrink. The multiplied ε is clamped to
+/// `[min_ratio · ε₀, max_ratio · ε₀]` so a pathological loss surface can
+/// never run ε to 0 or ∞.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpsAdaptConfig {
+    /// Geometric annealing factor applied every step (`0 < anneal`,
+    /// normally `< 1`). With q = 1 the spread is identically zero and the
+    /// schedule is pure geometric annealing `ε ← anneal · ε`.
+    pub anneal: f32,
+    /// Gain on the variance-normalized probe spread `r ∈ [0, 1)`; the
+    /// per-step factor is `anneal + gain · r`. `0` disables the
+    /// spread-driven term.
+    pub gain: f32,
+    /// Lower clamp for ε as a ratio of the configured ε₀ (`> 0`).
+    pub min_ratio: f32,
+    /// Upper clamp for ε as a ratio of the configured ε₀
+    /// (`>= min_ratio`).
+    pub max_ratio: f32,
+}
+
+impl Default for EpsAdaptConfig {
+    fn default() -> Self {
+        Self { anneal: 0.98, gain: 0.04, min_ratio: 0.05, max_ratio: 4.0 }
+    }
+}
+
+impl EpsAdaptConfig {
+    /// Reject non-finite or degenerate hyperparameters with a named-field
+    /// error (mirrors `TrainConfig::validate_robustness`).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.anneal.is_finite() && self.anneal > 0.0,
+            "adapt-eps anneal must be finite and > 0, got {}",
+            self.anneal
+        );
+        anyhow::ensure!(
+            self.gain.is_finite() && self.gain >= 0.0,
+            "adapt-eps gain must be finite and >= 0, got {}",
+            self.gain
+        );
+        anyhow::ensure!(
+            self.min_ratio.is_finite() && self.min_ratio > 0.0,
+            "adapt-eps min-ratio must be finite and > 0, got {}",
+            self.min_ratio
+        );
+        anyhow::ensure!(
+            self.max_ratio.is_finite() && self.max_ratio >= self.min_ratio,
+            "adapt-eps max-ratio must be finite and >= min-ratio {}, got {}",
+            self.min_ratio,
+            self.max_ratio
+        );
+        Ok(())
+    }
+}
+
+/// The bf16 ε floor `mean|θ|/256` of DESIGN.md §Precision: one bf16
+/// store rounds with relative error up to 2⁻⁹, so a perturbation below
+/// this floor sits at stored-codec rounding-noise scale and the SPSA
+/// difference signal drowns. Returns `None` for non-bf16 arenas, empty
+/// parameter sets, or an all-zero arena (no meaningful floor). Shared by
+/// the trainer's `eps_floor_clamp` heuristic and by [`EpsSchedule`]
+/// construction (single-process and distributed), so every ε consumer
+/// computes the identical floor bits from the same arena.
+pub fn bf16_eps_floor(params: &ParamSet) -> Option<f32> {
+    if params.codec() != crate::model::params::Codec::Bf16 {
+        return None;
+    }
+    let flat = params.flat_f32();
+    if flat.is_empty() {
+        return None;
+    }
+    let mean_abs =
+        (flat.iter().map(|x| x.abs() as f64).sum::<f64>() / flat.len() as f64) as f32;
+    let floor = mean_abs / 256.0;
+    (floor > 0.0).then_some(floor)
+}
+
+/// Deterministic FZOO-style ε schedule driven by the q raw one-sided
+/// probe scalars of each step ([`SpsaMultiEstimate::probes`]).
+///
+/// Update rule (all statistics in f64, folded **in probe order**, with a
+/// single f64→f32 rounding at the end — the fixed-order arithmetic that
+/// makes the schedule a pure function of `(ε bits, probe scalar bits)`
+/// and therefore bitwise identical across thread counts, transports, and
+/// replay):
+///
+/// ```text
+/// mean   = (1/q) Σᵢ gᵢ
+/// spread = sqrt((1/q) Σᵢ (gᵢ − mean)²)
+/// r      = spread / (|mean| + spread + 1e-30)      ∈ [0, 1)
+/// ε ← clamp(ε · (anneal + gain · r), ε₀·min_ratio, ε₀·max_ratio)
+/// ```
+///
+/// followed by the bf16 ε-floor clamp when the schedule was built with a
+/// floor (DESIGN.md §Precision): adapted ε is never allowed below
+/// `mean|θ|/256` — the drift bounds of the bf16 arena assume probes stay
+/// above the stored-codec rounding noise — and crossing the floor warns
+/// once per schedule instance, matching `eps_floor_clamp`.
+///
+/// The distributed coordinator and the single-process `ZoProtocol` feed
+/// this identical raw scalars (same f32 `(Lᵢ − L_base)/ε` op order), so
+/// identically-constructed schedules produce bit-identical ε
+/// trajectories — the `eps_adapt_bitwise` CI gate.
+#[derive(Clone, Debug)]
+pub struct EpsSchedule {
+    cfg: EpsAdaptConfig,
+    lo: f32,
+    hi: f32,
+    floor: Option<f32>,
+    eps: f32,
+    floor_warned: bool,
+}
+
+impl EpsSchedule {
+    /// A schedule starting at `eps0`, clamped to
+    /// `[min_ratio · eps0, max_ratio · eps0]`, with an optional hard
+    /// lower floor (the bf16 `mean|θ|/256` heuristic — pass `None` in
+    /// f32 mode). `eps0` must already respect the floor (the run
+    /// boundary's `eps_floor_clamp` guarantees this).
+    pub fn new(cfg: EpsAdaptConfig, eps0: f32, floor: Option<f32>) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            eps0.is_finite() && eps0 > 0.0,
+            "adapt-eps needs a finite positive starting ε, got {eps0}"
+        );
+        Ok(Self {
+            cfg,
+            lo: cfg.min_ratio * eps0,
+            hi: cfg.max_ratio * eps0,
+            floor,
+            eps: eps0,
+            floor_warned: false,
+        })
+    }
+
+    /// The ε the next step's probes should use.
+    pub fn eps(&self) -> f32 {
+        self.eps
+    }
+
+    /// Fold one step's raw probe scalars (seed, gᵢ) into the schedule and
+    /// return the adapted ε for the **next** step. `probes` must be the
+    /// raw (undivided) scalars in probe order; an empty slice leaves ε
+    /// unchanged.
+    pub fn update(&mut self, probes: &[(u64, f32)]) -> f32 {
+        if probes.is_empty() {
+            return self.eps;
+        }
+        let q = probes.len() as f64;
+        let mut sum = 0.0f64;
+        for &(_, g) in probes {
+            sum += g as f64;
+        }
+        let mean = sum / q;
+        let mut var = 0.0f64;
+        for &(_, g) in probes {
+            let d = g as f64 - mean;
+            var += d * d;
+        }
+        var /= q;
+        let spread = var.sqrt();
+        let r = spread / (mean.abs() + spread + 1e-30);
+        let factor = self.cfg.anneal as f64 + self.cfg.gain as f64 * r;
+        let mut next = (self.eps as f64 * factor) as f32;
+        next = next.clamp(self.lo, self.hi);
+        if let Some(floor) = self.floor {
+            if next < floor {
+                if !self.floor_warned {
+                    self.floor_warned = true;
+                    eprintln!(
+                        "warning: adapted ε = {next:.3e} fell below the bf16 \
+                         ε floor mean|θ|/256 = {floor:.3e}; clamping — the \
+                         bf16 drift bounds (DESIGN.md §Precision) assume \
+                         probes stay above the stored-codec rounding noise"
+                    );
+                }
+                next = floor;
+            }
+        }
+        self.eps = next;
+        next
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1189,5 +1381,91 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn eps_schedule_q1_is_pure_geometric_annealing() {
+        // spread of a single probe is identically 0 → factor == anneal,
+        // bit for bit, regardless of the probe scalar's value
+        let cfg = EpsAdaptConfig::default();
+        let mut sched = EpsSchedule::new(cfg, 1e-3, None).unwrap();
+        let mut expect = 1e-3f32;
+        for g in [0.25f32, -3.0, 1e4, 0.0] {
+            let got = sched.update(&[(7, g)]);
+            expect = (expect as f64 * cfg.anneal as f64) as f32;
+            assert_eq!(got.to_bits(), expect.to_bits(), "g = {g}");
+        }
+    }
+
+    #[test]
+    fn eps_schedule_is_a_pure_function_of_its_inputs() {
+        let cfg = EpsAdaptConfig { gain: 0.3, ..EpsAdaptConfig::default() };
+        let probes: Vec<Vec<(u64, f32)>> = (0..20)
+            .map(|s| (0..4).map(|i| (i, ((s * 4 + i) as f32).sin())).collect())
+            .collect();
+        let run = || {
+            let mut sched = EpsSchedule::new(cfg, 2e-3, None).unwrap();
+            probes.iter().map(|p| sched.update(p).to_bits()).collect::<Vec<u32>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn eps_schedule_clamps_to_the_ratio_band() {
+        // gain large enough that factor > 1 whenever the spread dominates
+        let cfg = EpsAdaptConfig { anneal: 0.5, gain: 4.0, ..EpsAdaptConfig::default() };
+        let eps0 = 1e-3f32;
+        let mut sched = EpsSchedule::new(cfg, eps0, None).unwrap();
+        // zero-mean, high-spread probes → factor ≈ 4.5 → hits the hi clamp
+        let noisy = [(1u64, 1.0f32), (2, -1.0)];
+        for _ in 0..10 {
+            sched.update(&noisy);
+        }
+        assert_eq!(sched.eps().to_bits(), (cfg.max_ratio * eps0).to_bits());
+        // single probe → pure 0.5× annealing → hits the lo clamp
+        for _ in 0..20 {
+            sched.update(&[(3, 1.0)]);
+        }
+        assert_eq!(sched.eps().to_bits(), (cfg.min_ratio * eps0).to_bits());
+    }
+
+    #[test]
+    fn eps_schedule_respects_the_bf16_floor_when_given_one() {
+        let cfg = EpsAdaptConfig { anneal: 0.5, gain: 0.0, ..EpsAdaptConfig::default() };
+        let eps0 = 1e-3f32;
+        let floor = 4e-4f32;
+        // with the floor: annealing stops exactly at it
+        let mut floored = EpsSchedule::new(cfg, eps0, Some(floor)).unwrap();
+        for _ in 0..8 {
+            floored.update(&[(1, 0.5)]);
+        }
+        assert_eq!(floored.eps().to_bits(), floor.to_bits());
+        // without it (f32 mode): the same schedule anneals straight past,
+        // down to the ratio band's lower clamp
+        let mut free = EpsSchedule::new(cfg, eps0, None).unwrap();
+        for _ in 0..8 {
+            free.update(&[(1, 0.5)]);
+        }
+        assert!(free.eps() < floor);
+        assert_eq!(free.eps().to_bits(), (cfg.min_ratio * eps0).to_bits());
+    }
+
+    #[test]
+    fn eps_adapt_config_validation_names_the_bad_field() {
+        let bad = [
+            (EpsAdaptConfig { anneal: 0.0, ..Default::default() }, "anneal"),
+            (EpsAdaptConfig { anneal: f32::NAN, ..Default::default() }, "anneal"),
+            (EpsAdaptConfig { gain: -0.1, ..Default::default() }, "gain"),
+            (EpsAdaptConfig { min_ratio: 0.0, ..Default::default() }, "min-ratio"),
+            (
+                EpsAdaptConfig { min_ratio: 2.0, max_ratio: 1.0, ..Default::default() },
+                "max-ratio",
+            ),
+        ];
+        for (cfg, field) in bad {
+            let msg = format!("{:#}", cfg.validate().unwrap_err());
+            assert!(msg.contains(field), "{msg} should name {field}");
+        }
+        EpsAdaptConfig::default().validate().unwrap();
     }
 }

@@ -150,6 +150,19 @@ pub struct TrainConfig {
     /// `None` leaves the default (empty) fingerprint on both ends, which
     /// trivially matches — the CLI always sets it.
     pub dist_fingerprint: Option<crate::dist::ConfigFingerprint>,
+    /// FZOO-style online ε adaptation from the per-step probe scalars
+    /// ([`spsa::EpsSchedule`], the `--adapt-eps` flag). `None` (default)
+    /// keeps ε fixed at [`Self::spsa_eps`]. `Some(cfg)` anneals ε
+    /// geometrically each step and lets the variance-normalized spread of
+    /// the q raw one-sided probe scalars slow the shrink, clamped to a
+    /// ratio band around ε₀ and — in bf16 mode — to the §Precision
+    /// `mean|θ|/256` floor. Adaptation drives the **multi-probe** ZO
+    /// pipeline ([`ZoProtocol::step_multi`]) even at probes = 1, so it is
+    /// incompatible with `tiled_sweeps` and post-check optimizers, like
+    /// probes > 1. The schedule is a pure function of the probe scalar
+    /// bits, so adapted trajectories stay bitwise reproducible across
+    /// thread counts, the distributed tier, and commit-log replay.
+    pub adapt_eps: Option<spsa::EpsAdaptConfig>,
 }
 
 impl Default for TrainConfig {
@@ -180,6 +193,7 @@ impl Default for TrainConfig {
             dist_listen: None,
             wave_backoff_ms: None,
             dist_fingerprint: None,
+            adapt_eps: None,
         }
     }
 }
@@ -196,6 +210,14 @@ impl TrainConfig {
              loopback worker threads, --listen waits for external `helene \
              dist-worker` processes — pick one"
         );
+        if let Some(a) = &self.adapt_eps {
+            a.validate()?;
+            anyhow::ensure!(
+                self.tiled_sweeps.is_none(),
+                "adapt_eps drives the multi-probe (monolithic) pipeline — \
+                 run ε adaptation without tiled_sweeps"
+            );
+        }
         self.dist_config(None).map(|_| ())
     }
 
@@ -216,6 +238,7 @@ impl TrainConfig {
             seed_log,
             probes: self.probes.max(1),
             wave_backoff: self.wave_backoff_ms.map(std::time::Duration::from_millis),
+            adapt: self.adapt_eps,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -288,17 +311,8 @@ pub fn run_zo_distributed(
 pub fn eps_floor_clamp(cfg: &TrainConfig, params: &ParamSet) -> Option<f32> {
     use std::sync::atomic::{AtomicBool, Ordering};
     static WARNED: AtomicBool = AtomicBool::new(false);
-    if params.codec() != crate::model::params::Codec::Bf16 {
-        return None;
-    }
-    let flat = params.flat_f32();
-    if flat.is_empty() {
-        return None;
-    }
-    let mean_abs =
-        (flat.iter().map(|x| x.abs() as f64).sum::<f64>() / flat.len() as f64) as f32;
-    let floor = mean_abs / 256.0;
-    if cfg.spsa_eps >= floor || floor <= 0.0 {
+    let floor = spsa::bf16_eps_floor(params)?;
+    if cfg.spsa_eps >= floor {
         return None;
     }
     if !WARNED.swap(true, Ordering::Relaxed) {
@@ -402,17 +416,60 @@ pub struct ZoProtocol<'a> {
     next: crate::model::params::ZCache,
     /// seed whose `+εz` perturbation θ currently carries
     pending: Option<u64>,
+    /// ε of the current step: the scale any pending `+εz` perturbation was
+    /// applied with, and the scale the next probe chain will use. Constant
+    /// (= `cfg.spsa_eps`) unless `sched` adapts it after each multi step.
+    eps: f32,
+    /// FZOO-style ε adaptation state ([`spsa::EpsSchedule`]); `None` keeps
+    /// ε fixed. Only the multi-probe path ([`Self::step_multi`]) consults
+    /// it — the pairwise and staged paths run at the fixed `cfg.spsa_eps`.
+    sched: Option<spsa::EpsSchedule>,
 }
 
 impl<'a> ZoProtocol<'a> {
-    /// A fresh protocol (no pending perturbation, empty caches).
+    /// A fresh protocol (no pending perturbation, empty caches) at the
+    /// fixed `cfg.spsa_eps` — `cfg.adapt_eps` is **not** armed here; runs
+    /// that want ε adaptation construct via [`Self::new_adapted`].
     pub fn new(cfg: &'a TrainConfig) -> Self {
         Self {
             cfg,
             cur: crate::model::params::ZCache::default(),
             next: crate::model::params::ZCache::default(),
             pending: None,
+            eps: cfg.spsa_eps,
+            sched: None,
         }
+    }
+
+    /// A fresh protocol with `cfg.adapt_eps` armed (no-op when `None`):
+    /// builds the [`spsa::EpsSchedule`] from `cfg.spsa_eps` with `floor`
+    /// as the hard lower bound — pass [`spsa::bf16_eps_floor`] of the run
+    /// arena so bf16 runs never adapt ε below the §Precision rounding
+    /// floor, and `None` for f32 arenas. Errors on invalid adaptation
+    /// hyperparameters (same checks as `TrainConfig::validate_robustness`).
+    pub fn new_adapted(cfg: &'a TrainConfig, floor: Option<f32>) -> Result<Self> {
+        let mut proto = Self::new(cfg);
+        if let Some(a) = cfg.adapt_eps {
+            proto.sched = Some(spsa::EpsSchedule::new(a, cfg.spsa_eps, floor)?);
+        }
+        Ok(proto)
+    }
+
+    /// The ε the next step's probes will use (and that any pending
+    /// prefetched perturbation was applied with). Fixed at
+    /// `cfg.spsa_eps` unless the protocol was built via
+    /// [`Self::new_adapted`] with adaptation enabled.
+    pub fn eps(&self) -> f32 {
+        self.eps
+    }
+
+    /// Fold one multi step's raw probe scalars into the ε schedule (if
+    /// armed) and return the ε for the next step.
+    fn adapt_after(&mut self, probes: &[(u64, f32)]) -> f32 {
+        if let Some(sched) = &mut self.sched {
+            self.eps = sched.update(probes);
+        }
+        self.eps
     }
 
     /// Whether the cross-step pipeline is active for this optimizer.
@@ -632,15 +689,19 @@ impl<'a> ZoProtocol<'a> {
         if !(cfg.prefetch_perturb && cfg.fuse_restore) {
             // classic-shaped multi step: prologue perturb, q-probe chain,
             // separate multi update — q+2 sweeps
+            let eps = self.eps;
             let t = Timer::start();
-            params.perturb_trainable(step_seed, cfg.spsa_eps);
-            let est =
-                spsa::estimate_multi_preperturbed(params, step_seed, q, cfg.spsa_eps, loss_fn)?;
+            params.perturb_trainable(step_seed, eps);
+            let est = spsa::estimate_multi_preperturbed(params, step_seed, q, eps, loss_fn)?;
             if let Some(tm) = timing.as_deref_mut() {
                 tm.add("spsa_probes", t.seconds());
             }
             let t = Timer::start();
             opt.step_zo_multi(params, &est.averaged_probes())?;
+            // fold this step's raw scalars into the ε schedule (no-op when
+            // adaptation is off); the next step reads the adapted ε in its
+            // own prologue
+            self.adapt_after(&est.probes);
             if let Some(tm) = timing {
                 tm.add("optimizer_step", t.seconds());
             }
@@ -649,7 +710,8 @@ impl<'a> ZoProtocol<'a> {
 
         // prologue: identical contract to the single-probe pipeline —
         // probe 0's seed IS the step seed, so the prefetched +εz carries
-        // probe 0's perturbation
+        // probe 0's perturbation (at `self.eps`, the ε this step probes at)
+        let eps = self.eps;
         match self.pending {
             Some(s) => {
                 anyhow::ensure!(
@@ -660,9 +722,9 @@ impl<'a> ZoProtocol<'a> {
             }
             None => {
                 if cfg.cache_z {
-                    params.perturb_fill_cache(&mut self.cur, step_seed, cfg.spsa_eps);
+                    params.perturb_fill_cache(&mut self.cur, step_seed, eps);
                 } else {
-                    params.perturb_trainable(step_seed, cfg.spsa_eps);
+                    params.perturb_trainable(step_seed, eps);
                 }
             }
         }
@@ -670,10 +732,10 @@ impl<'a> ZoProtocol<'a> {
         let t = Timer::start();
         let est = if cfg.cache_z {
             spsa::estimate_multi_cached_preperturbed(
-                params, &self.cur, step_seed, q, cfg.spsa_eps, loss_fn,
+                params, &self.cur, step_seed, q, eps, loss_fn,
             )?
         } else {
-            spsa::estimate_multi_preperturbed(params, step_seed, q, cfg.spsa_eps, loss_fn)?
+            spsa::estimate_multi_preperturbed(params, step_seed, q, eps, loss_fn)?
         };
         if let Some(tm) = timing.as_deref_mut() {
             tm.add("spsa_probes", t.seconds());
@@ -681,13 +743,18 @@ impl<'a> ZoProtocol<'a> {
 
         let t = Timer::start();
         let probes = est.averaged_probes();
+        // adapt ε from the RAW probe scalars **before** the update sweep:
+        // the fused prefetch applies the NEXT step's +εz, which must use
+        // the next step's (adapted) ε — the same order the distributed
+        // coordinator adapts in before broadcasting the commit record
+        let eps_next = self.adapt_after(&est.probes);
         if boundary {
             // epilogue: update only — the chain already restored pristine
             // θ, and the update sweep leaves it at the post-step point
             opt.step_zo_multi(params, &probes)?;
         } else {
             let capture = if cfg.cache_z { Some(&mut self.next) } else { None };
-            opt.step_zo_multi_prefetch(params, &probes, next_seed, cfg.spsa_eps, capture)?;
+            opt.step_zo_multi_prefetch(params, &probes, next_seed, eps_next, capture)?;
             if cfg.cache_z {
                 std::mem::swap(&mut self.cur, &mut self.next);
             }
@@ -874,10 +941,13 @@ impl<'a> ZoProtocol<'a> {
     /// bitwise.
     pub fn finish(&mut self, params: &mut ParamSet) {
         if let Some(seed) = self.pending.take() {
+            // `self.eps` is by invariant the ε the pending +εz was applied
+            // with — under ε adaptation that is the *adapted* value, not
+            // `cfg.spsa_eps`
             if self.cur.matches_seed(params, seed) {
-                params.perturb_from_cache(&self.cur, seed, -self.cfg.spsa_eps);
+                params.perturb_from_cache(&self.cur, seed, -self.eps);
             } else {
-                params.perturb_trainable(seed, -self.cfg.spsa_eps);
+                params.perturb_trainable(seed, -self.eps);
             }
         }
     }
@@ -940,18 +1010,18 @@ impl Trainer {
              train::run_zo_distributed with a Send loss oracle)",
             cfg.workers
         );
-        if cfg.probes > 1 && opt.kind() == StepKind::Zo {
+        if (cfg.probes > 1 || cfg.adapt_eps.is_some()) && opt.kind() == StepKind::Zo {
             anyhow::ensure!(
                 !opt.wants_post_check(),
-                "{}: probes = {} requires an optimizer without a post-step check — \
-                 run ZO-SGD-Cons with probes = 1",
+                "{}: probes = {} / ε adaptation requires an optimizer without a \
+                 post-step check — run ZO-SGD-Cons with probes = 1 and fixed ε",
                 opt.name(),
                 cfg.probes
             );
             anyhow::ensure!(
                 cfg.tiled_sweeps.is_none(),
-                "tiled_sweeps drives the single-probe pipeline only — \
-                 run probes = {} without tiled_sweeps",
+                "tiled_sweeps drives the single-probe fixed-ε pipeline only — \
+                 run probes = {} / adapt_eps without tiled_sweeps",
                 cfg.probes
             );
         }
@@ -960,7 +1030,9 @@ impl Trainer {
 
         let dims = &runner.spec.dims;
         let mut batcher = Batcher::new(&data.train, dims.batch, dims.max_seq, cfg.seed, true);
-        let mut proto = ZoProtocol::new(cfg);
+        // arm ε adaptation (no-op when cfg.adapt_eps is None) with the bf16
+        // rounding floor of the run arena as its hard lower bound
+        let mut proto = ZoProtocol::new_adapted(cfg, spsa::bf16_eps_floor(params))?;
         let mut history = History::default();
         let mut timing = TimingBreakdown::default();
         let run_timer = Timer::start();
@@ -980,9 +1052,11 @@ impl Trainer {
             }
 
             let loss = match opt.kind() {
-                StepKind::Zo if cfg.probes > 1 => {
+                StepKind::Zo if cfg.probes > 1 || cfg.adapt_eps.is_some() => {
                     // multi-probe batched estimator: q one-sided probes +
-                    // shared baseline, one fused k-seed update sweep
+                    // shared baseline, one fused k-seed update sweep (the
+                    // one-sided chain is also the path ε adaptation drives,
+                    // even at q = 1)
                     let est = proto
                         .step_multi_timed(
                             opt, params, step_seed, next_seed, eval_point, &mut timing, |p| {
@@ -1149,23 +1223,24 @@ pub fn run_lm(
          runner is single-threaded — use `helene dist`",
         cfg.workers
     );
-    if cfg.probes > 1 && opt.kind() == StepKind::Zo {
+    if (cfg.probes > 1 || cfg.adapt_eps.is_some()) && opt.kind() == StepKind::Zo {
         anyhow::ensure!(
             !opt.wants_post_check(),
-            "{}: probes = {} requires an optimizer without a post-step check",
+            "{}: probes = {} / ε adaptation requires an optimizer without a \
+             post-step check",
             opt.name(),
             cfg.probes
         );
         anyhow::ensure!(
             cfg.tiled_sweeps.is_none(),
-            "tiled_sweeps drives the single-probe pipeline only — \
-             run probes = {} without tiled_sweeps",
+            "tiled_sweeps drives the single-probe fixed-ε pipeline only — \
+             run probes = {} / adapt_eps without tiled_sweeps",
             cfg.probes
         );
     }
     opt.configure_batch(dims.batch);
     opt.init(&params);
-    let mut proto = ZoProtocol::new(cfg);
+    let mut proto = ZoProtocol::new_adapted(cfg, spsa::bf16_eps_floor(&params))?;
     let mut history = History::default();
     let timer = Timer::start();
     for (step, tokens) in batches.iter().enumerate().map(|(i, b)| (i + 1, b)) {
@@ -1179,7 +1254,7 @@ pub fn run_lm(
         let next_seed = mix64(cfg.seed, step as u64 + 1);
         let boundary = step == batches.len(); // final θ must be pristine
         let loss = match opt.kind() {
-            StepKind::Zo if cfg.probes > 1 => proto
+            StepKind::Zo if cfg.probes > 1 || cfg.adapt_eps.is_some() => proto
                 .step_multi(opt, &mut params, step_seed, next_seed, boundary, |p| {
                     runner.loss(p, &batch)
                 })?

@@ -20,7 +20,7 @@ use helene::dist::{
 use helene::model::checkpoint::{self, CommitRecord, SeedRecord};
 use helene::model::params::{Codec, ParamSet, SHARD_SIZE};
 use helene::optim::helene::Helene;
-use helene::optim::spsa::fold_partial_losses;
+use helene::optim::spsa::{bf16_eps_floor, fold_partial_losses, EpsAdaptConfig};
 use helene::optim::zo_sgd::ZoSgd;
 use helene::optim::Optimizer;
 use helene::train::{TrainConfig, ZoProtocol};
@@ -61,6 +61,7 @@ fn dist_cfg(workers: usize, plan: FaultPlan) -> DistConfig {
         seed_log: None,
         probes: 1,
         wave_backoff: None,
+        adapt: None,
     }
 }
 
@@ -592,6 +593,190 @@ fn seed_log_replay_lands_on_the_checkpoint_in_both_codecs() {
         assert!(
             replayed.bits_eq(&at_k),
             "{}: replay of the first {k} records does not land on the step-{k} checkpoint",
+            codec.name()
+        );
+    }
+}
+
+/// The single-process adapted-ε reference: `ZoProtocol::new_adapted`
+/// over the same oracle with the default (pipelined) config. Returns the
+/// loss trace, the final arena, and the per-step ε trace — the ε each
+/// step's probes actually used, which is exactly what the coordinator
+/// commits in its records.
+fn reference_run_adapted(q: usize) -> (Vec<f32>, ParamSet, Vec<f32>) {
+    let base = base_params();
+    let n_shards = base.n_shards();
+    let mut oracle = SepQuadOracle::new();
+    let cfg = TrainConfig {
+        steps: STEPS,
+        spsa_eps: EPS,
+        seed: RUN_SEED,
+        probes: q,
+        adapt_eps: Some(EpsAdaptConfig::default()),
+        ..Default::default()
+    };
+    let mut opt = ZoSgd::new(LR);
+    opt.init(&base);
+    let mut params = base.clone();
+    let mut proto = ZoProtocol::new_adapted(&cfg, bf16_eps_floor(&base)).unwrap();
+    let mut losses = Vec::with_capacity(STEPS);
+    let mut eps_trace = Vec::with_capacity(STEPS);
+    for step in 1..=STEPS {
+        let step_seed = mix64(RUN_SEED, step as u64);
+        let next_seed = mix64(RUN_SEED, step as u64 + 1);
+        let boundary = step == STEPS;
+        eps_trace.push(proto.eps());
+        let est = proto
+            .step_multi(&mut opt, &mut params, step_seed, next_seed, boundary, |p| {
+                Ok(fold_partial_losses(
+                    oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                ))
+            })
+            .unwrap();
+        losses.push(est.loss());
+    }
+    (losses, params, eps_trace)
+}
+
+#[test]
+fn adapted_eps_runs_match_the_single_process_reference_and_replay() {
+    // the tentpole invariant under ε adaptation: the coordinator folds
+    // the same raw probe scalars into an identically-constructed
+    // schedule at the same point in the step as the single-process
+    // protocol, so the committed ε trace, the loss trace, and the final
+    // arena are all bitwise — healthy or faulted, for any worker count,
+    // and through replacement-by-replay (every commit record carries the
+    // ε its probes used, so the schedule never has to be re-run)
+    let plans = [("healthy", ""), ("death", "die@3:1"), ("nan", "nan@2:1")];
+    for q in [1usize, 4] {
+        let (ref_losses, ref_params, ref_eps) = reference_run_adapted(q);
+        // adaptation must actually move ε (annealing alone shrinks it);
+        // a constant trace would make this test vacuous
+        assert!(
+            ref_eps.windows(2).any(|w| w[0].to_bits() != w[1].to_bits()),
+            "q={q}: the adapted ε trace never moved"
+        );
+        for (name, spec) in plans {
+            for workers in [1usize, 2, 4] {
+                if !spec.is_empty() && workers < 2 {
+                    continue; // the fault plans key on worker 1
+                }
+                let tag = format!("adapt/{name}/q={q}/workers={workers}");
+                let plan = if spec.is_empty() {
+                    FaultPlan::new()
+                } else {
+                    FaultPlan::parse(spec).unwrap()
+                };
+                let mut cfg = dist_cfg(workers, plan);
+                cfg.probes = q;
+                cfg.adapt = Some(EpsAdaptConfig::default());
+                // drive through `run()`: it must route to the multi grid
+                // whenever adaptation is on — even at q = 1
+                let mut coord =
+                    Coordinator::launch_threads(cfg, base_params(), factory()).unwrap();
+                let report = coord.run(STEPS, RUN_SEED).unwrap();
+                assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+                assert_eq!(report.log.len(), STEPS, "{tag}: record count");
+                for (i, rec) in report.log.iter().enumerate() {
+                    assert_eq!(
+                        rec.eps.to_bits(),
+                        ref_eps[i].to_bits(),
+                        "{tag}: committed ε diverges at step {} ({} vs {})",
+                        i + 1,
+                        rec.eps,
+                        ref_eps[i]
+                    );
+                }
+                for (w, replica) in coord.fetch_all().unwrap() {
+                    assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+                }
+                let replayed = helene::dist::replay_commit_log(
+                    &base_params(),
+                    &mut ZoSgd::new(LR),
+                    &report.log,
+                )
+                .unwrap();
+                assert!(replayed.bits_eq(&ref_params), "{tag}: replay diverges");
+            }
+        }
+    }
+}
+
+/// Satellite: the adapted-ε commit log is self-contained. Record a
+/// naive-config adapted run (its per-step arithmetic is exactly
+/// `multi_probe_cycle` + `step_zo_multi` in every codec), checkpoint at
+/// step k, keep training to k + m; truncating the v2 log at step k and
+/// replaying from the step-0 arena must land bitwise on the step-k
+/// checkpoint — in both storage codecs, without ever consulting the
+/// schedule (each record's ε is the one its probes used).
+#[test]
+fn adapted_commit_log_truncates_and_replays_onto_checkpoints_in_both_codecs() {
+    let (k, m, q) = (4usize, 3usize, 4usize);
+    // ε₀ above the bf16 floor (mean|θ|/256 ≈ 1.95e-3 for this arena) so
+    // the bf16 run anneals freely instead of pinning to the floor
+    let eps0 = 5e-3f32;
+    for codec in [Codec::F32, Codec::Bf16] {
+        let dir = std::env::temp_dir().join(format!("helene_adapt_replay_{}", codec.name()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = base_params().with_codec(codec);
+        let n_shards = base.n_shards();
+        let mut oracle = SepQuadOracle::new();
+        let cfg = TrainConfig {
+            steps: k + m,
+            spsa_eps: eps0,
+            seed: RUN_SEED,
+            probes: q,
+            adapt_eps: Some(EpsAdaptConfig::default()),
+            cache_z: false,
+            fuse_restore: false,
+            prefetch_perturb: false,
+            ..Default::default()
+        };
+        let mut opt = ZoSgd::new(LR);
+        opt.init(&base);
+        let mut params = base.clone();
+        let mut proto = ZoProtocol::new_adapted(&cfg, bf16_eps_floor(&base)).unwrap();
+        let mut records = Vec::new();
+        let ckpt = dir.join("step_k.bin");
+        for step in 1..=k + m {
+            let step_seed = mix64(RUN_SEED, step as u64);
+            let next_seed = mix64(RUN_SEED, step as u64 + 1);
+            // the ε this step's probes use — what the coordinator commits
+            let eps_step = proto.eps();
+            let est = proto
+                .step_multi(&mut opt, &mut params, step_seed, next_seed, true, |p| {
+                    Ok(fold_partial_losses(
+                        oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                    ))
+                })
+                .unwrap();
+            records.push(CommitRecord::multi(step as u64, eps_step, est.probes.clone()));
+            if step == k {
+                // the naive protocol leaves θ pristine after every step
+                checkpoint::save(&ckpt, k, &params, &[]).unwrap();
+            }
+        }
+        // ε must have actually moved, or this collapses to the fixed test
+        assert!(
+            records.windows(2).any(|w| w[0].eps.to_bits() != w[1].eps.to_bits()),
+            "{}: the adapted ε trace never moved",
+            codec.name()
+        );
+        // the full log round-trips through disk …
+        let log_path = dir.join("run.cl");
+        checkpoint::write_commit_log(&log_path, &records).unwrap();
+        let loaded = checkpoint::load_commit_log(&log_path).unwrap();
+        assert_eq!(loaded, records);
+        // … and the step-k prefix alone rebuilds the step-k checkpoint
+        let replayed =
+            helene::dist::replay_commit_log(&base, &mut ZoSgd::new(LR), &loaded[..k]).unwrap();
+        let (step, at_k, _) = checkpoint::load(&ckpt, base.spec.clone()).unwrap();
+        assert_eq!(step, k);
+        assert_eq!(replayed.codec(), at_k.codec());
+        assert!(
+            replayed.bits_eq(&at_k),
+            "{}: adapted replay of the first {k} records does not land on the \
+             step-{k} checkpoint",
             codec.name()
         );
     }

@@ -19,7 +19,7 @@ use helene::dist::{
     SocketEndpoint, SocketTransport, Worker, WorkerExit, WorkerFactory,
 };
 use helene::model::params::{ParamSet, SHARD_SIZE};
-use helene::optim::spsa::fold_partial_losses;
+use helene::optim::spsa::{bf16_eps_floor, fold_partial_losses, EpsAdaptConfig};
 use helene::optim::zo_sgd::ZoSgd;
 use helene::optim::Optimizer;
 use helene::train::{TrainConfig, ZoProtocol};
@@ -56,6 +56,7 @@ fn dist_cfg(workers: usize, plan: FaultPlan) -> DistConfig {
         seed_log: None,
         probes: 1,
         wave_backoff: None,
+        adapt: None,
     }
 }
 
@@ -135,6 +136,44 @@ fn reference_run_multi(q: usize) -> (Vec<f32>, ParamSet) {
         losses.push(est.loss());
     }
     (losses, params)
+}
+
+/// The single-process adapted-ε reference (identical to dist_fault.rs):
+/// pipelined `step_multi` through `ZoProtocol::new_adapted`, recording
+/// the ε each step's probes used alongside the loss trace.
+fn reference_run_adapted(q: usize) -> (Vec<f32>, ParamSet, Vec<f32>) {
+    let base = base_params();
+    let n_shards = base.n_shards();
+    let mut oracle = SepQuadOracle::new();
+    let cfg = TrainConfig {
+        steps: STEPS,
+        spsa_eps: EPS,
+        seed: RUN_SEED,
+        probes: q,
+        adapt_eps: Some(EpsAdaptConfig::default()),
+        ..Default::default()
+    };
+    let mut opt = ZoSgd::new(LR);
+    opt.init(&base);
+    let mut params = base.clone();
+    let mut proto = ZoProtocol::new_adapted(&cfg, bf16_eps_floor(&base)).unwrap();
+    let mut losses = Vec::with_capacity(STEPS);
+    let mut eps_trace = Vec::with_capacity(STEPS);
+    for step in 1..=STEPS {
+        let step_seed = mix64(RUN_SEED, step as u64);
+        let next_seed = mix64(RUN_SEED, step as u64 + 1);
+        let boundary = step == STEPS;
+        eps_trace.push(proto.eps());
+        let est = proto
+            .step_multi(&mut opt, &mut params, step_seed, next_seed, boundary, |p| {
+                Ok(fold_partial_losses(
+                    oracle.shard_partials(p, 0..n_shards, step as u64)?,
+                ))
+            })
+            .unwrap();
+        losses.push(est.loss());
+    }
+    (losses, params, eps_trace)
 }
 
 /// Run the tier over loopback TCP with in-process dialer threads.
@@ -258,6 +297,54 @@ fn multi_probe_socket_runs_match_the_single_process_step_multi() {
                 assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
             }
         }
+    }
+}
+
+#[test]
+fn adapted_eps_socket_runs_match_the_reference_and_survive_wire_faults() {
+    // ε adaptation over real TCP: the schedule lives only in the
+    // coordinator, the per-request ε rides every ProbePoint frame, and
+    // each committed record carries the ε its probes used — so healthy
+    // lanes at any worker count land bitwise on the single-process
+    // adapted reference, losses, ε trace, and arenas alike
+    let q = 4usize;
+    let (ref_losses, ref_params, ref_eps) = reference_run_adapted(q);
+    for workers in [1usize, 2, 4] {
+        let tag = format!("socket/adapt/workers={workers}");
+        let mut cfg = dist_cfg(workers, FaultPlan::new());
+        cfg.probes = q;
+        cfg.adapt = Some(EpsAdaptConfig::default());
+        // `run()` must route to the multi grid whenever adaptation is on
+        let (mut coord, report) = run_socket(cfg);
+        assert_bitwise(&tag, &report, &ref_losses, &ref_params);
+        for (i, rec) in report.log.iter().enumerate() {
+            assert_eq!(
+                rec.eps.to_bits(),
+                ref_eps[i].to_bits(),
+                "{tag}: committed ε diverges at step {}",
+                i + 1
+            );
+        }
+        for (w, replica) in coord.fetch_all().unwrap() {
+            assert!(replica.bits_eq(&ref_params), "{tag}: replica {w} diverges");
+        }
+    }
+    // a severed lane mid-run: the redial handshake replays the commit
+    // log — whose records carry the adapted per-step ε — and the rebuilt
+    // worker still lands bitwise
+    let mut cfg = dist_cfg(2, FaultPlan::parse("cut@3:1").unwrap());
+    cfg.probes = q;
+    cfg.adapt = Some(EpsAdaptConfig::default());
+    let (_coord, _proxy, report) = run_via_proxy(cfg);
+    assert_bitwise("socket/adapt/cut", &report, &ref_losses, &ref_params);
+    assert!(report.stats.wire_reconnects >= 1, "the cut never forced a redial");
+    for (i, rec) in report.log.iter().enumerate() {
+        assert_eq!(
+            rec.eps.to_bits(),
+            ref_eps[i].to_bits(),
+            "socket/adapt/cut: committed ε diverges at step {}",
+            i + 1
+        );
     }
 }
 
@@ -507,6 +594,7 @@ fn handshake_refuses_a_mismatched_config_fingerprint_naming_the_field() {
         eps: EPS,
         steps: STEPS as u64,
         probes: 4,
+        adapt: None,
     };
     let _transport = SocketTransport::listen(
         "127.0.0.1:0",
@@ -540,4 +628,59 @@ fn handshake_refuses_a_mismatched_config_fingerprint_naming_the_field() {
         !err.contains("digest") && !err.contains("arena mismatch"),
         "refusal must name the field, not a digest: {err}"
     );
+}
+
+#[test]
+fn handshake_refuses_a_mismatched_eps_adaptation_naming_the_field() {
+    // a worker dialed without --adapt-eps (or with different adaptation
+    // hyperparameters) would replay the identical commit log yet expect a
+    // different ε trajectory — it must be refused at connect, by name,
+    // like every other fingerprint field
+    use helene::optim::spsa::EpsAdaptConfig;
+    let base = base_params();
+    let mut listen_scfg = test_scfg();
+    listen_scfg.fingerprint = ConfigFingerprint {
+        opt: "mezo".into(),
+        lr: LR,
+        eps: EPS,
+        steps: STEPS as u64,
+        probes: 4,
+        adapt: Some(EpsAdaptConfig::default()),
+    };
+    let _transport = SocketTransport::listen(
+        "127.0.0.1:0",
+        1,
+        RUN_SEED,
+        param_digest(&base),
+        listen_scfg.clone(),
+    )
+    .unwrap();
+    let addr = _transport.local_addr();
+    for (dialed, want) in [
+        (None, "eps-adaptation mismatch: coordinator runs adapt-eps = on"),
+        (
+            Some(EpsAdaptConfig { anneal: 0.5, ..Default::default() }),
+            "adapt-anneal mismatch: coordinator uses",
+        ),
+    ] {
+        let worker = Worker::new(
+            0,
+            &base,
+            Box::new(ZoSgd::new(LR)) as Box<dyn Optimizer>,
+            Box::new(SepQuadOracle::new()) as Box<dyn ShardLossOracle>,
+            FaultPlan::new(),
+        );
+        let mut dial_scfg = listen_scfg.clone();
+        dial_scfg.fingerprint.adapt = dialed;
+        let ep = SocketEndpoint {
+            addr,
+            slot: 0,
+            run_seed: RUN_SEED,
+            base_digest: param_digest(&base),
+            cfg: dial_scfg,
+        };
+        let err = format!("{:#}", run_socket_worker(worker, base.clone(), ep).unwrap_err());
+        assert!(err.contains("refused"), "{err}");
+        assert!(err.contains(want), "expected {want:?} in {err}");
+    }
 }
